@@ -1,0 +1,77 @@
+//! End-to-end driver (the repo's headline validation): REAL co-execution
+//! of every AOT Pallas/HLO kernel through the full three-layer stack.
+//!
+//! For each of the five artifacts this:
+//!   1. builds a real workload in rust (images, option books, bodies, rays),
+//!   2. spawns one PJRT worker thread per modelled device (CPU/iGPU/GPU,
+//!      speed-emulated), each owning its own PJRT client + executable,
+//!   3. co-executes the kernel under the HGuided-optimized scheduler,
+//!   4. verifies sampled outputs against the rust oracles,
+//!   5. reports ROI time, balance and speedup vs the GPU-only baseline.
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example coexec_e2e
+//! ```
+
+use anyhow::Result;
+use enginecl::benchsuite::{data::Problem, BenchId};
+use enginecl::engine::pjrt::{run_coexec, PjrtRunConfig};
+use enginecl::runtime::ArtifactDir;
+
+fn main() -> Result<()> {
+    let artifacts = ArtifactDir::open(ArtifactDir::default_path())?;
+    println!("artifacts: {} ({} kernels)", artifacts.dir.display(), artifacts.manifest.benches.len());
+
+    // Problem sizes in tiles, kept CI-friendly; NBody is fixed at N by the
+    // artifact (2048 bodies = 8 tiles).
+    let plans: &[(BenchId, u64)] = &[
+        (BenchId::Mandelbrot, 64),
+        (BenchId::Gaussian, 32),
+        (BenchId::Binomial, 8),
+        (BenchId::NBody, 8),
+        (BenchId::Ray1, 64),
+        (BenchId::Ray2, 64),
+    ];
+
+    let mut failures = 0usize;
+    println!(
+        "\n{:<12}{:>7}{:>10}{:>9}{:>9}{:>9}{:>10}{:>8}",
+        "bench", "tiles", "gws", "init(s)", "roi(s)", "balance", "speedup", "verify"
+    );
+    for &(id, tiles) in plans {
+        let entry = artifacts.manifest.entry(id.artifact_name())?;
+        let problem = Problem::new(id, tiles, entry, 42)?;
+
+        let cfg = PjrtRunConfig::testbed();
+        let report = run_coexec(id, &problem, &artifacts, &cfg)?;
+        let solo = run_coexec(id, &problem, &artifacts, &PjrtRunConfig::gpu_only())?;
+        failures += report.verify_failures;
+
+        println!(
+            "{:<12}{:>7}{:>10}{:>9.3}{:>9.3}{:>9.3}{:>10.3}{:>8}",
+            id.label(),
+            tiles,
+            problem.gws,
+            report.init_s,
+            report.roi_s,
+            report.balance(),
+            solo.roi_s / report.roi_s,
+            if report.verify_failures == 0 { "OK" } else { "FAIL" }
+        );
+        for d in &report.devices {
+            println!(
+                "             {:<5} P={:<4} pkgs={:<3} tiles={:<4} finish={:.3}s",
+                d.label, d.power, d.packages, d.tiles, d.finish_s
+            );
+        }
+    }
+
+    if failures == 0 {
+        println!("\nE2E OK: all sampled outputs match the rust oracles across all kernels.");
+        Ok(())
+    } else {
+        anyhow::bail!("E2E FAILED: {failures} verification mismatches")
+    }
+}

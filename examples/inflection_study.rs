@@ -1,0 +1,82 @@
+//! Inflection study (Fig.-6 style): when is co-execution worth it on a
+//! time-constrained commodity system?
+//!
+//! Sweeps problem size for one benchmark, prints the single-GPU vs
+//! HGuided co-execution curves for binary and ROI modes at each runtime
+//! optimization level, and reports the break-even points — the paper's
+//! "it must exceed ~15 ms (ROI) / ~1.75 s (binary)" rule of thumb.
+//!
+//! ```bash
+//! cargo run --release --example inflection_study [bench] [reps]
+//! ```
+
+use enginecl::config::parse_bench;
+use enginecl::engine::experiments::{self, OptLevel};
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "gaussian".into());
+    let reps: usize =
+        std::env::args().nth(2).map(|s| s.parse()).transpose()?.unwrap_or(6);
+    let id = parse_bench(&name)?;
+
+    println!("inflection study: {} ({} reps/point)\n", id.label(), reps);
+    let rows = experiments::fig6(id, reps);
+
+    // Curves per (mode, opts), ROI first.
+    for mode in ["roi", "binary"] {
+        println!("-- {mode} mode --");
+        println!(
+            "{:>12} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12}",
+            "gws", "single(s)", "co/base", "co/+init", "co/+buf", "win@base", "win@+buf"
+        );
+        let gws_values: Vec<u64> = {
+            let mut v: Vec<u64> = rows
+                .iter()
+                .filter(|r| r.mode == mode && r.opts == "baseline")
+                .map(|r| r.gws)
+                .collect();
+            v.dedup();
+            v
+        };
+        for gws in gws_values {
+            let get = |opts: &str| {
+                rows.iter()
+                    .find(|r| r.mode == mode && r.opts == opts && r.gws == gws)
+                    .expect("row")
+            };
+            let b = get("baseline");
+            let i = get("+init");
+            let a = get("+init+buffers");
+            println!(
+                "{:>12} {:>12.4} {:>12.4} {:>12.4} {:>12.4} {:>12} {:>12}",
+                gws,
+                b.single_gpu_s,
+                b.coexec_s,
+                i.coexec_s,
+                a.coexec_s,
+                if b.coexec_s < b.single_gpu_s { "yes" } else { "-" },
+                if a.coexec_s < a.single_gpu_s { "yes" } else { "-" },
+            );
+        }
+        println!();
+    }
+
+    println!("-- break-even points --");
+    let infl = experiments::inflections(&rows);
+    for i in &infl {
+        match (i.gws, i.time_s) {
+            (Some(g), Some(t)) => {
+                println!("{:>8} {:>15}: gws* = {:>12.0}, single-GPU t* = {:.4}s", i.mode, i.opts, g, t)
+            }
+            _ => println!("{:>8} {:>15}: co-execution never wins on this ladder", i.mode, i.opts),
+        }
+    }
+    let init_gain = experiments::inflection_improvement(&infl, OptLevel::None, OptLevel::Init);
+    let buf_gain = experiments::inflection_improvement(&infl, OptLevel::Init, OptLevel::All);
+    println!(
+        "\ninflection improvements: init {:.1}% (paper avg 7.5%), buffers {:.1}% (paper avg 17.4%)",
+        init_gain * 100.0,
+        buf_gain * 100.0
+    );
+    Ok(())
+}

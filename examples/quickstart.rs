@@ -1,0 +1,46 @@
+//! Quickstart: co-execute one benchmark across the modelled commodity
+//! testbed and print the paper's three metrics.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use enginecl::benchsuite::{Bench, BenchId};
+use enginecl::engine::Engine;
+use enginecl::metrics;
+use enginecl::scheduler::{HGuidedParams, SchedulerKind};
+use enginecl::types::{ExecMode, Optimizations};
+
+fn main() {
+    // Tier-1 usage: pick a program, pick a scheduler, run.
+    let bench = Bench::new(BenchId::Mandelbrot);
+    println!(
+        "program: {} ({} work-items, lws {})",
+        bench.props.name, bench.default_gws, bench.props.lws
+    );
+
+    let engine = Engine::new(bench)
+        .with_scheduler(SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() })
+        .with_mode(ExecMode::Roi)
+        .with_optimizations(Optimizations::ALL);
+
+    // The paper's protocol: repeated runs, first discarded as warm-up.
+    let reps = engine.run_reps(20);
+    println!("co-execution ROI time: {:.3}s ± {:.3}", reps.time.mean, reps.time.ci95());
+    println!("balance (T_first/T_last): {:.3}", reps.balance.mean);
+
+    // Baseline: the fastest device alone (paper: single GPU).
+    let standalone = engine.standalone_times(8);
+    println!(
+        "standalone times  CPU {:.2}s  iGPU {:.2}s  GPU {:.2}s",
+        standalone[0], standalone[1], standalone[2]
+    );
+    let s_max = metrics::max_speedup(&standalone);
+    let s = metrics::speedup(standalone[2], reps.time.mean);
+    println!(
+        "speedup {:.3} of max {:.3} -> efficiency {:.3} (paper mean: 0.84)",
+        s,
+        s_max,
+        metrics::efficiency(s, s_max)
+    );
+}

@@ -1,0 +1,65 @@
+//! Scheduler comparison on one benchmark: the seven Fig.-3 configurations
+//! side by side, plus an ablation against an ideal (zero-overhead) driver
+//! to separate algorithmic imbalance from driver overheads.
+//!
+//! ```bash
+//! cargo run --release --example scheduler_comparison [bench]
+//! ```
+
+use enginecl::benchsuite::Bench;
+use enginecl::cldriver::DriverProfile;
+use enginecl::config::parse_bench;
+use enginecl::engine::Engine;
+use enginecl::metrics;
+use enginecl::scheduler::SchedulerKind;
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "ray2".into());
+    let bench = Bench::new(parse_bench(&name)?);
+    println!(
+        "scheduler comparison: {} (gws {}, {} groups, irregularity {:.2})\n",
+        bench.props.name,
+        bench.default_gws,
+        bench.groups(bench.default_gws),
+        bench.profile.peak_to_mean()
+    );
+
+    let reps = 20;
+    let base = Engine::new(bench.clone());
+    let standalone = base.standalone_times(8);
+    let s_max = metrics::max_speedup(&standalone);
+    println!(
+        "standalone: CPU {:.2}s  iGPU {:.2}s  GPU {:.2}s  (S_max {:.3})\n",
+        standalone[0], standalone[1], standalone[2], s_max
+    );
+
+    println!(
+        "{:<14}{:>10}{:>10}{:>10}{:>10}{:>12}",
+        "scheduler", "time(s)", "speedup", "eff", "balance", "pkgs/run"
+    );
+    for kind in SchedulerKind::fig3_configs() {
+        let commodity = base.clone().with_scheduler(kind.clone()).run_reps(reps);
+        let s = metrics::speedup(standalone[2], commodity.time.mean);
+        println!(
+            "{:<14}{:>10.3}{:>10.3}{:>10.3}{:>10.3}{:>12.1}",
+            kind.label(),
+            commodity.time.mean,
+            s,
+            metrics::efficiency(s, s_max),
+            commodity.balance.mean,
+            commodity.mean_packages
+        );
+    }
+
+    println!("\n-- ablation: ideal driver (no overheads) isolates pure load balancing --");
+    println!("{:<14}{:>10}{:>10}", "scheduler", "time(s)", "balance");
+    for kind in SchedulerKind::fig3_configs() {
+        let ideal = base
+            .clone()
+            .with_scheduler(kind.clone())
+            .with_driver(DriverProfile::ideal())
+            .run_reps(reps);
+        println!("{:<14}{:>10.3}{:>10.3}", kind.label(), ideal.time.mean, ideal.balance.mean);
+    }
+    Ok(())
+}

@@ -1,0 +1,86 @@
+"""AOT lowering: jax benchmark tile functions -> HLO *text* artifacts.
+
+Interchange format is HLO text, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via `make artifacts`.  Emits per-benchmark
+`artifacts/<name>.hlo.txt` plus `artifacts/manifest.json` describing input
+/ output shapes, dtypes, tile geometry and baked constants — the rust
+runtime (rust/src/runtime/artifact.rs) consumes the manifest to build
+literals and decode results.  Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import BENCHES, BenchSpec
+
+DTYPE_NAMES = {"float32": "f32", "int32": "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side can always unwrap a tuple, even for single-output benches)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _arr_spec(a) -> dict:
+    return {"shape": list(a.shape), "dtype": DTYPE_NAMES[str(a.dtype)]}
+
+
+def lower_bench(spec: BenchSpec) -> tuple[str, dict]:
+    inputs = spec.example_inputs()
+    shapes = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in inputs]
+    lowered = jax.jit(spec.tile_fn).lower(*shapes)
+    text = to_hlo_text(lowered)
+    outputs = jax.eval_shape(spec.tile_fn, *shapes)
+    entry = {
+        "name": spec.name,
+        "file": f"{spec.name}.hlo.txt",
+        "tile_items": spec.tile_items,
+        "lws": spec.lws,
+        "inputs": [_arr_spec(a) for a in inputs],
+        "outputs": [_arr_spec(o) for o in outputs],
+        "constants": spec.constants,
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    return text, entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of benchmark names")
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    names = args.only or list(BENCHES)
+
+    manifest = {"format": 1, "benches": []}
+    for name in names:
+        spec = BENCHES[name]
+        text, entry = lower_bench(spec)
+        (out / entry["file"]).write_text(text)
+        manifest["benches"].append(entry)
+        print(f"lowered {name:11s} -> {entry['file']} ({len(text)} chars)")
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"manifest: {out / 'manifest.json'} ({len(manifest['benches'])} benches)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Shared helpers for the Pallas benchmark kernels.
+
+All five kernels tile the OpenCL-style flattened work-item range: one
+artifact invocation processes a fixed-size tile of work-items, and the
+rust coordinator (L3) maps a scheduler package [begin, end) onto
+ceil(len / tile) invocations.
+
+Hardware adaptation (paper targets OpenCL CPU/iGPU/dGPU): OpenCL
+work-groups become Pallas grid steps; `__local` memory becomes VMEM-resident
+loop carries; blocks are sized for (8, 128) VPU lanes, not MXU tiles,
+because every kernel here is elementwise/reduction-shaped.  All kernels are
+lowered with interpret=True — the CPU PJRT plugin cannot execute Mosaic
+custom-calls (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INTERPRET = True  # mandatory on the CPU PJRT plugin
+
+
+def normalize(v: jax.Array, axis: int = -1, eps: float = 1e-12) -> jax.Array:
+    """Safe vector normalization used by the ray kernel and its oracle."""
+    n = jnp.sqrt(jnp.sum(v * v, axis=axis, keepdims=True))
+    return v / jnp.maximum(n, eps)

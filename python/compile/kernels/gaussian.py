@@ -1,0 +1,59 @@
+"""Gaussian blur kernel (paper benchmark: AMD APP SDK GaussianNoise/Filter).
+
+Paper properties (Table I): lws=128, buffers R:W = 2:1 (image + filter in,
+blurred image out), out pattern 1:1, 8192 px image, 31 px filter.
+
+Tiling: a tile is TR output rows of a W-wide image.  The host (rust
+DeviceExecutor) passes the haloed input slice (TR + K - 1, W + K - 1) —
+the exact analogue of OpenCL's global-memory reads beyond the work-group's
+output region.  The K*K tap loop is a compile-time-unrolled shifted-window
+accumulation: each tap is one VPU-friendly (TR, W) fused multiply-add, the
+natural TPU mapping of the paper's per-pixel neighbourhood loop.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET
+
+
+def _gaussian_kernel(img_ref, filt_ref, out_ref, *, tr: int, w: int, k: int):
+    img = img_ref[...]
+    filt = filt_ref[...]
+    acc = jnp.zeros((tr, w), jnp.float32)
+    for dr in range(k):
+        for dc in range(k):
+            acc = acc + filt[dr, dc] * img[dr : dr + tr, dc : dc + w]
+    out_ref[...] = acc
+
+
+def gaussian_tile(img_halo: jax.Array, filt: jax.Array) -> jax.Array:
+    """Blur TR rows given their haloed input slice.
+
+    img_halo: (TR + K - 1, W + K - 1) float32; filt: (K, K) float32.
+    Returns (TR, W) float32 blurred rows.
+    """
+    k = filt.shape[0]
+    assert filt.shape == (k, k)
+    tr = img_halo.shape[0] - (k - 1)
+    w = img_halo.shape[1] - (k - 1)
+    assert tr > 0 and w > 0
+    return pl.pallas_call(
+        functools.partial(_gaussian_kernel, tr=tr, w=w, k=k),
+        out_shape=jax.ShapeDtypeStruct((tr, w), jnp.float32),
+        interpret=INTERPRET,
+    )(img_halo, filt)
+
+
+def gaussian_weights(k: int, sigma: float) -> jax.Array:
+    """Normalized K x K Gaussian tap matrix (host-side constant, like the
+    paper's precomputed filter buffer)."""
+    r = jnp.arange(k, dtype=jnp.float32) - (k - 1) / 2.0
+    g = jnp.exp(-(r * r) / (2.0 * sigma * sigma))
+    w2 = g[:, None] * g[None, :]
+    return w2 / jnp.sum(w2)

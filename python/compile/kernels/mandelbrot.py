@@ -1,0 +1,67 @@
+"""Mandelbrot escape-time kernel (paper benchmark: AMD APP SDK Mandelbrot).
+
+Paper properties (Table I): lws=256, buffers R:W = 0:1, out pattern 4:1
+(RGBA per pixel — the colour mapping is done host-side in rust/benchsuite,
+preserving the 4-bytes-per-item output pattern at L3), 14336 px, 5000
+max iterations.
+
+The kernel consumes per-work-item complex coordinates (cx, cy) computed by
+the L2 wrapper from the tile offset, and iterates z <- z^2 + c.  The
+iteration count per pixel is the irregularity source the paper's Figure 4
+discusses; the rust SimDevice cost profile reuses exactly this math.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET
+
+# Pallas block: one grid step processes BLOCK work-items (= one OpenCL
+# work-group scaled to VPU lane width).
+BLOCK = 256
+
+
+def _mandelbrot_kernel(cx_ref, cy_ref, out_ref, *, max_iter: int):
+    cx = cx_ref[...]
+    cy = cy_ref[...]
+
+    def body(_, state):
+        zx, zy, cnt = state
+        zx2 = zx * zx
+        zy2 = zy * zy
+        alive = (zx2 + zy2) <= 4.0
+        nzx = jnp.where(alive, zx2 - zy2 + cx, zx)
+        nzy = jnp.where(alive, 2.0 * zx * zy + cy, zy)
+        cnt = cnt + alive.astype(jnp.int32)
+        return nzx, nzy, cnt
+
+    zeros = jnp.zeros_like(cx)
+    _, _, cnt = jax.lax.fori_loop(
+        0, max_iter, body, (zeros, zeros, jnp.zeros(cx.shape, jnp.int32))
+    )
+    out_ref[...] = cnt
+
+
+def mandelbrot_tile(cx: jax.Array, cy: jax.Array, *, max_iter: int) -> jax.Array:
+    """Escape-time iteration counts for a tile of pixels.
+
+    cx, cy: (T,) float32 complex-plane coordinates; T % BLOCK == 0.
+    Returns (T,) int32 iteration counts in [0, max_iter].
+    """
+    (t,) = cx.shape
+    assert t % BLOCK == 0, f"tile {t} not a multiple of BLOCK {BLOCK}"
+    grid = (t // BLOCK,)
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_mandelbrot_kernel, max_iter=max_iter),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.int32),
+        interpret=INTERPRET,
+    )(cx, cy)

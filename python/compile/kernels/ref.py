@@ -1,0 +1,135 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Each oracle recomputes the benchmark with a *different* algorithmic
+structure than the kernel (scalar while-loops under vmap, shrinking-array
+induction, argmin-over-stack intersection) so that agreement is a
+meaningful signal, not a tautology.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .binomial import MATURITY, RATE, SIGMA
+from .common import normalize
+from .nbody import EPS2, G
+from .ray import AMBIENT, BOUNCES, LIGHT_DIR, RAY_ORIGIN, SHADOW_EPS
+
+
+# ---------------------------------------------------------------- mandelbrot
+def mandelbrot_ref(cx: jax.Array, cy: jax.Array, *, max_iter: int) -> jax.Array:
+    """Scalar escape-time loop under vmap (kernel uses a vector fori_loop)."""
+
+    def one(cx_i, cy_i):
+        def cond(st):
+            zx, zy, i = st
+            return (i < max_iter) & (zx * zx + zy * zy <= 4.0)
+
+        def body(st):
+            zx, zy, i = st
+            return zx * zx - zy * zy + cx_i, 2.0 * zx * zy + cy_i, i + 1
+
+        _, _, i = jax.lax.while_loop(cond, body, (jnp.float32(0), jnp.float32(0), 0))
+        return i
+
+    return jax.vmap(one)(cx, cy).astype(jnp.int32)
+
+
+# ------------------------------------------------------------------ gaussian
+def gaussian_ref(img_halo: jax.Array, filt: jax.Array) -> jax.Array:
+    """Direct per-output-pixel dot product (kernel uses shifted windows)."""
+    k = filt.shape[0]
+    tr = img_halo.shape[0] - (k - 1)
+    w = img_halo.shape[1] - (k - 1)
+    rows = []
+    for r in range(tr):
+        cols = []
+        for c in range(w):
+            cols.append(jnp.sum(img_halo[r : r + k, c : c + k] * filt))
+        rows.append(jnp.stack(cols))
+    return jnp.stack(rows)
+
+
+# ------------------------------------------------------------------ binomial
+def binomial_ref(s0: jax.Array, strike: jax.Array, *, steps: int) -> jax.Array:
+    """Shrinking-array backward induction (kernel uses fixed-shape rolls)."""
+    dt = MATURITY / steps
+    u = jnp.exp(SIGMA * jnp.sqrt(dt))
+    d = 1.0 / u
+    p = (jnp.exp(RATE * dt) - d) / (u - d)
+    disc = jnp.exp(-RATE * dt)
+    j = jnp.arange(steps + 1, dtype=jnp.float32)
+    st = s0[:, None] * jnp.exp((2.0 * j[None, :] - steps) * SIGMA * jnp.sqrt(dt))
+    v = jnp.maximum(st - strike[:, None], 0.0)
+    for _ in range(steps):
+        v = disc * (p * v[:, 1:] + (1.0 - p) * v[:, :-1])
+    return v[:, 0]
+
+
+# --------------------------------------------------------------------- nbody
+def nbody_ref(
+    pos_all: jax.Array, pos: jax.Array, vel: jax.Array, *, dt: float
+) -> tuple[jax.Array, jax.Array]:
+    """Per-body scalar accumulation under vmap (kernel broadcasts (T,N,3))."""
+
+    def one(p_i, v_i):
+        d = pos_all[:, :3] - p_i[:3]
+        r2 = jnp.sum(d * d, axis=-1) + EPS2
+        acc = jnp.sum((G * pos_all[:, 3] / (r2 * jnp.sqrt(r2)))[:, None] * d, axis=0)
+        nv = v_i[:3] + acc * dt
+        np_ = p_i[:3] + nv * dt
+        return jnp.concatenate([np_, p_i[3:]]), jnp.concatenate([nv, v_i[3:]])
+
+    return jax.vmap(one)(pos, vel)
+
+
+# ----------------------------------------------------------------------- ray
+def _intersect_all(ro, rd, spheres):
+    """(T, S) hit distances via one stacked computation (kernel unrolls)."""
+    oc = ro[:, None, :] - spheres[None, :, :3]  # (T, S, 3)
+    b = jnp.sum(oc * rd[:, None, :], axis=-1)
+    c = jnp.sum(oc * oc, axis=-1) - spheres[None, :, 3] ** 2
+    disc = b * b - c
+    sq = jnp.sqrt(jnp.maximum(disc, 0.0))
+    t0 = -b - sq
+    t1 = -b + sq
+    t = jnp.where(t0 > SHADOW_EPS, t0, t1)
+    return jnp.where((disc > 0.0) & (t > SHADOW_EPS), t, jnp.inf)
+
+
+def ray_ref(rd: jax.Array, spheres: jax.Array) -> jax.Array:
+    """argmin-over-stack tracer (kernel uses sequential where-updates)."""
+    t_items = rd.shape[0]
+    rd = normalize(rd)
+    ro = jnp.broadcast_to(jnp.array(RAY_ORIGIN, jnp.float32), (t_items, 3))
+    light = normalize(jnp.array(LIGHT_DIR, jnp.float32))[None, :]
+    col = jnp.zeros((t_items, 3), jnp.float32)
+    atten = jnp.ones((t_items,), jnp.float32)
+
+    for _ in range(BOUNCES):
+        ts = _intersect_all(ro, rd, spheres)  # (T, S)
+        best = jnp.argmin(ts, axis=1)
+        t_best = jnp.take_along_axis(ts, best[:, None], axis=1)[:, 0]
+        hit = jnp.isfinite(t_best)
+        hit_sph = jnp.where(hit[:, None], spheres[best], 0.0)  # (T, 8)
+        t_safe = jnp.where(hit, t_best, 0.0)
+
+        pt = ro + rd * t_safe[:, None]
+        n = normalize(pt - hit_sph[:, :3])
+        diff = jnp.maximum(jnp.sum(n * light, axis=-1), 0.0)
+
+        sro = pt + n * SHADOW_EPS
+        srd = jnp.broadcast_to(light, (t_items, 3))
+        lit = jnp.all(~jnp.isfinite(_intersect_all(sro, srd, spheres)), axis=1)
+        lit = lit.astype(jnp.float32)
+
+        shade = AMBIENT + (1.0 - AMBIENT) * diff * lit
+        contrib = hit.astype(jnp.float32) * atten * (1.0 - hit_sph[:, 7])
+        col = col + contrib[:, None] * shade[:, None] * hit_sph[:, 4:7]
+
+        atten = atten * hit.astype(jnp.float32) * hit_sph[:, 7]
+        rd = rd - 2.0 * jnp.sum(rd * n, axis=-1, keepdims=True) * n
+        ro = pt + n * SHADOW_EPS
+
+    return jnp.clip(col, 0.0, 1.0)

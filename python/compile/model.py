@@ -1,0 +1,199 @@
+"""L2 — chunked jax compute graphs per benchmark, calling the L1 kernels.
+
+Each benchmark exposes a jit-able `tile_fn(*arrays)` whose positional
+arrays are exactly what the rust DeviceExecutor feeds per tile invocation
+(see the manifest emitted by aot.py), plus an `example_inputs()` builder
+used both for AOT lowering shapes and for the python test-suite.
+
+Index mapping (work-item id -> problem coordinates) lives HERE, not in the
+kernels: the rust side passes either precomputed coordinate arrays
+(mandelbrot cx/cy, ray directions) or host-sliced buffers (gaussian halo
+rows, nbody/binomial tile slices), mirroring how EngineCL slices OpenCL
+buffers per package.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import binomial, gaussian, mandelbrot, nbody, ray
+
+# ---------------------------------------------------------------------------
+# AOT-time tile geometry.  These are the *artifact* sizes (what one HLO
+# invocation processes); the paper-scale problem sizes live in the rust
+# benchsuite and are decomposed onto these tiles.
+# ---------------------------------------------------------------------------
+MANDEL_TILE = 2048
+MANDEL_MAX_ITER = 200  # paper: 5000; scaled for interpret-mode CPU (DESIGN.md)
+
+GAUSS_TILE_ROWS = 8
+GAUSS_WIDTH = 512  # paper: 8192 px; scaled
+GAUSS_K = 5  # paper: 31 px taps; scaled
+GAUSS_SIGMA = 1.4
+
+BINOM_TILE = 256
+BINOM_STEPS = 255  # paper value
+
+NBODY_TILE = 256
+NBODY_N = 2048  # paper: 229376 bodies; scaled
+NBODY_DT = 1e-3
+
+RAY_TILE = 1024
+RAY_WIDTH = 64  # pixels per row at artifact scale
+RAY_SPHERES = 6
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchSpec:
+    """Everything aot.py needs to lower one benchmark to an artifact."""
+
+    name: str
+    tile_fn: Callable  # jit-able; positional array args
+    example_inputs: Callable[[], Sequence[jax.Array]]
+    tile_items: int  # work-items per invocation
+    lws: int  # paper Table I local work size
+    constants: dict  # baked scalars, recorded in the manifest
+
+
+# ----------------------------------------------------------------- mandelbrot
+def mandelbrot_fn(cx: jax.Array, cy: jax.Array) -> tuple[jax.Array,]:
+    return (mandelbrot.mandelbrot_tile(cx, cy, max_iter=MANDEL_MAX_ITER),)
+
+
+def _mandelbrot_inputs() -> Sequence[jax.Array]:
+    t = jnp.linspace(-2.0, 1.0, MANDEL_TILE, dtype=jnp.float32)
+    return (t, t * 0.5)
+
+
+# ------------------------------------------------------------------- gaussian
+def gaussian_fn(img_halo: jax.Array, filt: jax.Array) -> tuple[jax.Array,]:
+    return (gaussian.gaussian_tile(img_halo, filt),)
+
+
+def _gaussian_inputs() -> Sequence[jax.Array]:
+    h = GAUSS_TILE_ROWS + GAUSS_K - 1
+    w = GAUSS_WIDTH + GAUSS_K - 1
+    img = jnp.arange(h * w, dtype=jnp.float32).reshape(h, w) / (h * w)
+    return (img, gaussian.gaussian_weights(GAUSS_K, GAUSS_SIGMA))
+
+
+# ------------------------------------------------------------------- binomial
+def binomial_fn(s0: jax.Array, strike: jax.Array) -> tuple[jax.Array,]:
+    return (binomial.binomial_tile(s0, strike, steps=BINOM_STEPS),)
+
+
+def _binomial_inputs() -> Sequence[jax.Array]:
+    s0 = jnp.linspace(10.0, 100.0, BINOM_TILE, dtype=jnp.float32)
+    return (s0, s0 * 1.05)
+
+
+# ---------------------------------------------------------------------- nbody
+def nbody_fn(
+    pos_all: jax.Array, pos: jax.Array, vel: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    return nbody.nbody_tile(pos_all, pos, vel, dt=NBODY_DT)
+
+
+def _nbody_inputs() -> Sequence[jax.Array]:
+    i = jnp.arange(NBODY_N, dtype=jnp.float32)
+    pos_all = jnp.stack(
+        [jnp.cos(i), jnp.sin(i * 0.7), jnp.cos(i * 0.3), jnp.ones_like(i)], axis=1
+    )
+    return (pos_all, pos_all[:NBODY_TILE], jnp.zeros((NBODY_TILE, 4), jnp.float32))
+
+
+# ------------------------------------------------------------------------ ray
+def ray_fn(rd: jax.Array, spheres: jax.Array) -> tuple[jax.Array,]:
+    return (ray.ray_tile(rd, spheres),)
+
+
+def demo_scene(variant: int = 1) -> jax.Array:
+    """The two paper scenes as (S, 8) buffers: centre xyz, radius, rgb, refl."""
+    if variant == 1:
+        rows = [
+            [0.0, -100.5, 1.0, 100.0, 0.6, 0.6, 0.6, 0.05],  # ground
+            [0.0, 0.0, 1.0, 0.5, 0.9, 0.2, 0.2, 0.30],
+            [-1.1, 0.0, 1.2, 0.5, 0.2, 0.9, 0.2, 0.10],
+            [1.1, 0.0, 1.2, 0.5, 0.2, 0.2, 0.9, 0.60],
+            [0.0, 1.0, 2.0, 0.6, 0.9, 0.9, 0.2, 0.80],
+            [-0.5, -0.3, 0.4, 0.15, 0.9, 0.9, 0.9, 0.00],
+        ]
+    else:  # denser, more reflective scene -> deeper average ray paths
+        rows = [
+            [0.0, -100.5, 1.0, 100.0, 0.5, 0.5, 0.7, 0.40],
+            [-0.8, 0.0, 0.9, 0.45, 0.9, 0.4, 0.1, 0.70],
+            [0.8, 0.0, 0.9, 0.45, 0.1, 0.4, 0.9, 0.70],
+            [0.0, 0.8, 1.4, 0.45, 0.4, 0.9, 0.1, 0.70],
+            [0.0, -0.2, 0.5, 0.20, 0.95, 0.95, 0.95, 0.90],
+            [0.0, 2.2, 2.2, 0.80, 0.8, 0.8, 0.2, 0.20],
+        ]
+    return jnp.array(rows, dtype=jnp.float32)
+
+
+def pixel_rays(idx: jax.Array, width: int) -> jax.Array:
+    """Primary ray directions for flattened pixel indices (host-side analogue
+    lives in rust/src/benchsuite/ray.rs — keep the two in sync)."""
+    x = (idx % width).astype(jnp.float32)
+    y = (idx // width).astype(jnp.float32)
+    u = (x + 0.5) / width * 2.0 - 1.0
+    v = (y + 0.5) / width * 2.0 - 1.0
+    return jnp.stack([u, -v, jnp.ones_like(u)], axis=1)
+
+
+def _ray_inputs() -> Sequence[jax.Array]:
+    idx = jnp.arange(RAY_TILE, dtype=jnp.int32)
+    return (pixel_rays(idx, RAY_WIDTH), demo_scene(1))
+
+
+# ---------------------------------------------------------------------------
+BENCHES: dict[str, BenchSpec] = {
+    "mandelbrot": BenchSpec(
+        "mandelbrot",
+        mandelbrot_fn,
+        _mandelbrot_inputs,
+        tile_items=MANDEL_TILE,
+        lws=256,
+        constants={"max_iter": MANDEL_MAX_ITER, "block": mandelbrot.BLOCK},
+    ),
+    "gaussian": BenchSpec(
+        "gaussian",
+        gaussian_fn,
+        _gaussian_inputs,
+        tile_items=GAUSS_TILE_ROWS * GAUSS_WIDTH,
+        lws=128,
+        constants={
+            "tile_rows": GAUSS_TILE_ROWS,
+            "width": GAUSS_WIDTH,
+            "k": GAUSS_K,
+            "sigma": GAUSS_SIGMA,
+        },
+    ),
+    "binomial": BenchSpec(
+        "binomial",
+        binomial_fn,
+        _binomial_inputs,
+        tile_items=BINOM_TILE * BINOM_STEPS,  # paper: 1 option per 255 items
+        lws=255,
+        constants={"steps": BINOM_STEPS, "options": BINOM_TILE},
+    ),
+    "nbody": BenchSpec(
+        "nbody",
+        nbody_fn,
+        _nbody_inputs,
+        tile_items=NBODY_TILE,
+        lws=64,
+        constants={"n": NBODY_N, "dt": NBODY_DT},
+    ),
+    "ray": BenchSpec(
+        "ray",
+        ray_fn,
+        _ray_inputs,
+        tile_items=RAY_TILE,
+        lws=128,
+        constants={"spheres": RAY_SPHERES, "width": RAY_WIDTH, "bounces": ray.BOUNCES},
+    ),
+}

@@ -1,0 +1,61 @@
+"""AOT pipeline tests: HLO text artifacts + manifest integrity.
+
+Uses the cheapest benchmark (gaussian) for the full lower-and-write path
+to keep CI time bounded; manifest schema is checked for all benches via
+lower-to-entry only where cheap.
+"""
+
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from compile import aot
+from compile.model import BENCHES
+
+
+@pytest.fixture(scope="module")
+def gaussian_artifact():
+    return aot.lower_bench(BENCHES["gaussian"])
+
+
+def test_hlo_text_parses_as_hlo(gaussian_artifact):
+    text, _ = gaussian_artifact
+    assert "ENTRY" in text and "HloModule" in text
+    # return_tuple=True: root is a tuple
+    assert "tuple(" in text or "(f32[" in text
+
+
+def test_manifest_entry_schema(gaussian_artifact):
+    _, entry = gaussian_artifact
+    assert entry["name"] == "gaussian"
+    assert entry["file"] == "gaussian.hlo.txt"
+    assert entry["tile_items"] == entry["constants"]["tile_rows"] * entry["constants"]["width"]
+    k = entry["constants"]["k"]
+    tr = entry["constants"]["tile_rows"]
+    w = entry["constants"]["width"]
+    assert entry["inputs"][0] == {"shape": [tr + k - 1, w + k - 1], "dtype": "f32"}
+    assert entry["inputs"][1] == {"shape": [k, k], "dtype": "f32"}
+    assert entry["outputs"] == [{"shape": [tr, w], "dtype": "f32"}]
+    assert len(entry["sha256"]) == 64
+
+
+def test_manifest_is_json_serializable(gaussian_artifact):
+    _, entry = gaussian_artifact
+    round_tripped = json.loads(json.dumps({"format": 1, "benches": [entry]}))
+    assert round_tripped["benches"][0]["name"] == "gaussian"
+
+
+def test_main_writes_artifacts(tmp_path, monkeypatch):
+    monkeypatch.setattr(
+        "sys.argv",
+        ["aot", "--out-dir", str(tmp_path), "--only", "gaussian"],
+    )
+    aot.main()
+    assert (tmp_path / "gaussian.hlo.txt").exists()
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["format"] == 1
+    assert [b["name"] for b in manifest["benches"]] == ["gaussian"]
+    text = (tmp_path / "gaussian.hlo.txt").read_text()
+    assert "ENTRY" in text

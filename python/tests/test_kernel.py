@@ -1,0 +1,187 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal for L1.
+
+Hypothesis sweeps tile shapes and value ranges; every property asserts
+allclose between the Pallas kernel (interpret=True) and the independently
+structured pure-jnp oracle in ref.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import binomial, gaussian, mandelbrot, nbody, ray, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+HYP = dict(max_examples=12, deadline=None)
+
+
+def rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- mandelbrot
+@settings(**HYP)
+@given(
+    blocks=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+    max_iter=st.sampled_from([8, 33, 100]),
+)
+def test_mandelbrot_matches_ref(blocks, seed, max_iter):
+    t = blocks * mandelbrot.BLOCK
+    r = rng(seed)
+    cx = r.uniform(-2.5, 1.5, t).astype(np.float32)
+    cy = r.uniform(-1.5, 1.5, t).astype(np.float32)
+    got = mandelbrot.mandelbrot_tile(jnp.array(cx), jnp.array(cy), max_iter=max_iter)
+    want = ref.mandelbrot_ref(jnp.array(cx), jnp.array(cy), max_iter=max_iter)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mandelbrot_interior_hits_max_iter():
+    # c = 0 and c = -1 are in the set; c = 1 escapes quickly.
+    cx = jnp.array([0.0, -1.0, 1.0], jnp.float32)
+    cx = jnp.pad(cx, (0, mandelbrot.BLOCK - 3))
+    cy = jnp.zeros_like(cx)
+    out = np.asarray(mandelbrot.mandelbrot_tile(cx, cy, max_iter=64))
+    assert out[0] == 64 and out[1] == 64 and out[2] < 8
+
+
+# ------------------------------------------------------------------ gaussian
+@settings(**HYP)
+@given(
+    tr=st.integers(1, 6),
+    w=st.integers(1, 40),
+    k=st.sampled_from([1, 3, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gaussian_matches_ref(tr, w, k, seed):
+    r = rng(seed)
+    halo = r.standard_normal((tr + k - 1, w + k - 1)).astype(np.float32)
+    filt = r.standard_normal((k, k)).astype(np.float32)
+    got = gaussian.gaussian_tile(jnp.array(halo), jnp.array(filt))
+    want = ref.gaussian_ref(jnp.array(halo), jnp.array(filt))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_gaussian_identity_filter_passthrough():
+    img = jnp.arange(7 * 9, dtype=jnp.float32).reshape(7, 9)
+    filt = jnp.zeros((3, 3), jnp.float32).at[1, 1].set(1.0)
+    out = gaussian.gaussian_tile(img, filt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(img[1:-1, 1:-1]), rtol=1e-6)
+
+
+def test_gaussian_weights_normalized():
+    w = gaussian.gaussian_weights(5, 1.4)
+    assert w.shape == (5, 5)
+    np.testing.assert_allclose(float(jnp.sum(w)), 1.0, rtol=1e-6)
+    # symmetric
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w).T, rtol=1e-6)
+
+
+# ------------------------------------------------------------------ binomial
+@settings(**HYP)
+@given(
+    blocks=st.integers(1, 3),
+    steps=st.sampled_from([16, 64, 255]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_binomial_matches_ref(blocks, steps, seed):
+    b = blocks * binomial.BLOCK
+    r = rng(seed)
+    s0 = r.uniform(5.0, 150.0, b).astype(np.float32)
+    strike = r.uniform(5.0, 150.0, b).astype(np.float32)
+    got = binomial.binomial_tile(jnp.array(s0), jnp.array(strike), steps=steps)
+    want = ref.binomial_ref(jnp.array(s0), jnp.array(strike), steps=steps)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=1e-3)
+
+
+def test_binomial_price_bounds():
+    """European call: max(S-K, 0) <= C <= S (no-arbitrage bounds)."""
+    s0 = jnp.linspace(10.0, 120.0, binomial.BLOCK, dtype=jnp.float32)
+    strike = jnp.full_like(s0, 60.0)
+    c = np.asarray(binomial.binomial_tile(s0, strike, steps=64))
+    s = np.asarray(s0)
+    assert (c <= s + 1e-3).all()
+    assert (c >= np.maximum(s - 60.0, 0.0) - 0.5).all()  # loose: discounting
+    # monotone in S0
+    assert (np.diff(c) >= -1e-4).all()
+
+
+# --------------------------------------------------------------------- nbody
+@settings(**HYP)
+@given(
+    t=st.sampled_from([8, 32, 64]),
+    n=st.sampled_from([64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_nbody_matches_ref(t, n, seed):
+    r = rng(seed)
+    pos_all = r.standard_normal((n, 4)).astype(np.float32)
+    pos_all[:, 3] = np.abs(pos_all[:, 3]) + 0.1  # positive masses
+    pos = pos_all[:t].copy()
+    vel = r.standard_normal((t, 4)).astype(np.float32) * 0.1
+    gp, gv = nbody.nbody_tile(jnp.array(pos_all), jnp.array(pos), jnp.array(vel), dt=1e-3)
+    wp, wv = ref.nbody_ref(jnp.array(pos_all), jnp.array(pos), jnp.array(vel), dt=1e-3)
+    np.testing.assert_allclose(np.asarray(gp), np.asarray(wp), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(wv), rtol=1e-4, atol=1e-5)
+
+
+def test_nbody_mass_lane_passthrough():
+    n = 32
+    r = rng(7)
+    pos_all = r.standard_normal((n, 4)).astype(np.float32)
+    vel = np.zeros((n, 4), np.float32)
+    vel[:, 3] = 5.0
+    gp, gv = nbody.nbody_tile(jnp.array(pos_all), jnp.array(pos_all), jnp.array(vel), dt=1e-3)
+    np.testing.assert_array_equal(np.asarray(gp)[:, 3], pos_all[:, 3])
+    np.testing.assert_array_equal(np.asarray(gv)[:, 3], vel[:, 3])
+
+
+def test_nbody_two_body_symmetry():
+    """Two equal masses on the x-axis accelerate towards each other."""
+    pos_all = jnp.array([[-1, 0, 0, 1], [1, 0, 0, 1]], jnp.float32)
+    vel = jnp.zeros((2, 4), jnp.float32)
+    _, gv = nbody.nbody_tile(pos_all, pos_all, vel, dt=1.0)
+    v = np.asarray(gv)
+    assert v[0, 0] > 0 and v[1, 0] < 0
+    np.testing.assert_allclose(v[0, 0], -v[1, 0], rtol=1e-5)
+
+
+# ----------------------------------------------------------------------- ray
+@settings(**HYP)
+@given(
+    t=st.sampled_from([16, 64, 256]),
+    scene=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ray_matches_ref(t, scene, seed):
+    from compile.model import demo_scene, pixel_rays
+
+    r = rng(seed)
+    idx = r.integers(0, 64 * 64, t).astype(np.int32)
+    rd = pixel_rays(jnp.array(idx), 64)
+    sph = demo_scene(scene)
+    got = ray.ray_tile(rd, sph)
+    want = ref.ray_ref(rd, sph)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_ray_output_in_unit_range():
+    from compile.model import demo_scene, pixel_rays
+
+    idx = jnp.arange(256, dtype=jnp.int32)
+    out = np.asarray(ray.ray_tile(pixel_rays(idx, 16), demo_scene(2)))
+    assert (out >= 0.0).all() and (out <= 1.0).all()
+    assert out.std() > 0.0  # scene actually shades something
+
+
+def test_ray_miss_is_black():
+    sph = jnp.array([[0.0, 0.0, 5.0, 0.1, 1, 1, 1, 0.0]], jnp.float32)
+    rd = jnp.array([[0.0, 0.0, -1.0]], jnp.float32)  # points away from scene
+    out = np.asarray(ray.ray_tile(rd, sph))
+    np.testing.assert_allclose(out, 0.0, atol=1e-6)

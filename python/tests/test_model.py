@@ -1,0 +1,72 @@
+"""L2 model-level tests: registry integrity, shapes, and tile semantics."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.model import BENCHES
+
+
+@pytest.mark.parametrize("name", sorted(BENCHES))
+def test_example_inputs_match_eval_shape(name):
+    spec = BENCHES[name]
+    inputs = spec.example_inputs()
+    outs = jax.eval_shape(spec.tile_fn, *inputs)
+    assert isinstance(outs, tuple) and len(outs) >= 1
+    for o in outs:
+        assert all(d > 0 for d in o.shape)
+
+
+@pytest.mark.parametrize("name", sorted(BENCHES))
+def test_tile_fn_is_jittable(name):
+    """Every benchmark must lower through jit — the AOT precondition."""
+    spec = BENCHES[name]
+    shapes = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in spec.example_inputs()]
+    lowered = jax.jit(spec.tile_fn).lower(*shapes)
+    assert "stablehlo" in str(lowered.compiler_ir("stablehlo"))[:10_000]
+
+
+def test_registry_properties_match_paper_table1():
+    """Table I parity: local work sizes per benchmark."""
+    assert BENCHES["gaussian"].lws == 128
+    assert BENCHES["binomial"].lws == 255
+    assert BENCHES["nbody"].lws == 64
+    assert BENCHES["ray"].lws == 128
+    assert BENCHES["mandelbrot"].lws == 256
+
+
+def test_binomial_out_pattern_1_to_255():
+    spec = BENCHES["binomial"]
+    (out,) = jax.eval_shape(spec.tile_fn, *[
+        jax.ShapeDtypeStruct(a.shape, a.dtype) for a in spec.example_inputs()
+    ])
+    # 1 option price per 255 work-items
+    assert spec.tile_items == out.shape[0] * 255
+
+
+def test_pixel_rays_center_of_image_points_forward():
+    w = 64
+    center = jnp.array([w // 2 + (w // 2) * w], jnp.int32)
+    rd = np.asarray(model.pixel_rays(center, w))[0]
+    assert abs(rd[0]) < 0.05 and abs(rd[1]) < 0.05 and rd[2] == 1.0
+
+
+def test_demo_scenes_differ():
+    s1, s2 = model.demo_scene(1), model.demo_scene(2)
+    assert s1.shape == s2.shape == (model.RAY_SPHERES, 8)
+    assert not np.allclose(np.asarray(s1), np.asarray(s2))
+    # radii positive, reflectivity in [0, 1]
+    for s in (s1, s2):
+        a = np.asarray(s)
+        assert (a[:, 3] > 0).all()
+        assert ((a[:, 7] >= 0) & (a[:, 7] <= 1)).all()
+
+
+def test_nbody_tile_slices_are_views_of_pos_all():
+    pos_all, pos, vel = BENCHES["nbody"].example_inputs()
+    np.testing.assert_array_equal(np.asarray(pos), np.asarray(pos_all)[: pos.shape[0]])
+    assert vel.shape == pos.shape

@@ -1,0 +1,49 @@
+//! Bench: regenerate Fig. 3 (speedup + efficiency per scheduler/program)
+//! and time the underlying simulation throughput.
+//!
+//! `cargo bench --bench fig3_schedulers`
+
+use enginecl::benchsuite::{Bench, BenchId};
+use enginecl::engine::experiments;
+use enginecl::engine::Engine;
+use enginecl::scheduler::SchedulerKind;
+use enginecl::stats::benchkit::Bencher;
+
+fn main() {
+    let mut b = Bencher::new("fig3");
+
+    // Timing: one full co-execution simulation per scheduler config on the
+    // paper-size Mandelbrot (the largest index space).
+    let bench = Bench::new(BenchId::Mandelbrot);
+    for kind in SchedulerKind::fig3_configs() {
+        let engine = Engine::new(bench.clone()).with_scheduler(kind.clone());
+        let mut seed = 0u64;
+        b.bench(&format!("simulate/{}", kind.label().replace(' ', "_")), 30, || {
+            seed += 1;
+            let r = engine.run(seed);
+            assert!(r.time > 0.0);
+        });
+    }
+
+    // Regeneration: the actual figure data (paper protocol at reduced reps
+    // to stay CI-friendly; the CLI uses --reps 50).
+    let rows = b.bench_val("regenerate/fig3_rows(reps=10)", 1, || experiments::fig3(10));
+    let means = experiments::fig3_geomeans(&rows);
+    println!("\nFIG 3 (regenerated, 10 reps/config):");
+    println!("{:<12}{:>12}{:>10}{:>10}", "bench", "sched", "speedup", "eff");
+    for r in rows.iter().chain(means.iter()) {
+        println!(
+            "{:<12}{:>12}{:>10.3}{:>10.3}",
+            r.bench, r.scheduler, r.speedup, r.efficiency
+        );
+    }
+
+    // Paper-shape assertions (same invariants the integration tests hold).
+    let eff = |label: &str| {
+        means.iter().find(|r| r.scheduler == label).map(|r| r.efficiency).unwrap()
+    };
+    let hg_opt = eff("HGuided opt");
+    assert!(hg_opt > eff("HGuided"), "optimized HGuided must win on average");
+    assert!((0.78..0.92).contains(&hg_opt), "geomean efficiency {hg_opt} vs paper 0.84");
+    b.finish();
+}

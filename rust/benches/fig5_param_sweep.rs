@@ -1,0 +1,79 @@
+//! Bench: regenerate Fig. 5 (HGuided m,k parameter sweep) for every
+//! benchmark and report the cross-program ranking of parameter combos —
+//! the paper's conclusions (a)–(e) in §V-B.
+//!
+//! `cargo bench --bench fig5_param_sweep`
+
+use enginecl::benchsuite::BenchId;
+use enginecl::engine::experiments::{self, Fig5Row};
+use enginecl::stats::benchkit::Bencher;
+
+fn main() {
+    let mut b = Bencher::new("fig5");
+    let reps = 6;
+
+    let mut all: Vec<Fig5Row> = Vec::new();
+    for id in BenchId::ALL {
+        let rows = b.bench_val(
+            &format!("sweep/{}", id.label()),
+            1,
+            || experiments::fig5(id, reps),
+        );
+        let best = experiments::fig5_best(&rows);
+        println!(
+            "  {:<12} best m={:?} k={:?} ({:.4}s)",
+            id.label(),
+            best.m,
+            best.k,
+            best.mean_time_s
+        );
+        all.extend(rows);
+    }
+
+    // Cross-program ranking: normalize each bench's times by its own best,
+    // then average — the paper's "no perfect choice, but m={1,15,30},
+    // k={3.5,1.5,1} gives the best results" analysis.
+    let (ms, ks) = experiments::fig5_grid();
+    println!("\ncross-program mean normalized time per (m, k) combo:");
+    let mut ranking: Vec<(f64, [u64; 3], [f64; 3])> = Vec::new();
+    for m in &ms {
+        for k in &ks {
+            let mut norm = Vec::new();
+            for id in BenchId::ALL {
+                let label = id.label();
+                let best = all
+                    .iter()
+                    .filter(|r| r.bench == label)
+                    .map(|r| r.mean_time_s)
+                    .fold(f64::INFINITY, f64::min);
+                let this = all
+                    .iter()
+                    .find(|r| r.bench == label && r.m == *m && r.k == *k)
+                    .unwrap()
+                    .mean_time_s;
+                norm.push(this / best);
+            }
+            ranking.push((enginecl::stats::mean(&norm), *m, *k));
+        }
+    }
+    ranking.sort_by(|a, b| a.0.total_cmp(&b.0));
+    for (i, (score, m, k)) in ranking.iter().take(8).enumerate() {
+        println!("  #{:<2} {:.4}  m={:?} k={:?}", i + 1, score, m, k);
+    }
+
+    // Paper conclusion (d): among single-k rows, k = 2 is the best choice.
+    let single_k: Vec<&(f64, [u64; 3], [f64; 3])> = ranking
+        .iter()
+        .filter(|(_, _, k)| k[0] == k[1] && k[1] == k[2])
+        .collect();
+    println!(
+        "\nbest uniform k: k={:?} (paper: k = 2)",
+        single_k.first().map(|(_, _, k)| k[0])
+    );
+    // Paper conclusion (a)/(b): the top combo should have non-increasing k
+    // and non-decreasing m towards the more powerful devices.
+    let (_, m_top, k_top) = ranking[0];
+    assert!(k_top[0] >= k_top[2], "top combo: k decreases with power {k_top:?}");
+    assert!(m_top[0] <= m_top[2], "top combo: m increases with power {m_top:?}");
+    b.finish();
+}

@@ -1,0 +1,68 @@
+//! Bench: regenerate Fig. 6 (execution time vs problem size, binary vs
+//! ROI, optimized vs baseline runtime) and its inflection points for all
+//! six programs, reporting the averaged improvements against the paper's
+//! 7.5 % (init) / 17.4 % (buffers) numbers.
+//!
+//! `cargo bench --bench fig6_inflection`
+
+use enginecl::benchsuite::BenchId;
+use enginecl::engine::experiments::{self, Inflection, OptLevel};
+use enginecl::stats::benchkit::Bencher;
+
+fn main() {
+    let mut b = Bencher::new("fig6");
+    let reps = 5;
+
+    let mut all_infl: Vec<Inflection> = Vec::new();
+    for id in BenchId::ALL {
+        let rows =
+            b.bench_val(&format!("sweep/{}", id.label()), 1, || experiments::fig6(id, reps));
+        let infl = experiments::inflections(&rows);
+        for i in &infl {
+            if let (Some(g), Some(t)) = (i.gws, i.time_s) {
+                println!(
+                    "  {:<12}{:>8}{:>15}  gws*={:>12.0}  t*={:.4}s",
+                    i.bench, i.mode, i.opts, g, t
+                );
+            } else {
+                println!("  {:<12}{:>8}{:>15}  never crosses", i.bench, i.mode, i.opts);
+            }
+        }
+        all_infl.extend(infl);
+    }
+
+    let init_gain =
+        experiments::inflection_improvement(&all_infl, OptLevel::None, OptLevel::Init);
+    let buf_gain =
+        experiments::inflection_improvement(&all_infl, OptLevel::Init, OptLevel::All);
+    println!(
+        "\naveraged inflection improvements over all programs and modes:\n  \
+         init    {:+.1}%  (paper:  7.5%)\n  buffers {:+.1}%  (paper: 17.4%)",
+        init_gain * 100.0,
+        buf_gain * 100.0
+    );
+
+    // Shape assertions: both optimizations must shrink the break-even
+    // threshold on average; the fully-optimized ROI threshold must be in
+    // the tens-of-milliseconds regime the paper reports (~15 ms), and the
+    // binary threshold in the seconds regime (~1.75 s).
+    assert!(init_gain > 0.0, "init optimization must improve inflections");
+    assert!(buf_gain > 0.0, "buffer optimization must improve inflections");
+    let roi_opt: Vec<f64> = all_infl
+        .iter()
+        .filter(|i| i.mode == "roi" && i.opts == OptLevel::All.label())
+        .filter_map(|i| i.time_s)
+        .collect();
+    let binary_opt: Vec<f64> = all_infl
+        .iter()
+        .filter(|i| i.mode == "binary" && i.opts == OptLevel::All.label())
+        .filter_map(|i| i.time_s)
+        .collect();
+    let roi_mean = enginecl::stats::mean(&roi_opt);
+    let bin_mean = enginecl::stats::mean(&binary_opt);
+    println!("mean optimized break-even: roi {:.1} ms (paper ~15 ms), binary {:.2} s (paper ~1.75 s)",
+        roi_mean * 1e3, bin_mean);
+    assert!((0.005..0.2).contains(&roi_mean), "ROI break-even {roi_mean}s");
+    assert!((0.5..4.0).contains(&bin_mean), "binary break-even {bin_mean}s");
+    b.finish();
+}

@@ -1,0 +1,90 @@
+//! Bench: L3 coordinator hot paths — the performance-pass targets of
+//! EXPERIMENTS.md §Perf.
+//!
+//! * scheduler decision latency (per `next()` call) for every policy;
+//! * full event-loop throughput (simulated packages/second);
+//! * cost-profile integral evaluation (the per-package cost lookup);
+//! * metrics + RNG micro-costs.
+//!
+//! `cargo bench --bench l3_hotpath`
+
+use enginecl::benchsuite::{Bench, BenchId};
+use enginecl::scheduler::{SchedCtx, SchedulerKind};
+use enginecl::sim::{simulate, SimConfig};
+use enginecl::stats::benchkit::Bencher;
+use enginecl::stats::XorShift64;
+use enginecl::types::ItemRange;
+use std::hint::black_box;
+
+fn main() {
+    let mut b = Bencher::new("l3_hotpath");
+
+    // ---- scheduler decision latency ------------------------------------
+    // Target: < 1 µs per package grant (vs the modelled 150 µs host grant
+    // overhead — the scheduler itself must be negligible).
+    let ctx = SchedCtx::new(800_000, vec![0.108, 0.328, 0.93]);
+    for kind in SchedulerKind::fig3_configs() {
+        let name = format!("sched_next/{}", kind.label().replace(' ', "_"));
+        let rate = b.bench_throughput(&name, 3, || {
+            let mut s = kind.build(&ctx);
+            let mut grants = 0u64;
+            let mut dev = 0;
+            while let Some(g) = s.next(dev) {
+                black_box(g);
+                grants += 1;
+                dev = (dev + 1) % 3;
+            }
+            grants
+        });
+        assert!(rate > 1e6, "{name}: {rate:.0} grants/s (< 1M/s)");
+    }
+
+    // ---- full simulation throughput ------------------------------------
+    let bench = Bench::new(BenchId::Mandelbrot);
+    let cfg = SimConfig::testbed(
+        &bench,
+        SchedulerKind::HGuided {
+            params: enginecl::scheduler::HGuidedParams::optimized_paper(),
+        },
+    );
+    let pkgs = simulate(&bench, &cfg).n_packages;
+    let mut seed = 0;
+    let s = b.bench("simulate/mandelbrot_full", 50, || {
+        seed += 1;
+        let mut c = cfg.clone();
+        c.seed = seed;
+        black_box(simulate(&bench, &c));
+    });
+    println!(
+        "  -> {pkgs} packages per run, {:.2e} simulated packages/s",
+        pkgs as f64 / s.mean
+    );
+    // 50-rep Fig-3 cell must stay well under a second.
+    assert!(s.mean < 0.02, "one simulation took {:.4}s", s.mean);
+
+    // ---- cost profile integrals (per-package cost lookup) ---------------
+    let gws = bench.default_gws;
+    let mut rng = XorShift64::new(7);
+    let rate = b.bench_throughput("cost/range_cost_mandelbrot", 5, || {
+        let mut acc = 0.0;
+        for _ in 0..100_000 {
+            let a = rng.below(gws - 1);
+            let len = rng.below(1 << 20) + 1;
+            acc += bench.range_cost(ItemRange::new(a, (a + len).min(gws)), gws);
+        }
+        black_box(acc);
+        100_000
+    });
+    assert!(rate > 1e6, "range_cost {rate:.0}/s (< 1M/s)");
+
+    // ---- metrics + rng micro-costs --------------------------------------
+    b.bench_throughput("rng/jitter", 5, || {
+        let mut acc = 0.0;
+        for _ in 0..100_000 {
+            acc += rng.jitter(0.035);
+        }
+        black_box(acc);
+        100_000
+    });
+    b.finish();
+}

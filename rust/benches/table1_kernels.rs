@@ -1,0 +1,66 @@
+//! Bench: Table I regeneration + real AOT-kernel tile latencies on the
+//! PJRT CPU client (the L1 performance numbers for EXPERIMENTS.md §Perf).
+//!
+//! Needs `make artifacts`; skips the PJRT half gracefully when absent.
+//!
+//! `cargo bench --bench table1_kernels`
+
+use enginecl::benchsuite::{data::Problem, Bench, BenchId};
+use enginecl::runtime::{ArtifactDir, TileRunner};
+use enginecl::stats::benchkit::Bencher;
+
+fn main() {
+    // ---- Table I --------------------------------------------------------
+    println!("TABLE I (regenerated):");
+    println!(
+        "{:<12}{:>6}{:>6}{:>9}{:>6}{:>6}{:>6}{:>12}{:>10}",
+        "bench", "lws", "R:W", "out", "args", "lmem", "ctyp", "gws", "peak/mean"
+    );
+    for id in BenchId::ALL {
+        let b = Bench::new(id);
+        println!(
+            "{:<12}{:>6}{:>6}{:>9}{:>6}{:>6}{:>6}{:>12}{:>10.2}",
+            b.props.name,
+            b.props.lws,
+            format!("{}:{}", b.props.read_buffers, b.props.write_buffers),
+            format!("{}:{}", b.props.out_pattern.0, b.props.out_pattern.1),
+            b.props.kernel_args,
+            if b.props.local_mem { "yes" } else { "no" },
+            if b.props.custom_types { "yes" } else { "no" },
+            b.default_gws,
+            b.profile.peak_to_mean()
+        );
+    }
+
+    // ---- real tile latencies ---------------------------------------------
+    let dir = ArtifactDir::default_path();
+    if !dir.join("manifest.json").exists() {
+        println!("\n(artifacts missing — run `make artifacts` for PJRT tile latencies)");
+        return;
+    }
+    let artifacts = ArtifactDir::open(&dir).expect("artifacts");
+    let mut b = Bencher::new("table1_kernels");
+    for id in [
+        BenchId::Mandelbrot,
+        BenchId::Gaussian,
+        BenchId::Binomial,
+        BenchId::NBody,
+        BenchId::Ray1,
+    ] {
+        let entry = artifacts.manifest.entry(id.artifact_name()).unwrap();
+        let tiles_needed = if id == BenchId::NBody { 8 } else { 4 };
+        let problem = Problem::new(id, tiles_needed, entry, 7).unwrap();
+        let mut runner = TileRunner::load(&artifacts, id.artifact_name()).unwrap();
+        let inputs = problem.tile_inputs(0);
+        let s = b.bench(&format!("tile/{}", id.label()), 10, || {
+            let out = runner.run(&inputs).unwrap();
+            assert!(!out.is_empty());
+        });
+        let items_per_sec = entry.tile_items as f64 / s.mean;
+        println!(
+            "  -> {} items/tile, {:.3e} items/s on the CPU PJRT client",
+            entry.tile_items, items_per_sec
+        );
+    }
+    b.finish();
+}

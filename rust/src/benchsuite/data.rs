@@ -1,0 +1,393 @@
+//! Host-side problem data for the PJRT execution path.
+//!
+//! A [`Problem`] owns the full input buffers of one benchmark at a chosen
+//! problem scale (exact multiples of the artifact tile size), slices tile
+//! inputs for each HLO invocation, and verifies device outputs against the
+//! [`super::oracle`] implementations.  This is EngineCL's buffer-slicing
+//! role, performed by the rust coordinator.
+
+use super::{mandelbrot, oracle, ray, BenchId};
+use crate::runtime::HostArray;
+use crate::stats::XorShift64;
+use anyhow::{bail, Result};
+
+/// Benchmark-specific payload + tile geometry for the PJRT path.
+#[derive(Debug, Clone)]
+pub struct Problem {
+    pub bench: BenchId,
+    /// Total work-items (exact multiple of `tile_items`).
+    pub gws: u64,
+    /// Work-items per artifact invocation (from the manifest).
+    pub tile_items: u64,
+    payload: Payload,
+}
+
+#[derive(Debug, Clone)]
+enum Payload {
+    Mandelbrot {
+        width: u64,
+        height: u64,
+    },
+    Gaussian {
+        /// padded image (rows + k - 1) x (width + k - 1), row-major
+        img: Vec<f32>,
+        filt: Vec<f32>,
+        width: usize,
+        k: usize,
+        tile_rows: usize,
+    },
+    Binomial {
+        s0: Vec<f32>,
+        strike: Vec<f32>,
+        steps: u32,
+        options_per_tile: usize,
+    },
+    NBody {
+        pos: Vec<f32>, // (N, 4) row-major
+        vel: Vec<f32>,
+        n: usize,
+        dt: f32,
+    },
+    Ray {
+        scene: Vec<ray::Sphere>,
+        width: u64,
+    },
+}
+
+impl Problem {
+    /// Build a problem sized `tiles * tile_items` work-items.
+    /// `constants` comes from the artifact manifest entry.
+    pub fn new(
+        bench: BenchId,
+        tiles: u64,
+        manifest: &crate::runtime::ManifestEntry,
+        seed: u64,
+    ) -> Result<Self> {
+        let tile_items = manifest.tile_items;
+        let gws = tiles * tile_items;
+        let c = &manifest.constants;
+        let payload = match bench {
+            BenchId::Mandelbrot => {
+                // Square-ish view: width fixed at 1024 px.
+                let width = 1024u64;
+                if gws % width != 0 {
+                    bail!("mandelbrot gws {gws} not a multiple of width {width}");
+                }
+                Payload::Mandelbrot { width, height: gws / width }
+            }
+            BenchId::Gaussian => {
+                let tile_rows = c["tile_rows"].as_u64().unwrap() as usize;
+                let width = c["width"].as_u64().unwrap() as usize;
+                let k = c["k"].as_u64().unwrap() as usize;
+                let sigma = c["sigma"].as_f64().unwrap() as f32;
+                let rows = (tiles as usize) * tile_rows;
+                let (h, w) = (rows + k - 1, width + k - 1);
+                let mut rng = XorShift64::new(seed);
+                let img: Vec<f32> =
+                    (0..h * w).map(|_| rng.next_f64() as f32).collect();
+                let _ = rows;
+                Payload::Gaussian {
+                    img,
+                    filt: oracle::gaussian_weights(k, sigma),
+                    width,
+                    k,
+                    tile_rows,
+                }
+            }
+            BenchId::Binomial => {
+                let steps = c["steps"].as_u64().unwrap() as u32;
+                let options_per_tile = c["options"].as_u64().unwrap() as usize;
+                let n_opt = tiles as usize * options_per_tile;
+                let mut rng = XorShift64::new(seed);
+                let s0: Vec<f32> =
+                    (0..n_opt).map(|_| rng.uniform(10.0, 150.0) as f32).collect();
+                let strike: Vec<f32> =
+                    (0..n_opt).map(|_| rng.uniform(10.0, 150.0) as f32).collect();
+                Payload::Binomial { s0, strike, steps, options_per_tile }
+            }
+            BenchId::NBody => {
+                let n = c["n"].as_u64().unwrap() as usize;
+                let dt = c["dt"].as_f64().unwrap() as f32;
+                if gws != n as u64 {
+                    bail!("nbody gws {gws} must equal N {n} (tiles * tile)");
+                }
+                let mut rng = XorShift64::new(seed);
+                let mut pos = Vec::with_capacity(n * 4);
+                let mut vel = Vec::with_capacity(n * 4);
+                for _ in 0..n {
+                    for _ in 0..3 {
+                        pos.push(rng.uniform(-1.0, 1.0) as f32);
+                        vel.push(rng.uniform(-0.1, 0.1) as f32);
+                    }
+                    pos.push(rng.uniform(0.1, 1.0) as f32); // mass
+                    vel.push(0.0);
+                }
+                Payload::NBody { pos, vel, n, dt }
+            }
+            BenchId::Ray1 | BenchId::Ray2 => {
+                let width = 256u64;
+                if gws % width != 0 {
+                    bail!("ray gws {gws} not a multiple of width {width}");
+                }
+                let variant = if bench == BenchId::Ray1 { 1 } else { 2 };
+                Payload::Ray { scene: ray::scene(variant), width }
+            }
+        };
+        Ok(Self { bench, gws, tile_items, payload })
+    }
+
+    pub fn tiles(&self) -> u64 {
+        self.gws / self.tile_items
+    }
+
+    /// Whether artifact input `i` is loop-invariant across tiles (filter
+    /// taps, scene buffer, full position set).  The PJRT backend's
+    /// *buffers* optimization uploads these once per device.
+    pub fn input_is_constant(&self, i: usize) -> bool {
+        match &self.payload {
+            Payload::Mandelbrot { .. } | Payload::Binomial { .. } => false,
+            Payload::Gaussian { .. } => i == 1, // filter
+            Payload::NBody { .. } => i == 0,    // pos_all
+            Payload::Ray { .. } => i == 1,      // scene
+        }
+    }
+
+    /// Input arrays for the artifact invocation covering items
+    /// `[tile * tile_items, (tile + 1) * tile_items)`.
+    pub fn tile_inputs(&self, tile: u64) -> Vec<HostArray> {
+        let t = self.tile_items;
+        let begin = tile * t;
+        match &self.payload {
+            Payload::Mandelbrot { width, height } => {
+                let mut cx = Vec::with_capacity(t as usize);
+                let mut cy = Vec::with_capacity(t as usize);
+                for i in begin..begin + t {
+                    let (x, y) = mandelbrot::pixel_to_c(i, *width, *height);
+                    cx.push(x);
+                    cy.push(y);
+                }
+                vec![HostArray::f32(vec![t as usize], cx), HostArray::f32(vec![t as usize], cy)]
+            }
+            Payload::Gaussian { img, filt, width, k, tile_rows, .. } => {
+                let stride = width + k - 1;
+                let r0 = tile as usize * tile_rows;
+                let slice_rows = tile_rows + k - 1;
+                let halo: Vec<f32> =
+                    img[r0 * stride..(r0 + slice_rows) * stride].to_vec();
+                vec![
+                    HostArray::f32(vec![slice_rows, stride], halo),
+                    HostArray::f32(vec![*k, *k], filt.clone()),
+                ]
+            }
+            Payload::Binomial { s0, strike, options_per_tile, .. } => {
+                let o0 = tile as usize * options_per_tile;
+                let o1 = o0 + options_per_tile;
+                vec![
+                    HostArray::f32(vec![*options_per_tile], s0[o0..o1].to_vec()),
+                    HostArray::f32(vec![*options_per_tile], strike[o0..o1].to_vec()),
+                ]
+            }
+            Payload::NBody { pos, vel, n, .. } => {
+                let b0 = begin as usize;
+                let b1 = (begin + t) as usize;
+                vec![
+                    HostArray::f32(vec![*n, 4], pos.clone()),
+                    HostArray::f32(vec![t as usize, 4], pos[b0 * 4..b1 * 4].to_vec()),
+                    HostArray::f32(vec![t as usize, 4], vel[b0 * 4..b1 * 4].to_vec()),
+                ]
+            }
+            Payload::Ray { scene, width } => {
+                let mut rd = Vec::with_capacity(t as usize * 3);
+                for i in begin..begin + t {
+                    let d = ray::pixel_ray(i, *width);
+                    rd.extend_from_slice(&d);
+                }
+                let mut sph = Vec::with_capacity(scene.len() * 8);
+                for s in scene {
+                    sph.extend_from_slice(s);
+                }
+                vec![
+                    HostArray::f32(vec![t as usize, 3], rd),
+                    HostArray::f32(vec![scene.len(), 8], sph),
+                ]
+            }
+        }
+    }
+
+    /// Verify a sample of `samples` items of a tile's outputs against the
+    /// rust oracle.  Returns the number of mismatching sampled items.
+    pub fn verify_tile(&self, tile: u64, outputs: &[HostArray], samples: u64) -> usize {
+        let t = self.tile_items;
+        let begin = tile * t;
+        let mut rng = XorShift64::new(0xC0FFEE ^ tile);
+        let mut bad = 0usize;
+        match &self.payload {
+            Payload::Mandelbrot { width, height } => {
+                let out = outputs[0].as_i32();
+                for _ in 0..samples {
+                    let j = rng.below(t);
+                    let (cx, cy) = mandelbrot::pixel_to_c(begin + j, *width, *height);
+                    let want = mandelbrot::escape_iters(cx, cy, 200) as i32;
+                    if out[j as usize] != want {
+                        bad += 1;
+                    }
+                }
+            }
+            Payload::Gaussian { img, filt, width, k, tile_rows, .. } => {
+                let out = outputs[0].as_f32();
+                let stride = width + k - 1;
+                let r0 = tile as usize * tile_rows;
+                let halo = &img[r0 * stride..(r0 + tile_rows + k - 1) * stride];
+                let want = oracle::gaussian_blur(halo, *tile_rows, *width, filt, *k);
+                for _ in 0..samples {
+                    let j = rng.below((tile_rows * width) as u64) as usize;
+                    if !oracle::close(out[j], want[j], 1e-4, 1e-5) {
+                        bad += 1;
+                    }
+                }
+            }
+            Payload::Binomial { s0, strike, steps, options_per_tile } => {
+                let out = outputs[0].as_f32();
+                let o0 = tile as usize * options_per_tile;
+                for _ in 0..samples {
+                    let j = rng.below(*options_per_tile as u64) as usize;
+                    let want = oracle::binomial_price(s0[o0 + j], strike[o0 + j], *steps);
+                    if !oracle::close(out[j], want, 5e-3, 1e-2) {
+                        bad += 1;
+                    }
+                }
+            }
+            Payload::NBody { pos, vel, n, dt } => {
+                let op = outputs[0].as_f32();
+                let ov = outputs[1].as_f32();
+                let all: Vec<[f32; 4]> = (0..*n)
+                    .map(|i| [pos[i * 4], pos[i * 4 + 1], pos[i * 4 + 2], pos[i * 4 + 3]])
+                    .collect();
+                for _ in 0..samples {
+                    let j = rng.below(t) as usize;
+                    let gi = begin as usize + j;
+                    let p = all[gi];
+                    let v = [vel[gi * 4], vel[gi * 4 + 1], vel[gi * 4 + 2], vel[gi * 4 + 3]];
+                    let (wp, wv) = oracle::nbody_step(&all, p, v, *dt);
+                    for c in 0..4 {
+                        if !oracle::close(op[j * 4 + c], wp[c], 1e-3, 1e-4)
+                            || !oracle::close(ov[j * 4 + c], wv[c], 1e-3, 1e-4)
+                        {
+                            bad += 1;
+                            break;
+                        }
+                    }
+                }
+            }
+            Payload::Ray { scene, width } => {
+                let out = outputs[0].as_f32();
+                for _ in 0..samples {
+                    let j = rng.below(t) as usize;
+                    let rd = ray::pixel_ray(begin + j as u64, *width);
+                    let want = oracle::trace_pixel(rd, scene);
+                    for c in 0..3 {
+                        if !oracle::close(out[j * 3 + c], want[c], 1e-3, 1e-3) {
+                            bad += 1;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        bad
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonio::Json;
+    use crate::runtime::ManifestEntry;
+
+    fn entry(bench: BenchId) -> ManifestEntry {
+        // Mirror artifacts/manifest.json geometry without needing the file.
+        let (tile_items, constants) = match bench {
+            BenchId::Mandelbrot => (2048, r#"{"max_iter": 200, "block": 256}"#),
+            BenchId::Gaussian => {
+                (4096, r#"{"tile_rows": 8, "width": 512, "k": 5, "sigma": 1.4}"#)
+            }
+            BenchId::Binomial => (65280, r#"{"steps": 255, "options": 256}"#),
+            BenchId::NBody => (256, r#"{"n": 2048, "dt": 1e-3}"#),
+            BenchId::Ray1 | BenchId::Ray2 => {
+                (1024, r#"{"spheres": 6, "width": 64, "bounces": 2}"#)
+            }
+        };
+        ManifestEntry {
+            name: bench.artifact_name().into(),
+            file: format!("{}.hlo.txt", bench.artifact_name()),
+            tile_items,
+            lws: 0,
+            inputs: vec![],
+            outputs: vec![],
+            constants: Json::parse(constants).unwrap().as_obj().unwrap().clone(),
+            sha256: String::new(),
+        }
+    }
+
+    #[test]
+    fn mandelbrot_tile_inputs_have_coords() {
+        let p = Problem::new(BenchId::Mandelbrot, 4, &entry(BenchId::Mandelbrot), 1).unwrap();
+        assert_eq!(p.tiles(), 4);
+        let ins = p.tile_inputs(1);
+        assert_eq!(ins.len(), 2);
+        assert_eq!(ins[0].dims, vec![2048]);
+        // Second tile starts at item 2048 -> pixel (0, 2) on a 1024-wide grid
+        let (cx, _) = mandelbrot::pixel_to_c(2048, 1024, p.gws / 1024);
+        assert_eq!(ins[0].as_f32()[0], cx);
+    }
+
+    #[test]
+    fn gaussian_tile_slices_with_halo() {
+        let p = Problem::new(BenchId::Gaussian, 3, &entry(BenchId::Gaussian), 2).unwrap();
+        let ins = p.tile_inputs(2);
+        assert_eq!(ins[0].dims, vec![12, 516]); // 8 + 4 halo rows
+        assert_eq!(ins[1].dims, vec![5, 5]);
+    }
+
+    #[test]
+    fn binomial_tiles_slice_options() {
+        let p = Problem::new(BenchId::Binomial, 2, &entry(BenchId::Binomial), 3).unwrap();
+        assert_eq!(p.gws, 2 * 65280);
+        let i0 = p.tile_inputs(0);
+        let i1 = p.tile_inputs(1);
+        assert_eq!(i0[0].dims, vec![256]);
+        assert_ne!(i0[0].as_f32()[0], i1[0].as_f32()[0]);
+    }
+
+    #[test]
+    fn nbody_requires_full_problem() {
+        let e = entry(BenchId::NBody);
+        assert!(Problem::new(BenchId::NBody, 4, &e, 1).is_err()); // 1024 != 2048
+        let p = Problem::new(BenchId::NBody, 8, &e, 1).unwrap();
+        let ins = p.tile_inputs(7);
+        assert_eq!(ins[0].dims, vec![2048, 4]);
+        assert_eq!(ins[1].dims, vec![256, 4]);
+    }
+
+    #[test]
+    fn ray_scene_variant_changes_inputs() {
+        let p1 = Problem::new(BenchId::Ray1, 2, &entry(BenchId::Ray1), 1).unwrap();
+        let p2 = Problem::new(BenchId::Ray2, 2, &entry(BenchId::Ray2), 1).unwrap();
+        let s1 = &p1.tile_inputs(0)[1];
+        let s2 = &p2.tile_inputs(0)[1];
+        assert_ne!(s1.as_f32(), s2.as_f32());
+    }
+
+    #[test]
+    fn verify_accepts_oracle_outputs() {
+        // Feed the oracle's own answers through verify_tile: zero mismatches.
+        let p = Problem::new(BenchId::Mandelbrot, 1, &entry(BenchId::Mandelbrot), 1).unwrap();
+        let mut out = Vec::with_capacity(2048);
+        for i in 0..2048u64 {
+            let (cx, cy) = mandelbrot::pixel_to_c(i, 1024, 2);
+            out.push(mandelbrot::escape_iters(cx, cy, 200) as i32);
+        }
+        let arr = HostArray::i32(vec![2048], out);
+        assert_eq!(p.verify_tile(0, &[arr], 64), 0);
+    }
+}

@@ -1,0 +1,108 @@
+//! Mandelbrot escape-time math, shared by the SimDevice cost profile and
+//! the PJRT-path oracle.  The f32 iteration sequence is kept *identical*
+//! to the Pallas kernel (`python/compile/kernels/mandelbrot.py`) so the
+//! rust oracle matches the AOT artifact bit-for-bit.
+
+use super::profile::CostProfile;
+use std::sync::OnceLock;
+
+/// Complex-plane view (classic full-set framing); mirrored by
+/// `data::mandelbrot_coords` for the PJRT inputs.
+pub const XMIN: f64 = -2.0;
+pub const XMAX: f64 = 0.5;
+pub const YMIN: f64 = -1.25;
+pub const YMAX: f64 = 1.25;
+
+/// f32 escape-time count with the same op order as the Pallas kernel:
+/// `zx2 - zy2 + cx`, `2 zx zy + cy`, escape when `zx2 + zy2 > 4`.
+pub fn escape_iters(cx: f32, cy: f32, max_iter: u32) -> u32 {
+    let (mut zx, mut zy) = (0.0f32, 0.0f32);
+    let mut i = 0;
+    while i < max_iter {
+        let zx2 = zx * zx;
+        let zy2 = zy * zy;
+        if zx2 + zy2 > 4.0 {
+            break;
+        }
+        let nzx = zx2 - zy2 + cx;
+        zy = 2.0 * zx * zy + cy;
+        zx = nzx;
+        i += 1;
+    }
+    i
+}
+
+/// Map a flattened pixel index to complex coordinates on a W x H grid.
+pub fn pixel_to_c(idx: u64, width: u64, height: u64) -> (f32, f32) {
+    let x = (idx % width) as f64;
+    let y = (idx / width) as f64;
+    let cx = XMIN + (x + 0.5) / width as f64 * (XMAX - XMIN);
+    let cy = YMIN + (y + 0.5) / height as f64 * (YMAX - YMIN);
+    (cx as f32, cy as f32)
+}
+
+const SAMPLE_W: u64 = 256;
+const SAMPLE_H: u64 = 256;
+const SAMPLE_ITERS: u32 = 400;
+
+/// Normalized per-item cost profile along the flattened (row-major) pixel
+/// order: the true escape-iteration counts on a coarse sample grid.  This
+/// is the irregularity that makes Static mis-balance Mandelbrot in the
+/// paper's Fig. 4 — rows crossing the set body cost up to `max_iter`,
+/// rows in the escape region are nearly free.
+pub fn cost_profile() -> CostProfile {
+    static CACHE: OnceLock<CostProfile> = OnceLock::new();
+    CACHE
+        .get_or_init(|| {
+            let mut buckets = Vec::with_capacity((SAMPLE_W * SAMPLE_H) as usize);
+            for idx in 0..SAMPLE_W * SAMPLE_H {
+                let (cx, cy) = pixel_to_c(idx, SAMPLE_W, SAMPLE_H);
+                // +launch/bookkeeping baseline so escaped pixels are cheap
+                // but not free.
+                buckets.push(1.0 + escape_iters(cx, cy, SAMPLE_ITERS) as f64);
+            }
+            CostProfile::from_buckets(&buckets)
+        })
+        .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_membership() {
+        // c = 0 and c = -1 are in the set; c = 1 escapes fast.
+        assert_eq!(escape_iters(0.0, 0.0, 100), 100);
+        assert_eq!(escape_iters(-1.0, 0.0, 100), 100);
+        assert!(escape_iters(1.0, 0.0, 100) < 8);
+        assert!(escape_iters(0.3, 0.5, 500) > 10); // near the boundary
+    }
+
+    #[test]
+    fn pixel_mapping_covers_view() {
+        let (cx0, cy0) = pixel_to_c(0, 100, 100);
+        assert!(cx0 > XMIN as f32 && cx0 < XMIN as f32 + 0.1);
+        assert!(cy0 > YMIN as f32 && cy0 < YMIN as f32 + 0.1);
+        let (cx1, cy1) = pixel_to_c(100 * 100 - 1, 100, 100);
+        assert!(cx1 < XMAX as f32 && cx1 > XMAX as f32 - 0.1);
+        assert!(cy1 < YMAX as f32 && cy1 > YMAX as f32 - 0.1);
+    }
+
+    #[test]
+    fn profile_center_heavier_than_edges() {
+        let p = cost_profile();
+        // Middle rows (crossing the set) cost more than the top band.
+        let top = p.integral(0.0, 0.1);
+        let mid = p.integral(0.45, 0.55);
+        assert!(mid > 2.0 * top, "mid {mid} vs top {top}");
+    }
+
+    #[test]
+    fn profile_is_cached_and_consistent() {
+        let a = cost_profile();
+        let b = cost_profile();
+        assert_eq!(a.resolution(), b.resolution());
+        assert!((a.integral(0.2, 0.8) - b.integral(0.2, 0.8)).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,343 @@
+//! The five paper benchmarks (six experiment columns — Ray has two
+//! scenes), with Table-I properties, per-item cost profiles (the
+//! irregularity source for Figs 3–5), transfer footprints, and
+//! paper-testbed device-power calibration.
+//!
+//! Two consumers:
+//! * [`crate::sim`] uses [`Bench::profile`] + calibration to produce
+//!   deterministic virtual-clock execution times;
+//! * [`crate::engine::pjrt`] uses [`data`] to build real tile inputs for
+//!   the AOT HLO kernels and [`oracle`] to verify their outputs.
+
+pub mod data;
+pub mod mandelbrot;
+pub mod oracle;
+pub mod profile;
+pub mod ray;
+
+use profile::CostProfile;
+
+
+/// Experiment column identifier (paper Fig. 3 abscissa).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BenchId {
+    Gaussian,
+    Binomial,
+    NBody,
+    Ray1,
+    Ray2,
+    Mandelbrot,
+}
+
+impl BenchId {
+    pub const ALL: [BenchId; 6] = [
+        BenchId::Gaussian,
+        BenchId::Binomial,
+        BenchId::NBody,
+        BenchId::Ray1,
+        BenchId::Ray2,
+        BenchId::Mandelbrot,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            BenchId::Gaussian => "Gaussian",
+            BenchId::Binomial => "Binomial",
+            BenchId::NBody => "NBody",
+            BenchId::Ray1 => "Ray",
+            BenchId::Ray2 => "Ray2",
+            BenchId::Mandelbrot => "Mandelbrot",
+        }
+    }
+
+    /// Paper classification (§V-A): regular vs irregular kernels.
+    pub fn is_regular(&self) -> bool {
+        matches!(self, BenchId::Gaussian | BenchId::Binomial | BenchId::NBody)
+    }
+
+    /// Artifact name in `artifacts/manifest.json` (Ray scenes share one).
+    pub fn artifact_name(&self) -> &'static str {
+        match self {
+            BenchId::Gaussian => "gaussian",
+            BenchId::Binomial => "binomial",
+            BenchId::NBody => "nbody",
+            BenchId::Ray1 | BenchId::Ray2 => "ray",
+            BenchId::Mandelbrot => "mandelbrot",
+        }
+    }
+}
+
+/// Table I row: the static properties of a benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchProps {
+    pub name: &'static str,
+    pub lws: u32,
+    pub read_buffers: u32,
+    pub write_buffers: u32,
+    /// outputs : work-items ratio, e.g. Binomial 1:255, Mandelbrot 4:1.
+    pub out_pattern: (u32, u32),
+    pub kernel_args: u32,
+    pub local_mem: bool,
+    pub custom_types: bool,
+    /// Paper "Size" row, in the paper's own units (px / samples / bodies).
+    pub size_label: &'static str,
+    pub other_params: &'static str,
+}
+
+/// A fully-instantiated benchmark: Table-I properties + simulation
+/// calibration + cost profile.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub id: BenchId,
+    pub props: BenchProps,
+    /// Default problem size in work-items — chosen, like the paper, so the
+    /// fastest device (GPU) completes the ROI in ~2 s.
+    pub default_gws: u64,
+    /// True relative device throughputs [CPU, iGPU, GPU] (GPU = 1).  The
+    /// *scheduler* sees these same values as its `P_i` estimates; on
+    /// irregular kernels the spatial profile still breaks Static.
+    pub true_powers: [f64; 3],
+    /// GPU throughput in cost-units/second (mean item cost is ~1 unit, so
+    /// this is roughly items/second); calibrates the 2-second target.
+    pub gpu_units_per_sec: f64,
+    /// Normalized per-item cost along the flattened index space.
+    pub profile: CostProfile,
+    /// Host<->device traffic per work-item (input, output), in bytes.
+    pub bytes_in_per_item: f64,
+    pub bytes_out_per_item: f64,
+    /// Per-package broadcast input (NBody ships the full position set with
+    /// every package — the paper's "communications" overhead).
+    pub bytes_in_per_package: f64,
+}
+
+impl Bench {
+    /// Instantiate one benchmark with its paper calibration.
+    pub fn new(id: BenchId) -> Self {
+        match id {
+            BenchId::Gaussian => Bench {
+                id,
+                props: BenchProps {
+                    name: "Gaussian",
+                    lws: 128,
+                    read_buffers: 2,
+                    write_buffers: 1,
+                    out_pattern: (1, 1),
+                    kernel_args: 6,
+                    local_mem: false,
+                    custom_types: false,
+                    size_label: "8192px",
+                    other_params: "31px",
+                },
+                // 8192 x 8192 pixels.
+                default_gws: 8192 * 8192,
+                // Memory-bound stencil: iGPU's shared DDR3 helps it less;
+                // 2-core CPU is weak.
+                true_powers: [0.12, 0.45, 1.0],
+                gpu_units_per_sec: 8192.0 * 8192.0 / 2.0,
+                profile: CostProfile::uniform(),
+                bytes_in_per_item: 4.0, // one f32 pixel (+ tiny filter)
+                bytes_out_per_item: 4.0,
+                bytes_in_per_package: 31.0 * 31.0 * 4.0, // filter taps
+            },
+            BenchId::Binomial => Bench {
+                id,
+                props: BenchProps {
+                    name: "Binomial",
+                    lws: 255,
+                    read_buffers: 1,
+                    write_buffers: 1,
+                    out_pattern: (1, 255),
+                    kernel_args: 5,
+                    local_mem: true,
+                    custom_types: false,
+                    size_label: "4194304",
+                    other_params: "",
+                },
+                default_gws: 4_194_304,
+                // Lattice induction is serial-ish per group: GPUs dominate.
+                true_powers: [0.08, 0.35, 1.0],
+                gpu_units_per_sec: 4_194_304.0 / 2.0,
+                profile: CostProfile::uniform(),
+                bytes_in_per_item: 8.0 / 255.0, // (S0, K) per option
+                bytes_out_per_item: 4.0 / 255.0, // one price per option
+                bytes_in_per_package: 0.0,
+            },
+            BenchId::NBody => Bench {
+                id,
+                props: BenchProps {
+                    name: "NBody",
+                    lws: 64,
+                    read_buffers: 2,
+                    write_buffers: 2,
+                    out_pattern: (1, 1),
+                    kernel_args: 7,
+                    local_mem: false,
+                    custom_types: false,
+                    size_label: "229376",
+                    other_params: "",
+                },
+                default_gws: 229_376,
+                // All-pairs O(N) per item: raw FLOPs decide; CPU is worst.
+                true_powers: [0.05, 0.40, 1.0],
+                gpu_units_per_sec: 229_376.0 / 2.0,
+                profile: CostProfile::uniform(),
+                bytes_in_per_item: 32.0, // pos + vel float4
+                bytes_out_per_item: 32.0,
+                // every package re-reads the full position set
+                bytes_in_per_package: 229_376.0 * 16.0,
+            },
+            BenchId::Ray1 | BenchId::Ray2 => {
+                let scene = if id == BenchId::Ray1 { 1 } else { 2 };
+                Bench {
+                    id,
+                    props: BenchProps {
+                        name: if scene == 1 { "Ray" } else { "Ray2" },
+                        lws: 128,
+                        read_buffers: 1,
+                        write_buffers: 1,
+                        out_pattern: (1, 1),
+                        kernel_args: 11,
+                        local_mem: true,
+                        custom_types: true,
+                        size_label: "4096px",
+                        other_params: "scene",
+                    },
+                    default_gws: 4096 * 4096,
+                    // Divergent control flow: the 4-thread CPU copes
+                    // comparatively well, SIMT GPUs lose efficiency.
+                    true_powers: [0.20, 0.35, 1.0],
+                    gpu_units_per_sec: 4096.0 * 4096.0 / 2.0,
+                    profile: ray::cost_profile(scene),
+                    bytes_in_per_item: 0.1, // scene buffer amortized
+                    bytes_out_per_item: 4.0,
+                    bytes_in_per_package: 6.0 * 32.0, // sphere structs
+                }
+            }
+            BenchId::Mandelbrot => Bench {
+                id,
+                props: BenchProps {
+                    name: "Mandelbrot",
+                    lws: 256,
+                    read_buffers: 0,
+                    write_buffers: 1,
+                    out_pattern: (4, 1),
+                    kernel_args: 8,
+                    local_mem: false,
+                    custom_types: false,
+                    size_label: "14336px",
+                    other_params: "5000",
+                },
+                default_gws: 14_336 * 14_336,
+                true_powers: [0.15, 0.40, 1.0],
+                gpu_units_per_sec: 14_336.0 * 14_336.0 / 2.0,
+                profile: mandelbrot::cost_profile(),
+                bytes_in_per_item: 0.0,
+                bytes_out_per_item: 4.0, // RGBA (the 4:1 out pattern)
+                bytes_in_per_package: 0.0,
+            },
+        }
+    }
+
+    /// All six experiment columns, in paper order.
+    pub fn all() -> Vec<Bench> {
+        BenchId::ALL.iter().map(|&id| Bench::new(id)).collect()
+    }
+
+    /// Work-groups for a given global size.
+    pub fn groups(&self, gws: u64) -> u64 {
+        gws.div_ceil(self.props.lws as u64)
+    }
+
+    /// Simulated compute cost (in cost units) of an item range at problem
+    /// size `gws` — the profile integral scaled to absolute items.
+    pub fn range_cost(&self, range: crate::types::ItemRange, gws: u64) -> f64 {
+        let a = range.begin as f64 / gws as f64;
+        let b = (range.end.min(gws)) as f64 / gws as f64;
+        self.profile.integral(a, b) * gws as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::ItemRange;
+
+    #[test]
+    fn all_has_six_columns_in_paper_order() {
+        let all = Bench::all();
+        assert_eq!(all.len(), 6);
+        assert_eq!(all[0].props.name, "Gaussian");
+        assert_eq!(all[5].props.name, "Mandelbrot");
+    }
+
+    #[test]
+    fn table1_properties_match_paper() {
+        let g = Bench::new(BenchId::Gaussian);
+        assert_eq!((g.props.lws, g.props.read_buffers, g.props.write_buffers), (128, 2, 1));
+        let b = Bench::new(BenchId::Binomial);
+        assert_eq!(b.props.out_pattern, (1, 255));
+        assert!(b.props.local_mem);
+        let n = Bench::new(BenchId::NBody);
+        assert_eq!(n.props.lws, 64);
+        assert_eq!((n.props.read_buffers, n.props.write_buffers), (2, 2));
+        let r = Bench::new(BenchId::Ray1);
+        assert_eq!(r.props.kernel_args, 11);
+        assert!(r.props.custom_types);
+        let m = Bench::new(BenchId::Mandelbrot);
+        assert_eq!(m.props.out_pattern, (4, 1));
+        assert_eq!(m.props.read_buffers, 0);
+    }
+
+    #[test]
+    fn regular_irregular_split_matches_paper() {
+        assert!(BenchId::Gaussian.is_regular());
+        assert!(BenchId::Binomial.is_regular());
+        assert!(BenchId::NBody.is_regular());
+        assert!(!BenchId::Ray1.is_regular());
+        assert!(!BenchId::Ray2.is_regular());
+        assert!(!BenchId::Mandelbrot.is_regular());
+    }
+
+    #[test]
+    fn gpu_finishes_default_size_in_two_seconds() {
+        for b in Bench::all() {
+            let t = b.range_cost(ItemRange::new(0, b.default_gws), b.default_gws)
+                / b.gpu_units_per_sec;
+            assert!((t - 2.0).abs() < 0.25, "{}: {t}s", b.props.name);
+        }
+    }
+
+    #[test]
+    fn range_cost_is_additive() {
+        let b = Bench::new(BenchId::Mandelbrot);
+        let gws = b.default_gws;
+        let whole = b.range_cost(ItemRange::new(0, gws), gws);
+        let half1 = b.range_cost(ItemRange::new(0, gws / 2), gws);
+        let half2 = b.range_cost(ItemRange::new(gws / 2, gws), gws);
+        assert!((whole - (half1 + half2)).abs() / whole < 1e-9);
+    }
+
+    #[test]
+    fn irregular_profiles_are_nonuniform() {
+        for id in [BenchId::Ray1, BenchId::Ray2, BenchId::Mandelbrot] {
+            let b = Bench::new(id);
+            let gws = b.default_gws;
+            let q: Vec<f64> = (0..4)
+                .map(|i| {
+                    b.range_cost(ItemRange::new(i * gws / 4, (i + 1) * gws / 4), gws)
+                })
+                .collect();
+            let spread = q.iter().cloned().fold(f64::MIN, f64::max)
+                / q.iter().cloned().fold(f64::MAX, f64::min);
+            assert!(spread > 1.05, "{:?} spread {spread}", id);
+        }
+    }
+
+    #[test]
+    fn groups_round_up() {
+        let b = Bench::new(BenchId::Binomial);
+        assert_eq!(b.groups(255), 1);
+        assert_eq!(b.groups(256), 2);
+        assert_eq!(b.groups(4_194_304), 4_194_304_u64.div_ceil(255));
+    }
+}

@@ -1,0 +1,250 @@
+//! Rust-side golden implementations of the five kernels.
+//!
+//! These verify the outputs coming back from the AOT HLO artifacts on the
+//! PJRT path (examples + integration tests): the L1 kernels were already
+//! validated against the pure-jnp oracles in pytest, and this module
+//! closes the loop L3-side.  Float math follows the kernels' f32
+//! formulations; comparisons use the tolerances in [`close`].
+
+use super::ray::{self, Sphere};
+
+/// Relative+absolute f32 comparison used by the e2e verifiers.
+pub fn close(a: f32, b: f32, rtol: f32, atol: f32) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+// ----------------------------------------------------------------- gaussian
+/// Direct K x K convolution of the haloed slice (same contract as
+/// `gaussian_tile`): `img_halo` is (tr + k - 1, w + k - 1) row-major.
+pub fn gaussian_blur(img_halo: &[f32], tr: usize, w: usize, filt: &[f32], k: usize) -> Vec<f32> {
+    let stride = w + k - 1;
+    debug_assert_eq!(img_halo.len(), (tr + k - 1) * stride);
+    debug_assert_eq!(filt.len(), k * k);
+    let mut out = vec![0.0f32; tr * w];
+    for r in 0..tr {
+        for c in 0..w {
+            let mut acc = 0.0f32;
+            for dr in 0..k {
+                for dc in 0..k {
+                    acc += filt[dr * k + dc] * img_halo[(r + dr) * stride + (c + dc)];
+                }
+            }
+            out[r * w + c] = acc;
+        }
+    }
+    out
+}
+
+/// Normalized K x K Gaussian taps — mirrors
+/// `python/compile/kernels/gaussian.py::gaussian_weights` in f32.
+pub fn gaussian_weights(k: usize, sigma: f32) -> Vec<f32> {
+    let mut g = vec![0.0f32; k];
+    for (i, gi) in g.iter_mut().enumerate() {
+        let r = i as f32 - (k as f32 - 1.0) / 2.0;
+        *gi = (-(r * r) / (2.0 * sigma * sigma)).exp();
+    }
+    let mut w = vec![0.0f32; k * k];
+    let mut total = 0.0f32;
+    for i in 0..k {
+        for j in 0..k {
+            w[i * k + j] = g[i] * g[j];
+            total += g[i] * g[j];
+        }
+    }
+    for x in &mut w {
+        *x /= total;
+    }
+    w
+}
+
+// ----------------------------------------------------------------- binomial
+/// CRR European call price, same constants as the kernel
+/// (`RATE`/`SIGMA`/`MATURITY` in `binomial.py`), computed with the
+/// shrinking-array induction in f64 for a stable reference.
+pub fn binomial_price(s0: f32, strike: f32, steps: u32) -> f32 {
+    const RATE: f64 = 0.02;
+    const SIGMA: f64 = 0.30;
+    const MATURITY: f64 = 1.0;
+    let n = steps as usize;
+    let dt = MATURITY / steps as f64;
+    let u = (SIGMA * dt.sqrt()).exp();
+    let d = 1.0 / u;
+    let p = ((RATE * dt).exp() - d) / (u - d);
+    let disc = (-RATE * dt).exp();
+    let mut v: Vec<f64> = (0..=n)
+        .map(|j| {
+            let st = s0 as f64 * (SIGMA * dt.sqrt() * (2.0 * j as f64 - n as f64)).exp();
+            (st - strike as f64).max(0.0)
+        })
+        .collect();
+    for m in (1..=n).rev() {
+        for j in 0..m {
+            v[j] = disc * (p * v[j + 1] + (1.0 - p) * v[j]);
+        }
+    }
+    v[0] as f32
+}
+
+// -------------------------------------------------------------------- nbody
+/// One integration step for body `i` given all positions/velocities —
+/// mirrors `nbody.py` (`EPS2`, `G`, leapfrog-Euler update) in f32.
+pub fn nbody_step(
+    pos_all: &[[f32; 4]],
+    pos: [f32; 4],
+    vel: [f32; 4],
+    dt: f32,
+) -> ([f32; 4], [f32; 4]) {
+    const EPS2: f32 = 1e-3;
+    const GRAV: f32 = 1.0;
+    let mut acc = [0.0f32; 3];
+    for pj in pos_all {
+        let d = [pj[0] - pos[0], pj[1] - pos[1], pj[2] - pos[2]];
+        let r2 = d[0] * d[0] + d[1] * d[1] + d[2] * d[2] + EPS2;
+        let inv_r = 1.0 / r2.sqrt();
+        let f = GRAV * pj[3] * inv_r * inv_r * inv_r;
+        acc[0] += f * d[0];
+        acc[1] += f * d[1];
+        acc[2] += f * d[2];
+    }
+    let nv = [vel[0] + acc[0] * dt, vel[1] + acc[1] * dt, vel[2] + acc[2] * dt, vel[3]];
+    let np = [pos[0] + nv[0] * dt, pos[1] + nv[1] * dt, pos[2] + nv[2] * dt, pos[3]];
+    (np, nv)
+}
+
+// ---------------------------------------------------------------------- ray
+fn norm3(v: [f32; 3]) -> [f32; 3] {
+    let n2 = v[0] * v[0] + v[1] * v[1] + v[2] * v[2];
+    let inv = 1.0 / n2.max(1e-24).sqrt();
+    [v[0] * inv, v[1] * inv, v[2] * inv]
+}
+
+/// Trace one pixel — mirrors `_ray_kernel` (component-wise, two bounces,
+/// hard shadows) in f32.
+pub fn trace_pixel(rd_in: [f32; 3], spheres: &[Sphere]) -> [f32; 3] {
+    let ln = {
+        let l = ray::LIGHT_DIR;
+        norm3(l)
+    };
+    let mut rd = norm3(rd_in);
+    let mut ro = ray::RAY_ORIGIN;
+    let mut col = [0.0f32; 3];
+    let mut atten = 1.0f32;
+
+    for _ in 0..ray::BOUNCES {
+        let mut t_best = f32::INFINITY;
+        let mut hs = [0.0f32; 8];
+        for s in spheres {
+            let t = ray::intersect(ro, rd, s);
+            if t < t_best {
+                t_best = t;
+                hs = *s;
+            }
+        }
+        let hit = t_best.is_finite();
+        let hitf = if hit { 1.0f32 } else { 0.0 };
+        let t_safe = if hit { t_best } else { 0.0 };
+
+        let pt = [ro[0] + rd[0] * t_safe, ro[1] + rd[1] * t_safe, ro[2] + rd[2] * t_safe];
+        let n = norm3([pt[0] - hs[0], pt[1] - hs[1], pt[2] - hs[2]]);
+        let diff = (n[0] * ln[0] + n[1] * ln[1] + n[2] * ln[2]).max(0.0);
+
+        let so = [
+            pt[0] + n[0] * ray::SHADOW_EPS,
+            pt[1] + n[1] * ray::SHADOW_EPS,
+            pt[2] + n[2] * ray::SHADOW_EPS,
+        ];
+        let mut lit = 1.0f32;
+        for s in spheres {
+            if ray::intersect(so, ln, s).is_finite() {
+                lit = 0.0;
+            }
+        }
+
+        let shade = ray::AMBIENT + (1.0 - ray::AMBIENT) * diff * lit;
+        let contrib = hitf * atten * (1.0 - hs[7]) * shade;
+        col[0] += contrib * hs[4];
+        col[1] += contrib * hs[5];
+        col[2] += contrib * hs[6];
+
+        atten *= hitf * hs[7];
+        let dn = rd[0] * n[0] + rd[1] * n[1] + rd[2] * n[2];
+        rd = [rd[0] - 2.0 * dn * n[0], rd[1] - 2.0 * dn * n[1], rd[2] - 2.0 * dn * n[2]];
+        ro = so;
+    }
+    [col[0].clamp(0.0, 1.0), col[1].clamp(0.0, 1.0), col[2].clamp(0.0, 1.0)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchsuite::ray::{pixel_ray, scene};
+
+    #[test]
+    fn gaussian_identity_filter() {
+        // 3x3 identity tap passes the centre through.
+        let k = 3;
+        let (tr, w) = (2, 4);
+        let halo: Vec<f32> = (0..(tr + k - 1) * (w + k - 1)).map(|i| i as f32).collect();
+        let mut filt = vec![0.0f32; 9];
+        filt[4] = 1.0;
+        let out = gaussian_blur(&halo, tr, w, &filt, k);
+        let stride = w + k - 1;
+        for r in 0..tr {
+            for c in 0..w {
+                assert_eq!(out[r * w + c], halo[(r + 1) * stride + c + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn gaussian_weights_sum_to_one() {
+        let w = gaussian_weights(5, 1.4);
+        let s: f32 = w.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!((w[0] - w[24]).abs() < 1e-7, "corner symmetry");
+    }
+
+    #[test]
+    fn binomial_no_arbitrage_bounds() {
+        for (s0, k) in [(50.0, 60.0), (100.0, 60.0), (60.0, 60.0)] {
+            let c = binomial_price(s0, k, 255);
+            assert!(c >= (s0 - k).max(0.0) - 0.5, "C >= S-K");
+            assert!(c <= s0, "C <= S");
+        }
+        // deep ITM converges to S - K e^{-rT}
+        let c = binomial_price(1000.0, 1.0, 255);
+        assert!((c - (1000.0 - (0.98f32.powf(0.0) * (-0.02f32).exp()))).abs() < 2.0);
+    }
+
+    #[test]
+    fn binomial_monotone_in_spot() {
+        let a = binomial_price(50.0, 60.0, 64);
+        let b = binomial_price(55.0, 60.0, 64);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn nbody_two_body_pull() {
+        let pos_all = [[-1.0, 0.0, 0.0, 1.0], [1.0, 0.0, 0.0, 1.0]];
+        let (_, v) = nbody_step(&pos_all, pos_all[0], [0.0; 4], 1.0);
+        assert!(v[0] > 0.0, "pulled towards +x");
+        assert_eq!(v[3], 0.0, "padding lane untouched by forces");
+    }
+
+    #[test]
+    fn trace_sky_is_black_and_hits_shade() {
+        let sph = scene(1);
+        let sky = trace_pixel([0.0, 1.0, -0.2], &sph);
+        assert_eq!(sky, [0.0, 0.0, 0.0]);
+        let w = 64;
+        let centre = pixel_ray((w / 2) * w + w / 2, w);
+        let hit = trace_pixel(centre, &sph);
+        assert!(hit.iter().any(|&c| c > 0.01), "centre pixel shaded: {hit:?}");
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 5e-5, 1e-4, 1e-6));
+        assert!(!close(1.0, 1.1, 1e-4, 1e-6));
+    }
+}

@@ -1,0 +1,139 @@
+//! Per-item cost profiles over the flattened work-item index space.
+//!
+//! The simulator needs `cost([a, b))` for arbitrary item ranges at any
+//! problem size.  We store a normalized piecewise-constant profile
+//! (mean = 1.0 over [0, 1)) with a prefix-sum table, so range costs are
+//! O(1) regardless of range length — this is what keeps the Fig. 5
+//! parameter sweep (thousands of simulated runs over 10^8-item problems)
+//! inside CI time.
+
+/// Piecewise-constant normalized cost density over [0, 1).
+#[derive(Debug, Clone)]
+pub struct CostProfile {
+    /// prefix[i] = integral of the density over the first i buckets;
+    /// prefix[n] == 1.0 by normalization.
+    prefix: Vec<f64>,
+}
+
+impl CostProfile {
+    /// Uniform (regular-kernel) profile.
+    pub fn uniform() -> Self {
+        Self { prefix: vec![0.0, 1.0] }
+    }
+
+    /// Build from raw per-bucket costs (any positive scale; normalized so
+    /// the mean density is 1.0).
+    pub fn from_buckets(buckets: &[f64]) -> Self {
+        assert!(!buckets.is_empty(), "empty cost profile");
+        let total: f64 = buckets.iter().sum();
+        assert!(total > 0.0, "cost profile sums to zero");
+        let mut prefix = Vec::with_capacity(buckets.len() + 1);
+        let mut acc = 0.0;
+        prefix.push(0.0);
+        for &b in buckets {
+            debug_assert!(b >= 0.0, "negative bucket cost {b}");
+            acc += b / total;
+            prefix.push(acc);
+        }
+        // Guard against floating drift at the right edge.
+        *prefix.last_mut().unwrap() = 1.0;
+        Self { prefix }
+    }
+
+    /// Number of buckets.
+    pub fn resolution(&self) -> usize {
+        self.prefix.len() - 1
+    }
+
+    /// Integral of the normalized density over [a, b) ⊆ [0, 1].
+    /// `integral(0, 1) == 1`; for a uniform profile `integral(a, b) == b - a`.
+    pub fn integral(&self, a: f64, b: f64) -> f64 {
+        let a = a.clamp(0.0, 1.0);
+        let b = b.clamp(0.0, 1.0);
+        if b <= a {
+            return 0.0;
+        }
+        self.cdf(b) - self.cdf(a)
+    }
+
+    /// Cumulative integral over [0, x] with linear interpolation inside a
+    /// bucket.
+    #[inline]
+    fn cdf(&self, x: f64) -> f64 {
+        let n = self.prefix.len() - 1;
+        let pos = x * n as f64;
+        let i = (pos as usize).min(n - 1); // x >= 0 by caller clamp
+        let frac = (pos - i as f64).min(1.0);
+        // SAFETY-free fast path: i < n, i + 1 <= n by construction.
+        let lo = self.prefix[i];
+        lo + (self.prefix[i + 1] - lo) * frac
+    }
+
+    /// Peak-to-mean ratio — a scalar irregularity measure used in tests
+    /// and the Table-1 report.
+    pub fn peak_to_mean(&self) -> f64 {
+        let n = self.resolution() as f64;
+        self.prefix
+            .windows(2)
+            .map(|w| (w[1] - w[0]) * n)
+            .fold(f64::MIN, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_integral_is_length() {
+        let p = CostProfile::uniform();
+        assert!((p.integral(0.0, 1.0) - 1.0).abs() < 1e-12);
+        assert!((p.integral(0.25, 0.75) - 0.5).abs() < 1e-12);
+        assert_eq!(p.integral(0.5, 0.5), 0.0);
+    }
+
+    #[test]
+    fn normalization_makes_total_one() {
+        let p = CostProfile::from_buckets(&[3.0, 1.0, 2.0, 2.0]);
+        assert!((p.integral(0.0, 1.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skewed_profile_weights_ranges() {
+        // All cost in the first half.
+        let p = CostProfile::from_buckets(&[1.0, 1.0, 0.0, 0.0]);
+        assert!((p.integral(0.0, 0.5) - 1.0).abs() < 1e-12);
+        assert!(p.integral(0.5, 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interpolates_within_bucket() {
+        let p = CostProfile::from_buckets(&[1.0, 3.0]);
+        // Density: 0.5 on [0,0.5), 1.5 on [0.5,1).
+        assert!((p.integral(0.0, 0.25) - 0.125).abs() < 1e-12);
+        assert!((p.integral(0.5, 0.75) - 0.375).abs() < 1e-12);
+    }
+
+    #[test]
+    fn integral_is_additive_and_monotone() {
+        let p = CostProfile::from_buckets(&[5.0, 1.0, 0.5, 2.0, 4.0]);
+        let whole = p.integral(0.1, 0.9);
+        let split = p.integral(0.1, 0.37) + p.integral(0.37, 0.9);
+        assert!((whole - split).abs() < 1e-12);
+        assert!(p.integral(0.1, 0.5) <= p.integral(0.1, 0.9));
+    }
+
+    #[test]
+    fn out_of_range_clamps() {
+        let p = CostProfile::uniform();
+        assert!((p.integral(-1.0, 2.0) - 1.0).abs() < 1e-12);
+        assert_eq!(p.integral(1.5, 2.0), 0.0);
+    }
+
+    #[test]
+    fn peak_to_mean_uniform_is_one() {
+        assert!((CostProfile::uniform().peak_to_mean() - 1.0).abs() < 1e-12);
+        let p = CostProfile::from_buckets(&[1.0, 3.0]);
+        assert!((p.peak_to_mean() - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,194 @@
+//! Ray benchmark scene data + intersection math, shared by the SimDevice
+//! cost profile and the PJRT-path oracle.  Scene constants MUST stay in
+//! sync with `python/compile/model.py::demo_scene`.
+
+use super::profile::CostProfile;
+use std::sync::OnceLock;
+
+/// Camera/light constants — mirror `python/compile/kernels/ray.py`.
+pub const RAY_ORIGIN: [f32; 3] = [0.0, 0.0, -3.0];
+pub const LIGHT_DIR: [f32; 3] = [0.45, 0.8, -0.4];
+pub const AMBIENT: f32 = 0.1;
+pub const BOUNCES: usize = 2;
+pub const SHADOW_EPS: f32 = 1e-3;
+
+/// One sphere: centre xyz, radius, rgb, reflectivity.
+pub type Sphere = [f32; 8];
+
+/// Scene 1 (paper "Ray"): mixed diffuse scene with a ground sphere.
+pub fn scene(variant: u8) -> Vec<Sphere> {
+    match variant {
+        1 => vec![
+            [0.0, -100.5, 1.0, 100.0, 0.6, 0.6, 0.6, 0.05],
+            [0.0, 0.0, 1.0, 0.5, 0.9, 0.2, 0.2, 0.30],
+            [-1.1, 0.0, 1.2, 0.5, 0.2, 0.9, 0.2, 0.10],
+            [1.1, 0.0, 1.2, 0.5, 0.2, 0.2, 0.9, 0.60],
+            [0.0, 1.0, 2.0, 0.6, 0.9, 0.9, 0.2, 0.80],
+            [-0.5, -0.3, 0.4, 0.15, 0.9, 0.9, 0.9, 0.00],
+        ],
+        2 => vec![
+            [0.0, -100.5, 1.0, 100.0, 0.5, 0.5, 0.7, 0.40],
+            [-0.8, 0.0, 0.9, 0.45, 0.9, 0.4, 0.1, 0.70],
+            [0.8, 0.0, 0.9, 0.45, 0.1, 0.4, 0.9, 0.70],
+            [0.0, 0.8, 1.4, 0.45, 0.4, 0.9, 0.1, 0.70],
+            [0.0, -0.2, 0.5, 0.20, 0.95, 0.95, 0.95, 0.90],
+            [0.0, 2.2, 2.2, 0.80, 0.8, 0.8, 0.2, 0.20],
+        ],
+        v => panic!("unknown ray scene variant {v}"),
+    }
+}
+
+/// Ray/sphere hit distance with the kernel's exact formulation
+/// (`t0 = -b - sqrt(disc)`, fall back to `t1`); +inf where missed.
+pub fn intersect(ro: [f32; 3], rd: [f32; 3], s: &Sphere) -> f32 {
+    let oc = [ro[0] - s[0], ro[1] - s[1], ro[2] - s[2]];
+    let b = oc[0] * rd[0] + oc[1] * rd[1] + oc[2] * rd[2];
+    let c = oc[0] * oc[0] + oc[1] * oc[1] + oc[2] * oc[2] - s[3] * s[3];
+    let disc = b * b - c;
+    let sq = disc.max(0.0).sqrt();
+    let t0 = -b - sq;
+    let t1 = -b + sq;
+    let t = if t0 > SHADOW_EPS { t0 } else { t1 };
+    if disc > 0.0 && t > SHADOW_EPS {
+        t
+    } else {
+        f32::INFINITY
+    }
+}
+
+/// Primary-ray direction for a flattened pixel index on a W-wide square
+/// image — mirrors `python/compile/model.py::pixel_rays` (un-normalized;
+/// the kernel normalizes).
+pub fn pixel_ray(idx: u64, width: u64) -> [f32; 3] {
+    let x = (idx % width) as f32;
+    let y = (idx / width) as f32;
+    let u = (x + 0.5) / width as f32 * 2.0 - 1.0;
+    let v = (y + 0.5) / width as f32 * 2.0 - 1.0;
+    [u, -v, 1.0]
+}
+
+fn norm3(v: [f32; 3]) -> [f32; 3] {
+    let n = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt().max(1e-12);
+    [v[0] / n, v[1] / n, v[2] / n]
+}
+
+/// Relative tracing cost of one pixel: intersection tests + shading work
+/// along the actual bounce path.  This is the paper's per-pixel
+/// irregularity (scene-dependent — scene 2 is more reflective, so paths
+/// are deeper on average).
+pub fn pixel_cost(idx: u64, width: u64, spheres: &[Sphere]) -> f64 {
+    let mut rd = norm3(pixel_ray(idx, width));
+    let mut ro = RAY_ORIGIN;
+    let mut cost = 1.0; // primary ray setup
+    for _ in 0..BOUNCES {
+        cost += spheres.len() as f64; // nearest-hit tests
+        let mut t_best = f32::INFINITY;
+        let mut best: Option<&Sphere> = None;
+        for s in spheres {
+            let t = intersect(ro, rd, s);
+            if t < t_best {
+                t_best = t;
+                best = Some(s);
+            }
+        }
+        let Some(s) = best else { break };
+        if !t_best.is_finite() {
+            break;
+        }
+        // shading + shadow tests only on hit
+        cost += 2.0 + spheres.len() as f64;
+        let pt = [ro[0] + rd[0] * t_best, ro[1] + rd[1] * t_best, ro[2] + rd[2] * t_best];
+        let n = norm3([pt[0] - s[0], pt[1] - s[1], pt[2] - s[2]]);
+        if s[7] <= 0.0 {
+            break; // non-reflective: path ends
+        }
+        let dn = rd[0] * n[0] + rd[1] * n[1] + rd[2] * n[2];
+        rd = [rd[0] - 2.0 * dn * n[0], rd[1] - 2.0 * dn * n[1], rd[2] - 2.0 * dn * n[2]];
+        ro = [
+            pt[0] + n[0] * SHADOW_EPS,
+            pt[1] + n[1] * SHADOW_EPS,
+            pt[2] + n[2] * SHADOW_EPS,
+        ];
+    }
+    cost
+}
+
+const SAMPLE_W: u64 = 128;
+
+/// Cost profile along the flattened pixel order for a scene variant.
+pub fn cost_profile(variant: u8) -> CostProfile {
+    static CACHE1: OnceLock<CostProfile> = OnceLock::new();
+    static CACHE2: OnceLock<CostProfile> = OnceLock::new();
+    let cache = if variant == 1 { &CACHE1 } else { &CACHE2 };
+    cache
+        .get_or_init(|| {
+            let spheres = scene(variant);
+            let buckets: Vec<f64> = (0..SAMPLE_W * SAMPLE_W)
+                .map(|idx| pixel_cost(idx, SAMPLE_W, &spheres))
+                .collect();
+            CostProfile::from_buckets(&buckets)
+        })
+        .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenes_have_six_spheres_and_sane_fields() {
+        for v in [1, 2] {
+            let s = scene(v);
+            assert_eq!(s.len(), 6);
+            for sp in &s {
+                assert!(sp[3] > 0.0, "radius positive");
+                assert!((0.0..=1.0).contains(&sp[7]), "reflectivity in unit range");
+            }
+        }
+    }
+
+    #[test]
+    fn head_on_intersection_distance() {
+        let s: Sphere = [0.0, 0.0, 5.0, 1.0, 1.0, 1.0, 1.0, 0.0];
+        let t = intersect([0.0, 0.0, 0.0], [0.0, 0.0, 1.0], &s);
+        assert!((t - 4.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn miss_is_infinite() {
+        let s: Sphere = [0.0, 0.0, 5.0, 1.0, 1.0, 1.0, 1.0, 0.0];
+        assert!(!intersect([0.0, 0.0, 0.0], [0.0, 0.0, -1.0], &s).is_finite());
+        assert!(!intersect([0.0, 0.0, 0.0], [0.0, 1.0, 0.0], &s).is_finite());
+    }
+
+    #[test]
+    fn hit_pixels_cost_more_than_sky() {
+        let sph = scene(1);
+        // centre of image hits the red sphere; top-left corner is sky
+        let w = 64;
+        let centre = (w / 2) * w + w / 2;
+        assert!(pixel_cost(centre, w, &sph) > pixel_cost(0, w, &sph));
+    }
+
+    #[test]
+    fn scene2_is_costlier_on_average() {
+        let w = 64;
+        let (s1, s2) = (scene(1), scene(2));
+        let c1: f64 = (0..w * w).map(|i| pixel_cost(i, w, &s1)).sum();
+        let c2: f64 = (0..w * w).map(|i| pixel_cost(i, w, &s2)).sum();
+        assert!(c2 > c1, "scene2 {c2} <= scene1 {c1}");
+    }
+
+    #[test]
+    fn profiles_differ_between_scenes() {
+        let p1 = cost_profile(1);
+        let p2 = cost_profile(2);
+        let d: f64 = (0..10)
+            .map(|i| {
+                let a = i as f64 / 10.0;
+                (p1.integral(a, a + 0.1) - p2.integral(a, a + 0.1)).abs()
+            })
+            .sum();
+        assert!(d > 1e-3);
+    }
+}

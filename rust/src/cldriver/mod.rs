@@ -1,0 +1,170 @@
+//! Commodity-OpenCL-driver overhead model (the substitution for the
+//! paper's AMD/NVIDIA driver stacks — see DESIGN.md §2).
+//!
+//! The paper's two runtime optimizations attack *fixed driver costs*:
+//!
+//! * **initialization** — platform discovery, device init, context/queue
+//!   creation and program build are serialized on the host thread in the
+//!   baseline; the optimized runtime overlaps per-device preparation with
+//!   discovery and reuses discovery structures (redundant queries elided).
+//! * **buffers** — placement/direction flags let devices that share main
+//!   memory (CPU, iGPU on the Kaveri APU) map buffers instead of bulk
+//!   copying; the dGPU still pays PCIe transfer costs.
+//!
+//! Stage latencies are calibrated so the modelled init saving for the
+//! 3-device testbed is ≈131 ms, the paper's measured average.
+
+pub mod power;
+pub mod profile;
+pub mod transfer;
+
+pub use power::PowerModel;
+pub use profile::DriverProfile;
+pub use transfer::TransferModel;
+
+use crate::types::{DeviceClass, Optimizations};
+
+/// Breakdown of a program's fixed (non-ROI) driver time, in seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FixedCosts {
+    pub init: f64,
+    pub release: f64,
+}
+
+impl FixedCosts {
+    pub fn total(&self) -> f64 {
+        self.init + self.release
+    }
+}
+
+/// Compute the fixed costs of one launch for a device set under the given
+/// optimization flags.  `n_buffers` is read+write buffers (Table I), and
+/// `input_bytes` the total input footprint (bulk-copied per non-shared
+/// device in the baseline buffer mode).
+pub fn fixed_costs(
+    p: &DriverProfile,
+    devices: &[DeviceClass],
+    opts: Optimizations,
+    n_buffers: u32,
+    input_bytes: f64,
+) -> FixedCosts {
+    let ms = 1e-3;
+    // Per-device serial stage chain: init + context + queue + build +
+    // buffer registration (+ one redundant platform re-query in baseline).
+    let dev_chain = |c: DeviceClass| -> f64 {
+        let i = class_idx(c);
+        let mut t = p.device_init_ms[i] + p.context_ms[i] + p.queue_ms[i]
+            + p.program_build_ms[i]
+            + n_buffers as f64 * p.buffer_reg_ms;
+        if !opts.init_overlap {
+            t += p.redundant_query_ms;
+        }
+        t * ms
+    };
+    // Buffer instantiation: bulk copy (or cheap map with the optimization
+    // for shared-memory devices).
+    let buf_cost = |c: DeviceClass| -> f64 {
+        let shared = c.shares_host_memory() && opts.buffer_flags;
+        if shared {
+            p.map_latency_us * 1e-6
+        } else {
+            let i = class_idx(c);
+            input_bytes / (p.h2d_gbps[i] * 1e9) + p.transfer_latency_us[i] * 1e-6
+        }
+    };
+
+    let discovery = p.platform_discovery_ms * ms;
+    let sched_setup = p.scheduler_setup_ms * ms;
+
+    let init = if opts.init_overlap {
+        // Scheduler/Device threads prepare concurrently with discovery,
+        // each limited by its own dependency chain — but vendor ICD locks
+        // keep a residual fraction of the off-critical-path chains serial.
+        let chains: Vec<f64> = devices.iter().map(|&c| dev_chain(c) + buf_cost(c)).collect();
+        let longest = chains.iter().cloned().fold(0.0, f64::max);
+        let residual: f64 =
+            (chains.iter().sum::<f64>() - longest) * p.overlap_residual;
+        discovery + sched_setup + longest + residual
+    } else {
+        // Everything serialized on the Runtime thread.
+        discovery
+            + sched_setup
+            + devices.iter().map(|&c| dev_chain(c) + buf_cost(c)).sum::<f64>()
+    };
+
+    let release = if opts.init_overlap {
+        // Structure reuse: releases batched, one barrier.
+        (p.release_ms + p.release_dev_ms) * ms
+    } else {
+        (p.release_ms + devices.len() as f64 * p.release_dev_ms) * ms
+    };
+
+    FixedCosts { init, release }
+}
+
+pub(crate) fn class_idx(c: DeviceClass) -> usize {
+    match c {
+        DeviceClass::Cpu => 0,
+        DeviceClass::IGpu => 1,
+        DeviceClass::DGpu => 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TESTBED: [DeviceClass; 3] =
+        [DeviceClass::Cpu, DeviceClass::IGpu, DeviceClass::DGpu];
+
+    #[test]
+    fn optimized_init_is_faster() {
+        let p = DriverProfile::commodity_desktop();
+        let base = fixed_costs(&p, &TESTBED, Optimizations::NONE, 3, 1e6);
+        let opt = fixed_costs(&p, &TESTBED, Optimizations::INIT, 3, 1e6);
+        assert!(opt.init < base.init);
+        assert!(opt.release <= base.release);
+    }
+
+    #[test]
+    fn init_saving_calibrated_to_paper_131ms() {
+        let p = DriverProfile::commodity_desktop();
+        let base = fixed_costs(&p, &TESTBED, Optimizations::NONE, 3, 0.0);
+        let opt = fixed_costs(&p, &TESTBED, Optimizations::INIT, 3, 0.0);
+        let saving_ms = (base.init - opt.init) * 1e3;
+        assert!(
+            (saving_ms - 131.0).abs() < 20.0,
+            "init saving {saving_ms:.1} ms vs paper 131 ms"
+        );
+    }
+
+    #[test]
+    fn buffer_flags_help_shared_memory_devices_only() {
+        let p = DriverProfile::commodity_desktop();
+        let bytes = 256e6; // 256 MB inputs
+        let all = fixed_costs(&p, &TESTBED, Optimizations::ALL, 3, bytes);
+        let init_only = fixed_costs(&p, &TESTBED, Optimizations::INIT, 3, bytes);
+        assert!(all.init < init_only.init, "shared-mem copies elided");
+        // GPU-only system: buffer flags change nothing (dGPU never shares).
+        let gpu = [DeviceClass::DGpu];
+        let a = fixed_costs(&p, &gpu, Optimizations::INIT, 3, bytes);
+        let b = fixed_costs(&p, &gpu, Optimizations::ALL, 3, bytes);
+        assert!((a.init - b.init).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_device_init_cheaper_than_three() {
+        let p = DriverProfile::commodity_desktop();
+        let one = fixed_costs(&p, &[DeviceClass::DGpu], Optimizations::NONE, 3, 0.0);
+        let three = fixed_costs(&p, &TESTBED, Optimizations::NONE, 3, 0.0);
+        assert!(one.total() < three.total());
+    }
+
+    #[test]
+    fn more_buffers_cost_more_init() {
+        let p = DriverProfile::commodity_desktop();
+        let few = fixed_costs(&p, &TESTBED, Optimizations::NONE, 1, 0.0);
+        let many = fixed_costs(&p, &TESTBED, Optimizations::NONE, 4, 0.0);
+        assert!(many.init > few.init);
+    }
+}

@@ -1,0 +1,106 @@
+//! Per-package transfer cost model: the ROI-path side of the *buffers*
+//! optimization.  Each package pays input (h2d) and output (d2h) costs
+//! that depend on the device class, the byte footprint, and whether the
+//! zero-copy mapping applies.
+
+use super::{class_idx, DriverProfile};
+use crate::types::DeviceClass;
+
+/// Transfer calculator bound to one driver profile + optimization flag.
+#[derive(Debug, Clone)]
+pub struct TransferModel<'p> {
+    profile: &'p DriverProfile,
+    buffer_flags: bool,
+}
+
+impl<'p> TransferModel<'p> {
+    pub fn new(profile: &'p DriverProfile, buffer_flags: bool) -> Self {
+        Self { profile, buffer_flags }
+    }
+
+    fn mapped(&self, class: DeviceClass) -> bool {
+        self.buffer_flags && class.shares_host_memory()
+    }
+
+    /// Host→device input transfer time (seconds) for `bytes`.
+    pub fn h2d(&self, class: DeviceClass, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        let p = self.profile;
+        if self.mapped(class) {
+            p.map_latency_us * 1e-6 + bytes / (p.map_gbps * 1e9)
+        } else {
+            let i = class_idx(class);
+            p.transfer_latency_us[i] * 1e-6 + bytes / (p.h2d_gbps[i] * 1e9)
+        }
+    }
+
+    /// Device→host output transfer time (seconds) for `bytes`.
+    pub fn d2h(&self, class: DeviceClass, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        let p = self.profile;
+        if self.mapped(class) {
+            p.map_latency_us * 1e-6 + bytes / (p.map_gbps * 1e9)
+        } else {
+            let i = class_idx(class);
+            p.transfer_latency_us[i] * 1e-6 + bytes / (p.d2h_gbps[i] * 1e9)
+        }
+    }
+
+    /// Kernel launch overhead (seconds) per package.
+    pub fn launch(&self, class: DeviceClass) -> f64 {
+        self.profile.launch_overhead_us[class_idx(class)] * 1e-6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_bytes_is_free() {
+        let p = DriverProfile::commodity_desktop();
+        let t = TransferModel::new(&p, false);
+        assert_eq!(t.h2d(DeviceClass::DGpu, 0.0), 0.0);
+        assert_eq!(t.d2h(DeviceClass::Cpu, 0.0), 0.0);
+    }
+
+    #[test]
+    fn buffer_flags_speed_up_shared_memory_classes() {
+        let p = DriverProfile::commodity_desktop();
+        let off = TransferModel::new(&p, false);
+        let on = TransferModel::new(&p, true);
+        let mb = 8e6;
+        assert!(on.h2d(DeviceClass::Cpu, mb) < off.h2d(DeviceClass::Cpu, mb));
+        assert!(on.h2d(DeviceClass::IGpu, mb) < off.h2d(DeviceClass::IGpu, mb));
+        // dGPU unchanged
+        assert_eq!(on.h2d(DeviceClass::DGpu, mb), off.h2d(DeviceClass::DGpu, mb));
+    }
+
+    #[test]
+    fn cost_scales_with_bytes() {
+        let p = DriverProfile::commodity_desktop();
+        let t = TransferModel::new(&p, false);
+        let small = t.h2d(DeviceClass::DGpu, 1e6);
+        let large = t.h2d(DeviceClass::DGpu, 64e6);
+        assert!(large > small * 10.0);
+    }
+
+    #[test]
+    fn latency_dominates_tiny_transfers() {
+        let p = DriverProfile::commodity_desktop();
+        let t = TransferModel::new(&p, false);
+        let tiny = t.h2d(DeviceClass::DGpu, 64.0);
+        assert!(tiny > 0.9 * p.transfer_latency_us[2] * 1e-6);
+    }
+
+    #[test]
+    fn launch_overhead_per_class() {
+        let p = DriverProfile::commodity_desktop();
+        let t = TransferModel::new(&p, true);
+        assert!(t.launch(DeviceClass::IGpu) > t.launch(DeviceClass::Cpu));
+    }
+}

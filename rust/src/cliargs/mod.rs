@@ -1,0 +1,115 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: positionals, `--flag value` pairs and boolean `--switch`es.
+//! A flag is boolean iff the next token starts with `--` or is absent.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl Iterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let toks: Vec<String> = argv.collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(name) = t.strip_prefix("--") {
+                let has_value = toks.get(i + 1).map(|n| !n.starts_with("--")).unwrap_or(false);
+                if has_value {
+                    out.flags.insert(name.to_string(), toks[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.switches.push(name.to_string());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(t.clone());
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// `--name value` lookup.
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    /// boolean `--name` lookup.
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// `--reps N` with a default.
+    pub fn reps(&self, default: usize) -> Result<usize> {
+        match self.flag("reps") {
+            None => Ok(default),
+            Some(v) => match v.parse::<usize>() {
+                Ok(n) if n >= 2 => Ok(n),
+                _ => bail!("--reps must be an integer >= 2, got '{v}'"),
+            },
+        }
+    }
+
+    /// `--csv PATH`.
+    pub fn csv(&self) -> Result<Option<PathBuf>> {
+        Ok(self.flag("csv").map(PathBuf::from))
+    }
+
+    /// Positional `idx` with a default.
+    pub fn positional_or(&self, _name: &str, idx: usize, default: &str) -> Result<String> {
+        Ok(self.positional.get(idx).cloned().unwrap_or_else(|| default.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn positionals_flags_switches() {
+        let a = parse("fig5 mandelbrot --reps 20 --csv out.csv --no-init-opt");
+        assert_eq!(a.positional, vec!["fig5", "mandelbrot"]);
+        assert_eq!(a.flag("reps"), Some("20"));
+        assert_eq!(a.flag("csv"), Some("out.csv"));
+        assert!(a.switch("no-init-opt"));
+        assert!(!a.switch("verbose"));
+    }
+
+    #[test]
+    fn trailing_flag_is_switch() {
+        let a = parse("run --bench ray --fast");
+        assert_eq!(a.flag("bench"), Some("ray"));
+        assert!(a.switch("fast"));
+    }
+
+    #[test]
+    fn reps_validation() {
+        assert_eq!(parse("x").reps(50).unwrap(), 50);
+        assert_eq!(parse("x --reps 10").reps(50).unwrap(), 10);
+        assert!(parse("x --reps 1").reps(50).is_err());
+        assert!(parse("x --reps ten").reps(50).is_err());
+    }
+
+    #[test]
+    fn positional_defaults() {
+        let a = parse("fig5");
+        assert_eq!(a.positional_or("bench", 1, "all").unwrap(), "all");
+        let b = parse("fig5 ray2");
+        assert_eq!(b.positional_or("bench", 1, "all").unwrap(), "ray2");
+        assert_eq!(b.positional_or("bench", 0, "all").unwrap(), "fig5");
+    }
+}

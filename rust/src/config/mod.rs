@@ -1,0 +1,299 @@
+//! Run configuration: a JSON-backed description of an experiment that the
+//! CLI loads (`--config run.json`) or builds from flags.  This is the
+//! "launcher" layer — everything an `enginecl run` needs lives in one
+//! [`RunConfig`] value.  Parsing uses the in-tree [`crate::jsonio`]
+//! module (no serde in this offline environment).
+
+use crate::benchsuite::BenchId;
+use crate::jsonio::Json;
+use crate::scheduler::{HGuidedParams, SchedulerKind};
+use crate::types::{DeviceClass, DeviceSpec, ExecMode, Optimizations};
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A complete experiment description.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub bench: String,
+    pub gws: Option<u64>,
+    pub scheduler: SchedulerKind,
+    pub mode: String, // "roi" | "binary"
+    pub init_overlap: bool,
+    pub buffer_flags: bool,
+    pub reps: usize,
+    pub devices: Option<Vec<DeviceSpec>>,
+    pub seed: u64,
+}
+
+impl RunConfig {
+    /// Sensible default experiment for one benchmark.
+    pub fn for_bench(bench: BenchId) -> Self {
+        Self {
+            bench: bench.label().to_lowercase(),
+            gws: None,
+            scheduler: SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() },
+            mode: "roi".into(),
+            init_overlap: true,
+            buffer_flags: true,
+            reps: 50,
+            devices: None,
+            seed: 1,
+        }
+    }
+
+    /// Parse from a JSON document, e.g.
+    /// ```json
+    /// {
+    ///   "bench": "ray2", "gws": 123456, "mode": "binary",
+    ///   "scheduler": {"kind": "hguided", "m": [1, 15, 30], "k": [3.5, 1.5, 1]},
+    ///   "init_overlap": false, "reps": 20,
+    ///   "devices": [{"class": "cpu", "power": 0.2}, {"class": "gpu", "power": 1.0}]
+    /// }
+    /// ```
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let bench = v
+            .get("bench")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("config missing 'bench'"))?
+            .to_string();
+        let mut cfg = Self::for_bench(parse_bench(&bench)?);
+        cfg.bench = bench;
+        if let Some(g) = v.get("gws") {
+            cfg.gws = Some(g.as_u64().ok_or_else(|| anyhow!("'gws' must be a positive integer"))?);
+        }
+        if let Some(s) = v.get("scheduler") {
+            cfg.scheduler = parse_scheduler(s)?;
+        }
+        if let Some(m) = v.get("mode") {
+            cfg.mode = m.as_str().ok_or_else(|| anyhow!("'mode' must be a string"))?.into();
+        }
+        if let Some(b) = v.get("init_overlap") {
+            cfg.init_overlap = b.as_bool().ok_or_else(|| anyhow!("'init_overlap' must be bool"))?;
+        }
+        if let Some(b) = v.get("buffer_flags") {
+            cfg.buffer_flags = b.as_bool().ok_or_else(|| anyhow!("'buffer_flags' must be bool"))?;
+        }
+        if let Some(r) = v.get("reps") {
+            cfg.reps = r.as_u64().ok_or_else(|| anyhow!("'reps' must be a positive integer"))? as usize;
+        }
+        if let Some(s) = v.get("seed") {
+            cfg.seed = s.as_u64().ok_or_else(|| anyhow!("'seed' must be a positive integer"))?;
+        }
+        if let Some(d) = v.get("devices") {
+            cfg.devices = Some(parse_devices(d)?);
+        }
+        cfg.parse_mode()?; // validate eagerly
+        Ok(cfg)
+    }
+
+    pub fn from_json_file(path: &std::path::Path) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        let v = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        Self::from_json(&v)
+    }
+
+    pub fn parse_bench(&self) -> Result<BenchId> {
+        parse_bench(&self.bench)
+    }
+
+    pub fn parse_mode(&self) -> Result<ExecMode> {
+        match self.mode.to_lowercase().as_str() {
+            "roi" => Ok(ExecMode::Roi),
+            "binary" => Ok(ExecMode::Binary),
+            m => bail!("unknown mode '{m}' (roi|binary)"),
+        }
+    }
+
+    pub fn optimizations(&self) -> Optimizations {
+        Optimizations { init_overlap: self.init_overlap, buffer_flags: self.buffer_flags }
+    }
+
+    /// Build the configured engine.
+    pub fn build_engine(&self) -> Result<crate::engine::Engine> {
+        let bench = crate::benchsuite::Bench::new(self.parse_bench()?);
+        let mut e = crate::engine::Engine::new(bench)
+            .with_scheduler(self.scheduler.clone())
+            .with_mode(self.parse_mode()?)
+            .with_optimizations(self.optimizations());
+        if let Some(gws) = self.gws {
+            e = e.with_gws(gws);
+        }
+        if let Some(devices) = &self.devices {
+            e = e.with_devices(devices.clone());
+        }
+        Ok(e)
+    }
+}
+
+/// Parse a benchmark name (case-insensitive; "ray"/"ray1"/"ray2").
+pub fn parse_bench(name: &str) -> Result<BenchId> {
+    Ok(match name.to_lowercase().as_str() {
+        "gaussian" => BenchId::Gaussian,
+        "binomial" => BenchId::Binomial,
+        "nbody" => BenchId::NBody,
+        "ray" | "ray1" => BenchId::Ray1,
+        "ray2" => BenchId::Ray2,
+        "mandelbrot" => BenchId::Mandelbrot,
+        n => bail!("unknown benchmark '{n}'"),
+    })
+}
+
+/// Parse a scheduler spec: either a string shorthand ("static",
+/// "static-rev", "dynamic:128", "hguided", "hguided-opt") or an object
+/// `{"kind": "hguided", "m": [...], "k": [...]}`.
+pub fn parse_scheduler(v: &Json) -> Result<SchedulerKind> {
+    if let Some(s) = v.as_str() {
+        return parse_scheduler_str(s);
+    }
+    let kind = v
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("scheduler object missing 'kind'"))?;
+    match kind {
+        "dynamic" => {
+            let n = v
+                .get("chunks")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("dynamic scheduler needs 'chunks'"))?;
+            Ok(SchedulerKind::Dynamic { n_chunks: n })
+        }
+        "hguided" => {
+            let arr_u64 = |k: &str| -> Option<Vec<u64>> {
+                v.get(k)?.as_arr()?.iter().map(Json::as_u64).collect()
+            };
+            let arr_f64 = |k: &str| -> Option<Vec<f64>> {
+                v.get(k)?.as_arr()?.iter().map(Json::as_f64).collect()
+            };
+            let params = match (arr_u64("m"), arr_f64("k")) {
+                (Some(m), Some(k)) => HGuidedParams { min_mult: m, k },
+                (None, None) => HGuidedParams::optimized_paper(),
+                _ => bail!("hguided scheduler needs both 'm' and 'k' (or neither)"),
+            };
+            Ok(SchedulerKind::HGuided { params })
+        }
+        _ => parse_scheduler_str(kind),
+    }
+}
+
+/// String shorthand accepted by both JSON configs and CLI flags.
+pub fn parse_scheduler_str(s: &str) -> Result<SchedulerKind> {
+    let s = s.to_lowercase();
+    Ok(match s.as_str() {
+        "static" => SchedulerKind::Static,
+        "static-rev" | "static_rev" | "staticrev" => SchedulerKind::StaticRev,
+        "hguided" => SchedulerKind::HGuided { params: HGuidedParams::default_paper() },
+        "hguided-opt" | "hguided_opt" => {
+            SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() }
+        }
+        _ => {
+            if let Some(n) = s.strip_prefix("dynamic:").or_else(|| s.strip_prefix("dyn:")) {
+                SchedulerKind::Dynamic {
+                    n_chunks: n.parse().map_err(|_| anyhow!("bad chunk count '{n}'"))?,
+                }
+            } else {
+                bail!("unknown scheduler '{s}' (static|static-rev|dynamic:N|hguided|hguided-opt)")
+            }
+        }
+    })
+}
+
+fn parse_devices(v: &Json) -> Result<Vec<DeviceSpec>> {
+    let arr = v.as_arr().ok_or_else(|| anyhow!("'devices' must be an array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for d in arr {
+        let class = match d
+            .get("class")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("device missing 'class'"))?
+            .to_lowercase()
+            .as_str()
+        {
+            "cpu" => DeviceClass::Cpu,
+            "igpu" => DeviceClass::IGpu,
+            "gpu" | "dgpu" => DeviceClass::DGpu,
+            c => bail!("unknown device class '{c}' (cpu|igpu|gpu)"),
+        };
+        let power = d
+            .get("power")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("device missing 'power'"))?;
+        if power <= 0.0 {
+            bail!("device power must be positive, got {power}");
+        }
+        out.push(DeviceSpec { class, power });
+    }
+    if out.is_empty() {
+        bail!("'devices' must not be empty");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_parse() {
+        let c = RunConfig::for_bench(BenchId::Mandelbrot);
+        assert_eq!(c.parse_bench().unwrap(), BenchId::Mandelbrot);
+        assert_eq!(c.parse_mode().unwrap(), ExecMode::Roi);
+        assert!(c.optimizations().init_overlap);
+        assert!(c.build_engine().is_ok());
+    }
+
+    #[test]
+    fn json_with_overrides() {
+        let json = Json::parse(
+            r#"{
+            "bench": "ray2",
+            "gws": 123456,
+            "mode": "binary",
+            "init_overlap": false,
+            "reps": 5,
+            "scheduler": {"kind": "hguided", "m": [1, 15, 30], "k": [3.5, 1.5, 1]},
+            "devices": [
+                {"class": "cpu", "power": 0.2},
+                {"class": "gpu", "power": 1.0}
+            ]
+        }"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&json).unwrap();
+        assert_eq!(c.parse_bench().unwrap(), BenchId::Ray2);
+        assert_eq!(c.gws, Some(123456));
+        assert_eq!(c.parse_mode().unwrap(), ExecMode::Binary);
+        assert!(!c.optimizations().init_overlap);
+        assert!(c.optimizations().buffer_flags, "default true");
+        assert_eq!(c.scheduler.label(), "HGuided opt");
+        let devs = c.devices.unwrap();
+        assert_eq!(devs.len(), 2);
+        assert_eq!(devs[1].class, DeviceClass::DGpu);
+    }
+
+    #[test]
+    fn scheduler_shorthands() {
+        assert_eq!(parse_scheduler_str("static").unwrap(), SchedulerKind::Static);
+        assert_eq!(parse_scheduler_str("Static-Rev").unwrap(), SchedulerKind::StaticRev);
+        assert_eq!(
+            parse_scheduler_str("dynamic:128").unwrap(),
+            SchedulerKind::Dynamic { n_chunks: 128 }
+        );
+        assert_eq!(parse_scheduler_str("hguided-opt").unwrap().label(), "HGuided opt");
+        assert!(parse_scheduler_str("fifo").is_err());
+    }
+
+    #[test]
+    fn bad_inputs_rejected() {
+        assert!(parse_bench("sorting").is_err());
+        let bad_mode = Json::parse(r#"{"bench": "gaussian", "mode": "speedrun"}"#).unwrap();
+        assert!(RunConfig::from_json(&bad_mode).is_err());
+        let bad_dev = Json::parse(
+            r#"{"bench": "gaussian", "devices": [{"class": "cpu", "power": -1}]}"#,
+        )
+        .unwrap();
+        assert!(RunConfig::from_json(&bad_dev).is_err());
+        let bad_sched =
+            Json::parse(r#"{"bench": "gaussian", "scheduler": {"kind": "dynamic"}}"#).unwrap();
+        assert!(RunConfig::from_json(&bad_sched).is_err());
+    }
+}

@@ -1,0 +1,507 @@
+//! Figure/table regeneration harness — one function per paper artifact.
+//!
+//! Each returns plain data rows (serde-serializable) consumed by the CLI
+//! (`enginecl fig3` …), the criterion benches, and the integration tests
+//! that assert the paper's qualitative claims.
+
+use crate::benchsuite::{Bench, BenchId};
+use crate::metrics;
+use crate::scheduler::{HGuidedParams, SchedulerKind};
+use crate::stats::geomean;
+use crate::types::{ExecMode, Optimizations};
+
+use super::Engine;
+
+/// CSV projection for result rows (no serde in this environment).
+pub trait CsvRow {
+    fn csv_header() -> &'static str;
+    fn csv_row(&self) -> String;
+}
+
+/// Write any row set as CSV.
+pub fn write_csv<R: CsvRow>(path: &std::path::Path, rows: &[R]) -> std::io::Result<()> {
+    let mut out = String::from(R::csv_header());
+    out.push('\n');
+    for r in rows {
+        out.push_str(&r.csv_row());
+        out.push('\n');
+    }
+    std::fs::write(path, out)
+}
+
+// ------------------------------------------------------------------- Fig. 3
+/// One bar of Fig. 3: a (benchmark, scheduler) pair's speedup and
+/// efficiency against the single-GPU baseline.
+#[derive(Debug, Clone)]
+pub struct Fig3Row {
+    pub bench: String,
+    pub scheduler: String,
+    pub speedup: f64,
+    pub max_speedup: f64,
+    pub efficiency: f64,
+    pub mean_time_s: f64,
+    pub mean_packages: f64,
+}
+
+impl CsvRow for Fig3Row {
+    fn csv_header() -> &'static str {
+        "bench,scheduler,speedup,max_speedup,efficiency,mean_time_s,mean_packages"
+    }
+    fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{}",
+            self.bench,
+            self.scheduler,
+            self.speedup,
+            self.max_speedup,
+            self.efficiency,
+            self.mean_time_s,
+            self.mean_packages
+        )
+    }
+}
+
+/// Regenerate Fig. 3 (speedups + efficiency, 7 configs × 6 programs).
+/// `reps` = repetitions per configuration (paper: 50).
+pub fn fig3(reps: usize) -> Vec<Fig3Row> {
+    let mut rows = Vec::new();
+    for id in BenchId::ALL {
+        let bench = Bench::new(id);
+        let base = Engine::new(bench.clone());
+        let standalone = base.standalone_times(reps.min(8));
+        let gpu_time = standalone[2];
+        let s_max = metrics::max_speedup(&standalone);
+        for kind in SchedulerKind::fig3_configs() {
+            let rep = base.clone().with_scheduler(kind.clone()).run_reps(reps);
+            let s = metrics::speedup(gpu_time, rep.time.mean);
+            rows.push(Fig3Row {
+                bench: id.label().into(),
+                scheduler: kind.label(),
+                speedup: s,
+                max_speedup: s_max,
+                efficiency: metrics::efficiency(s, s_max),
+                mean_time_s: rep.time.mean,
+                mean_packages: rep.mean_packages,
+            });
+        }
+    }
+    rows
+}
+
+/// The per-scheduler geometric means (the paper's right-most bar group).
+pub fn fig3_geomeans(rows: &[Fig3Row]) -> Vec<Fig3Row> {
+    SchedulerKind::fig3_configs()
+        .iter()
+        .map(|kind| {
+            let label = kind.label();
+            let group: Vec<&Fig3Row> =
+                rows.iter().filter(|r| r.scheduler == label).collect();
+            let speedups: Vec<f64> = group.iter().map(|r| r.speedup).collect();
+            let effs: Vec<f64> = group.iter().map(|r| r.efficiency).collect();
+            Fig3Row {
+                bench: "geomean".into(),
+                scheduler: label,
+                speedup: geomean(&speedups),
+                max_speedup: geomean(&group.iter().map(|r| r.max_speedup).collect::<Vec<_>>()),
+                efficiency: geomean(&effs),
+                mean_time_s: geomean(&group.iter().map(|r| r.mean_time_s).collect::<Vec<_>>()),
+                mean_packages: 0.0,
+            }
+        })
+        .collect()
+}
+
+// ------------------------------------------------------------------- Fig. 4
+#[derive(Debug, Clone)]
+pub struct Fig4Row {
+    pub bench: String,
+    pub scheduler: String,
+    pub balance: f64,
+}
+
+impl CsvRow for Fig4Row {
+    fn csv_header() -> &'static str {
+        "bench,scheduler,balance"
+    }
+    fn csv_row(&self) -> String {
+        format!("{},{},{}", self.bench, self.scheduler, self.balance)
+    }
+}
+
+/// Regenerate Fig. 4 (balance per scheduler and program).
+pub fn fig4(reps: usize) -> Vec<Fig4Row> {
+    let mut rows = Vec::new();
+    for id in BenchId::ALL {
+        let bench = Bench::new(id);
+        let base = Engine::new(bench);
+        for kind in SchedulerKind::fig3_configs() {
+            let rep = base.clone().with_scheduler(kind.clone()).run_reps(reps);
+            rows.push(Fig4Row {
+                bench: id.label().into(),
+                scheduler: kind.label(),
+                balance: rep.balance.mean,
+            });
+        }
+    }
+    rows
+}
+
+// ------------------------------------------------------------------- Fig. 5
+/// One (m, k) parameter combination of the HGuided sweep.
+#[derive(Debug, Clone)]
+pub struct Fig5Row {
+    pub bench: String,
+    /// Minimum-package multipliers (CPU, iGPU, GPU).
+    pub m: [u64; 3],
+    /// Decay constants (CPU, iGPU, GPU).
+    pub k: [f64; 3],
+    pub mean_time_s: f64,
+}
+
+impl CsvRow for Fig5Row {
+    fn csv_header() -> &'static str {
+        "bench,m_cpu,m_igpu,m_gpu,k_cpu,k_igpu,k_gpu,mean_time_s"
+    }
+    fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{}",
+            self.bench,
+            self.m[0],
+            self.m[1],
+            self.m[2],
+            self.k[0],
+            self.k[1],
+            self.k[2],
+            self.mean_time_s
+        )
+    }
+}
+
+/// The sweep grid: m-triplets × k-triplets, mirroring the axes of the
+/// paper's surface plots (CPU, iGPU, GPU order).
+pub fn fig5_grid() -> (Vec<[u64; 3]>, Vec<[f64; 3]>) {
+    let m = vec![
+        [1, 1, 1],
+        [1, 5, 10],
+        [1, 15, 30],
+        [5, 15, 30],
+        [1, 30, 50],
+        [15, 30, 50],
+        [30, 30, 30],
+    ];
+    let k = vec![
+        [1.0, 1.0, 1.0],
+        [2.0, 2.0, 2.0],
+        [3.0, 3.0, 3.0],
+        [4.0, 4.0, 4.0],
+        [3.5, 1.5, 1.0],
+        [1.0, 1.5, 3.5],
+        [4.0, 2.0, 1.0],
+        [2.0, 1.5, 1.0],
+    ];
+    (m, k)
+}
+
+/// Regenerate one benchmark's Fig.-5 surface.
+pub fn fig5(id: BenchId, reps: usize) -> Vec<Fig5Row> {
+    let bench = Bench::new(id);
+    let base = Engine::new(bench);
+    let (ms, ks) = fig5_grid();
+    let mut rows = Vec::with_capacity(ms.len() * ks.len());
+    for m in &ms {
+        for k in &ks {
+            let params = HGuidedParams { min_mult: m.to_vec(), k: k.to_vec() };
+            let rep = base
+                .clone()
+                .with_scheduler(SchedulerKind::HGuided { params })
+                .run_reps(reps);
+            rows.push(Fig5Row {
+                bench: id.label().into(),
+                m: *m,
+                k: *k,
+                mean_time_s: rep.time.mean,
+            });
+        }
+    }
+    rows
+}
+
+/// Best row of a Fig.-5 sweep (lowest mean time).
+pub fn fig5_best(rows: &[Fig5Row]) -> &Fig5Row {
+    rows.iter()
+        .min_by(|a, b| a.mean_time_s.total_cmp(&b.mean_time_s))
+        .expect("empty sweep")
+}
+
+// ------------------------------------------------------------------- Fig. 6
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptLevel {
+    /// Pre-optimization runtime.
+    None,
+    /// + initialization optimization.
+    Init,
+    /// + buffer optimization (the paper's final runtime).
+    All,
+}
+
+impl OptLevel {
+    pub const ALL_LEVELS: [OptLevel; 3] = [OptLevel::None, OptLevel::Init, OptLevel::All];
+
+    pub fn flags(&self) -> Optimizations {
+        match self {
+            OptLevel::None => Optimizations::NONE,
+            OptLevel::Init => Optimizations::INIT,
+            OptLevel::All => Optimizations::ALL,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            OptLevel::None => "baseline",
+            OptLevel::Init => "+init",
+            OptLevel::All => "+init+buffers",
+        }
+    }
+}
+
+/// One point of the Fig.-6 curves.
+#[derive(Debug, Clone)]
+pub struct Fig6Row {
+    pub bench: String,
+    pub gws: u64,
+    pub mode: String,   // "binary" | "roi"
+    pub opts: String,   // OptLevel label
+    pub single_gpu_s: f64,
+    pub coexec_s: f64,
+}
+
+impl CsvRow for Fig6Row {
+    fn csv_header() -> &'static str {
+        "bench,gws,mode,opts,single_gpu_s,coexec_s"
+    }
+    fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{}",
+            self.bench, self.gws, self.mode, self.opts, self.single_gpu_s, self.coexec_s
+        )
+    }
+}
+
+/// Execution time vs problem size, single-GPU vs HGuided co-execution,
+/// binary & ROI modes, at each optimization level.
+pub fn fig6(id: BenchId, reps: usize) -> Vec<Fig6Row> {
+    let bench = Bench::new(id);
+    let mut rows = Vec::new();
+    // Geometric gws ladder from ~default/4096 up to the paper size; round
+    // to whole tiles of lws so every scheduler sees >= 1 group.
+    let lws = bench.props.lws as u64;
+    let mut sizes = Vec::new();
+    let mut g = (bench.default_gws / 4096).max(lws * 4);
+    while g < bench.default_gws {
+        sizes.push(g / lws * lws);
+        g *= 2;
+    }
+    sizes.push(bench.default_gws);
+    // One octave of headroom: some baseline-runtime curves (e.g. NBody)
+    // only become worth co-executing beyond the paper's 2-second size.
+    sizes.push(bench.default_gws * 2);
+
+    for &gws in &sizes {
+        for mode in [ExecMode::Binary, ExecMode::Roi] {
+            for level in OptLevel::ALL_LEVELS {
+                let base = Engine::new(bench.clone())
+                    .with_gws(gws)
+                    .with_mode(mode)
+                    .with_optimizations(level.flags());
+                let single = base.clone().gpu_only().run_reps(reps).time.mean;
+                let co = base
+                    .with_scheduler(SchedulerKind::HGuided {
+                        params: HGuidedParams::optimized_paper(),
+                    })
+                    .run_reps(reps)
+                    .time
+                    .mean;
+                rows.push(Fig6Row {
+                    bench: id.label().into(),
+                    gws,
+                    mode: match mode {
+                        ExecMode::Binary => "binary".into(),
+                        ExecMode::Roi => "roi".into(),
+                    },
+                    opts: level.label().into(),
+                    single_gpu_s: single,
+                    coexec_s: co,
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// The inflection point of one (mode, opts) curve family: the single-GPU
+/// time at the smallest problem size where co-execution wins (the paper's
+/// vertical lines), log-interpolated between ladder points.
+#[derive(Debug, Clone)]
+pub struct Inflection {
+    pub bench: String,
+    pub mode: String,
+    pub opts: String,
+    /// Problem size (items) at break-even; None if co-exec never wins.
+    pub gws: Option<f64>,
+    /// Single-GPU execution time at break-even (the "is it worth it"
+    /// threshold the paper quotes: ~1.75 s binary / ~15 ms ROI).
+    pub time_s: Option<f64>,
+}
+
+/// Extract inflection points from a Fig.-6 row set.
+pub fn inflections(rows: &[Fig6Row]) -> Vec<Inflection> {
+    let mut out = Vec::new();
+    let mut keys: Vec<(String, String, String)> = rows
+        .iter()
+        .map(|r| (r.bench.clone(), r.mode.clone(), r.opts.clone()))
+        .collect();
+    keys.sort();
+    keys.dedup();
+    for (bench, mode, opts) in keys {
+        let mut pts: Vec<&Fig6Row> = rows
+            .iter()
+            .filter(|r| r.bench == bench && r.mode == mode && r.opts == opts)
+            .collect();
+        pts.sort_by_key(|r| r.gws);
+        let mut found = None;
+        for w in pts.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            let fa = a.coexec_s - a.single_gpu_s;
+            let fb = b.coexec_s - b.single_gpu_s;
+            if fa > 0.0 && fb <= 0.0 {
+                // log-linear interpolation of the crossing
+                let la = (a.gws as f64).ln();
+                let lb = (b.gws as f64).ln();
+                let t = fa / (fa - fb);
+                let gws = (la + t * (lb - la)).exp();
+                let time = a.single_gpu_s + t * (b.single_gpu_s - a.single_gpu_s);
+                found = Some((gws, time));
+                break;
+            }
+        }
+        // Co-execution may win from the very first point.
+        if found.is_none() {
+            if let Some(first) = pts.first() {
+                if first.coexec_s <= first.single_gpu_s {
+                    found = Some((first.gws as f64, first.single_gpu_s));
+                }
+            }
+        }
+        out.push(Inflection {
+            bench,
+            mode,
+            opts,
+            gws: found.map(|(g, _)| g),
+            time_s: found.map(|(_, t)| t),
+        });
+    }
+    out
+}
+
+/// Mean relative improvement of the inflection *times* between two
+/// optimization levels (the paper's 7.5 % init / 17.4 % buffers numbers).
+pub fn inflection_improvement(infl: &[Inflection], from: OptLevel, to: OptLevel) -> f64 {
+    let mut rel = Vec::new();
+    for i in infl.iter().filter(|i| i.opts == from.label()) {
+        if let Some(j) = infl.iter().find(|j| {
+            j.bench == i.bench && j.mode == i.mode && j.opts == to.label()
+        }) {
+            if let (Some(a), Some(b)) = (i.time_s, j.time_s) {
+                if a > 0.0 {
+                    rel.push((a - b) / a);
+                }
+            }
+        }
+    }
+    crate::stats::mean(&rel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_grid_contains_paper_best() {
+        let (ms, ks) = fig5_grid();
+        assert!(ms.contains(&[1, 15, 30]));
+        assert!(ks.contains(&[3.5, 1.5, 1.0]));
+        assert!(ks.contains(&[2.0, 2.0, 2.0]), "best single-k row present");
+    }
+
+    #[test]
+    fn opt_levels_map_to_flags() {
+        assert_eq!(OptLevel::None.flags(), Optimizations::NONE);
+        assert!(OptLevel::Init.flags().init_overlap);
+        assert!(!OptLevel::Init.flags().buffer_flags);
+        assert!(OptLevel::All.flags().buffer_flags);
+    }
+
+    #[test]
+    fn inflection_interpolates_crossing() {
+        let rows = vec![
+            Fig6Row {
+                bench: "X".into(),
+                gws: 1000,
+                mode: "roi".into(),
+                opts: "baseline".into(),
+                single_gpu_s: 0.010,
+                coexec_s: 0.020,
+            },
+            Fig6Row {
+                bench: "X".into(),
+                gws: 4000,
+                mode: "roi".into(),
+                opts: "baseline".into(),
+                single_gpu_s: 0.040,
+                coexec_s: 0.030,
+            },
+        ];
+        let inf = inflections(&rows);
+        assert_eq!(inf.len(), 1);
+        let g = inf[0].gws.unwrap();
+        assert!(g > 1000.0 && g < 4000.0, "{g}");
+        let t = inf[0].time_s.unwrap();
+        assert!(t > 0.010 && t < 0.040);
+    }
+
+    #[test]
+    fn inflection_none_when_coexec_never_wins() {
+        let rows = vec![Fig6Row {
+            bench: "X".into(),
+            gws: 1000,
+            mode: "roi".into(),
+            opts: "baseline".into(),
+            single_gpu_s: 0.010,
+            coexec_s: 0.020,
+        }];
+        let inf = inflections(&rows);
+        assert!(inf[0].gws.is_none());
+    }
+
+    #[test]
+    fn improvement_math() {
+        let inf = vec![
+            Inflection {
+                bench: "X".into(),
+                mode: "roi".into(),
+                opts: "baseline".into(),
+                gws: Some(1.0),
+                time_s: Some(1.0),
+            },
+            Inflection {
+                bench: "X".into(),
+                mode: "roi".into(),
+                opts: "+init".into(),
+                gws: Some(1.0),
+                time_s: Some(0.9),
+            },
+        ];
+        let imp = inflection_improvement(&inf, OptLevel::None, OptLevel::Init);
+        assert!((imp - 0.1).abs() < 1e-12);
+    }
+}

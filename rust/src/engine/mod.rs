@@ -1,0 +1,267 @@
+//! The EngineCL-analog facade (paper Fig. 1, Tier-1/Tier-2 API).
+//!
+//! ```no_run
+//! use enginecl::benchsuite::{Bench, BenchId};
+//! use enginecl::engine::Engine;
+//! use enginecl::scheduler::{HGuidedParams, SchedulerKind};
+//! use enginecl::types::{ExecMode, Optimizations};
+//!
+//! let bench = Bench::new(BenchId::Mandelbrot);
+//! let report = Engine::new(bench)
+//!     .with_scheduler(SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() })
+//!     .with_mode(ExecMode::Roi)
+//!     .with_optimizations(Optimizations::ALL)
+//!     .run(1);
+//! println!("response time {:.3}s balance {:.2}", report.time, report.balance);
+//! ```
+//!
+//! `Engine::run` drives the virtual-clock backend; the PJRT threaded
+//! backend lives in [`pjrt`] and the figure-regeneration harness in
+//! [`experiments`].
+
+pub mod experiments;
+pub mod pjrt;
+
+use crate::benchsuite::Bench;
+use crate::cldriver::DriverProfile;
+use crate::metrics;
+use crate::scheduler::SchedulerKind;
+use crate::sim::{simulate, SimConfig, SimOutcome};
+use crate::stats::Summary;
+use crate::types::{DeviceSpec, ExecMode, Optimizations};
+
+/// Tier-1 entry point: configure and launch co-executions of one
+/// benchmark program.
+#[derive(Debug, Clone)]
+pub struct Engine {
+    bench: Bench,
+    devices: Vec<DeviceSpec>,
+    scheduler: SchedulerKind,
+    mode: ExecMode,
+    opts: Optimizations,
+    driver: DriverProfile,
+    gws: Option<u64>,
+}
+
+/// One run's report: timing + the paper's metrics inputs.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Response time under the configured mode (ROI or binary).
+    pub time: f64,
+    pub balance: f64,
+    pub outcome: SimOutcome,
+    pub scheduler_label: String,
+}
+
+/// Aggregate over the repetition protocol (§IV: 50 runs, first discarded).
+#[derive(Debug, Clone)]
+pub struct RepsReport {
+    pub time: Summary,
+    pub balance: Summary,
+    pub mean_packages: f64,
+}
+
+impl Engine {
+    /// New engine over the paper testbed with HGuided-optimized defaults.
+    pub fn new(bench: Bench) -> Self {
+        let devices = crate::sim::coexec::testbed_devices(&bench);
+        Self {
+            bench,
+            devices,
+            scheduler: SchedulerKind::HGuided {
+                params: crate::scheduler::HGuidedParams::optimized_paper(),
+            },
+            mode: ExecMode::Roi,
+            opts: Optimizations::ALL,
+            driver: DriverProfile::commodity_desktop(),
+            gws: None,
+        }
+    }
+
+    pub fn with_devices(mut self, devices: Vec<DeviceSpec>) -> Self {
+        assert!(!devices.is_empty());
+        self.devices = devices;
+        self
+    }
+
+    /// Restrict to the fastest device only (the paper's baseline).  The
+    /// scheduler degenerates to a single Static package.
+    pub fn gpu_only(mut self) -> Self {
+        self.devices = vec![crate::types::DeviceSpec {
+            class: crate::types::DeviceClass::DGpu,
+            power: 1.0,
+        }];
+        self.scheduler = SchedulerKind::Static;
+        self
+    }
+
+    pub fn with_scheduler(mut self, scheduler: SchedulerKind) -> Self {
+        self.scheduler = scheduler;
+        self
+    }
+
+    pub fn with_mode(mut self, mode: ExecMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn with_optimizations(mut self, opts: Optimizations) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    pub fn with_driver(mut self, driver: DriverProfile) -> Self {
+        self.driver = driver;
+        self
+    }
+
+    /// Override the problem size (work-items); default = paper size.
+    pub fn with_gws(mut self, gws: u64) -> Self {
+        self.gws = Some(gws);
+        self
+    }
+
+    pub fn bench(&self) -> &Bench {
+        &self.bench
+    }
+
+    fn sim_config(&self, seed: u64) -> SimConfig {
+        SimConfig {
+            devices: self.devices.clone(),
+            scheduler: self.scheduler.clone(),
+            mode: self.mode,
+            opts: self.opts,
+            driver: self.driver.clone(),
+            power: crate::cldriver::PowerModel::commodity_desktop(),
+            gws: self.gws,
+            seed,
+            record_packages: false,
+            fail: None,
+        }
+    }
+
+    /// One iterative run (paper §VII future work): `iterations` kernel
+    /// launches with device-resident buffers in between.
+    pub fn run_iterative(&self, iterations: u32, seed: u64) -> crate::sim::IterOutcome {
+        crate::sim::simulate_iterative(&self.bench, &self.sim_config(seed), iterations)
+    }
+
+    /// Energy-to-solution (J) of one run — the §VII energy-efficiency
+    /// extension.  For single-device configs the idle testbed devices are
+    /// still charged (same platform, one device working).
+    pub fn run_energy(&self, seed: u64) -> f64 {
+        let out = crate::sim::simulate(&self.bench, &self.sim_config(seed));
+        if self.devices.len() > 1 {
+            out.energy_j
+        } else {
+            let busy = out.devices[0].busy;
+            crate::cldriver::PowerModel::commodity_desktop().energy(
+                out.roi_time,
+                &[0, 1, 2],
+                &[0.0, 0.0, busy],
+            )
+        }
+    }
+
+    /// One run on the virtual-clock backend.
+    pub fn run(&self, seed: u64) -> RunReport {
+        let outcome = simulate(&self.bench, &self.sim_config(seed));
+        RunReport {
+            time: outcome.time(self.mode),
+            balance: metrics::balance(&outcome),
+            scheduler_label: self.scheduler.label(),
+            outcome,
+        }
+    }
+
+    /// The paper's measurement protocol: `reps` runs, first discarded as
+    /// warm-up.
+    pub fn run_reps(&self, reps: usize) -> RepsReport {
+        assert!(reps >= 2, "need at least warm-up + 1");
+        let mut times = Vec::with_capacity(reps);
+        let mut balances = Vec::with_capacity(reps);
+        let mut packages = 0.0;
+        for rep in 0..reps {
+            let r = self.run(rep as u64 + 1);
+            times.push(r.time);
+            balances.push(r.balance);
+            if rep > 0 {
+                packages += r.outcome.n_packages as f64;
+            }
+        }
+        RepsReport {
+            time: Summary::over(&times, 1),
+            balance: Summary::over(&balances, 1),
+            mean_packages: packages / (reps - 1) as f64,
+        }
+    }
+
+    /// Standalone whole-problem time of each configured device (used for
+    /// the paper's `S_max`); device order follows `self.devices`.
+    pub fn standalone_times(&self, reps: usize) -> Vec<f64> {
+        self.devices
+            .iter()
+            .map(|d| {
+                let solo = self
+                    .clone()
+                    .with_devices(vec![d.clone()])
+                    .with_scheduler(SchedulerKind::Static);
+                solo.run_reps(reps).time.mean
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchsuite::BenchId;
+
+    fn small(id: BenchId) -> Engine {
+        let b = Bench::new(id);
+        let gws = b.default_gws / 16;
+        Engine::new(b).with_gws(gws)
+    }
+
+    #[test]
+    fn builder_roundtrip() {
+        let e = small(BenchId::Gaussian)
+            .with_mode(ExecMode::Binary)
+            .with_optimizations(Optimizations::NONE);
+        let r = e.run(1);
+        assert!(r.time > 0.0);
+        assert!(r.outcome.total_time >= r.outcome.roi_time);
+        assert_eq!(r.time, r.outcome.total_time, "binary mode reports total");
+    }
+
+    #[test]
+    fn reps_protocol_discards_warmup() {
+        let rep = small(BenchId::Binomial).run_reps(5);
+        assert_eq!(rep.time.n, 4);
+        assert!(rep.time.mean > 0.0);
+        assert!(rep.balance.mean > 0.0 && rep.balance.mean <= 1.0);
+    }
+
+    #[test]
+    fn gpu_only_is_single_device() {
+        let r = small(BenchId::Ray1).gpu_only().run(1);
+        assert_eq!(r.outcome.devices.len(), 1);
+        assert_eq!(r.balance, 1.0);
+    }
+
+    #[test]
+    fn standalone_times_ordered_by_power() {
+        let times = small(BenchId::Gaussian).standalone_times(3);
+        assert_eq!(times.len(), 3);
+        assert!(times[0] > times[1], "CPU slower than iGPU");
+        assert!(times[1] > times[2], "iGPU slower than GPU");
+    }
+
+    #[test]
+    fn hguided_beats_gpu_only_in_roi() {
+        let e = small(BenchId::Mandelbrot);
+        let co = e.run_reps(4).time.mean;
+        let solo = e.clone().gpu_only().run_reps(4).time.mean;
+        assert!(co < solo, "coexec {co} !< solo {solo}");
+    }
+}

@@ -1,0 +1,46 @@
+//! enginecl-rs — reproduction of *Towards Co-execution on Commodity
+//! Heterogeneous Systems: Optimizations for Time-Constrained Scenarios*
+//! (Nozal, Bosque, Beivide — HPCS 2019).
+//!
+//! The crate is the **Layer-3 rust coordinator** of a three-layer stack:
+//!
+//! * L1: Pallas kernels (`python/compile/kernels/`) — the five paper
+//!   benchmarks, lowered AOT to HLO text.
+//! * L2: jax tile wrappers (`python/compile/model.py`).
+//! * L3: this crate — an EngineCL-style co-execution engine: device
+//!   threads, pluggable load-balancing schedulers (Static / Dynamic /
+//!   HGuided), a commodity-OpenCL-driver overhead model, buffer
+//!   management, and the paper's *initialization* and *buffer*
+//!   optimizations.
+//!
+//! Two execution backends implement the same [`engine`] semantics:
+//!
+//! * [`sim`] — a deterministic virtual-clock backend that co-executes the
+//!   three paper devices (CPU / iGPU / GPU) on one host core; used by every
+//!   figure-regeneration bench (Figs 3–6).
+//! * [`runtime`] + the threaded PJRT backend in [`engine::pjrt`] — really
+//!   executes the AOT HLO kernels through the `xla` crate's PJRT CPU
+//!   client, one client per device thread (mirroring per-device OpenCL
+//!   contexts); used by the examples and integration tests.
+//!
+//! Start at [`engine::Engine`] (the Tier-1 API in the paper's terms) or
+//! run `cargo run --release -- fig3`.
+
+pub mod benchsuite;
+pub mod cldriver;
+pub mod cliargs;
+pub mod config;
+pub mod engine;
+pub mod jsonio;
+pub mod metrics;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod stats;
+pub mod types;
+
+pub use engine::{Engine, RunReport};
+pub use types::{DeviceClass, DeviceId, GroupRange, Package};
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

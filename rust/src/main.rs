@@ -1,0 +1,428 @@
+//! enginecl — CLI launcher for the co-execution reproduction.
+//!
+//! Subcommands map 1:1 onto the paper's artifacts:
+//! `table1`, `fig3`, `fig4`, `fig5 <bench>`, `fig6 <bench>`, plus `run`
+//! (one configured experiment), `devices` (testbed description) and
+//! `coexec` (real PJRT execution of the AOT kernels).
+//!
+//! Argument parsing is hand-rolled ([`cliargs`]) — no clap in this offline
+//! environment (DESIGN.md §Substitutions).
+
+use anyhow::{bail, Result};
+use enginecl::benchsuite::{data::Problem, Bench, BenchId};
+use enginecl::cliargs::Args;
+use enginecl::config::{parse_bench, parse_scheduler_str, RunConfig};
+use enginecl::engine::experiments::{self, write_csv, OptLevel};
+use enginecl::engine::pjrt::{run_coexec, PjrtRunConfig};
+use enginecl::runtime::ArtifactDir;
+use enginecl::sim::coexec::testbed_devices;
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+enginecl — EngineCL co-execution reproduction (Nozal et al., HPCS 2019)
+
+USAGE:
+  enginecl table1
+  enginecl fig3   [--reps N] [--csv PATH]
+  enginecl fig4   [--reps N] [--csv PATH]
+  enginecl fig5   <bench|all> [--reps N] [--csv PATH]
+  enginecl fig6   <bench|all> [--reps N] [--csv PATH]
+  enginecl run    [--config FILE.json] [--bench B] [--sched S] [--reps N]
+                  [--gws N] [--mode roi|binary] [--no-init-opt] [--no-buffer-opt]
+  enginecl devices
+  enginecl coexec [--bench B] [--tiles N] [--verify N]
+  enginecl energy [--reps N]          # §VII extension: energy-to-solution
+  enginecl iterative [--bench B] [--iters K] [--reps N]
+  enginecl failure [--bench B] [--at SECONDS]
+
+benches: gaussian binomial nbody ray ray2 mandelbrot
+scheds:  static static-rev dynamic:N hguided hguided-opt
+";
+
+fn main() -> Result<()> {
+    let mut args = Args::parse(std::env::args().skip(1));
+    let Some(cmd) = args.positional.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    args.positional.remove(0);
+    match cmd.as_str() {
+        "table1" => table1(),
+        "fig3" => fig3(args.reps(50)?, args.csv()?),
+        "fig4" => fig4(args.reps(50)?, args.csv()?),
+        "fig5" => fig5(&args.positional_or("bench", 0, "all")?, args.reps(12)?, args.csv()?),
+        "fig6" => fig6(&args.positional_or("bench", 0, "all")?, args.reps(8)?, args.csv()?),
+        "run" => run(args),
+        "devices" => devices(),
+        "coexec" => coexec(args),
+        "energy" => energy(args),
+        "iterative" => iterative(args),
+        "failure" => failure(args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn table1() -> Result<()> {
+    println!("TABLE I — BENCHMARKS AND THEIR VARIETY OF PROPERTIES");
+    let cols: Vec<Bench> = BenchId::ALL.iter().map(|&id| Bench::new(id)).collect();
+    let mut header = format!("{:<22}", "Property");
+    for b in &cols {
+        header.push_str(&format!("{:>11}", b.props.name));
+    }
+    println!("{header}");
+    let row = |name: &str, f: &dyn Fn(&Bench) -> String| {
+        let mut line = format!("{name:<22}");
+        for b in &cols {
+            line.push_str(&format!("{:>11}", f(b)));
+        }
+        println!("{line}");
+    };
+    row("Local Work Size", &|b| b.props.lws.to_string());
+    row("Read:Write buffers", &|b| {
+        format!("{}:{}", b.props.read_buffers, b.props.write_buffers)
+    });
+    row("Out pattern", &|b| format!("{}:{}", b.props.out_pattern.0, b.props.out_pattern.1));
+    row("Kernel args", &|b| b.props.kernel_args.to_string());
+    row("Use local memory", &|b| if b.props.local_mem { "yes" } else { "no" }.into());
+    row("Use custom types", &|b| if b.props.custom_types { "yes" } else { "no" }.into());
+    row("Size", &|b| b.props.size_label.into());
+    row("Other params", &|b| b.props.other_params.into());
+    row("gws (items)", &|b| b.default_gws.to_string());
+    row("peak/mean cost", &|b| format!("{:.2}", b.profile.peak_to_mean()));
+    Ok(())
+}
+
+fn fig3(reps: usize, csv: Option<PathBuf>) -> Result<()> {
+    println!("FIG 3 — SPEEDUP AND EFFICIENCY vs SINGLE GPU ({reps} reps)");
+    let rows = experiments::fig3(reps);
+    let means = experiments::fig3_geomeans(&rows);
+    println!("{:<14}{:>12}{:>10}{:>10}{:>10}", "bench", "sched", "speedup", "S_max", "eff");
+    for r in &rows {
+        println!(
+            "{:<14}{:>12}{:>10.3}{:>10.3}{:>10.3}",
+            r.bench, r.scheduler, r.speedup, r.max_speedup, r.efficiency
+        );
+    }
+    println!("-- geomeans --");
+    for r in &means {
+        println!(
+            "{:<14}{:>12}{:>10.3}{:>10}{:>10.3}",
+            r.bench, r.scheduler, r.speedup, "", r.efficiency
+        );
+    }
+    if let Some(p) = csv {
+        let mut all = rows;
+        all.extend(means);
+        write_csv(&p, &all)?;
+        println!("wrote {}", p.display());
+    }
+    Ok(())
+}
+
+fn fig4(reps: usize, csv: Option<PathBuf>) -> Result<()> {
+    println!("FIG 4 — BALANCE PER SCHEDULER ({reps} reps)");
+    let rows = experiments::fig4(reps);
+    println!("{:<14}{:>12}{:>10}", "bench", "sched", "balance");
+    for r in &rows {
+        println!("{:<14}{:>12}{:>10.3}", r.bench, r.scheduler, r.balance);
+    }
+    if let Some(p) = csv {
+        write_csv(&p, &rows)?;
+        println!("wrote {}", p.display());
+    }
+    Ok(())
+}
+
+fn bench_list(arg: &str) -> Result<Vec<BenchId>> {
+    if arg == "all" {
+        Ok(BenchId::ALL.to_vec())
+    } else {
+        Ok(vec![parse_bench(arg)?])
+    }
+}
+
+fn fig5(bench: &str, reps: usize, csv: Option<PathBuf>) -> Result<()> {
+    let mut all = Vec::new();
+    for id in bench_list(bench)? {
+        println!("FIG 5 — HGUIDED (m, k) SWEEP: {} ({reps} reps)", id.label());
+        let rows = experiments::fig5(id, reps);
+        println!("{:<12}{:<16}{:<20}{:>12}", "bench", "m(c,i,g)", "k(c,i,g)", "time(s)");
+        for r in &rows {
+            println!(
+                "{:<12}{:<16}{:<20}{:>12.4}",
+                r.bench,
+                format!("{:?}", r.m),
+                format!("{:?}", r.k),
+                r.mean_time_s
+            );
+        }
+        let best = experiments::fig5_best(&rows);
+        println!("best: m={:?} k={:?} -> {:.4}s\n", best.m, best.k, best.mean_time_s);
+        all.extend(rows);
+    }
+    if let Some(p) = csv {
+        write_csv(&p, &all)?;
+        println!("wrote {}", p.display());
+    }
+    Ok(())
+}
+
+fn fig6(bench: &str, reps: usize, csv: Option<PathBuf>) -> Result<()> {
+    let mut all = Vec::new();
+    for id in bench_list(bench)? {
+        println!("FIG 6 — TIME vs PROBLEM SIZE: {} ({reps} reps)", id.label());
+        let rows = experiments::fig6(id, reps);
+        println!(
+            "{:<12}{:>12}{:>8}{:>15}{:>12}{:>12}",
+            "bench", "gws", "mode", "opts", "single(s)", "coexec(s)"
+        );
+        for r in &rows {
+            println!(
+                "{:<12}{:>12}{:>8}{:>15}{:>12.4}{:>12.4}",
+                r.bench, r.gws, r.mode, r.opts, r.single_gpu_s, r.coexec_s
+            );
+        }
+        let infl = experiments::inflections(&rows);
+        println!("-- inflection points --");
+        for i in &infl {
+            match (i.gws, i.time_s) {
+                (Some(g), Some(t)) => println!(
+                    "{:<12}{:>8}{:>15}  gws*={:>12.0}  t*={:.4}s",
+                    i.bench, i.mode, i.opts, g, t
+                ),
+                _ => println!("{:<12}{:>8}{:>15}  (never crosses)", i.bench, i.mode, i.opts),
+            }
+        }
+        let init_gain =
+            experiments::inflection_improvement(&infl, OptLevel::None, OptLevel::Init);
+        let buf_gain =
+            experiments::inflection_improvement(&infl, OptLevel::Init, OptLevel::All);
+        println!(
+            "inflection improvement: init {:.1}% (paper 7.5%), buffers {:.1}% (paper 17.4%)\n",
+            init_gain * 100.0,
+            buf_gain * 100.0
+        );
+        all.extend(rows);
+    }
+    if let Some(p) = csv {
+        write_csv(&p, &all)?;
+        println!("wrote {}", p.display());
+    }
+    Ok(())
+}
+
+fn run(args: Args) -> Result<()> {
+    let cfg = match args.flag("config") {
+        Some(p) => RunConfig::from_json_file(std::path::Path::new(p))?,
+        None => {
+            let bench = args.flag("bench").unwrap_or("mandelbrot");
+            let mut c = RunConfig::for_bench(parse_bench(bench)?);
+            c.reps = args.reps(50)?;
+            if let Some(s) = args.flag("sched") {
+                c.scheduler = parse_scheduler_str(s)?;
+            }
+            if let Some(g) = args.flag("gws") {
+                c.gws = Some(g.parse()?);
+            }
+            if let Some(m) = args.flag("mode") {
+                c.mode = m.into();
+            }
+            if args.switch("no-init-opt") {
+                c.init_overlap = false;
+            }
+            if args.switch("no-buffer-opt") {
+                c.buffer_flags = false;
+            }
+            c
+        }
+    };
+    let engine = cfg.build_engine()?;
+    let rep = engine.run_reps(cfg.reps);
+    println!(
+        "bench={} sched={} mode={} reps={}",
+        cfg.bench,
+        cfg.scheduler.label(),
+        cfg.mode,
+        cfg.reps
+    );
+    println!(
+        "time  mean={:.4}s ±{:.4} (min {:.4}, max {:.4})",
+        rep.time.mean,
+        rep.time.ci95(),
+        rep.time.min,
+        rep.time.max
+    );
+    println!("balance mean={:.3}  packages/run={:.1}", rep.balance.mean, rep.mean_packages);
+    let standalone = engine.standalone_times(cfg.reps.min(8));
+    let smax = enginecl::metrics::max_speedup(&standalone);
+    let s = enginecl::metrics::speedup(standalone[standalone.len() - 1], rep.time.mean);
+    println!("speedup vs fastest={:.3}  S_max={:.3}  efficiency={:.3}", s, smax, s / smax);
+    Ok(())
+}
+
+fn devices() -> Result<()> {
+    println!("MODELLED TESTBED (paper: AMD A10-7850K APU + GTX 950)");
+    for id in BenchId::ALL {
+        let b = Bench::new(id);
+        println!("{:<12}", b.props.name);
+        for d in testbed_devices(&b) {
+            println!(
+                "  {:<6} P={:<5.2} throughput={:.3e} items/s",
+                d.class.label(),
+                d.power,
+                d.power * b.gpu_units_per_sec
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Energy-to-solution per scheduler (paper §VII future work).
+fn energy(args: Args) -> Result<()> {
+    use enginecl::engine::Engine;
+    let reps = args.reps(20)?;
+    println!("ENERGY-TO-SOLUTION (ROI window, {reps} reps) — §VII extension");
+    println!(
+        "{:<12}{:>14}{:>14}{:>10}{:>12}",
+        "bench", "single(J)", "hguided(J)", "ratio", "speedup"
+    );
+    for id in BenchId::ALL {
+        let bench = Bench::new(id);
+        let co = Engine::new(bench.clone());
+        let solo = co.clone().gpu_only();
+        let mut co_e = 0.0;
+        let mut solo_e = 0.0;
+        let mut co_t = 0.0;
+        let mut solo_t = 0.0;
+        for rep in 1..=reps as u64 {
+            co_e += co.run_energy(rep);
+            solo_e += solo.run_energy(rep);
+            co_t += co.run(rep).time;
+            solo_t += solo.run(rep).time;
+        }
+        println!(
+            "{:<12}{:>14.1}{:>14.1}{:>10.3}{:>12.3}",
+            id.label(),
+            solo_e / reps as f64,
+            co_e / reps as f64,
+            solo_e / co_e,
+            solo_t / co_t
+        );
+    }
+    println!(
+        "ratio > 1: co-execution saves energy — it does whenever the speedup \
+         outweighs the extra active draw (Gaussian/Mandelbrot), and loses \
+         when the speedup is small (Binomial/NBody): energy tracks speedup."
+    );
+    Ok(())
+}
+
+/// Iterative ROI mode (paper §VII future work).
+fn iterative(args: Args) -> Result<()> {
+    use enginecl::engine::Engine;
+    use enginecl::types::ExecMode;
+    let id = parse_bench(args.flag("bench").unwrap_or("gaussian"))?;
+    let iters: u32 = args.flag("iters").unwrap_or("16").parse()?;
+    let reps = args.reps(8)?;
+    let bench = Bench::new(id);
+    let engine = Engine::new(bench.clone());
+    println!("ITERATIVE ROI MODE: {} x{} iterations ({reps} reps)", id.label(), iters);
+    let mut total = 0.0;
+    let mut first = 0.0;
+    let mut mid = 0.0;
+    for rep in 1..=reps as u64 {
+        let out = engine.run_iterative(iters, rep);
+        total += out.total_time;
+        first += out.iter_times[0];
+        mid += out.iter_times[iters as usize / 2];
+    }
+    let n = reps as f64;
+    // Re-launching the program per iteration = `iters` binary executions.
+    let single_bin = Engine::new(bench).with_mode(ExecMode::Binary).run_reps(reps);
+    println!("first iteration : {:.4}s (pays input upload)", first / n);
+    println!("middle iteration: {:.4}s (device-resident buffers)", mid / n);
+    println!("total {iters} iters : {:.4}s (one init/release, resident data)", total / n);
+    println!(
+        "vs {iters} independent program launches: {:.4}s  (saving {:.1}%)",
+        iters as f64 * single_bin.time.mean,
+        (1.0 - (total / n) / (iters as f64 * single_bin.time.mean)) * 100.0
+    );
+    Ok(())
+}
+
+/// Device-failure injection demo (EngineCL robustness).
+fn failure(args: Args) -> Result<()> {
+    use enginecl::sim::{simulate, SimConfig};
+    let id = parse_bench(args.flag("bench").unwrap_or("gaussian"))?;
+    let at: f64 = args.flag("at").unwrap_or("0.4").parse()?;
+    let bench = Bench::new(id);
+    let kind = enginecl::scheduler::SchedulerKind::HGuided {
+        params: enginecl::scheduler::HGuidedParams::optimized_paper(),
+    };
+    println!("FAILURE INJECTION: {} — kill each device at t={at}s", id.label());
+    let healthy = simulate(&bench, &SimConfig::testbed(&bench, kind.clone()));
+    println!("healthy run: roi {:.3}s", healthy.roi_time);
+    for dev in 0..3 {
+        let mut cfg = SimConfig::testbed(&bench, kind.clone());
+        cfg.fail = Some((dev, at));
+        let out = simulate(&bench, &cfg);
+        let total: u64 = out.devices.iter().map(|d| d.groups).sum();
+        println!(
+            "kill {:<5} -> roi {:.3}s (+{:.1}%), work conserved: {} groups, survivors pick up {}",
+            ["CPU", "iGPU", "GPU"][dev],
+            out.roi_time,
+            (out.roi_time / healthy.roi_time - 1.0) * 100.0,
+            total,
+            if out.devices[dev].failed { "YES" } else { "n/a (device already done)" },
+        );
+    }
+    Ok(())
+}
+
+fn coexec(args: Args) -> Result<()> {
+    let id = parse_bench(args.flag("bench").unwrap_or("mandelbrot"))?;
+    let tiles: u64 = args.flag("tiles").unwrap_or("32").parse()?;
+    let verify: u64 = args.flag("verify").unwrap_or("16").parse()?;
+    let artifacts = ArtifactDir::open(ArtifactDir::default_path())?;
+    let entry = artifacts.manifest.entry(id.artifact_name())?;
+    let problem = Problem::new(id, tiles, entry, 42)?;
+    let mut cfg = PjrtRunConfig::testbed();
+    cfg.verify_samples = verify;
+    println!(
+        "real PJRT co-execution: {} tiles={} gws={} sched={}",
+        id.label(),
+        tiles,
+        problem.gws,
+        cfg.scheduler.label()
+    );
+    let report = run_coexec(id, &problem, &artifacts, &cfg)?;
+    println!(
+        "init {:.3}s  roi {:.3}s  balance {:.3}",
+        report.init_s,
+        report.roi_s,
+        report.balance()
+    );
+    for d in &report.devices {
+        println!(
+            "  {:<6} P={:<5.2} packages={:<4} tiles={:<5} busy={:.3}s finish={:.3}s verify_fail={} checksum={:.3e}",
+            d.label, d.power, d.packages, d.tiles, d.busy_s, d.finish_s, d.verify_failures, d.checksum
+        );
+    }
+    if report.verify_failures == 0 {
+        println!("verification OK ({verify} samples/tile)");
+    } else {
+        println!("VERIFICATION FAILURES: {}", report.verify_failures);
+    }
+    // GPU-only reference for speedup
+    let solo = run_coexec(id, &problem, &artifacts, &PjrtRunConfig::gpu_only())?;
+    println!(
+        "gpu-only roi {:.3}s -> speedup {:.3}",
+        solo.roi_s,
+        solo.roi_s / report.roi_s
+    );
+    Ok(())
+}

@@ -1,0 +1,243 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.  The manifest records, per benchmark, the HLO file, tile
+//! geometry, input/output array specs and the constants baked at AOT time.
+
+use crate::jsonio::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One input/output array spec as recorded by aot.py.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArraySpec {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl ArraySpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("array spec missing 'shape'"))?
+            .iter()
+            .map(|d| d.as_u64().map(|d| d as usize))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| anyhow!("non-integer dimension in shape"))?;
+        let dtype = v
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("array spec missing 'dtype'"))?
+            .to_string();
+        if dtype != "f32" && dtype != "i32" {
+            bail!("unsupported dtype '{dtype}'");
+        }
+        Ok(Self { shape, dtype })
+    }
+}
+
+/// One benchmark's artifact entry.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub tile_items: u64,
+    pub lws: u32,
+    pub inputs: Vec<ArraySpec>,
+    pub outputs: Vec<ArraySpec>,
+    pub constants: BTreeMap<String, Json>,
+    pub sha256: String,
+}
+
+impl ManifestEntry {
+    fn from_json(v: &Json) -> Result<Self> {
+        let str_field = |k: &str| -> Result<String> {
+            v.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("manifest entry missing '{k}'"))
+        };
+        let specs = |k: &str| -> Result<Vec<ArraySpec>> {
+            v.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("manifest entry missing '{k}'"))?
+                .iter()
+                .map(ArraySpec::from_json)
+                .collect()
+        };
+        Ok(Self {
+            name: str_field("name")?,
+            file: str_field("file")?,
+            tile_items: v
+                .get("tile_items")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("missing tile_items"))?,
+            lws: v.get("lws").and_then(Json::as_u64).unwrap_or(0) as u32,
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            constants: v
+                .get("constants")
+                .and_then(Json::as_obj)
+                .cloned()
+                .unwrap_or_default(),
+            sha256: str_field("sha256").unwrap_or_default(),
+        })
+    }
+
+    /// Baked integer constant (panics if absent — manifest contract).
+    pub fn const_u64(&self, key: &str) -> u64 {
+        self.constants
+            .get(key)
+            .and_then(Json::as_u64)
+            .unwrap_or_else(|| panic!("artifact '{}' missing constant '{key}'", self.name))
+    }
+
+    /// Baked float constant.
+    pub fn const_f64(&self, key: &str) -> f64 {
+        self.constants
+            .get(key)
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("artifact '{}' missing constant '{key}'", self.name))
+    }
+}
+
+/// artifacts/manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: u32,
+    pub benches: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text).context("parsing manifest JSON")?;
+        let format = v
+            .get("format")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("manifest missing 'format'"))? as u32;
+        if format != 1 {
+            bail!("unsupported manifest format {format}");
+        }
+        let benches = v
+            .get("benches")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'benches'"))?
+            .iter()
+            .map(ManifestEntry::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { format, benches })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ManifestEntry> {
+        self.benches
+            .iter()
+            .find(|b| b.name == name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+}
+
+/// A directory of AOT artifacts (default: `artifacts/`).
+#[derive(Debug, Clone)]
+pub struct ArtifactDir {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl ArtifactDir {
+    /// Open and validate `dir/manifest.json`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let manifest = Manifest::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        Ok(Self { dir, manifest })
+    }
+
+    /// Default location relative to the repo root, overridable via
+    /// `ENGINECL_ARTIFACTS`.
+    pub fn default_path() -> PathBuf {
+        std::env::var_os("ENGINECL_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn hlo_path(&self, entry: &ManifestEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// True if every HLO file listed by the manifest exists.
+    pub fn is_complete(&self) -> bool {
+        self.manifest.benches.iter().all(|b| self.hlo_path(b).exists())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> &'static str {
+        r#"{
+          "format": 1,
+          "benches": [{
+            "name": "mandelbrot", "file": "mandelbrot.hlo.txt",
+            "tile_items": 2048, "lws": 256,
+            "inputs": [{"shape": [2048], "dtype": "f32"},
+                       {"shape": [2048], "dtype": "f32"}],
+            "outputs": [{"shape": [2048], "dtype": "i32"}],
+            "constants": {"max_iter": 200, "dt": 0.001},
+            "sha256": "x"
+          }]
+        }"#
+    }
+
+    #[test]
+    fn parses_manifest_json() {
+        let m = Manifest::parse(sample_manifest()).unwrap();
+        assert_eq!(m.format, 1);
+        let e = m.entry("mandelbrot").unwrap();
+        assert_eq!(e.tile_items, 2048);
+        assert_eq!(e.lws, 256);
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.outputs[0].dtype, "i32");
+        assert_eq!(e.const_u64("max_iter"), 200);
+        assert!((e.const_f64("dt") - 0.001).abs() < 1e-12);
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_format_or_dtype() {
+        assert!(Manifest::parse(r#"{"format": 2, "benches": []}"#).is_err());
+        let bad = sample_manifest().replace("\"i32\"", "\"f64\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn array_spec_elements() {
+        let s = ArraySpec { shape: vec![12, 516], dtype: "f32".into() };
+        assert_eq!(s.elements(), 12 * 516);
+    }
+
+    #[test]
+    fn open_missing_dir_errors() {
+        assert!(ArtifactDir::open("/nonexistent/zzz").is_err());
+    }
+
+    #[test]
+    fn open_real_artifacts_if_present() {
+        // When `make artifacts` has run, validate the real manifest.
+        let dir = ArtifactDir::default_path();
+        if dir.join("manifest.json").exists() {
+            let a = ArtifactDir::open(&dir).unwrap();
+            assert!(a.is_complete(), "manifest lists missing HLO files");
+            assert_eq!(a.manifest.benches.len(), 5);
+            for name in ["gaussian", "binomial", "nbody", "ray", "mandelbrot"] {
+                assert!(a.manifest.entry(name).is_ok(), "missing {name}");
+            }
+        }
+    }
+}

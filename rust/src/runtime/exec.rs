@@ -1,0 +1,184 @@
+//! Tile execution on the PJRT CPU client.
+//!
+//! [`TileRunner`] compiles one artifact once (the *initialization* stage of
+//! the paper; under the init optimization every device thread compiles
+//! concurrently) and then executes tiles from the request path with no
+//! Python anywhere.  [`HostArray`] is the typed host-side buffer handed in
+//! and out — the L3 analogue of an OpenCL buffer slice.
+
+use super::artifact::{ArtifactDir, ManifestEntry};
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Typed host buffer (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostArray {
+    pub dims: Vec<usize>,
+    pub data: HostData,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostArray {
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Self { dims, data: HostData::F32(data) }
+    }
+
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Self { dims, data: HostData::I32(data) }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            HostData::F32(v) => v.len(),
+            HostData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow as f32 slice; panics on dtype mismatch (programming error).
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            HostData::F32(v) => v,
+            HostData::I32(_) => panic!("HostArray dtype mismatch: wanted f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            HostData::I32(v) => v,
+            HostData::F32(_) => panic!("HostArray dtype mismatch: wanted i32"),
+        }
+    }
+
+    /// Encode as an `xla::Literal` (the PJRT host-buffer upload step).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            HostData::F32(v) => xla::Literal::vec1(v),
+            HostData::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.primitive_type() {
+            xla::PrimitiveType::F32 => Ok(Self { dims, data: HostData::F32(lit.to_vec()?) }),
+            xla::PrimitiveType::S32 => Ok(Self { dims, data: HostData::I32(lit.to_vec()?) }),
+            ty => bail!("unsupported artifact output type {ty:?}"),
+        }
+    }
+}
+
+/// One compiled artifact on a thread-local PJRT CPU client.
+///
+/// NOT `Send` (PJRT handles are raw pointers): construct inside the device
+/// thread, as EngineCL constructs per-device OpenCL state inside each
+/// Device thread.
+pub struct TileRunner {
+    pub entry: ManifestEntry,
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative executions, for the report/metrics.
+    pub tiles_run: u64,
+}
+
+impl TileRunner {
+    /// Load + compile `entry` on a fresh CPU client.
+    pub fn load(dir: &ArtifactDir, name: &str) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Self::load_on(client, dir, name)
+    }
+
+    /// Load + compile on an existing client (lets one thread host several
+    /// artifacts, like one OpenCL context holding several programs).
+    pub fn load_on(client: xla::PjRtClient, dir: &ArtifactDir, name: &str) -> Result<Self> {
+        let entry = dir.manifest.entry(name)?.clone();
+        let path = dir.hlo_path(&entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling artifact '{name}': {e}"))?;
+        Ok(Self { entry, exe, tiles_run: 0 })
+    }
+
+    /// Execute one tile: inputs must match the manifest specs in order.
+    /// Returns the un-tupled outputs.
+    pub fn run(&mut self, inputs: &[HostArray]) -> Result<Vec<HostArray>> {
+        if inputs.len() != self.entry.inputs.len() {
+            bail!(
+                "artifact '{}' expects {} inputs, got {}",
+                self.entry.name,
+                self.entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// Execute with pre-encoded literals (lets callers reuse loop-invariant
+    /// uploads — the *buffers* optimization on the real path).
+    pub fn run_refs(&mut self, inputs: &[&xla::Literal]) -> Result<Vec<HostArray>> {
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing '{}': {e}", self.entry.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple root.
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untupling result: {e}"))?;
+        self.tiles_run += 1;
+        parts
+            .iter()
+            .map(HostArray::from_literal)
+            .collect::<Result<Vec<_>>>()
+            .context("decoding artifact outputs")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_array_roundtrip_f32() {
+        let a = HostArray::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = a.to_literal().unwrap();
+        let b = HostArray::from_literal(&lit).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn host_array_roundtrip_i32() {
+        let a = HostArray::i32(vec![4], vec![-1, 0, 7, 42]);
+        let lit = a.to_literal().unwrap();
+        let b = HostArray::from_literal(&lit).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "dtype mismatch")]
+    fn dtype_mismatch_panics() {
+        HostArray::i32(vec![1], vec![1]).as_f32();
+    }
+
+    // Real artifact execution lives in tests/pjrt_roundtrip.rs (needs
+    // `make artifacts`); unit scope here is the literal plumbing only.
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format — the bundled xla_extension 0.5.1
+//! rejects jax ≥ 0.5 serialized protos (64-bit instruction ids), while the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! `xla` handles are not `Send`: each PJRT device thread owns its own
+//! [`TileRunner`] (client + compiled executables), exactly as each
+//! EngineCL device thread owns its OpenCL context/queue.
+
+pub mod artifact;
+pub mod exec;
+
+pub use artifact::{ArtifactDir, Manifest, ManifestEntry};
+pub use exec::{HostArray, HostData, TileRunner};

@@ -1,0 +1,114 @@
+//! Dynamic scheduler: the global index space is cut into `n_chunks` equal
+//! packages and idle devices pull them FIFO (paper §II-B).  Adaptive but
+//! power-blind — the paper's Fig. 3 shows it losing to Static on regular
+//! kernels (synchronization overhead) and winning on irregular ones.
+
+use super::{SchedCtx, Scheduler};
+use crate::types::{DeviceId, GroupRange};
+
+pub struct Dynamic {
+    total: u64,
+    chunk: u64,
+    cursor: u64,
+    n_devices: usize,
+    n_chunks: u64,
+}
+
+impl Dynamic {
+    pub fn new(ctx: &SchedCtx, n_chunks: u64) -> Self {
+        assert!(n_chunks > 0, "Dynamic needs at least one chunk");
+        let chunk = ctx.total_groups.div_ceil(n_chunks).max(1);
+        Self {
+            total: ctx.total_groups,
+            chunk,
+            cursor: 0,
+            n_devices: ctx.n_devices(),
+            n_chunks,
+        }
+    }
+
+    /// Remaining work-groups (the paper's `G_r`).
+    pub fn pending(&self) -> u64 {
+        self.total - self.cursor
+    }
+}
+
+impl Scheduler for Dynamic {
+    fn next(&mut self, _dev: DeviceId) -> Option<GroupRange> {
+        if self.cursor >= self.total {
+            return None;
+        }
+        let begin = self.cursor;
+        let end = (begin + self.chunk).min(self.total);
+        self.cursor = end;
+        Some(GroupRange::new(begin, end))
+    }
+
+    fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+
+    fn label(&self) -> String {
+        format!("Dyn {}", self.n_chunks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_chunks_except_tail() {
+        let ctx = SchedCtx::new(1000, vec![1.0, 1.0]);
+        let mut d = Dynamic::new(&ctx, 64);
+        let mut sizes = Vec::new();
+        while let Some(g) = d.next(0) {
+            sizes.push(g.len());
+        }
+        assert_eq!(sizes.iter().sum::<u64>(), 1000);
+        // ceil(1000/64) = 16 -> 62 chunks of 16 + tail 8
+        assert!(sizes[..sizes.len() - 1].iter().all(|&s| s == 16));
+        assert_eq!(*sizes.last().unwrap(), 8);
+    }
+
+    #[test]
+    fn chunk_count_close_to_requested() {
+        let ctx = SchedCtx::new(10_000, vec![1.0, 1.0, 1.0]);
+        let mut d = Dynamic::new(&ctx, 128);
+        let mut n = 0;
+        while d.next(2).is_some() {
+            n += 1;
+        }
+        assert!(n <= 128 && n >= 126, "{n} chunks");
+    }
+
+    #[test]
+    fn device_agnostic_fifo() {
+        let ctx = SchedCtx::new(100, vec![1.0, 1.0]);
+        let mut d = Dynamic::new(&ctx, 10);
+        let a = d.next(0).unwrap();
+        let b = d.next(1).unwrap();
+        assert_eq!(a.end, b.begin, "contiguous FIFO handout");
+    }
+
+    #[test]
+    fn more_chunks_than_groups_degrades_to_singletons() {
+        let ctx = SchedCtx::new(5, vec![1.0]);
+        let mut d = Dynamic::new(&ctx, 512);
+        let mut n = 0;
+        while let Some(g) = d.next(0) {
+            assert_eq!(g.len(), 1);
+            n += 1;
+        }
+        assert_eq!(n, 5);
+    }
+
+    #[test]
+    fn pending_tracks_cursor() {
+        let ctx = SchedCtx::new(100, vec![1.0]);
+        let mut d = Dynamic::new(&ctx, 10);
+        assert_eq!(d.pending(), 100);
+        d.next(0);
+        assert_eq!(d.pending(), 90);
+    }
+}

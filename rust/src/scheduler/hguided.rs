@@ -1,0 +1,210 @@
+//! HGuided scheduler (paper §II-B + §V-B): guided-style decay sized by
+//! per-device computing power, with per-device minimum package sizes.
+//!
+//! On each request from device `i`:
+//! ```text
+//! packet_size_i = max( m_i ,  ceil( G_r * P_i / (k_i * n * Σ_j P_j) ) )
+//! ```
+//! in work-groups, where `G_r` is the pending work-group count (updated on
+//! every launch), `k_i` the decay constant and `m_i` the minimum package
+//! size expressed as a multiplier of the local work size (1 group = 1 lws).
+//!
+//! The paper's tuning (§V-B, Fig. 5): larger minimum sizes and smaller k
+//! for more powerful devices; best combination m = {1, 15, 30},
+//! k = {3.5, 1.5, 1} for {CPU, iGPU, GPU}; best single k = 2.
+
+use super::{SchedCtx, Scheduler};
+use crate::types::{DeviceId, GroupRange};
+
+
+/// Per-device (m, k) pairs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HGuidedParams {
+    /// Minimum package size per device, in work-groups (multiplier of lws).
+    pub min_mult: Vec<u64>,
+    /// Decay constant per device; k ∈ [1, 4] per the paper ("neither too
+    /// large nor too small packages").
+    pub k: Vec<f64>,
+}
+
+impl HGuidedParams {
+    /// Uniform parameters for an n-device system.
+    pub fn uniform(n: usize, m: u64, k: f64) -> Self {
+        Self { min_mult: vec![m; n], k: vec![k; n] }
+    }
+
+    /// The pre-optimization default: m = 1, k = 2 for every device
+    /// (k = 2 is the paper's best single-k choice).
+    pub fn default_paper() -> Self {
+        Self::uniform(3, 1, 2.0)
+    }
+
+    /// The paper's tuned configuration for {CPU, iGPU, GPU}:
+    /// m = {1, 15, 30}, k = {3.5, 1.5, 1}.
+    pub fn optimized_paper() -> Self {
+        Self { min_mult: vec![1, 15, 30], k: vec![3.5, 1.5, 1.0] }
+    }
+
+    pub fn validate(&self, n_devices: usize) -> crate::Result<()> {
+        use anyhow::ensure;
+        ensure!(self.min_mult.len() == n_devices, "min_mult length mismatch");
+        ensure!(self.k.len() == n_devices, "k length mismatch");
+        ensure!(self.min_mult.iter().all(|&m| m >= 1), "m must be >= 1");
+        ensure!(self.k.iter().all(|&k| k > 0.0), "k must be positive");
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for HGuidedParams {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let m: Vec<String> = self.min_mult.iter().map(|m| m.to_string()).collect();
+        let k: Vec<String> = self.k.iter().map(|k| format!("{k}")).collect();
+        write!(f, "m{{{}}} k{{{}}}", m.join(","), k.join(","))
+    }
+}
+
+pub struct HGuided {
+    pending_begin: u64,
+    total: u64,
+    powers: Vec<f64>,
+    power_sum: f64,
+    params: HGuidedParams,
+}
+
+impl HGuided {
+    pub fn new(ctx: &SchedCtx, params: HGuidedParams) -> Self {
+        params
+            .validate(ctx.n_devices())
+            .expect("invalid HGuided parameters for this device count");
+        Self {
+            pending_begin: 0,
+            total: ctx.total_groups,
+            powers: ctx.powers.clone(),
+            power_sum: ctx.power_sum(),
+            params,
+        }
+    }
+
+    /// Pending work-groups `G_r`.
+    pub fn pending(&self) -> u64 {
+        self.total - self.pending_begin
+    }
+
+    /// The paper's packet size formula for device `dev` at the current
+    /// `G_r` (before clamping to the remaining work).
+    pub fn packet_size(&self, dev: DeviceId) -> u64 {
+        let gr = self.pending() as f64;
+        let n = self.powers.len() as f64;
+        let decayed =
+            (gr * self.powers[dev] / (self.params.k[dev] * n * self.power_sum)).ceil() as u64;
+        decayed.max(self.params.min_mult[dev]).max(1)
+    }
+}
+
+impl Scheduler for HGuided {
+    fn next(&mut self, dev: DeviceId) -> Option<GroupRange> {
+        if self.pending_begin >= self.total {
+            return None;
+        }
+        let size = self.packet_size(dev).min(self.pending());
+        let begin = self.pending_begin;
+        self.pending_begin += size;
+        Some(GroupRange::new(begin, begin + size))
+    }
+
+    fn n_devices(&self) -> usize {
+        self.powers.len()
+    }
+
+    fn label(&self) -> String {
+        format!("HGuided {}", self.params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> SchedCtx {
+        SchedCtx::new(10_000, vec![0.15, 0.4, 1.0])
+    }
+
+    #[test]
+    fn packet_sizes_decay_monotonically_per_device() {
+        let mut h = HGuided::new(&ctx(), HGuidedParams::default_paper());
+        let mut last = u64::MAX;
+        for _ in 0..50 {
+            match h.next(2) {
+                Some(g) => {
+                    assert!(g.len() <= last, "grew: {} > {last}", g.len());
+                    last = g.len();
+                }
+                None => break,
+            }
+        }
+    }
+
+    #[test]
+    fn first_packet_matches_formula() {
+        let h = HGuided::new(&ctx(), HGuidedParams::default_paper());
+        // ceil(10000 * 1.0 / (2 * 3 * 1.55)) = ceil(1075.27) = 1076
+        assert_eq!(h.packet_size(2), 1076);
+        // CPU: ceil(10000 * 0.15 / 9.3) = ceil(161.29) = 162
+        assert_eq!(h.packet_size(0), 162);
+    }
+
+    #[test]
+    fn min_package_floor_applies() {
+        let params = HGuidedParams::optimized_paper();
+        let ctx = SchedCtx::new(100, vec![0.15, 0.4, 1.0]);
+        let h = HGuided::new(&ctx, params);
+        // GPU decay term: ceil(100 / (1 * 3 * 1.55) * 1.0) = 22, but m=30.
+        assert_eq!(h.packet_size(2), 30);
+    }
+
+    #[test]
+    fn smaller_k_gives_larger_packets() {
+        let h1 = HGuided::new(&ctx(), HGuidedParams::uniform(3, 1, 1.0));
+        let h4 = HGuided::new(&ctx(), HGuidedParams::uniform(3, 1, 4.0));
+        assert!(h1.packet_size(2) > h4.packet_size(2));
+    }
+
+    #[test]
+    fn more_powerful_devices_get_bigger_packets() {
+        let h = HGuided::new(&ctx(), HGuidedParams::default_paper());
+        assert!(h.packet_size(2) > h.packet_size(1));
+        assert!(h.packet_size(1) > h.packet_size(0));
+    }
+
+    #[test]
+    fn last_packet_clamps_to_remaining() {
+        let ctx = SchedCtx::new(10, vec![1.0, 1.0, 1.0]);
+        let mut h = HGuided::new(&ctx, HGuidedParams::uniform(3, 8, 1.0));
+        let g1 = h.next(0).unwrap();
+        assert_eq!(g1.len(), 8); // min floor
+        let g2 = h.next(1).unwrap();
+        assert_eq!(g2.len(), 2, "clamped to remaining");
+        assert!(h.next(2).is_none());
+    }
+
+    #[test]
+    fn gr_updates_with_every_launch() {
+        let mut h = HGuided::new(&ctx(), HGuidedParams::default_paper());
+        let before = h.pending();
+        let g = h.next(2).unwrap();
+        assert_eq!(h.pending(), before - g.len());
+    }
+
+    #[test]
+    fn display_roundtrip_labels() {
+        let p = HGuidedParams::optimized_paper();
+        assert_eq!(format!("{p}"), "m{1,15,30} k{3.5,1.5,1}");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid HGuided parameters")]
+    fn wrong_arity_panics() {
+        let ctx = SchedCtx::new(10, vec![1.0, 1.0]);
+        HGuided::new(&ctx, HGuidedParams::optimized_paper()); // 3 params, 2 devs
+    }
+}

@@ -1,0 +1,191 @@
+//! Pluggable load-balancing schedulers (paper §II-B).
+//!
+//! All schedulers are *pull-based*: an idle device asks for its next
+//! package and receives a contiguous [`GroupRange`] (work-groups, the
+//! paper's granularity — `G_r` is the pending work-group count).  The same
+//! scheduler objects drive both the virtual-clock simulator and the
+//! threaded PJRT backend; in the latter they sit behind a mutex owned by
+//! the host thread, which is exactly the serialization the paper's
+//! "Runtime and Scheduler are CPU-managed" remark describes.
+
+pub mod dynamic;
+pub mod hguided;
+pub mod r#static;
+
+pub use dynamic::Dynamic;
+pub use hguided::{HGuided, HGuidedParams};
+pub use r#static::Static;
+
+use crate::types::{DeviceId, GroupRange};
+
+
+/// Immutable context a scheduler is built against.
+#[derive(Debug, Clone)]
+pub struct SchedCtx {
+    /// Total work-groups in the launch.
+    pub total_groups: u64,
+    /// Scheduler's computing-power estimates `P_i`, one per device.
+    pub powers: Vec<f64>,
+}
+
+impl SchedCtx {
+    pub fn new(total_groups: u64, powers: Vec<f64>) -> Self {
+        assert!(!powers.is_empty(), "scheduler needs at least one device");
+        assert!(powers.iter().all(|&p| p > 0.0), "powers must be positive");
+        Self { total_groups, powers }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.powers.len()
+    }
+
+    pub fn power_sum(&self) -> f64 {
+        self.powers.iter().sum()
+    }
+}
+
+/// A load-balancing strategy instance (one per run; stateful).
+pub trait Scheduler: Send {
+    /// Next package for an idle device; `None` = nothing left for it.
+    fn next(&mut self, dev: DeviceId) -> Option<GroupRange>;
+
+    /// Initial delivery order of devices (paper: Static hands the first
+    /// chunk to the CPU, Static-rev to the GPU).  Devices become idle in
+    /// this order at t=0.
+    fn delivery_order(&self) -> Vec<DeviceId> {
+        (0..self.n_devices()).collect()
+    }
+
+    fn n_devices(&self) -> usize;
+
+    /// Human-readable configuration label (figure legends).
+    fn label(&self) -> String;
+}
+
+/// Scheduler configuration — the seven bars of Fig. 3 plus free params.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SchedulerKind {
+    /// Power-proportional one-shot split, CPU-first delivery.
+    Static,
+    /// Same split, GPU-first delivery (paper "Static rev").
+    StaticRev,
+    /// Equal chunks, `n_chunks` total.
+    Dynamic { n_chunks: u64 },
+    /// HGuided with per-device (m, k) parameter pairs.
+    HGuided { params: HGuidedParams },
+}
+
+impl SchedulerKind {
+    /// The paper's seven Fig.-3 configurations, in bar order.
+    pub fn fig3_configs() -> Vec<SchedulerKind> {
+        vec![
+            SchedulerKind::Static,
+            SchedulerKind::StaticRev,
+            SchedulerKind::Dynamic { n_chunks: 64 },
+            SchedulerKind::Dynamic { n_chunks: 128 },
+            SchedulerKind::Dynamic { n_chunks: 512 },
+            SchedulerKind::HGuided { params: HGuidedParams::default_paper() },
+            SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() },
+        ]
+    }
+
+    /// Instantiate a fresh scheduler for one run.
+    pub fn build(&self, ctx: &SchedCtx) -> Box<dyn Scheduler> {
+        match self {
+            SchedulerKind::Static => Box::new(Static::new(ctx, false)),
+            SchedulerKind::StaticRev => Box::new(Static::new(ctx, true)),
+            SchedulerKind::Dynamic { n_chunks } => Box::new(Dynamic::new(ctx, *n_chunks)),
+            SchedulerKind::HGuided { params } => Box::new(HGuided::new(ctx, params.clone())),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            SchedulerKind::Static => "Static".into(),
+            SchedulerKind::StaticRev => "Static rev".into(),
+            SchedulerKind::Dynamic { n_chunks } => format!("Dyn {n_chunks}"),
+            SchedulerKind::HGuided { params } => {
+                if *params == HGuidedParams::optimized_paper() {
+                    "HGuided opt".into()
+                } else if *params == HGuidedParams::default_paper() {
+                    "HGuided".into()
+                } else {
+                    format!("HGuided {params}")
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drain a scheduler round-robin and assert full disjoint coverage.
+    pub(crate) fn drain_and_check_coverage(
+        mut s: Box<dyn Scheduler>,
+        total: u64,
+    ) -> Vec<(DeviceId, GroupRange)> {
+        let n = s.n_devices();
+        let mut granted: Vec<(DeviceId, GroupRange)> = Vec::new();
+        let mut live: Vec<DeviceId> = s.delivery_order();
+        assert_eq!(live.len(), n);
+        while !live.is_empty() {
+            let mut next_live = Vec::new();
+            for &d in &live {
+                match s.next(d) {
+                    Some(g) => {
+                        assert!(!g.is_empty(), "empty grant to {d}");
+                        granted.push((d, g));
+                        next_live.push(d);
+                    }
+                    None => {}
+                }
+            }
+            live = next_live;
+        }
+        // Coverage: sorted ranges tile [0, total) exactly.
+        let mut ranges: Vec<GroupRange> = granted.iter().map(|&(_, g)| g).collect();
+        ranges.sort_by_key(|g| g.begin);
+        let mut cursor = 0;
+        for g in &ranges {
+            assert_eq!(g.begin, cursor, "gap or overlap at group {cursor}");
+            cursor = g.end;
+        }
+        assert_eq!(cursor, total, "work not fully covered");
+        granted
+    }
+
+    #[test]
+    fn fig3_has_seven_bars() {
+        let cfgs = SchedulerKind::fig3_configs();
+        assert_eq!(cfgs.len(), 7);
+        assert_eq!(cfgs[0].label(), "Static");
+        assert_eq!(cfgs[6].label(), "HGuided opt");
+    }
+
+    #[test]
+    fn all_kinds_cover_workspace() {
+        let ctx = SchedCtx::new(1000, vec![0.15, 0.4, 1.0]);
+        for kind in SchedulerKind::fig3_configs() {
+            drain_and_check_coverage(kind.build(&ctx), 1000);
+        }
+    }
+
+    #[test]
+    fn coverage_holds_for_tiny_workloads() {
+        // Fewer groups than devices/chunks: no scheduler may lose work.
+        for total in [1u64, 2, 3, 5] {
+            let ctx = SchedCtx::new(total, vec![0.15, 0.4, 1.0]);
+            for kind in SchedulerKind::fig3_configs() {
+                drain_and_check_coverage(kind.build(&ctx), total);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "powers must be positive")]
+    fn zero_power_rejected() {
+        SchedCtx::new(10, vec![0.0, 1.0]);
+    }
+}

@@ -1,0 +1,135 @@
+//! Static scheduler: one package per device, sized proportionally to the
+//! computing-power estimates `P_i` (paper §II-B).  The *delivery order*
+//! (which device's package is enqueued first by the host thread) is the
+//! only difference between the paper's "Static" (CPU, iGPU, GPU) and
+//! "Static rev" (GPU, iGPU, CPU) bars.
+
+use super::{SchedCtx, Scheduler};
+use crate::types::{DeviceId, GroupRange};
+
+pub struct Static {
+    /// Precomputed single package per device (device-indexed).
+    parts: Vec<Option<GroupRange>>,
+    order: Vec<DeviceId>,
+    rev: bool,
+}
+
+impl Static {
+    /// `rev = false`: deliver in device order 0..n (paper: CPU first);
+    /// `rev = true`: reverse order (GPU first).
+    pub fn new(ctx: &SchedCtx, rev: bool) -> Self {
+        let n = ctx.n_devices();
+        let total = ctx.total_groups;
+        let psum = ctx.power_sum();
+        // Largest-remainder apportionment: proportional, sums exactly.
+        let exact: Vec<f64> =
+            ctx.powers.iter().map(|p| total as f64 * p / psum).collect();
+        let mut sizes: Vec<u64> = exact.iter().map(|e| e.floor() as u64).collect();
+        let mut left = total - sizes.iter().sum::<u64>();
+        let mut rema: Vec<(usize, f64)> =
+            exact.iter().enumerate().map(|(i, e)| (i, e - e.floor())).collect();
+        rema.sort_by(|a, b| b.1.total_cmp(&a.1));
+        let mut i = 0;
+        while left > 0 {
+            sizes[rema[i % n].0] += 1;
+            left -= 1;
+            i += 1;
+        }
+        // Contiguous slices in device order (CPU gets the front of the
+        // index space, GPU the back — matching the paper's delivery text).
+        let mut parts = Vec::with_capacity(n);
+        let mut cursor = 0;
+        for &sz in &sizes {
+            let g = GroupRange::new(cursor, cursor + sz);
+            parts.push((!g.is_empty()).then_some(g));
+            cursor += sz;
+        }
+        let order: Vec<DeviceId> =
+            if rev { (0..n).rev().collect() } else { (0..n).collect() };
+        Self { parts, order, rev }
+    }
+
+    /// The precomputed partition (for tests/reporting).
+    pub fn partition(&self) -> Vec<Option<GroupRange>> {
+        self.parts.clone()
+    }
+}
+
+impl Scheduler for Static {
+    fn next(&mut self, dev: DeviceId) -> Option<GroupRange> {
+        self.parts.get_mut(dev)?.take()
+    }
+
+    fn delivery_order(&self) -> Vec<DeviceId> {
+        self.order.clone()
+    }
+
+    fn n_devices(&self) -> usize {
+        self.parts.len()
+    }
+
+    fn label(&self) -> String {
+        if self.rev { "Static rev".into() } else { "Static".into() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> SchedCtx {
+        SchedCtx::new(1000, vec![0.15, 0.4, 1.0])
+    }
+
+    #[test]
+    fn split_is_power_proportional() {
+        let s = Static::new(&ctx(), false);
+        let parts = s.partition();
+        let sizes: Vec<u64> = parts.iter().map(|p| p.unwrap().len()).collect();
+        // 1000 * [0.15, 0.4, 1.0] / 1.55 ≈ [96.8, 258, 645.2]
+        assert_eq!(sizes.iter().sum::<u64>(), 1000);
+        assert!((sizes[0] as i64 - 97).abs() <= 1, "{sizes:?}");
+        assert!((sizes[1] as i64 - 258).abs() <= 1, "{sizes:?}");
+        assert!((sizes[2] as i64 - 645).abs() <= 1, "{sizes:?}");
+    }
+
+    #[test]
+    fn one_package_each_then_none() {
+        let mut s = Static::new(&ctx(), false);
+        for d in 0..3 {
+            assert!(s.next(d).is_some());
+            assert!(s.next(d).is_none(), "second grant to device {d}");
+        }
+    }
+
+    #[test]
+    fn delivery_order_forward_and_reverse() {
+        assert_eq!(Static::new(&ctx(), false).delivery_order(), vec![0, 1, 2]);
+        assert_eq!(Static::new(&ctx(), true).delivery_order(), vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn degenerate_single_device_takes_all() {
+        let ctx = SchedCtx::new(77, vec![1.0]);
+        let mut s = Static::new(&ctx, false);
+        assert_eq!(s.next(0), Some(GroupRange::new(0, 77)));
+    }
+
+    #[test]
+    fn zero_size_partitions_yield_none() {
+        // 1 group, 3 devices: two devices get nothing.
+        let ctx = SchedCtx::new(1, vec![1.0, 1.0, 1.0]);
+        let mut s = Static::new(&ctx, false);
+        let got: Vec<bool> = (0..3).map(|d| s.next(d).is_some()).collect();
+        assert_eq!(got.iter().filter(|&&b| b).count(), 1);
+    }
+
+    #[test]
+    fn partition_is_contiguous_front_to_back() {
+        let s = Static::new(&ctx(), true); // rev shares the same partition
+        let parts = s.partition();
+        assert_eq!(parts[0].unwrap().begin, 0);
+        assert_eq!(parts[2].unwrap().end, 1000);
+        assert_eq!(parts[0].unwrap().end, parts[1].unwrap().begin);
+    }
+}

@@ -1,0 +1,665 @@
+//! The co-execution event loop.
+//!
+//! Faithful to the paper's Fig. 2 architecture: a host (Runtime +
+//! Scheduler) thread serializes package grants and input transfers, while
+//! Device threads compute in parallel.  Time is a virtual f64 clock;
+//! run-to-run jitter is multiplicative log-normal noise seeded per
+//! repetition, reproducing the paper's 50-execution measurement protocol
+//! deterministically.
+//!
+//! Beyond the paper's evaluation, the loop supports the paper's stated
+//! future work and EngineCL's robustness claims:
+//! * per-device **energy accounting** ([`crate::cldriver::PowerModel`]);
+//! * **device-failure injection** with package re-queue (a failed
+//!   device's in-flight package is re-executed by the survivors);
+//! * **iterative ROI mode** ([`simulate_iterative`]) where inputs stay
+//!   device-resident between kernel iterations.
+
+use crate::benchsuite::Bench;
+use crate::cldriver::{self, DriverProfile, PowerModel, TransferModel};
+use crate::scheduler::{SchedCtx, SchedulerKind};
+use crate::stats::XorShift64;
+use crate::types::{DeviceClass, DeviceSpec, ExecMode, GroupRange, Optimizations};
+use std::cmp::Ordering;
+
+
+/// One simulated run's configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub devices: Vec<DeviceSpec>,
+    pub scheduler: SchedulerKind,
+    pub mode: ExecMode,
+    pub opts: Optimizations,
+    pub driver: DriverProfile,
+    pub power: PowerModel,
+    /// Problem size in work-items; `None` = the benchmark's paper size.
+    pub gws: Option<u64>,
+    pub seed: u64,
+    /// Record the per-package trace (costs memory on big sweeps).
+    pub record_packages: bool,
+    /// Fault injection: (device index, ROI-relative failure time).  The
+    /// device's in-flight package is lost and re-queued to the survivors.
+    pub fail: Option<(usize, f64)>,
+}
+
+impl SimConfig {
+    /// The paper's testbed: CPU + iGPU + dGPU with per-benchmark powers.
+    pub fn testbed(bench: &Bench, scheduler: SchedulerKind) -> Self {
+        Self {
+            devices: testbed_devices(bench),
+            scheduler,
+            mode: ExecMode::Roi,
+            opts: Optimizations::ALL,
+            driver: DriverProfile::commodity_desktop(),
+            power: PowerModel::commodity_desktop(),
+            gws: None,
+            seed: 1,
+            record_packages: false,
+            fail: None,
+        }
+    }
+
+    /// Single fastest-device (GPU) config — the paper's baseline.
+    pub fn gpu_only(bench: &Bench) -> Self {
+        let mut c = Self::testbed(bench, SchedulerKind::Static);
+        c.devices = vec![DeviceSpec { class: DeviceClass::DGpu, power: 1.0 }];
+        c
+    }
+}
+
+/// The paper's three devices with this benchmark's power estimates.
+pub fn testbed_devices(bench: &Bench) -> Vec<DeviceSpec> {
+    [DeviceClass::Cpu, DeviceClass::IGpu, DeviceClass::DGpu]
+        .iter()
+        .enumerate()
+        .map(|(i, &class)| DeviceSpec { class, power: bench.true_powers[i] })
+        .collect()
+}
+
+/// Trace of one granted package.
+#[derive(Debug, Clone)]
+pub struct PackageTrace {
+    pub seq: u64,
+    pub device: usize,
+    pub groups: GroupRange,
+    pub grant_at: f64,
+    pub compute_start: f64,
+    pub done_at: f64,
+}
+
+/// Per-device aggregate trace.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceTrace {
+    pub packages: u64,
+    pub groups: u64,
+    /// Busy time (transfers + compute attributed to the device).
+    pub busy: f64,
+    /// Completion time of its last package, relative to ROI start.
+    pub finish: f64,
+    /// True if this device was killed by fault injection.
+    pub failed: bool,
+}
+
+/// Result of one simulated run.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    /// ROI response time (transfers + compute), the paper's Fig. 3 metric.
+    pub roi_time: f64,
+    /// Whole-program (binary) time: init + ROI + release.
+    pub total_time: f64,
+    pub init_time: f64,
+    pub release_time: f64,
+    /// Energy-to-solution over the ROI window (J).
+    pub energy_j: f64,
+    pub devices: Vec<DeviceTrace>,
+    pub n_packages: u64,
+    pub packages: Vec<PackageTrace>,
+}
+
+impl SimOutcome {
+    /// The response time under the configured mode.
+    pub fn time(&self, mode: ExecMode) -> f64 {
+        match mode {
+            ExecMode::Binary => self.total_time,
+            ExecMode::Roi => self.roi_time,
+        }
+    }
+}
+
+/// Transfer behaviour of one kernel iteration in iterative mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum IterPhase {
+    /// Single-shot run (the paper's evaluation mode): all transfers paid.
+    Single,
+    /// First of many: inputs uploaded, outputs stay device-resident.
+    First,
+    /// Middle: only the per-package broadcast is re-sent.
+    Middle,
+    /// Last: outputs transferred back.
+    Last,
+}
+
+impl IterPhase {
+    fn pay_h2d_items(&self) -> bool {
+        matches!(self, IterPhase::Single | IterPhase::First)
+    }
+    fn pay_d2h_items(&self) -> bool {
+        matches!(self, IterPhase::Single | IterPhase::Last)
+    }
+}
+
+/// Min-heap event: device `dev` becomes idle at `t`; `tie` enforces the
+/// delivery order at equal times (Static vs Static-rev).
+struct Ev {
+    t: f64,
+    tie: u64,
+    dev: usize,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.tie == other.tie
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest first.
+        other.t.total_cmp(&self.t).then_with(|| other.tie.cmp(&self.tie))
+    }
+}
+
+/// Tiny earliest-first event queue: one outstanding event per device means
+/// linear scan wins over heap maintenance at testbed sizes.
+struct EventList {
+    evs: Vec<Ev>,
+}
+
+impl EventList {
+    fn with_capacity(n: usize) -> Self {
+        Self { evs: Vec::with_capacity(n + 1) }
+    }
+
+    #[inline]
+    fn push(&mut self, ev: Ev) {
+        self.evs.push(ev);
+    }
+
+    #[inline]
+    fn pop(&mut self) -> Option<Ev> {
+        if self.evs.is_empty() {
+            return None;
+        }
+        let mut best = 0;
+        for i in 1..self.evs.len() {
+            if self.evs[i].cmp(&self.evs[best]) == Ordering::Greater {
+                best = i;
+            }
+        }
+        Some(self.evs.swap_remove(best))
+    }
+}
+
+/// Retention-corrected scheduler power estimates (the paper profiles
+/// device powers under co-execution).
+fn effective_powers(cfg: &SimConfig) -> Vec<f64> {
+    let n = cfg.devices.len();
+    cfg.devices
+        .iter()
+        .map(|d| {
+            let r = if n > 1 {
+                cfg.driver.coexec_retention[cldriver::class_idx(d.class)]
+            } else {
+                1.0
+            };
+            d.power * r
+        })
+        .collect()
+}
+
+/// One ROI pass (one kernel iteration): the pull-based event loop.
+#[allow(clippy::too_many_arguments)]
+fn run_roi(
+    bench: &Bench,
+    cfg: &SimConfig,
+    gws: u64,
+    rng: &mut XorShift64,
+    phase: IterPhase,
+    traces: &mut [DeviceTrace],
+    packages: &mut Vec<PackageTrace>,
+    seq0: u64,
+) -> (f64, u64) {
+    let lws = bench.props.lws;
+    let total_groups = bench.groups(gws);
+    let n = cfg.devices.len();
+    let ctx = SchedCtx::new(total_groups, effective_powers(cfg));
+    let mut sched = cfg.scheduler.build(&ctx);
+    let transfers = TransferModel::new(&cfg.driver, cfg.opts.buffer_flags);
+    let grant_overhead = cfg.driver.grant_overhead_us * 1e-6;
+
+    // At most one outstanding event per device, so a linear-scan list
+    // beats a BinaryHeap for the 3-device testbed (EXPERIMENTS.md §Perf,
+    // iteration 3).
+    let mut heap = EventList::with_capacity(n);
+    for (slot, &d) in sched.delivery_order().iter().enumerate() {
+        heap.push(Ev { t: 0.0, tie: slot as u64, dev: d });
+    }
+    let mut host_free = 0.0f64;
+    let mut seq = seq0;
+    let mut tie = n as u64;
+    // Fault handling: work lost by the failed device, waiting survivors.
+    let mut retry: Vec<GroupRange> = Vec::new();
+    let mut parked: Vec<usize> = Vec::new();
+    let mut iter_finish = 0.0f64;
+
+    while let Some(Ev { t, dev, .. }) = heap.pop() {
+        // Dead devices request nothing.
+        if traces[dev].failed {
+            continue;
+        }
+        let groups = match retry.pop() {
+            Some(g) => g,
+            None => match sched.next(dev) {
+                Some(g) => g,
+                None => {
+                    parked.push(dev); // may be woken by retry work
+                    continue;
+                }
+            },
+        };
+        let spec = &cfg.devices[dev];
+        let items = groups.items(lws);
+        let eff_items = crate::types::ItemRange::new(items.begin, items.end.min(gws));
+
+        // Host serialization: grant + input transfer enqueue.
+        let grant_at = t.max(host_free);
+        let bytes_in = if phase.pay_h2d_items() {
+            eff_items.len() as f64 * bench.bytes_in_per_item + bench.bytes_in_per_package
+        } else {
+            bench.bytes_in_per_package
+        };
+        let h2d = transfers.h2d(spec.class, bytes_in);
+        let compute_start = grant_at + grant_overhead + h2d;
+        host_free = compute_start;
+
+        // Parallel device phase: launch + compute + output transfer.
+        // Under co-execution each class retains only a fraction of its
+        // standalone throughput (shared DDR3 + host-thread contention).
+        let retention = if n > 1 {
+            cfg.driver.coexec_retention[cldriver::class_idx(spec.class)]
+        } else {
+            1.0
+        };
+        let cost = bench.range_cost(eff_items, gws);
+        let throughput = spec.power * bench.gpu_units_per_sec * retention;
+        let compute = cost / throughput * rng.jitter(cfg.driver.jitter_sigma);
+        let bytes_out = if phase.pay_d2h_items() {
+            eff_items.len() as f64 * bench.bytes_out_per_item
+        } else {
+            0.0
+        };
+        let d2h = transfers.d2h(spec.class, bytes_out);
+        let done = compute_start + transfers.launch(spec.class) + compute + d2h;
+
+        // Fault injection: the package is lost if this device dies before
+        // completing it (only in the phase covering the failure time).
+        if let Some((fd, tf)) = cfg.fail {
+            if fd == dev && phase != IterPhase::Middle && done > tf && !traces[dev].failed {
+                traces[dev].failed = true;
+                traces[dev].finish = traces[dev].finish.max(tf.min(done));
+                retry.push(groups);
+                // Wake any parked survivors to pick up the lost work.
+                for &p in &parked {
+                    heap.push(Ev { t: t.max(tf), tie, dev: p });
+                    tie += 1;
+                }
+                parked.clear();
+                iter_finish = iter_finish.max(tf.min(done));
+                continue;
+            }
+        }
+
+        let tr = &mut traces[dev];
+        tr.packages += 1;
+        tr.groups += groups.len();
+        tr.busy += done - grant_at;
+        tr.finish = tr.finish.max(done);
+        iter_finish = iter_finish.max(done);
+
+        if cfg.record_packages {
+            packages.push(PackageTrace {
+                seq,
+                device: dev,
+                groups,
+                grant_at,
+                compute_start,
+                done_at: done,
+            });
+        }
+        seq += 1;
+        heap.push(Ev { t: done, tie, dev });
+        tie += 1;
+    }
+    debug_assert!(retry.is_empty(), "lost work never re-executed");
+    (iter_finish, seq)
+}
+
+fn fixed_costs(bench: &Bench, cfg: &SimConfig, gws: u64, rng: &mut XorShift64) -> (f64, f64) {
+    let classes: Vec<DeviceClass> = cfg.devices.iter().map(|d| d.class).collect();
+    let n_buffers = bench.props.read_buffers + bench.props.write_buffers;
+    let input_bytes = gws as f64 * bench.bytes_in_per_item + bench.bytes_in_per_package;
+    let fixed = cldriver::fixed_costs(&cfg.driver, &classes, cfg.opts, n_buffers, input_bytes);
+    (
+        fixed.init * rng.jitter(cfg.driver.jitter_sigma),
+        fixed.release * rng.jitter(cfg.driver.jitter_sigma),
+    )
+}
+
+fn energy(cfg: &SimConfig, makespan: f64, traces: &[DeviceTrace]) -> f64 {
+    let classes: Vec<usize> =
+        cfg.devices.iter().map(|d| cldriver::class_idx(d.class)).collect();
+    let busy: Vec<f64> = traces.iter().map(|t| t.busy).collect();
+    cfg.power.energy(makespan, &classes, &busy)
+}
+
+/// Run one simulated co-execution (the paper's single-shot evaluation mode).
+pub fn simulate(bench: &Bench, cfg: &SimConfig) -> SimOutcome {
+    let gws = cfg.gws.unwrap_or(bench.default_gws);
+    let n = cfg.devices.len();
+    assert!(n > 0, "no devices");
+    let mut rng = XorShift64::new(cfg.seed);
+    let (init_time, release_time) = fixed_costs(bench, cfg, gws, &mut rng);
+
+    let mut traces = vec![DeviceTrace::default(); n];
+    let mut packages = Vec::new();
+    let (roi_time, seq) =
+        run_roi(bench, cfg, gws, &mut rng, IterPhase::Single, &mut traces, &mut packages, 0);
+    let energy_j = energy(cfg, roi_time, &traces);
+    SimOutcome {
+        roi_time,
+        total_time: init_time + roi_time + release_time,
+        init_time,
+        release_time,
+        energy_j,
+        devices: traces,
+        n_packages: seq,
+        packages,
+    }
+}
+
+/// Outcome of an iterative run ([`simulate_iterative`]).
+#[derive(Debug, Clone)]
+pub struct IterOutcome {
+    /// init + Σ iteration ROIs + release.
+    pub total_time: f64,
+    pub init_time: f64,
+    pub release_time: f64,
+    /// Per-iteration ROI times.
+    pub iter_times: Vec<f64>,
+    pub energy_j: f64,
+    pub devices: Vec<DeviceTrace>,
+    pub n_packages: u64,
+}
+
+/// Iterative ROI mode (paper §VII future work: "iterative and multi-kernel
+/// executions, imitating the ROI operation mode of real applications"):
+/// the kernel runs `iterations` times; between iterations the inputs stay
+/// device-resident (only the per-package broadcast is re-sent), and the
+/// outputs are only read back after the final iteration.
+pub fn simulate_iterative(bench: &Bench, cfg: &SimConfig, iterations: u32) -> IterOutcome {
+    assert!(iterations >= 1);
+    let gws = cfg.gws.unwrap_or(bench.default_gws);
+    let n = cfg.devices.len();
+    assert!(n > 0, "no devices");
+    let mut rng = XorShift64::new(cfg.seed);
+    let (init_time, release_time) = fixed_costs(bench, cfg, gws, &mut rng);
+
+    let mut traces = vec![DeviceTrace::default(); n];
+    let mut packages = Vec::new();
+    let mut iter_times = Vec::with_capacity(iterations as usize);
+    let mut seq = 0;
+    for i in 0..iterations {
+        let phase = if iterations == 1 {
+            IterPhase::Single
+        } else if i == 0 {
+            IterPhase::First
+        } else if i + 1 == iterations {
+            IterPhase::Last
+        } else {
+            IterPhase::Middle
+        };
+        // finish times accumulate per iteration; reset the per-iteration
+        // baseline by tracking the delta.
+        let before: Vec<f64> = traces.iter().map(|t| t.finish).collect();
+        let (roi, s) = run_roi(bench, cfg, gws, &mut rng, phase, &mut traces, &mut packages, seq);
+        seq = s;
+        iter_times.push(roi);
+        // Re-normalize finishes to "time within this iteration" semantics:
+        // keep the maximum of previous finishes for the balance metric.
+        for (t, b) in traces.iter_mut().zip(before) {
+            t.finish = t.finish.max(b);
+        }
+    }
+    let roi_total: f64 = iter_times.iter().sum();
+    let energy_j = energy(cfg, roi_total, &traces);
+    IterOutcome {
+        total_time: init_time + roi_total + release_time,
+        init_time,
+        release_time,
+        iter_times,
+        energy_j,
+        devices: traces,
+        n_packages: seq,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchsuite::{Bench, BenchId};
+    use crate::scheduler::HGuidedParams;
+
+    fn quick(bench: &Bench, kind: SchedulerKind) -> SimOutcome {
+        let mut cfg = SimConfig::testbed(bench, kind);
+        cfg.gws = Some(bench.default_gws / 16); // keep tests fast
+        simulate(bench, &cfg)
+    }
+
+    fn hguided_opt() -> SchedulerKind {
+        SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() }
+    }
+
+    #[test]
+    fn deterministic_for_equal_seeds() {
+        let b = Bench::new(BenchId::Gaussian);
+        let a = quick(&b, hguided_opt());
+        let c = quick(&b, hguided_opt());
+        assert_eq!(a.roi_time, c.roi_time);
+        assert_eq!(a.n_packages, c.n_packages);
+        assert_eq!(a.energy_j, c.energy_j);
+    }
+
+    #[test]
+    fn different_seeds_jitter() {
+        let b = Bench::new(BenchId::Gaussian);
+        let mut cfg = SimConfig::testbed(&b, SchedulerKind::Static);
+        cfg.gws = Some(b.default_gws / 16);
+        let a = simulate(&b, &cfg);
+        cfg.seed = 99;
+        let c = simulate(&b, &cfg);
+        assert_ne!(a.roi_time, c.roi_time);
+        assert!((a.roi_time - c.roi_time).abs() / a.roi_time < 0.2);
+    }
+
+    #[test]
+    fn coexec_beats_single_gpu_at_paper_size() {
+        for id in BenchId::ALL {
+            let b = Bench::new(id);
+            let co = simulate(&b, &SimConfig::testbed(&b, hguided_opt()));
+            let single = simulate(&b, &SimConfig::gpu_only(&b));
+            assert!(
+                co.roi_time < single.roi_time,
+                "{}: co {:.3}s !< single {:.3}s",
+                b.props.name,
+                co.roi_time,
+                single.roi_time
+            );
+        }
+    }
+
+    #[test]
+    fn single_gpu_near_two_seconds() {
+        for id in BenchId::ALL {
+            let b = Bench::new(id);
+            let t = simulate(&b, &SimConfig::gpu_only(&b)).roi_time;
+            assert!((1.5..3.0).contains(&t), "{}: {t}s", b.props.name);
+        }
+    }
+
+    #[test]
+    fn all_groups_executed_once() {
+        let b = Bench::new(BenchId::Binomial);
+        for kind in SchedulerKind::fig3_configs() {
+            let mut cfg = SimConfig::testbed(&b, kind);
+            cfg.gws = Some(b.default_gws / 8);
+            let out = simulate(&b, &cfg);
+            let groups: u64 = out.devices.iter().map(|d| d.groups).sum();
+            assert_eq!(groups, b.groups(b.default_gws / 8));
+        }
+    }
+
+    #[test]
+    fn binary_time_adds_fixed_costs() {
+        let b = Bench::new(BenchId::Gaussian);
+        let out = quick(&b, SchedulerKind::Static);
+        assert!(out.total_time > out.roi_time);
+        assert!(
+            (out.total_time - (out.init_time + out.roi_time + out.release_time)).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn static_rev_starts_gpu_earlier() {
+        let b = Bench::new(BenchId::NBody);
+        let run = |kind| {
+            let mut cfg = SimConfig::testbed(&b, kind);
+            cfg.record_packages = true;
+            simulate(&b, &cfg)
+        };
+        let fwd = run(SchedulerKind::Static);
+        let rev = run(SchedulerKind::StaticRev);
+        let gpu_start = |o: &SimOutcome| {
+            o.packages.iter().find(|p| p.device == 2).unwrap().compute_start
+        };
+        assert!(gpu_start(&rev) < gpu_start(&fwd), "reverse delivery favours GPU");
+    }
+
+    #[test]
+    fn hguided_makes_more_packages_than_static_fewer_than_dyn512() {
+        let b = Bench::new(BenchId::Ray1);
+        let st = quick(&b, SchedulerKind::Static);
+        let hg = quick(&b, SchedulerKind::HGuided { params: HGuidedParams::default_paper() });
+        let dy = quick(&b, SchedulerKind::Dynamic { n_chunks: 512 });
+        assert_eq!(st.n_packages, 3);
+        assert!(hg.n_packages > st.n_packages);
+        assert!(hg.n_packages < dy.n_packages);
+    }
+
+    // ---------------------------------------------------------- extensions
+    #[test]
+    fn coexec_uses_less_energy_than_single_gpu() {
+        // The paper's §I energy argument: idle devices still draw power, so
+        // finishing sooner with everyone busy wins on energy too.
+        for id in [BenchId::Gaussian, BenchId::Mandelbrot] {
+            let b = Bench::new(id);
+            let co = simulate(&b, &SimConfig::testbed(&b, hguided_opt()));
+            // Single-GPU energy must be charged for the idle CPU+iGPU too:
+            // same platform, one device working.
+            let solo = simulate(&b, &SimConfig::gpu_only(&b));
+            let solo_energy = PowerModel::commodity_desktop().energy(
+                solo.roi_time,
+                &[0, 1, 2],
+                &[0.0, 0.0, solo.devices[0].busy],
+            );
+            assert!(
+                co.energy_j < solo_energy,
+                "{}: coexec {:.0} J !< single {:.0} J",
+                id.label(),
+                co.energy_j,
+                solo_energy
+            );
+        }
+    }
+
+    #[test]
+    fn device_failure_work_is_reexecuted() {
+        let b = Bench::new(BenchId::Gaussian);
+        let mut cfg = SimConfig::testbed(&b, hguided_opt());
+        cfg.gws = Some(b.default_gws / 8);
+        cfg.fail = Some((2, 0.05)); // kill the GPU early
+        let out = simulate(&b, &cfg);
+        let groups: u64 = out.devices.iter().map(|d| d.groups).sum();
+        assert_eq!(groups, b.groups(b.default_gws / 8), "work conserved");
+        assert!(out.devices[2].failed);
+        let healthy = simulate(&b, &SimConfig { fail: None, ..cfg });
+        assert!(
+            out.roi_time > healthy.roi_time,
+            "losing the fastest device must cost time"
+        );
+    }
+
+    #[test]
+    fn failure_of_idle_device_changes_little() {
+        let b = Bench::new(BenchId::Gaussian);
+        let mut cfg = SimConfig::testbed(&b, hguided_opt());
+        cfg.gws = Some(b.default_gws / 8);
+        // Fail the CPU *after* the ROI surely finished: nothing to re-run.
+        cfg.fail = Some((0, 1e9));
+        let out = simulate(&b, &cfg);
+        assert!(!out.devices[0].failed);
+        let groups: u64 = out.devices.iter().map(|d| d.groups).sum();
+        assert_eq!(groups, b.groups(b.default_gws / 8));
+    }
+
+    #[test]
+    fn iterative_amortizes_transfers() {
+        // NBody: per-item transfers vanish in middle iterations, so k
+        // iterations cost less than k independent runs.
+        let b = Bench::new(BenchId::NBody);
+        let mut cfg = SimConfig::testbed(&b, hguided_opt());
+        cfg.gws = Some(b.default_gws / 4);
+        let k = 8;
+        let iter = simulate_iterative(&b, &cfg, k);
+        assert_eq!(iter.iter_times.len(), k as usize);
+        let single = simulate(&b, &cfg);
+        let independent = k as f64 * single.total_time;
+        assert!(
+            iter.total_time < independent,
+            "iterative {:.3}s !< {k} independent runs {:.3}s",
+            iter.total_time,
+            independent
+        );
+        // Middle iterations are the cheap ones (allow 3-sigma jitter).
+        let mid = crate::stats::mean(&iter.iter_times[1..k as usize - 1]);
+        assert!(mid <= iter.iter_times[0] * 1.02, "mid {mid} vs first {}", iter.iter_times[0]);
+        // Work executed k times over.
+        let groups: u64 = iter.devices.iter().map(|d| d.groups).sum();
+        assert_eq!(groups, k as u64 * b.groups(cfg.gws.unwrap()));
+    }
+
+    #[test]
+    fn iterative_single_iteration_matches_simulate() {
+        let b = Bench::new(BenchId::Ray1);
+        let mut cfg = SimConfig::testbed(&b, hguided_opt());
+        cfg.gws = Some(b.default_gws / 16);
+        let a = simulate(&b, &cfg);
+        let i = simulate_iterative(&b, &cfg, 1);
+        assert!((a.roi_time - i.iter_times[0]).abs() < 1e-12);
+        assert!((a.total_time - i.total_time).abs() < 1e-12);
+    }
+}

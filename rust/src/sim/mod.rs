@@ -1,0 +1,14 @@
+//! Deterministic virtual-clock co-execution simulator.
+//!
+//! This backend replays the EngineCL execution semantics — host-serialized
+//! package grants and input transfers, parallel device compute, pull-based
+//! scheduling — on a discrete-event clock, so the three paper devices
+//! co-execute faithfully on a single host core.  All figure benches
+//! (Figs 3–6) run on this backend; the PJRT backend executes the same
+//! scheduler/engine code against real kernels.
+
+pub mod coexec;
+
+pub use coexec::{
+    simulate, simulate_iterative, DeviceTrace, IterOutcome, PackageTrace, SimConfig, SimOutcome,
+};

@@ -1,0 +1,138 @@
+//! Minimal wall-clock benchmark harness (criterion is unavailable in this
+//! offline environment — DESIGN.md §Substitutions).
+//!
+//! Usage from a `harness = false` bench target:
+//! ```no_run
+//! use enginecl::stats::benchkit::Bencher;
+//! let mut b = Bencher::new("fig3");
+//! b.bench("hguided/mandelbrot", 20, || { /* work */ });
+//! b.finish();
+//! ```
+//! Prints criterion-style `name  time: [mean ± sd]  (min .. max, N)` lines
+//! and returns the samples for further assertions.
+
+use super::summary::Summary;
+use std::time::Instant;
+
+/// One benchmark group's runner + report sink.
+pub struct Bencher {
+    group: String,
+    results: Vec<(String, Summary)>,
+}
+
+impl Bencher {
+    pub fn new(group: impl Into<String>) -> Self {
+        let group = group.into();
+        println!("== bench group: {group} ==");
+        Self { group, results: Vec::new() }
+    }
+
+    /// Time `f` `iters` times (after one warm-up call); returns per-iter
+    /// seconds.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, iters: usize, mut f: F) -> Summary {
+        assert!(iters >= 1);
+        f(); // warm-up (paper protocol: first execution discarded)
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let s = Summary::over(&samples, 0);
+        println!(
+            "{:<44} time: [{:>11} ± {:>9}]  ({} .. {}, n={})",
+            format!("{}/{}", self.group, name),
+            fmt_s(s.mean),
+            fmt_s(s.stddev),
+            fmt_s(s.min),
+            fmt_s(s.max),
+            s.n
+        );
+        self.results.push((name.to_string(), s));
+        s
+    }
+
+    /// Time a function returning a value (value is returned from the last
+    /// iteration; useful to both measure and keep results).
+    pub fn bench_val<T, F: FnMut() -> T>(&mut self, name: &str, iters: usize, mut f: F) -> T {
+        let mut last = None;
+        self.bench(name, iters, || {
+            last = Some(f());
+        });
+        last.expect("iters >= 1")
+    }
+
+    /// Throughput helper: report ops/sec alongside time.
+    pub fn bench_throughput<F: FnMut() -> u64>(
+        &mut self,
+        name: &str,
+        iters: usize,
+        mut f: F,
+    ) -> f64 {
+        let mut ops_total = 0u64;
+        let t0 = Instant::now();
+        f(); // warm-up
+        let warm = t0.elapsed();
+        let t1 = Instant::now();
+        for _ in 0..iters {
+            ops_total += f();
+        }
+        let dt = t1.elapsed().as_secs_f64();
+        let rate = ops_total as f64 / dt;
+        println!(
+            "{:<44} thrpt: {:>12.3e} ops/s  ({} iters, warm {})",
+            format!("{}/{}", self.group, name),
+            rate,
+            iters,
+            fmt_s(warm.as_secs_f64())
+        );
+        rate
+    }
+
+    pub fn results(&self) -> &[(String, Summary)] {
+        &self.results
+    }
+
+    pub fn finish(self) {
+        println!("== bench group done: {} ({} entries) ==", self.group, self.results.len());
+    }
+}
+
+fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_and_reports() {
+        let mut b = Bencher::new("selftest");
+        let s = b.bench("noop", 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+        let v = b.bench_val("val", 3, || 42);
+        assert_eq!(v, 42);
+        assert_eq!(b.results().len(), 2);
+        b.finish();
+    }
+
+    #[test]
+    fn format_scales() {
+        assert!(fmt_s(2.0).ends_with(" s"));
+        assert!(fmt_s(2e-3).ends_with("ms"));
+        assert!(fmt_s(2e-6).ends_with("µs"));
+        assert!(fmt_s(2e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Small statistics toolbox: deterministic RNG, summary statistics and
+//! geometric means — everything the 50-repetition experiment protocol of
+//! the paper needs, with no external dependencies.
+
+pub mod benchkit;
+pub mod rng;
+pub mod summary;
+
+pub use rng::XorShift64;
+pub use summary::{geomean, mean, stddev, Summary};

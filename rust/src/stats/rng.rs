@@ -1,0 +1,126 @@
+//! Deterministic xorshift64* PRNG.
+//!
+//! The experiment harness must be reproducible run-to-run (the paper
+//! averages 50 executions per configuration; we model run-to-run driver
+//! jitter with multiplicative noise drawn from this generator, seeded per
+//! repetition), so we use a tiny self-contained generator instead of a
+//! `rand` dependency.
+
+/// xorshift64* — passes BigCrush for our purposes, 8 bytes of state.
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zero fixed point; mix the seed through splitmix64.
+        let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        Self { state: (z ^ (z >> 31)) | 1 }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller (one value per call; cheap enough).
+    pub fn gaussian(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Multiplicative noise factor `exp(sigma * z)`, mean ~1 for small
+    /// sigma — the run-to-run jitter model for package execution times.
+    ///
+    /// Perf note (EXPERIMENTS.md §Perf): z comes from an Irwin–Hall(4)
+    /// approximation (sum of 4 uniforms, rescaled to unit variance)
+    /// instead of Box–Muller — no ln/cos on the simulator's per-package
+    /// hot path, identical mean/variance, tails within 3σ are what the
+    /// jitter model needs.
+    pub fn jitter(&mut self, sigma: f64) -> f64 {
+        const SCALE: f64 = 1.732_050_807_568_877_2; // sqrt(12/4)
+        let z = (self.next_f64() + self.next_f64() + self.next_f64() + self.next_f64()
+            - 2.0)
+            * SCALE;
+        (sigma * z).exp()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Multiply-shift; bias negligible for our n << 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = XorShift64::new(42);
+        let mut b = XorShift64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = XorShift64::new(1);
+        let mut b = XorShift64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = XorShift64::new(7);
+        for _ in 0..1000 {
+            let x = r.uniform(2.0, 3.0);
+            assert!((2.0..3.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn jitter_centred_on_one() {
+        let mut r = XorShift64::new(11);
+        let n = 20_000;
+        let mean = (0..n).map(|_| r.jitter(0.02)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.01, "mean jitter {mean}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = XorShift64::new(3);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn zero_seed_works() {
+        let mut r = XorShift64::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Summary statistics over repeated runs (the paper's 50-execution
+//! protocol with warm-up discard).
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1); 0.0 for n < 2.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Geometric mean — the paper's per-scheduler average in Fig. 3.
+/// Panics in debug if any value is non-positive.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let log_sum: f64 = xs
+        .iter()
+        .map(|&x| {
+            debug_assert!(x > 0.0, "geomean over non-positive value {x}");
+            x.max(f64::MIN_POSITIVE).ln()
+        })
+        .sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+/// Aggregate of a repetition set: the paper reports means of 50 runs with
+/// the first (warm-up) run discarded; `Summary::over` implements exactly
+/// that protocol.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Summarize, discarding the first `discard` warm-up entries.
+    pub fn over(samples: &[f64], discard: usize) -> Self {
+        let xs = &samples[discard.min(samples.len())..];
+        Self {
+            n: xs.len(),
+            mean: mean(xs),
+            stddev: stddev(xs),
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+
+    /// 95 % confidence half-interval under a normal approximation.
+    pub fn ci95(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        1.96 * self.stddev / (self.n as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_stddev_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn geomean_matches_hand_computation() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_below_arithmetic_mean() {
+        let xs = [1.0, 2.0, 3.0, 10.0];
+        assert!(geomean(&xs) < mean(&xs));
+    }
+
+    #[test]
+    fn summary_discards_warmup() {
+        // First (cold) run is 100x slower — the paper's discard protocol.
+        let xs = [100.0, 1.0, 1.0, 1.0];
+        let s = Summary::over(&xs, 1);
+        assert_eq!(s.n, 3);
+        assert!((s.mean - 1.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 1.0);
+    }
+
+    #[test]
+    fn empty_inputs_are_safe() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(stddev(&[]), 0.0);
+        assert_eq!(geomean(&[]), 0.0);
+        let s = Summary::over(&[], 0);
+        assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn ci95_shrinks_with_n() {
+        let a = Summary { n: 10, mean: 1.0, stddev: 0.5, min: 0.0, max: 2.0 };
+        let b = Summary { n: 40, mean: 1.0, stddev: 0.5, min: 0.0, max: 2.0 };
+        assert!(b.ci95() < a.ci95());
+    }
+}

@@ -1,0 +1,168 @@
+//! Core value types shared by the scheduler, simulator and PJRT backend.
+//!
+//! The unit vocabulary follows the paper / OpenCL: the global index space
+//! (`gws` work-items) is partitioned into *work-groups* of `lws` items;
+//! schedulers deal exclusively in work-groups (the paper's `G_r` is the
+//! count of pending work-groups), devices expand groups back into items.
+
+
+
+/// Index of a device within the engine's device table.
+pub type DeviceId = usize;
+
+/// A half-open range of work-groups `[begin, end)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GroupRange {
+    pub begin: u64,
+    pub end: u64,
+}
+
+impl GroupRange {
+    pub fn new(begin: u64, end: u64) -> Self {
+        debug_assert!(begin <= end, "invalid GroupRange {begin}..{end}");
+        Self { begin, end }
+    }
+
+    #[inline]
+    pub fn len(&self) -> u64 {
+        self.end - self.begin
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.begin == self.end
+    }
+
+    /// Expand to work-items for a given local work size.
+    #[inline]
+    pub fn items(&self, lws: u32) -> ItemRange {
+        ItemRange {
+            begin: self.begin * lws as u64,
+            end: self.end * lws as u64,
+        }
+    }
+}
+
+/// A half-open range of work-items `[begin, end)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ItemRange {
+    pub begin: u64,
+    pub end: u64,
+}
+
+impl ItemRange {
+    pub fn new(begin: u64, end: u64) -> Self {
+        debug_assert!(begin <= end);
+        Self { begin, end }
+    }
+
+    #[inline]
+    pub fn len(&self) -> u64 {
+        self.end - self.begin
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.begin == self.end
+    }
+}
+
+/// One scheduler grant: a contiguous run of work-groups assigned to a
+/// device.  `seq` is the global issue order (the paper's package launch
+/// sequence — Static delivery order is visible through it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Package {
+    pub seq: u64,
+    pub device: DeviceId,
+    pub groups: GroupRange,
+}
+
+/// The three device classes of the paper's commodity testbed
+/// (AMD A10-7850K APU: 4-CU CPU + 8-CU R7 iGPU; NVIDIA GTX 950 dGPU).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceClass {
+    Cpu,
+    IGpu,
+    DGpu,
+}
+
+impl DeviceClass {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DeviceClass::Cpu => "CPU",
+            DeviceClass::IGpu => "iGPU",
+            DeviceClass::DGpu => "GPU",
+        }
+    }
+
+    /// Devices sharing main memory with the host (the paper's CPU + iGPU
+    /// on the Kaveri APU) can elide bulk copies under the *buffers*
+    /// optimization.
+    pub fn shares_host_memory(&self) -> bool {
+        !matches!(self, DeviceClass::DGpu)
+    }
+}
+
+/// Static description of one device visible to the engine.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub class: DeviceClass,
+    /// Relative computing power estimate handed to the schedulers (the
+    /// paper's `P_i`).  Normalized against the dGPU = 1.0.
+    pub power: f64,
+}
+
+/// Execution mode of a run (paper §V-B / Fig. 6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Whole program: initialization + ROI + release.
+    Binary,
+    /// Region of interest only: transfers + kernel compute.
+    Roi,
+}
+
+/// The two runtime optimizations proposed in paper §III.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Optimizations {
+    /// Overlap platform/device discovery with Scheduler/Device thread
+    /// preparation and reuse discovery structures.
+    pub init_overlap: bool,
+    /// Set buffer placement flags so same-main-memory devices map instead
+    /// of copying.
+    pub buffer_flags: bool,
+}
+
+impl Optimizations {
+    pub const NONE: Self = Self { init_overlap: false, buffer_flags: false };
+    pub const INIT: Self = Self { init_overlap: true, buffer_flags: false };
+    pub const ALL: Self = Self { init_overlap: true, buffer_flags: true };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_range_expands_to_items() {
+        let g = GroupRange::new(2, 5);
+        assert_eq!(g.len(), 3);
+        let items = g.items(128);
+        assert_eq!(items.begin, 256);
+        assert_eq!(items.end, 640);
+        assert_eq!(items.len(), 384);
+    }
+
+    #[test]
+    fn empty_ranges() {
+        assert!(GroupRange::new(7, 7).is_empty());
+        assert!(ItemRange::new(0, 0).is_empty());
+        assert!(!GroupRange::new(0, 1).is_empty());
+    }
+
+    #[test]
+    fn device_class_memory_sharing_matches_paper_testbed() {
+        assert!(DeviceClass::Cpu.shares_host_memory());
+        assert!(DeviceClass::IGpu.shares_host_memory());
+        assert!(!DeviceClass::DGpu.shares_host_memory());
+    }
+}

@@ -1,0 +1,236 @@
+//! Randomized property tests over the coordinator invariants.
+//!
+//! proptest is unavailable offline, so these drive the same invariants
+//! with the in-tree deterministic RNG: hundreds of random configurations
+//! per property, with the failing seed printed on assert (DESIGN.md
+//! §Substitutions).
+
+use enginecl::benchsuite::{Bench, BenchId};
+use enginecl::scheduler::{HGuided, HGuidedParams, SchedCtx, Scheduler, SchedulerKind};
+use enginecl::sim::{simulate, SimConfig};
+use enginecl::stats::XorShift64;
+use enginecl::types::GroupRange;
+
+/// Random scheduler context: 1–6 devices, powers in (0.05, 1], any total.
+fn random_ctx(rng: &mut XorShift64) -> SchedCtx {
+    let n = 1 + rng.below(6) as usize;
+    let powers: Vec<f64> = (0..n).map(|_| rng.uniform(0.05, 1.0)).collect();
+    let total = 1 + rng.below(2_000_000);
+    SchedCtx::new(total, powers)
+}
+
+fn random_kind(rng: &mut XorShift64, n: usize) -> SchedulerKind {
+    match rng.below(4) {
+        0 => SchedulerKind::Static,
+        1 => SchedulerKind::StaticRev,
+        2 => SchedulerKind::Dynamic { n_chunks: 1 + rng.below(800) },
+        _ => {
+            let params = HGuidedParams {
+                min_mult: (0..n).map(|_| 1 + rng.below(40)).collect(),
+                k: (0..n).map(|_| rng.uniform(0.5, 4.0)).collect(),
+            };
+            SchedulerKind::HGuided { params }
+        }
+    }
+}
+
+/// Drain a scheduler with randomized request interleaving; return grants.
+fn drain_random(
+    s: &mut Box<dyn Scheduler>,
+    rng: &mut XorShift64,
+    n: usize,
+) -> Vec<(usize, GroupRange)> {
+    let mut live: Vec<usize> = (0..n).collect();
+    let mut grants = Vec::new();
+    while !live.is_empty() {
+        let pick = rng.below(live.len() as u64) as usize;
+        let dev = live[pick];
+        match s.next(dev) {
+            Some(g) => grants.push((dev, g)),
+            None => {
+                live.swap_remove(pick);
+            }
+        }
+    }
+    grants
+}
+
+#[test]
+fn prop_every_scheduler_covers_workspace_exactly() {
+    // No gaps, no overlap, no loss — under arbitrary request orders.
+    for case in 0..300u64 {
+        let mut rng = XorShift64::new(case);
+        let ctx = random_ctx(&mut rng);
+        let kind = random_kind(&mut rng, ctx.n_devices());
+        let mut s = kind.build(&ctx);
+        let mut grants = drain_random(&mut s, &mut rng, ctx.n_devices());
+        grants.sort_by_key(|(_, g)| g.begin);
+        let mut cursor = 0;
+        for (_, g) in &grants {
+            assert!(!g.is_empty(), "case {case}: empty grant from {}", kind.label());
+            assert_eq!(g.begin, cursor, "case {case} ({}): gap/overlap", kind.label());
+            cursor = g.end;
+        }
+        assert_eq!(cursor, ctx.total_groups, "case {case} ({})", kind.label());
+    }
+}
+
+#[test]
+fn prop_hguided_packets_decay_and_respect_min() {
+    for case in 0..200u64 {
+        let mut rng = XorShift64::new(1000 + case);
+        let ctx = random_ctx(&mut rng);
+        let n = ctx.n_devices();
+        let params = HGuidedParams {
+            min_mult: (0..n).map(|_| 1 + rng.below(30)).collect(),
+            k: (0..n).map(|_| rng.uniform(1.0, 4.0)).collect(),
+        };
+        let mut h = HGuided::new(&ctx, params.clone());
+        let mut last = vec![u64::MAX; n];
+        let mut remaining = ctx.total_groups;
+        loop {
+            let dev = rng.below(n as u64) as usize;
+            let Some(g) = h.next(dev) else { break };
+            // Non-increasing per device.
+            assert!(
+                g.len() <= last[dev],
+                "case {case}: dev {dev} grew {} -> {}",
+                last[dev],
+                g.len()
+            );
+            last[dev] = g.len();
+            // Min size respected except for the final clamped packet.
+            if g.len() < params.min_mult[dev] {
+                assert_eq!(
+                    g.len(),
+                    remaining,
+                    "case {case}: sub-minimum packet that is not the tail"
+                );
+            }
+            remaining -= g.len();
+        }
+    }
+}
+
+#[test]
+fn prop_static_split_proportional_to_power() {
+    for case in 0..200u64 {
+        let mut rng = XorShift64::new(2000 + case);
+        let mut ctx = random_ctx(&mut rng);
+        // Enough groups that proportionality is meaningful.
+        ctx = SchedCtx::new(10_000 + rng.below(1_000_000), ctx.powers.clone());
+        let mut s = SchedulerKind::Static.build(&ctx);
+        let psum = ctx.power_sum();
+        for dev in 0..ctx.n_devices() {
+            let got = s.next(dev).map(|g| g.len()).unwrap_or(0) as f64;
+            let want = ctx.total_groups as f64 * ctx.powers[dev] / psum;
+            assert!(
+                (got - want).abs() <= ctx.n_devices() as f64,
+                "case {case}: dev {dev} got {got} want {want:.1}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_simulation_conserves_work_and_time_sanity() {
+    for case in 0..60u64 {
+        let mut rng = XorShift64::new(3000 + case);
+        let id = BenchId::ALL[rng.below(6) as usize];
+        let bench = Bench::new(id);
+        let kind = random_kind(&mut rng, 3);
+        // Valid 3-device HGuided params only.
+        let kind = match kind {
+            SchedulerKind::HGuided { ref params } if params.min_mult.len() != 3 => {
+                SchedulerKind::HGuided { params: HGuidedParams::default_paper() }
+            }
+            k => k,
+        };
+        let mut cfg = SimConfig::testbed(&bench, kind);
+        cfg.seed = case;
+        cfg.gws = Some(bench.default_gws >> (rng.below(6) + 1));
+        let out = simulate(&bench, &cfg);
+        let total_groups: u64 = out.devices.iter().map(|d| d.groups).sum();
+        assert_eq!(total_groups, bench.groups(cfg.gws.unwrap()), "case {case} work lost");
+        assert!(out.roi_time > 0.0 && out.roi_time.is_finite(), "case {case}");
+        assert!(out.total_time >= out.roi_time, "case {case}");
+        for d in &out.devices {
+            assert!(d.finish <= out.roi_time + 1e-12, "case {case}");
+            assert!(d.busy <= d.finish + 1e-9, "case {case}: busy > finish");
+        }
+        // Balance in (0, 1].
+        let bal = enginecl::metrics::balance(&out);
+        assert!(bal > 0.0 && bal <= 1.0 + 1e-12, "case {case}: balance {bal}");
+    }
+}
+
+#[test]
+fn prop_seed_determinism_across_all_schedulers() {
+    for case in 0..40u64 {
+        let mut rng = XorShift64::new(4000 + case);
+        let id = BenchId::ALL[rng.below(6) as usize];
+        let bench = Bench::new(id);
+        let kind = random_kind(&mut rng, 3);
+        let kind = match kind {
+            SchedulerKind::HGuided { ref params } if params.min_mult.len() != 3 => {
+                SchedulerKind::HGuided { params: HGuidedParams::default_paper() }
+            }
+            k => k,
+        };
+        let mut cfg = SimConfig::testbed(&bench, kind);
+        cfg.seed = case * 77 + 1;
+        cfg.gws = Some(bench.default_gws / 64);
+        let a = simulate(&bench, &cfg);
+        let b = simulate(&bench, &cfg);
+        assert_eq!(a.roi_time.to_bits(), b.roi_time.to_bits(), "case {case}");
+        assert_eq!(a.n_packages, b.n_packages, "case {case}");
+    }
+}
+
+#[test]
+fn prop_jsonio_roundtrips_random_documents() {
+    use enginecl::jsonio::Json;
+    fn random_json(rng: &mut XorShift64, depth: u32) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.below(1 << 40) as f64 - (1u64 << 39) as f64) / 8.0),
+            3 => {
+                let len = rng.below(12) as usize;
+                Json::Str(
+                    (0..len)
+                        .map(|_| char::from(32 + rng.below(94) as u8))
+                        .collect::<String>(),
+                )
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for case in 0..500u64 {
+        let mut rng = XorShift64::new(5000 + case);
+        let doc = random_json(&mut rng, 3);
+        let text = doc.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(doc, back, "case {case}: {text}");
+    }
+}
+
+#[test]
+fn prop_summary_statistics_bounds() {
+    use enginecl::stats::{geomean, mean, Summary};
+    for case in 0..200u64 {
+        let mut rng = XorShift64::new(6000 + case);
+        let n = 2 + rng.below(60) as usize;
+        let xs: Vec<f64> = (0..n).map(|_| rng.uniform(0.01, 100.0)).collect();
+        let s = Summary::over(&xs, 1);
+        assert!(s.min <= s.mean + 1e-12 && s.mean <= s.max + 1e-12, "case {case}");
+        let g = geomean(&xs);
+        assert!(g <= mean(&xs) + 1e-9, "case {case}: AM-GM violated");
+        assert!(g >= xs.iter().cloned().fold(f64::INFINITY, f64::min) - 1e-9);
+    }
+}
