@@ -1,0 +1,72 @@
+//! Bench: regenerate the deadline sweep (time budgets × estimation
+//! scenarios × schedulers over the five benchsuite kernels) and time the
+//! underlying simulation throughput for the deadline-aware scheduler.
+//!
+//! `cargo bench --bench fig_deadline`
+
+use enginecl::benchsuite::{Bench, BenchId};
+use enginecl::engine::experiments;
+use enginecl::engine::Engine;
+use enginecl::scheduler::{AdaptiveParams, SchedulerKind};
+use enginecl::stats::benchkit::Bencher;
+use enginecl::types::{EstimateScenario, TimeBudget};
+
+fn main() {
+    let mut b = Bencher::new("fig_deadline");
+
+    // Timing: one time-constrained co-execution per benchmark under the
+    // Adaptive scheduler (the new hot path: on_clock + floor/cap sizing).
+    for id in BenchId::ALL {
+        let bench = Bench::new(id);
+        let engine = Engine::new(bench)
+            .with_scheduler(SchedulerKind::Adaptive { params: AdaptiveParams::default_paper() })
+            .with_budget(TimeBudget::new(2.0))
+            .with_estimate(EstimateScenario::Pessimistic { err: 0.3 });
+        let mut seed = 0u64;
+        b.bench(&format!("simulate/adaptive/{}", id.label()), 30, || {
+            seed += 1;
+            let r = engine.run(seed);
+            assert!(r.time > 0.0);
+            assert!(r.outcome.deadline.is_some());
+        });
+    }
+
+    // Regeneration: the sweep itself at CI-friendly reps.
+    let estimates = [
+        EstimateScenario::Exact,
+        EstimateScenario::Optimistic { err: 0.3 },
+        EstimateScenario::Pessimistic { err: 0.3 },
+    ];
+    let rows = b.bench_val("regenerate/deadline_sweep(reps=6)", 1, || {
+        experiments::deadline_sweep(6, &estimates, &experiments::deadline_budget_mults())
+    });
+
+    for est in &estimates {
+        let means = experiments::deadline_scheduler_means(&rows, &est.label());
+        println!("\nper-scheduler means, {}:", est.label());
+        println!("{:<14}{:>10}{:>10}{:>12}", "sched", "eff", "hit", "slack(s)");
+        for m in &means {
+            println!(
+                "{:<14}{:>10.3}{:>10.2}{:>12.4}",
+                m.scheduler, m.mean_efficiency, m.hit_rate, m.mean_slack_s
+            );
+        }
+    }
+
+    // Paper-shape assertion: Adaptive tops the pessimistic field.
+    let pess = experiments::deadline_scheduler_means(&rows, &estimates[2].label());
+    let adaptive = pess.iter().find(|m| m.scheduler == "Adaptive").unwrap();
+    let best_other = pess
+        .iter()
+        .filter(|m| m.scheduler != "Adaptive")
+        .max_by(|a, b| a.mean_efficiency.total_cmp(&b.mean_efficiency))
+        .unwrap();
+    assert!(
+        adaptive.mean_efficiency >= best_other.mean_efficiency - 5e-3,
+        "Adaptive {:.4} must top the pessimistic sweep ({} at {:.4})",
+        adaptive.mean_efficiency,
+        best_other.scheduler,
+        best_other.mean_efficiency
+    );
+    b.finish();
+}

@@ -65,6 +65,36 @@ impl Args {
         Ok(self.flag("csv").map(PathBuf::from))
     }
 
+    /// `--json PATH`.
+    pub fn json(&self) -> Option<PathBuf> {
+        self.flag("json").map(PathBuf::from)
+    }
+
+    /// `--name F` as a float, with a default.
+    pub fn f64_flag(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--{name} must be a number, got '{v}'")),
+        }
+    }
+
+    /// `--name A,B,C` as a comma-separated float list, with a default.
+    pub fn f64_list(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.flag(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim().parse::<f64>().map_err(|_| {
+                        anyhow::anyhow!("--{name} expects comma-separated numbers, got '{s}'")
+                    })
+                })
+                .collect(),
+        }
+    }
+
     /// Positional `idx` with a default.
     pub fn positional_or(&self, _name: &str, idx: usize, default: &str) -> Result<String> {
         Ok(self.positional.get(idx).cloned().unwrap_or_else(|| default.to_string()))
@@ -102,6 +132,20 @@ mod tests {
         assert_eq!(parse("x --reps 10").reps(50).unwrap(), 10);
         assert!(parse("x --reps 1").reps(50).is_err());
         assert!(parse("x --reps ten").reps(50).is_err());
+    }
+
+    #[test]
+    fn float_flags_and_lists() {
+        let a = parse("deadline-sweep --err 0.4 --budgets 1.1,1.3 --json out.json");
+        assert_eq!(a.f64_flag("err", 0.3).unwrap(), 0.4);
+        assert_eq!(a.f64_list("budgets", &[1.05]).unwrap(), vec![1.1, 1.3]);
+        assert_eq!(a.json().unwrap().to_str(), Some("out.json"));
+        let b = parse("deadline-sweep");
+        assert_eq!(b.f64_flag("err", 0.3).unwrap(), 0.3);
+        assert_eq!(b.f64_list("budgets", &[1.05, 1.2]).unwrap(), vec![1.05, 1.2]);
+        assert!(b.json().is_none());
+        assert!(parse("x --err abc").f64_flag("err", 0.3).is_err());
+        assert!(parse("x --budgets 1.0,zap").f64_list("budgets", &[]).is_err());
     }
 
     #[test]

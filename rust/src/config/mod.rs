@@ -6,7 +6,7 @@
 
 use crate::benchsuite::BenchId;
 use crate::jsonio::Json;
-use crate::scheduler::{HGuidedParams, SchedulerKind};
+use crate::scheduler::{AdaptiveParams, HGuidedParams, SchedulerKind};
 use crate::types::{DeviceClass, DeviceSpec, ExecMode, Optimizations};
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -74,6 +74,9 @@ impl RunConfig {
         }
         if let Some(r) = v.get("reps") {
             cfg.reps = r.as_u64().ok_or_else(|| anyhow!("'reps' must be a positive integer"))? as usize;
+            if cfg.reps < 2 {
+                bail!("'reps' must be >= 2 (warm-up + measured runs), got {}", cfg.reps);
+            }
         }
         if let Some(s) = v.get("seed") {
             cfg.seed = s.as_u64().ok_or_else(|| anyhow!("'seed' must be a positive integer"))?;
@@ -158,20 +161,44 @@ pub fn parse_scheduler(v: &Json) -> Result<SchedulerKind> {
             Ok(SchedulerKind::Dynamic { n_chunks: n })
         }
         "hguided" => {
-            let arr_u64 = |k: &str| -> Option<Vec<u64>> {
-                v.get(k)?.as_arr()?.iter().map(Json::as_u64).collect()
-            };
-            let arr_f64 = |k: &str| -> Option<Vec<f64>> {
-                v.get(k)?.as_arr()?.iter().map(Json::as_f64).collect()
-            };
-            let params = match (arr_u64("m"), arr_f64("k")) {
-                (Some(m), Some(k)) => HGuidedParams { min_mult: m, k },
-                (None, None) => HGuidedParams::optimized_paper(),
-                _ => bail!("hguided scheduler needs both 'm' and 'k' (or neither)"),
+            let params = match parse_mk_arrays(v, "hguided")? {
+                Some((m, k)) => HGuidedParams { min_mult: m, k },
+                None => HGuidedParams::optimized_paper(),
             };
             Ok(SchedulerKind::HGuided { params })
         }
+        "adaptive" => {
+            let mut params = match parse_mk_arrays(v, "adaptive")? {
+                Some((m, k)) => AdaptiveParams { min_mult: m, k, pessimism: 0.25 },
+                None => AdaptiveParams::default_paper(),
+            };
+            if let Some(p) = v.get("pessimism") {
+                params.pessimism = p
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("'pessimism' must be a number"))?;
+            }
+            if !(0.0..1.0).contains(&params.pessimism) {
+                bail!("'pessimism' must be in [0, 1), got {}", params.pessimism);
+            }
+            Ok(SchedulerKind::Adaptive { params })
+        }
         _ => parse_scheduler_str(kind),
+    }
+}
+
+/// The shared `"m": [..], "k": [..]` pair of the hguided/adaptive object
+/// forms: both arrays, or neither (caller falls back to paper defaults).
+fn parse_mk_arrays(v: &Json, kind: &str) -> Result<Option<(Vec<u64>, Vec<f64>)>> {
+    let arr_u64 = |k: &str| -> Option<Vec<u64>> {
+        v.get(k)?.as_arr()?.iter().map(Json::as_u64).collect()
+    };
+    let arr_f64 = |k: &str| -> Option<Vec<f64>> {
+        v.get(k)?.as_arr()?.iter().map(Json::as_f64).collect()
+    };
+    match (arr_u64("m"), arr_f64("k")) {
+        (Some(m), Some(k)) => Ok(Some((m, k))),
+        (None, None) => Ok(None),
+        _ => bail!("{kind} scheduler needs both 'm' and 'k' (or neither)"),
     }
 }
 
@@ -185,13 +212,17 @@ pub fn parse_scheduler_str(s: &str) -> Result<SchedulerKind> {
         "hguided-opt" | "hguided_opt" => {
             SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() }
         }
+        "adaptive" => SchedulerKind::Adaptive { params: AdaptiveParams::default_paper() },
         _ => {
             if let Some(n) = s.strip_prefix("dynamic:").or_else(|| s.strip_prefix("dyn:")) {
                 SchedulerKind::Dynamic {
                     n_chunks: n.parse().map_err(|_| anyhow!("bad chunk count '{n}'"))?,
                 }
             } else {
-                bail!("unknown scheduler '{s}' (static|static-rev|dynamic:N|hguided|hguided-opt)")
+                bail!(
+                    "unknown scheduler '{s}' \
+                     (static|static-rev|dynamic:N|hguided|hguided-opt|adaptive)"
+                )
             }
         }
     })
@@ -279,7 +310,27 @@ mod tests {
             SchedulerKind::Dynamic { n_chunks: 128 }
         );
         assert_eq!(parse_scheduler_str("hguided-opt").unwrap().label(), "HGuided opt");
+        assert_eq!(parse_scheduler_str("adaptive").unwrap().label(), "Adaptive");
         assert!(parse_scheduler_str("fifo").is_err());
+    }
+
+    #[test]
+    fn adaptive_object_form_parses() {
+        let v = Json::parse(
+            r#"{"kind": "adaptive", "m": [1, 10, 20], "k": [3.0, 1.5, 1.0],
+                "pessimism": 0.4}"#,
+        )
+        .unwrap();
+        let kind = parse_scheduler(&v).unwrap();
+        match kind {
+            SchedulerKind::Adaptive { params } => {
+                assert_eq!(params.min_mult, vec![1, 10, 20]);
+                assert_eq!(params.pessimism, 0.4);
+            }
+            other => panic!("wrong kind {other:?}"),
+        }
+        let bad = Json::parse(r#"{"kind": "adaptive", "pessimism": 1.5}"#).unwrap();
+        assert!(parse_scheduler(&bad).is_err());
     }
 
     #[test]
@@ -295,5 +346,7 @@ mod tests {
         let bad_sched =
             Json::parse(r#"{"bench": "gaussian", "scheduler": {"kind": "dynamic"}}"#).unwrap();
         assert!(RunConfig::from_json(&bad_sched).is_err());
+        let bad_reps = Json::parse(r#"{"bench": "gaussian", "reps": 1}"#).unwrap();
+        assert!(RunConfig::from_json(&bad_reps).is_err(), "reps < 2 rejected");
     }
 }

@@ -5,10 +5,11 @@
 //! that assert the paper's qualitative claims.
 
 use crate::benchsuite::{Bench, BenchId};
+use crate::jsonio::Json;
 use crate::metrics;
 use crate::scheduler::{HGuidedParams, SchedulerKind};
 use crate::stats::geomean;
-use crate::types::{ExecMode, Optimizations};
+use crate::types::{EstimateScenario, ExecMode, Optimizations, TimeBudget};
 
 use super::Engine;
 
@@ -421,6 +422,171 @@ pub fn inflection_improvement(infl: &[Inflection], from: OptLevel, to: OptLevel)
     crate::stats::mean(&rel)
 }
 
+// ------------------------------------------------------ deadline sweep
+/// One cell of the deadline sweep: a (benchmark, scheduler, estimate
+/// scenario, budget) combination aggregated over the repetition protocol.
+#[derive(Debug, Clone)]
+pub struct DeadlineRow {
+    pub bench: String,
+    pub scheduler: String,
+    pub estimate: String,
+    /// Budget as a multiple of the ideal co-execution time.
+    pub budget_mult: f64,
+    pub deadline_s: f64,
+    pub mean_roi_s: f64,
+    /// Fraction of runs that met the deadline.
+    pub hit_rate: f64,
+    /// Mean slack (positive = finished early).
+    pub mean_slack_s: f64,
+    pub speedup: f64,
+    pub max_speedup: f64,
+    pub efficiency: f64,
+}
+
+impl CsvRow for DeadlineRow {
+    fn csv_header() -> &'static str {
+        "bench,scheduler,estimate,budget_mult,deadline_s,mean_roi_s,hit_rate,\
+         mean_slack_s,speedup,max_speedup,efficiency"
+    }
+    fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{},{},{}",
+            self.bench,
+            self.scheduler,
+            self.estimate,
+            self.budget_mult,
+            self.deadline_s,
+            self.mean_roi_s,
+            self.hit_rate,
+            self.mean_slack_s,
+            self.speedup,
+            self.max_speedup,
+            self.efficiency
+        )
+    }
+}
+
+impl DeadlineRow {
+    /// jsonio projection: one object per sweep cell.  The efficiency
+    /// triple is emitted through [`metrics::EfficiencyReport::to_json`]
+    /// so the sweep and single-run reports share one projection.
+    pub fn to_json(&self) -> Json {
+        let base = Json::obj(vec![
+            ("bench", Json::Str(self.bench.clone())),
+            ("scheduler", Json::Str(self.scheduler.clone())),
+            ("estimate", Json::Str(self.estimate.clone())),
+            ("budget_mult", Json::Num(self.budget_mult)),
+            ("deadline_s", Json::Num(self.deadline_s)),
+            ("mean_roi_s", Json::Num(self.mean_roi_s)),
+            ("hit_rate", Json::Num(self.hit_rate)),
+            ("mean_slack_s", Json::Num(self.mean_slack_s)),
+        ]);
+        let report = metrics::EfficiencyReport {
+            speedup: self.speedup,
+            max_speedup: self.max_speedup,
+            efficiency: self.efficiency,
+        };
+        let (Json::Obj(mut obj), Json::Obj(eff)) = (base, report.to_json()) else {
+            unreachable!("Json::obj always builds objects");
+        };
+        obj.extend(eff);
+        Json::Obj(obj)
+    }
+}
+
+/// The whole sweep as one JSON document.
+pub fn deadline_rows_json(rows: &[DeadlineRow]) -> Json {
+    Json::Arr(rows.iter().map(DeadlineRow::to_json).collect())
+}
+
+/// The default budget ladder, as multiples of the ideal co-execution
+/// time: infeasible-tight, on-the-edge, and comfortably loose.
+pub fn deadline_budget_mults() -> Vec<f64> {
+    vec![1.05, 1.2, 1.5]
+}
+
+/// Sweep time budgets × estimation scenarios × schedulers (the seven
+/// Fig.-3 bars + Adaptive) over every benchmark.  Budgets are set as
+/// multiples of each benchmark's ideal co-execution time
+/// `1 / Σ(1/T_i)`, so a multiplier near the co-execution efficiency
+/// ceiling (~1.2 at the testbed's retention) is the interesting edge.
+pub fn deadline_sweep(
+    reps: usize,
+    estimates: &[EstimateScenario],
+    budget_mults: &[f64],
+) -> Vec<DeadlineRow> {
+    let mut rows = Vec::new();
+    for id in BenchId::ALL {
+        let bench = Bench::new(id);
+        let base = Engine::new(bench.clone());
+        let standalone = base.standalone_times(reps.clamp(2, 8));
+        let t_ideal = 1.0 / standalone.iter().map(|t| 1.0 / t).sum::<f64>();
+        for &est in estimates {
+            for &mult in budget_mults {
+                let budget = TimeBudget::new(mult * t_ideal);
+                for kind in SchedulerKind::all_configs() {
+                    let rep = base
+                        .clone()
+                        .with_scheduler(kind.clone())
+                        .with_estimate(est)
+                        .with_budget(budget)
+                        .run_reps(reps);
+                    let dl = rep.deadline.expect("budget configured");
+                    let eff = metrics::coexec_efficiency(&standalone, rep.time.mean);
+                    rows.push(DeadlineRow {
+                        bench: id.label().into(),
+                        scheduler: kind.label(),
+                        estimate: est.label(),
+                        budget_mult: mult,
+                        deadline_s: budget.deadline_s,
+                        mean_roi_s: rep.time.mean,
+                        hit_rate: dl.hit_rate,
+                        mean_slack_s: dl.mean_slack_s,
+                        speedup: eff.speedup,
+                        max_speedup: eff.max_speedup,
+                        efficiency: eff.efficiency,
+                    });
+                }
+            }
+        }
+    }
+    rows
+}
+
+/// Per-scheduler aggregate over one estimate scenario's rows (the
+/// deadline analog of the Fig.-3 geomean bars).
+#[derive(Debug, Clone)]
+pub struct DeadlineMean {
+    pub scheduler: String,
+    pub mean_efficiency: f64,
+    pub hit_rate: f64,
+    pub mean_slack_s: f64,
+}
+
+/// Aggregate `rows` (filtered to `estimate`) per scheduler, in
+/// `all_configs` bar order.
+pub fn deadline_scheduler_means(rows: &[DeadlineRow], estimate: &str) -> Vec<DeadlineMean> {
+    SchedulerKind::all_configs()
+        .iter()
+        .map(|kind| {
+            let label = kind.label();
+            let group: Vec<&DeadlineRow> = rows
+                .iter()
+                .filter(|r| r.scheduler == label && r.estimate == estimate)
+                .collect();
+            let mean_of = |f: &dyn Fn(&DeadlineRow) -> f64| {
+                crate::stats::mean(&group.iter().map(|r| f(r)).collect::<Vec<_>>())
+            };
+            DeadlineMean {
+                scheduler: label,
+                mean_efficiency: mean_of(&|r| r.efficiency),
+                hit_rate: mean_of(&|r| r.hit_rate),
+                mean_slack_s: mean_of(&|r| r.mean_slack_s),
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -481,6 +647,32 @@ mod tests {
         }];
         let inf = inflections(&rows);
         assert!(inf[0].gws.is_none());
+    }
+
+    #[test]
+    fn deadline_sweep_shape_and_json() {
+        // One scenario, one budget: 6 benches x 8 schedulers.
+        let rows = deadline_sweep(3, &[EstimateScenario::Exact], &[1.2]);
+        assert_eq!(rows.len(), 6 * 8);
+        assert!(rows.iter().all(|r| r.deadline_s > 0.0 && r.efficiency > 0.0));
+        assert!(rows.iter().any(|r| r.scheduler == "Adaptive"));
+        let j = crate::jsonio::Json::parse(&deadline_rows_json(&rows).to_string()).unwrap();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), rows.len());
+        assert!(arr[0].get("hit_rate").unwrap().as_f64().is_some());
+        assert!(arr[0].get("mean_slack_s").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn deadline_means_cover_all_bars() {
+        let rows = deadline_sweep(3, &[EstimateScenario::Exact], &[1.5]);
+        let means = deadline_scheduler_means(&rows, "exact");
+        assert_eq!(means.len(), 8);
+        assert_eq!(means[7].scheduler, "Adaptive");
+        assert!(means.iter().all(|m| m.mean_efficiency > 0.0));
+        // A wrong estimate label aggregates nothing.
+        let empty = deadline_scheduler_means(&rows, "pessimistic(0.30)");
+        assert!(empty.iter().all(|m| m.mean_efficiency == 0.0));
     }
 
     #[test]

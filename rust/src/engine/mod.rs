@@ -16,10 +16,11 @@
 //! ```
 //!
 //! `Engine::run` drives the virtual-clock backend; the PJRT threaded
-//! backend lives in [`pjrt`] and the figure-regeneration harness in
-//! [`experiments`].
+//! backend lives in `pjrt` (behind the non-default `pjrt` feature) and
+//! the figure-regeneration harness in [`experiments`].
 
 pub mod experiments;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 use crate::benchsuite::Bench;
@@ -28,7 +29,7 @@ use crate::metrics;
 use crate::scheduler::SchedulerKind;
 use crate::sim::{simulate, SimConfig, SimOutcome};
 use crate::stats::Summary;
-use crate::types::{DeviceSpec, ExecMode, Optimizations};
+use crate::types::{DeviceSpec, EstimateScenario, ExecMode, Optimizations, TimeBudget};
 
 /// Tier-1 entry point: configure and launch co-executions of one
 /// benchmark program.
@@ -41,6 +42,8 @@ pub struct Engine {
     opts: Optimizations,
     driver: DriverProfile,
     gws: Option<u64>,
+    budget: Option<TimeBudget>,
+    estimate: EstimateScenario,
 }
 
 /// One run's report: timing + the paper's metrics inputs.
@@ -59,6 +62,17 @@ pub struct RepsReport {
     pub time: Summary,
     pub balance: Summary,
     pub mean_packages: f64,
+    /// Deadline aggregates when a [`TimeBudget`] is configured.
+    pub deadline: Option<DeadlineStats>,
+}
+
+/// Deadline aggregates over one repetition set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeadlineStats {
+    /// Fraction of (post-warm-up) runs that met the deadline.
+    pub hit_rate: f64,
+    /// Mean slack (positive = early) over those runs.
+    pub mean_slack_s: f64,
 }
 
 impl Engine {
@@ -75,6 +89,8 @@ impl Engine {
             opts: Optimizations::ALL,
             driver: DriverProfile::commodity_desktop(),
             gws: None,
+            budget: None,
+            estimate: EstimateScenario::Exact,
         }
     }
 
@@ -121,6 +137,19 @@ impl Engine {
         self
     }
 
+    /// Attach an ROI time budget (the paper's time-constrained scenario):
+    /// runs record deadline verdicts and deadline-aware schedulers adapt.
+    pub fn with_budget(mut self, budget: TimeBudget) -> Self {
+        self.budget = Some(budget);
+        self
+    }
+
+    /// Configure the scheduler's power-estimation scenario.
+    pub fn with_estimate(mut self, estimate: EstimateScenario) -> Self {
+        self.estimate = estimate;
+        self
+    }
+
     pub fn bench(&self) -> &Bench {
         &self.bench
     }
@@ -137,6 +166,8 @@ impl Engine {
             seed,
             record_packages: false,
             fail: None,
+            budget: self.budget,
+            estimate: self.estimate,
         }
     }
 
@@ -181,18 +212,28 @@ impl Engine {
         let mut times = Vec::with_capacity(reps);
         let mut balances = Vec::with_capacity(reps);
         let mut packages = 0.0;
+        let mut hits = 0usize;
+        let mut slacks = Vec::new();
         for rep in 0..reps {
             let r = self.run(rep as u64 + 1);
             times.push(r.time);
             balances.push(r.balance);
             if rep > 0 {
                 packages += r.outcome.n_packages as f64;
+                if let Some(v) = r.outcome.deadline {
+                    hits += v.met as usize;
+                    slacks.push(v.slack_s);
+                }
             }
         }
         RepsReport {
             time: Summary::over(&times, 1),
             balance: Summary::over(&balances, 1),
             mean_packages: packages / (reps - 1) as f64,
+            deadline: self.budget.map(|_| DeadlineStats {
+                hit_rate: hits as f64 / slacks.len().max(1) as f64,
+                mean_slack_s: crate::stats::mean(&slacks),
+            }),
         }
     }
 
@@ -263,5 +304,42 @@ mod tests {
         let co = e.run_reps(4).time.mean;
         let solo = e.clone().gpu_only().run_reps(4).time.mean;
         assert!(co < solo, "coexec {co} !< solo {solo}");
+    }
+
+    #[test]
+    fn budget_threads_through_to_reports() {
+        use crate::types::TimeBudget;
+        let plain = small(BenchId::Gaussian).run_reps(4);
+        assert!(plain.deadline.is_none(), "no budget, no stats");
+        let loose = small(BenchId::Gaussian)
+            .with_budget(TimeBudget::new(1e9))
+            .run_reps(4)
+            .deadline
+            .expect("budget configured");
+        assert_eq!(loose.hit_rate, 1.0);
+        assert!(loose.mean_slack_s > 0.0);
+        let tight = small(BenchId::Gaussian)
+            .with_budget(TimeBudget::new(1e-6))
+            .run_reps(4)
+            .deadline
+            .unwrap();
+        assert_eq!(tight.hit_rate, 0.0);
+        assert!(tight.mean_slack_s < 0.0);
+    }
+
+    #[test]
+    fn estimate_builder_changes_runs_deterministically() {
+        use crate::types::EstimateScenario;
+        let exact = small(BenchId::Mandelbrot).run(1);
+        let pess = small(BenchId::Mandelbrot)
+            .with_estimate(EstimateScenario::Pessimistic { err: 0.3 })
+            .run(1);
+        // Same seed, different scheduler view -> different trace.
+        assert_ne!(exact.outcome.n_packages, 0);
+        assert!(pess.time > 0.0);
+        let pess2 = small(BenchId::Mandelbrot)
+            .with_estimate(EstimateScenario::Pessimistic { err: 0.3 })
+            .run(1);
+        assert_eq!(pess.time.to_bits(), pess2.time.to_bits(), "deterministic");
     }
 }

@@ -209,7 +209,12 @@ fn run_worker(
     };
 
     loop {
-        let pkg: Option<GroupRange> = sched.lock().unwrap().next(dev);
+        let pkg: Option<GroupRange> = {
+            let mut s = sched.lock().unwrap();
+            // Real wall clock feeds deadline-aware schedulers.
+            s.on_clock(roi_start.elapsed().as_secs_f64());
+            s.next(dev)
+        };
         let Some(range) = pkg else { break };
         let pkg_start = Instant::now();
         for tile in range.begin..range.end {

@@ -73,6 +73,12 @@ impl Json {
         self.as_obj()?.get(key)
     }
 
+    /// Build an object value from (key, value) pairs — the writer-side
+    /// convenience for report emission.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
     /// Parse a JSON document.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
@@ -394,6 +400,14 @@ mod tests {
         assert_eq!(Json::parse("1.5").unwrap().as_u64(), None);
         assert_eq!(Json::parse("-3").unwrap().as_u64(), None);
         assert_eq!(Json::parse("0.001").unwrap().as_f64(), Some(0.001));
+    }
+
+    #[test]
+    fn obj_builder_makes_lookupable_objects() {
+        let v = Json::obj(vec![("a", Json::Num(1.0)), ("b", Json::Str("x".into()))]);
+        assert_eq!(v.get("a").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("x"));
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
     }
 
     #[test]

@@ -17,14 +17,22 @@
 //!
 //! * [`sim`] — a deterministic virtual-clock backend that co-executes the
 //!   three paper devices (CPU / iGPU / GPU) on one host core; used by every
-//!   figure-regeneration bench (Figs 3–6).
-//! * [`runtime`] + the threaded PJRT backend in [`engine::pjrt`] — really
+//!   figure-regeneration bench (Figs 3–6) and the deadline sweep.
+//! * [`runtime`] + the threaded PJRT backend in `engine::pjrt` — really
 //!   executes the AOT HLO kernels through the `xla` crate's PJRT CPU
 //!   client, one client per device thread (mirroring per-device OpenCL
-//!   contexts); used by the examples and integration tests.
+//!   contexts); used by the examples and integration tests.  Gated behind
+//!   the non-default `pjrt` cargo feature (needs the native XLA library).
+//!
+//! The paper's headline *time-constrained scenario* is first-class: attach
+//! a [`types::TimeBudget`] to a run (or `Engine::with_budget`) and the
+//! simulator records deadline verdicts while the
+//! [`scheduler::adaptive::Adaptive`] scheduler adapts its package sizing
+//! to the remaining budget under pessimistic power estimation
+//! ([`types::EstimateScenario`]).
 //!
 //! Start at [`engine::Engine`] (the Tier-1 API in the paper's terms) or
-//! run `cargo run --release -- fig3`.
+//! run `cargo run --release -- fig3` / `-- deadline-sweep`.
 
 pub mod benchsuite;
 pub mod cldriver;
@@ -40,7 +48,9 @@ pub mod stats;
 pub mod types;
 
 pub use engine::{Engine, RunReport};
-pub use types::{DeviceClass, DeviceId, GroupRange, Package};
+pub use types::{
+    DeadlineVerdict, DeviceClass, DeviceId, EstimateScenario, GroupRange, Package, TimeBudget,
+};
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

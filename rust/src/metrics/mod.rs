@@ -1,7 +1,11 @@
 //! The paper's three evaluation metrics (§IV): balance, speedup and
-//! efficiency, plus the maximum-achievable-speedup bound they reference.
+//! efficiency, plus the maximum-achievable-speedup bound they reference
+//! and the bundled [`EfficiencyReport`] / deadline projections the
+//! deadline sweep emits as JSON.
 
+use crate::jsonio::Json;
 use crate::sim::SimOutcome;
+use crate::types::DeadlineVerdict;
 
 /// Load-balance effectiveness: `T_FD / T_LD` over the devices that
 /// actually received work — 1.0 when all finish simultaneously (paper
@@ -54,6 +58,48 @@ pub fn efficiency(s_real: f64, s_max: f64) -> f64 {
     s_real / s_max
 }
 
+/// The §IV headline numbers of one co-execution, bundled for reporting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EfficiencyReport {
+    pub speedup: f64,
+    pub max_speedup: f64,
+    pub efficiency: f64,
+}
+
+/// Compute speedup / S_max / efficiency of a co-execution time against
+/// the devices' standalone whole-problem times (the fastest device is the
+/// speedup baseline).  This is the number the paper reports as 0.84 under
+/// its pessimistic scenario.
+pub fn coexec_efficiency(standalone_times: &[f64], coexec_time: f64) -> EfficiencyReport {
+    assert!(!standalone_times.is_empty());
+    assert!(coexec_time > 0.0, "coexec time must be positive");
+    let fastest = standalone_times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let s_max = max_speedup(standalone_times);
+    let s = speedup(fastest, coexec_time);
+    EfficiencyReport { speedup: s, max_speedup: s_max, efficiency: efficiency(s, s_max) }
+}
+
+impl EfficiencyReport {
+    /// jsonio projection (the deadline sweep's per-run emission).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("speedup", Json::Num(self.speedup)),
+            ("max_speedup", Json::Num(self.max_speedup)),
+            ("efficiency", Json::Num(self.efficiency)),
+        ])
+    }
+}
+
+/// jsonio projection of a deadline verdict.
+pub fn deadline_json(v: &DeadlineVerdict) -> Json {
+    Json::obj(vec![
+        ("deadline_s", Json::Num(v.deadline_s)),
+        ("roi_s", Json::Num(v.roi_s)),
+        ("met", Json::Bool(v.met)),
+        ("slack_s", Json::Num(v.slack_s)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -78,6 +124,7 @@ mod tests {
                 .collect(),
             n_packages: finishes.iter().map(|&(p, _)| p).sum(),
             packages: vec![],
+            deadline: None,
         }
     }
 
@@ -125,5 +172,36 @@ mod tests {
         let ideal_t = 1.0 / times.iter().map(|t| 1.0 / t).sum::<f64>();
         let s_real = speedup(2.0, ideal_t);
         assert!((efficiency(s_real, smax) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coexec_efficiency_bundles_consistently() {
+        let times = [13.3, 5.0, 2.0];
+        let ideal_t = 1.0 / times.iter().map(|t| 1.0 / t).sum::<f64>();
+        let r = coexec_efficiency(&times, ideal_t);
+        assert!((r.efficiency - 1.0).abs() < 1e-12, "ideal coexec is 100% efficient");
+        assert!((r.speedup - r.max_speedup).abs() < 1e-12);
+        let half = coexec_efficiency(&times, ideal_t * 2.0);
+        assert!((half.efficiency - 0.5).abs() < 1e-12);
+        assert_eq!(half.max_speedup, r.max_speedup, "S_max is workload-intrinsic");
+    }
+
+    #[test]
+    fn efficiency_report_json_roundtrips() {
+        let r = EfficiencyReport { speedup: 1.2, max_speedup: 1.5, efficiency: 0.8 };
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("speedup").unwrap().as_f64(), Some(1.2));
+        assert_eq!(j.get("max_speedup").unwrap().as_f64(), Some(1.5));
+        assert_eq!(j.get("efficiency").unwrap().as_f64(), Some(0.8));
+    }
+
+    #[test]
+    fn deadline_verdict_json_fields() {
+        let v = DeadlineVerdict { deadline_s: 2.0, roi_s: 1.5, met: true, slack_s: 0.5 };
+        let j = Json::parse(&deadline_json(&v).to_string()).unwrap();
+        assert_eq!(j.get("met").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("slack_s").unwrap().as_f64(), Some(0.5));
+        assert_eq!(j.get("deadline_s").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("roi_s").unwrap().as_f64(), Some(1.5));
     }
 }

@@ -1,12 +1,15 @@
 //! Tile execution on the PJRT CPU client.
 //!
-//! [`TileRunner`] compiles one artifact once (the *initialization* stage of
-//! the paper; under the init optimization every device thread compiles
-//! concurrently) and then executes tiles from the request path with no
-//! Python anywhere.  [`HostArray`] is the typed host-side buffer handed in
-//! and out — the L3 analogue of an OpenCL buffer slice.
+//! `TileRunner` (pjrt feature) compiles one artifact once (the
+//! *initialization* stage of the paper; under the init optimization every
+//! device thread compiles concurrently) and then executes tiles from the
+//! request path with no Python anywhere.  [`HostArray`] is the typed
+//! host-side buffer handed in and out — the L3 analogue of an OpenCL
+//! buffer slice.
 
+#[cfg(feature = "pjrt")]
 use super::artifact::{ArtifactDir, ManifestEntry};
+#[cfg(feature = "pjrt")]
 use anyhow::{anyhow, bail, Context, Result};
 
 /// Typed host buffer (row-major).
@@ -60,6 +63,7 @@ impl HostArray {
     }
 
     /// Encode as an `xla::Literal` (the PJRT host-buffer upload step).
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
         let lit = match &self.data {
@@ -69,6 +73,7 @@ impl HostArray {
         Ok(lit.reshape(&dims)?)
     }
 
+    #[cfg(feature = "pjrt")]
     fn from_literal(lit: &xla::Literal) -> Result<Self> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -85,6 +90,7 @@ impl HostArray {
 /// NOT `Send` (PJRT handles are raw pointers): construct inside the device
 /// thread, as EngineCL constructs per-device OpenCL state inside each
 /// Device thread.
+#[cfg(feature = "pjrt")]
 pub struct TileRunner {
     pub entry: ManifestEntry,
     exe: xla::PjRtLoadedExecutable,
@@ -92,6 +98,7 @@ pub struct TileRunner {
     pub tiles_run: u64,
 }
 
+#[cfg(feature = "pjrt")]
 impl TileRunner {
     /// Load + compile `entry` on a fresh CPU client.
     pub fn load(dir: &ArtifactDir, name: &str) -> Result<Self> {
@@ -158,6 +165,7 @@ mod tests {
     use super::*;
 
     #[test]
+    #[cfg(feature = "pjrt")]
     fn host_array_roundtrip_f32() {
         let a = HostArray::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         let lit = a.to_literal().unwrap();
@@ -166,11 +174,22 @@ mod tests {
     }
 
     #[test]
+    #[cfg(feature = "pjrt")]
     fn host_array_roundtrip_i32() {
         let a = HostArray::i32(vec![4], vec![-1, 0, 7, 42]);
         let lit = a.to_literal().unwrap();
         let b = HostArray::from_literal(&lit).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn host_array_len_and_accessors() {
+        let a = HostArray::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.len(), 4);
+        assert!(!a.is_empty());
+        assert_eq!(a.as_f32()[3], 4.0);
+        let b = HostArray::i32(vec![3], vec![7, 8, 9]);
+        assert_eq!(b.as_i32(), &[7, 8, 9]);
     }
 
     #[test]

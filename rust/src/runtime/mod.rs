@@ -7,11 +7,18 @@
 //! text parser reassigns ids (see /opt/xla-example/README.md).
 //!
 //! `xla` handles are not `Send`: each PJRT device thread owns its own
-//! [`TileRunner`] (client + compiled executables), exactly as each
+//! `TileRunner` (client + compiled executables), exactly as each
 //! EngineCL device thread owns its OpenCL context/queue.
+//!
+//! Everything touching the `xla` crate sits behind the non-default
+//! `pjrt` cargo feature, so the crate builds on machines without the
+//! native XLA library; the artifact manifest and [`HostArray`] plumbing
+//! stay available either way.
 
 pub mod artifact;
 pub mod exec;
 
 pub use artifact::{ArtifactDir, Manifest, ManifestEntry};
-pub use exec::{HostArray, HostData, TileRunner};
+pub use exec::{HostArray, HostData};
+#[cfg(feature = "pjrt")]
+pub use exec::TileRunner;

@@ -1,0 +1,295 @@
+//! Deadline-aware scheduler — the paper's improved load-balancing
+//! algorithm for *time-constrained scenarios*.
+//!
+//! Builds on HGuided's power-proportional decay and adds a **pessimistic
+//! completion cap**: a device asking for work at time `now` is never
+//! handed more than `(1 - pessimism) · thr_i · (deadline - now)`
+//! work-groups — under pessimistic power estimation no single grant can
+//! push its device past the deadline.  The cap doubles as an **adaptive
+//! minimum-package floor**: the effective floor is `min(m_i, cap_i)`, so
+//! as the deadline approaches even the minimum package shrinks (down to a
+//! single work-group) and the finish times cluster in front of the
+//! deadline instead of straggling past it.  Once the deadline is lost the
+//! cap disengages and the scheduler finishes in plain efficiency mode
+//! instead of thrashing tiny packages.
+//!
+//! Without a deadline in the [`SchedCtx`] the grant sequence is
+//! *identical* to HGuided's with the same `(m, k)` — `Adaptive` is a
+//! strict superset of the paper's best Fig.-3 configuration.  (An earlier
+//! design also shrank floors throughout the run and delivered to the
+//! fastest device first; both measurably hurt — run-long shrink inflates
+//! the package count, and fastest-first pushes the large PCIe upload to
+//! the front of the serialized host thread, delaying every other device.)
+
+use super::{HGuided, HGuidedParams, SchedCtx, Scheduler};
+use crate::types::{DeviceId, GroupRange};
+
+/// Parameters of the deadline-aware scheduler.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptiveParams {
+    /// Baseline minimum package sizes per device, in work-groups (the
+    /// HGuided `m_i`); the effective floor is `min(m_i, cap_i)`.
+    pub min_mult: Vec<u64>,
+    /// Decay constants per device (the HGuided `k_i`).
+    pub k: Vec<f64>,
+    /// Throughput derating for the completion cap, in [0, 1): 0 trusts
+    /// the power estimates, larger values guard harder against
+    /// overcommitting a device close to the deadline.
+    pub pessimism: f64,
+}
+
+impl AdaptiveParams {
+    /// Default: the paper's tuned HGuided parameters with a 25 %
+    /// pessimistic throughput guard.
+    pub fn default_paper() -> Self {
+        let h = HGuidedParams::optimized_paper();
+        Self { min_mult: h.min_mult, k: h.k, pessimism: 0.25 }
+    }
+
+    /// Uniform parameters for an n-device system.
+    pub fn uniform(n: usize, m: u64, k: f64, pessimism: f64) -> Self {
+        Self { min_mult: vec![m; n], k: vec![k; n], pessimism }
+    }
+
+    /// The HGuided parameter subset (sizing is delegated wholesale).
+    pub fn hguided(&self) -> HGuidedParams {
+        HGuidedParams { min_mult: self.min_mult.clone(), k: self.k.clone() }
+    }
+
+    pub fn validate(&self, n_devices: usize) -> crate::Result<()> {
+        use anyhow::ensure;
+        self.hguided().validate(n_devices)?;
+        ensure!(
+            (0.0..1.0).contains(&self.pessimism),
+            "pessimism must be in [0, 1), got {}",
+            self.pessimism
+        );
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for AdaptiveParams {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let m: Vec<String> = self.min_mult.iter().map(|m| m.to_string()).collect();
+        let k: Vec<String> = self.k.iter().map(|k| format!("{k}")).collect();
+        write!(f, "m{{{}}} k{{{}}} p{}", m.join(","), k.join(","), self.pessimism)
+    }
+}
+
+pub struct Adaptive {
+    /// The HGuided core: decay formula, floors, and the grant cursor.
+    /// Delegating (rather than duplicating the formula) is what makes
+    /// the "identical to HGuided when unconstrained" invariant hold by
+    /// construction.
+    inner: HGuided,
+    params: AdaptiveParams,
+    /// ROI deadline (seconds), if this run is time-constrained.
+    deadline_s: Option<f64>,
+    /// Estimated device throughputs in work-groups/second (same `P_i`
+    /// source as the powers), feeding the completion cap.
+    groups_per_sec: Option<Vec<f64>>,
+    /// Latest backend clock observed via [`Scheduler::on_clock`].
+    now_s: f64,
+}
+
+impl Adaptive {
+    pub fn new(ctx: &SchedCtx, params: AdaptiveParams) -> Self {
+        params
+            .validate(ctx.n_devices())
+            .expect("invalid Adaptive parameters for this device count");
+        if let Some(thr) = &ctx.groups_per_sec {
+            assert_eq!(thr.len(), ctx.n_devices(), "throughput hint arity mismatch");
+        }
+        Self {
+            inner: HGuided::new(ctx, params.hguided()),
+            params,
+            deadline_s: ctx.deadline_s,
+            groups_per_sec: ctx.groups_per_sec.clone(),
+            now_s: 0.0,
+        }
+    }
+
+    /// Pending work-groups `G_r`.
+    pub fn pending(&self) -> u64 {
+        self.inner.pending()
+    }
+
+    /// Pessimistic completion cap for `dev` at the current clock: the
+    /// most work-groups it could finish before the deadline at
+    /// `(1 - pessimism)` of its estimated throughput.  `u64::MAX` when
+    /// unconstrained, unhinted, or once the deadline is already lost
+    /// (plain efficiency mode — no tiny-package thrashing).
+    pub fn cap(&self, dev: DeviceId) -> u64 {
+        let (Some(d), Some(thr)) = (self.deadline_s, self.groups_per_sec.as_ref()) else {
+            return u64::MAX;
+        };
+        let remaining = d - self.now_s;
+        if remaining <= 0.0 {
+            return u64::MAX;
+        }
+        let t = thr[dev];
+        if !(t.is_finite() && t > 0.0) {
+            return u64::MAX;
+        }
+        let feasible = (1.0 - self.params.pessimism) * t * remaining;
+        (feasible.floor() as u64).max(1)
+    }
+
+    /// The adaptive minimum-package floor: `m_i` while the budget is
+    /// comfortable, shrinking with the completion cap as the deadline
+    /// approaches.
+    pub fn floor(&self, dev: DeviceId) -> u64 {
+        self.params.min_mult[dev].max(1).min(self.cap(dev))
+    }
+
+    /// Packet size for `dev` at the current `G_r` and clock (before
+    /// clamping to the remaining work): HGuided's size, bounded by the
+    /// completion cap.
+    pub fn packet_size(&self, dev: DeviceId) -> u64 {
+        self.inner.packet_size(dev).min(self.cap(dev))
+    }
+}
+
+impl Scheduler for Adaptive {
+    fn next(&mut self, dev: DeviceId) -> Option<GroupRange> {
+        let size = self.packet_size(dev);
+        self.inner.take(size)
+    }
+
+    fn on_clock(&mut self, now_s: f64) {
+        self.now_s = self.now_s.max(now_s);
+    }
+
+    fn n_devices(&self) -> usize {
+        self.inner.n_devices()
+    }
+
+    fn label(&self) -> String {
+        "Adaptive".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::HGuided;
+
+    fn ctx() -> SchedCtx {
+        SchedCtx::new(10_000, vec![0.15, 0.4, 1.0])
+    }
+
+    fn deadline_ctx(deadline_s: f64, thr: Vec<f64>) -> SchedCtx {
+        ctx().with_deadline(deadline_s, thr)
+    }
+
+    #[test]
+    fn matches_hguided_sizing_without_deadline() {
+        let a = Adaptive::new(&ctx(), AdaptiveParams::default_paper());
+        let h = HGuided::new(&ctx(), HGuidedParams::optimized_paper());
+        for dev in 0..3 {
+            assert_eq!(a.packet_size(dev), h.packet_size(dev), "dev {dev}");
+        }
+    }
+
+    #[test]
+    fn delivery_order_matches_hguided() {
+        // The serialized host thread should enqueue cheap shared-memory
+        // uploads first (an earlier fastest-first variant measurably put
+        // the big PCIe upload in front of every other device).
+        let a = Adaptive::new(&ctx(), AdaptiveParams::default_paper());
+        assert_eq!(a.delivery_order(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn cap_bounds_grants_near_deadline() {
+        let mut a = Adaptive::new(
+            &deadline_ctx(1.0, vec![100.0, 100.0, 100.0]),
+            AdaptiveParams::uniform(3, 1, 2.0, 0.5),
+        );
+        a.on_clock(0.5);
+        // (1 - 0.5) * 100 groups/s * 0.5 s remaining = 25 groups.
+        assert_eq!(a.cap(2), 25);
+        let g = a.next(2).unwrap();
+        assert!(g.len() <= 25, "grant {} exceeds the pessimistic cap", g.len());
+    }
+
+    #[test]
+    fn floor_shrinks_as_deadline_approaches() {
+        let mut a = Adaptive::new(
+            &deadline_ctx(1.0, vec![100.0, 100.0, 100.0]),
+            AdaptiveParams::default_paper(),
+        );
+        assert_eq!(a.floor(2), 30, "full floor while the budget is comfortable");
+        a.on_clock(0.8);
+        // cap = 0.75 * 100 * 0.2 = 15 < m_gpu = 30.
+        assert_eq!(a.floor(2), 15);
+        a.on_clock(0.999);
+        assert_eq!(a.floor(2), 1, "floor collapses at the deadline");
+        assert!(a.floor(0) >= 1, "floor never reaches zero");
+    }
+
+    #[test]
+    fn lost_deadline_reverts_to_efficiency_mode() {
+        let mut a = Adaptive::new(
+            &deadline_ctx(1.0, vec![100.0, 100.0, 100.0]),
+            AdaptiveParams::default_paper(),
+        );
+        a.on_clock(2.0); // past the deadline
+        assert_eq!(a.cap(2), u64::MAX, "cap disengages");
+        assert_eq!(a.floor(2), 30, "floor restored: no 1-group thrashing");
+    }
+
+    #[test]
+    fn clock_is_monotonic() {
+        let mut a = Adaptive::new(
+            &deadline_ctx(1.0, vec![100.0; 3]),
+            AdaptiveParams::default_paper(),
+        );
+        a.on_clock(0.8);
+        let late_cap = a.cap(2);
+        a.on_clock(0.2); // stale tick must not rewind the clock
+        assert_eq!(a.cap(2), late_cap);
+    }
+
+    #[test]
+    fn covers_workspace_under_tight_deadline() {
+        // Even an infeasible budget must not lose or duplicate work.
+        let mut a = Adaptive::new(
+            &deadline_ctx(1e-3, vec![10.0, 10.0, 10.0]),
+            AdaptiveParams::default_paper(),
+        );
+        let mut cursor = 0;
+        let mut clock = 0.0;
+        loop {
+            let dev = (cursor % 3) as usize;
+            a.on_clock(clock);
+            match a.next(dev) {
+                Some(g) => {
+                    assert_eq!(g.begin, cursor, "gap/overlap");
+                    cursor = g.end;
+                    clock += 1e-4;
+                }
+                None => break,
+            }
+        }
+        assert_eq!(cursor, 10_000, "workspace fully covered");
+    }
+
+    #[test]
+    fn missing_throughput_hint_degrades_to_hguided() {
+        let mut c = ctx();
+        c.deadline_s = Some(1.0); // deadline without a throughput hint
+        let mut a = Adaptive::new(&c, AdaptiveParams::default_paper());
+        a.on_clock(0.5);
+        assert_eq!(a.cap(2), u64::MAX);
+        assert_eq!(a.floor(2), 30, "plain HGuided floor without a hint");
+        let h = HGuided::new(&ctx(), HGuidedParams::optimized_paper());
+        assert_eq!(a.packet_size(2), h.packet_size(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid Adaptive parameters")]
+    fn bad_pessimism_rejected() {
+        Adaptive::new(&ctx(), AdaptiveParams::uniform(3, 1, 2.0, 1.0));
+    }
+}

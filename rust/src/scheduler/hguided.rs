@@ -99,17 +99,26 @@ impl HGuided {
             (gr * self.powers[dev] / (self.params.k[dev] * n * self.power_sum)).ceil() as u64;
         decayed.max(self.params.min_mult[dev]).max(1)
     }
+
+    /// Grant `size` work-groups (clamped to the pending range) from the
+    /// front of the index space; `None` once the workspace is drained.
+    /// Shared by [`Scheduler::next`] and the deadline-aware wrapper
+    /// (`scheduler::adaptive`), which caps `size` before granting.
+    pub fn take(&mut self, size: u64) -> Option<GroupRange> {
+        if self.pending_begin >= self.total {
+            return None;
+        }
+        let size = size.max(1).min(self.pending());
+        let begin = self.pending_begin;
+        self.pending_begin += size;
+        Some(GroupRange::new(begin, begin + size))
+    }
 }
 
 impl Scheduler for HGuided {
     fn next(&mut self, dev: DeviceId) -> Option<GroupRange> {
-        if self.pending_begin >= self.total {
-            return None;
-        }
-        let size = self.packet_size(dev).min(self.pending());
-        let begin = self.pending_begin;
-        self.pending_begin += size;
-        Some(GroupRange::new(begin, begin + size))
+        let size = self.packet_size(dev);
+        self.take(size)
     }
 
     fn n_devices(&self) -> usize {

@@ -8,10 +8,12 @@
 //! the host thread, which is exactly the serialization the paper's
 //! "Runtime and Scheduler are CPU-managed" remark describes.
 
+pub mod adaptive;
 pub mod dynamic;
 pub mod hguided;
 pub mod r#static;
 
+pub use adaptive::{Adaptive, AdaptiveParams};
 pub use dynamic::Dynamic;
 pub use hguided::{HGuided, HGuidedParams};
 pub use r#static::Static;
@@ -26,13 +28,30 @@ pub struct SchedCtx {
     pub total_groups: u64,
     /// Scheduler's computing-power estimates `P_i`, one per device.
     pub powers: Vec<f64>,
+    /// ROI deadline for time-constrained runs (seconds, ROI-relative);
+    /// `None` = unconstrained.
+    pub deadline_s: Option<f64>,
+    /// Estimated per-device throughput in work-groups/second, derived from
+    /// the same `P_i` estimates — the basis for deadline-aware package
+    /// caps.  `None` = no hint available.
+    pub groups_per_sec: Option<Vec<f64>>,
 }
 
 impl SchedCtx {
     pub fn new(total_groups: u64, powers: Vec<f64>) -> Self {
         assert!(!powers.is_empty(), "scheduler needs at least one device");
         assert!(powers.iter().all(|&p| p > 0.0), "powers must be positive");
-        Self { total_groups, powers }
+        Self { total_groups, powers, deadline_s: None, groups_per_sec: None }
+    }
+
+    /// Attach a time-constrained scenario: ROI deadline plus the estimated
+    /// device throughputs the deadline-aware schedulers size against.
+    pub fn with_deadline(mut self, deadline_s: f64, groups_per_sec: Vec<f64>) -> Self {
+        assert!(deadline_s > 0.0, "deadline must be positive");
+        assert_eq!(groups_per_sec.len(), self.powers.len(), "throughput arity mismatch");
+        self.deadline_s = Some(deadline_s);
+        self.groups_per_sec = Some(groups_per_sec);
+        self
     }
 
     pub fn n_devices(&self) -> usize {
@@ -48,6 +67,11 @@ impl SchedCtx {
 pub trait Scheduler: Send {
     /// Next package for an idle device; `None` = nothing left for it.
     fn next(&mut self, dev: DeviceId) -> Option<GroupRange>;
+
+    /// Clock tick from the backend: `now_s` is the ROI-relative time of
+    /// the upcoming grant.  Time-aware schedulers (deadline scenarios)
+    /// adapt their sizing; the default scheduler is stateless in time.
+    fn on_clock(&mut self, _now_s: f64) {}
 
     /// Initial delivery order of devices (paper: Static hands the first
     /// chunk to the CPU, Static-rev to the GPU).  Devices become idle in
@@ -73,6 +97,9 @@ pub enum SchedulerKind {
     Dynamic { n_chunks: u64 },
     /// HGuided with per-device (m, k) parameter pairs.
     HGuided { params: HGuidedParams },
+    /// Deadline-aware HGuided derivative (paper's time-constrained
+    /// improvement): pessimistic completion caps + shrinking floors.
+    Adaptive { params: AdaptiveParams },
 }
 
 impl SchedulerKind {
@@ -89,6 +116,14 @@ impl SchedulerKind {
         ]
     }
 
+    /// The Fig.-3 configurations plus the deadline-aware Adaptive
+    /// scheduler — the bar set of the deadline sweep.
+    pub fn all_configs() -> Vec<SchedulerKind> {
+        let mut v = Self::fig3_configs();
+        v.push(SchedulerKind::Adaptive { params: AdaptiveParams::default_paper() });
+        v
+    }
+
     /// Instantiate a fresh scheduler for one run.
     pub fn build(&self, ctx: &SchedCtx) -> Box<dyn Scheduler> {
         match self {
@@ -96,6 +131,7 @@ impl SchedulerKind {
             SchedulerKind::StaticRev => Box::new(Static::new(ctx, true)),
             SchedulerKind::Dynamic { n_chunks } => Box::new(Dynamic::new(ctx, *n_chunks)),
             SchedulerKind::HGuided { params } => Box::new(HGuided::new(ctx, params.clone())),
+            SchedulerKind::Adaptive { params } => Box::new(Adaptive::new(ctx, params.clone())),
         }
     }
 
@@ -113,6 +149,7 @@ impl SchedulerKind {
                     format!("HGuided {params}")
                 }
             }
+            SchedulerKind::Adaptive { .. } => "Adaptive".into(),
         }
     }
 }
@@ -165,9 +202,16 @@ mod tests {
     }
 
     #[test]
+    fn all_configs_append_adaptive() {
+        let cfgs = SchedulerKind::all_configs();
+        assert_eq!(cfgs.len(), 8);
+        assert_eq!(cfgs[7].label(), "Adaptive");
+    }
+
+    #[test]
     fn all_kinds_cover_workspace() {
         let ctx = SchedCtx::new(1000, vec![0.15, 0.4, 1.0]);
-        for kind in SchedulerKind::fig3_configs() {
+        for kind in SchedulerKind::all_configs() {
             drain_and_check_coverage(kind.build(&ctx), 1000);
         }
     }
@@ -177,9 +221,32 @@ mod tests {
         // Fewer groups than devices/chunks: no scheduler may lose work.
         for total in [1u64, 2, 3, 5] {
             let ctx = SchedCtx::new(total, vec![0.15, 0.4, 1.0]);
-            for kind in SchedulerKind::fig3_configs() {
+            for kind in SchedulerKind::all_configs() {
                 drain_and_check_coverage(kind.build(&ctx), total);
             }
+        }
+    }
+
+    #[test]
+    fn coverage_holds_under_deadline_contexts() {
+        // Deadline + throughput hints must not break coverage for any
+        // scheduler (the deadline-blind ones simply ignore them).
+        for deadline in [1e-4, 0.5, 1e6] {
+            let ctx = SchedCtx::new(997, vec![0.15, 0.4, 1.0])
+                .with_deadline(deadline, vec![50.0, 130.0, 330.0]);
+            for kind in SchedulerKind::all_configs() {
+                drain_and_check_coverage(kind.build(&ctx), 997);
+            }
+        }
+    }
+
+    #[test]
+    fn on_clock_default_is_noop_for_legacy_schedulers() {
+        let ctx = SchedCtx::new(100, vec![0.15, 0.4, 1.0]);
+        for kind in SchedulerKind::fig3_configs() {
+            let mut s = kind.build(&ctx);
+            s.on_clock(123.0);
+            assert!(s.next(0).is_some(), "{}: grant survives clock tick", kind.label());
         }
     }
 

@@ -121,6 +121,99 @@ pub enum ExecMode {
     Roi,
 }
 
+/// A time budget for the ROI of one run — the paper's *time-constrained
+/// scenario* knob.  The deadline is relative to ROI start; schedulers that
+/// are deadline-aware (see `scheduler::adaptive`) adapt their package
+/// sizing to the remaining budget.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimeBudget {
+    /// ROI deadline, in seconds.
+    pub deadline_s: f64,
+}
+
+impl TimeBudget {
+    pub fn new(deadline_s: f64) -> Self {
+        assert!(
+            deadline_s > 0.0 && deadline_s.is_finite(),
+            "deadline must be positive and finite, got {deadline_s}"
+        );
+        Self { deadline_s }
+    }
+
+    /// Remaining budget at `now_s` (clamped at zero once overshot).
+    #[inline]
+    pub fn remaining(&self, now_s: f64) -> f64 {
+        (self.deadline_s - now_s).max(0.0)
+    }
+
+    /// Fraction of the budget still ahead at `now_s`: 1 at ROI start,
+    /// 0 at (and after) the deadline.
+    #[inline]
+    pub fn urgency(&self, now_s: f64) -> f64 {
+        (self.remaining(now_s) / self.deadline_s).clamp(0.0, 1.0)
+    }
+
+    /// Verdict for a finished ROI.
+    pub fn verdict(&self, roi_s: f64) -> DeadlineVerdict {
+        DeadlineVerdict {
+            deadline_s: self.deadline_s,
+            roi_s,
+            met: roi_s <= self.deadline_s,
+            slack_s: self.deadline_s - roi_s,
+        }
+    }
+}
+
+/// Outcome of one run against its [`TimeBudget`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeadlineVerdict {
+    pub deadline_s: f64,
+    pub roi_s: f64,
+    pub met: bool,
+    /// Positive = finished early; negative = overshoot.
+    pub slack_s: f64,
+}
+
+/// How the scheduler's computing-power estimates `P_i` relate to the true
+/// co-execution powers.  The paper profiles powers offline, so the
+/// scheduler may run under estimation error; its headline 0.84 efficiency
+/// is quoted under a *pessimistic* scenario.  The fastest device is the
+/// normalization reference and is never skewed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EstimateScenario {
+    /// Estimates equal the profiled co-execution powers.
+    Exact,
+    /// Slower devices look `err` faster than they really are, so the
+    /// scheduler overcommits them.
+    Optimistic { err: f64 },
+    /// Slower devices look `err` slower than they really are, so the
+    /// scheduler underuses them.
+    Pessimistic { err: f64 },
+}
+
+impl EstimateScenario {
+    /// Apply the skew to one device's true power; `is_reference` marks the
+    /// fastest device.
+    pub fn skew(&self, power: f64, is_reference: bool) -> f64 {
+        if is_reference {
+            return power;
+        }
+        match *self {
+            EstimateScenario::Exact => power,
+            EstimateScenario::Optimistic { err } => power * (1.0 + err.max(0.0)),
+            EstimateScenario::Pessimistic { err } => power * (1.0 - err).max(0.05),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            EstimateScenario::Exact => "exact".into(),
+            EstimateScenario::Optimistic { err } => format!("optimistic({err:.2})"),
+            EstimateScenario::Pessimistic { err } => format!("pessimistic({err:.2})"),
+        }
+    }
+}
+
 /// The two runtime optimizations proposed in paper §III.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Optimizations {
@@ -164,5 +257,49 @@ mod tests {
         assert!(DeviceClass::Cpu.shares_host_memory());
         assert!(DeviceClass::IGpu.shares_host_memory());
         assert!(!DeviceClass::DGpu.shares_host_memory());
+    }
+
+    #[test]
+    fn time_budget_urgency_and_remaining() {
+        let b = TimeBudget::new(2.0);
+        assert_eq!(b.remaining(0.0), 2.0);
+        assert_eq!(b.remaining(1.5), 0.5);
+        assert_eq!(b.remaining(3.0), 0.0);
+        assert!((b.urgency(0.0) - 1.0).abs() < 1e-12);
+        assert!((b.urgency(1.0) - 0.5).abs() < 1e-12);
+        assert_eq!(b.urgency(2.5), 0.0);
+    }
+
+    #[test]
+    fn time_budget_verdict_signs() {
+        let b = TimeBudget::new(1.0);
+        let hit = b.verdict(0.8);
+        assert!(hit.met && hit.slack_s > 0.0);
+        let miss = b.verdict(1.2);
+        assert!(!miss.met && miss.slack_s < 0.0);
+        assert!((miss.slack_s + 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "deadline must be positive")]
+    fn time_budget_rejects_nonpositive() {
+        TimeBudget::new(0.0);
+    }
+
+    #[test]
+    fn estimate_scenarios_skew_non_reference_only() {
+        let p = 0.4;
+        for est in [
+            EstimateScenario::Exact,
+            EstimateScenario::Optimistic { err: 0.3 },
+            EstimateScenario::Pessimistic { err: 0.3 },
+        ] {
+            assert_eq!(est.skew(p, true), p, "reference device never skewed");
+        }
+        assert_eq!(EstimateScenario::Exact.skew(p, false), p);
+        assert!(EstimateScenario::Optimistic { err: 0.3 }.skew(p, false) > p);
+        assert!(EstimateScenario::Pessimistic { err: 0.3 }.skew(p, false) < p);
+        // Extreme pessimism never zeroes a power (scheduler needs P_i > 0).
+        assert!(EstimateScenario::Pessimistic { err: 2.0 }.skew(p, false) > 0.0);
     }
 }

@@ -2,8 +2,11 @@
 //! and executed on the PJRT CPU client, outputs checked against the rust
 //! oracles, and the threaded co-execution backend exercised end-to-end.
 //!
-//! Requires `make artifacts`; every test skips (with a note) when the
-//! artifacts are missing so `cargo test` still passes standalone.
+//! Requires the non-default `pjrt` feature (native XLA library) — the
+//! whole file compiles away without it — plus `make artifacts`; every
+//! test also skips (with a note) when the artifacts are missing so
+//! `cargo test --features pjrt` still passes standalone.
+#![cfg(feature = "pjrt")]
 
 use enginecl::benchsuite::{data::Problem, BenchId};
 use enginecl::engine::pjrt::{run_coexec, PjrtRunConfig};

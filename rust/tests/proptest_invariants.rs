@@ -6,10 +6,12 @@
 //! §Substitutions).
 
 use enginecl::benchsuite::{Bench, BenchId};
-use enginecl::scheduler::{HGuided, HGuidedParams, SchedCtx, Scheduler, SchedulerKind};
+use enginecl::scheduler::{
+    AdaptiveParams, HGuided, HGuidedParams, SchedCtx, Scheduler, SchedulerKind,
+};
 use enginecl::sim::{simulate, SimConfig};
 use enginecl::stats::XorShift64;
-use enginecl::types::GroupRange;
+use enginecl::types::{GroupRange, TimeBudget};
 
 /// Random scheduler context: 1–6 devices, powers in (0.05, 1], any total.
 fn random_ctx(rng: &mut XorShift64) -> SchedCtx {
@@ -19,22 +21,43 @@ fn random_ctx(rng: &mut XorShift64) -> SchedCtx {
     SchedCtx::new(total, powers)
 }
 
+/// Half the contexts additionally carry a random deadline + throughput
+/// hint, exercising the time-constrained scheduler paths.
+fn random_deadline_ctx(rng: &mut XorShift64) -> SchedCtx {
+    let ctx = random_ctx(rng);
+    if rng.below(2) == 0 {
+        return ctx;
+    }
+    let thr: Vec<f64> = ctx.powers.iter().map(|_| rng.uniform(1.0, 1e6)).collect();
+    let deadline = rng.uniform(1e-4, 10.0);
+    ctx.with_deadline(deadline, thr)
+}
+
 fn random_kind(rng: &mut XorShift64, n: usize) -> SchedulerKind {
-    match rng.below(4) {
+    match rng.below(5) {
         0 => SchedulerKind::Static,
         1 => SchedulerKind::StaticRev,
         2 => SchedulerKind::Dynamic { n_chunks: 1 + rng.below(800) },
-        _ => {
+        3 => {
             let params = HGuidedParams {
                 min_mult: (0..n).map(|_| 1 + rng.below(40)).collect(),
                 k: (0..n).map(|_| rng.uniform(0.5, 4.0)).collect(),
             };
             SchedulerKind::HGuided { params }
         }
+        _ => {
+            let params = AdaptiveParams {
+                min_mult: (0..n).map(|_| 1 + rng.below(40)).collect(),
+                k: (0..n).map(|_| rng.uniform(0.5, 4.0)).collect(),
+                pessimism: rng.uniform(0.0, 0.9),
+            };
+            SchedulerKind::Adaptive { params }
+        }
     }
 }
 
-/// Drain a scheduler with randomized request interleaving; return grants.
+/// Drain a scheduler with randomized request interleaving (and a noisy,
+/// monotonically advancing clock); return grants.
 fn drain_random(
     s: &mut Box<dyn Scheduler>,
     rng: &mut XorShift64,
@@ -42,9 +65,12 @@ fn drain_random(
 ) -> Vec<(usize, GroupRange)> {
     let mut live: Vec<usize> = (0..n).collect();
     let mut grants = Vec::new();
+    let mut clock = 0.0;
     while !live.is_empty() {
         let pick = rng.below(live.len() as u64) as usize;
         let dev = live[pick];
+        clock += rng.uniform(0.0, 0.01);
+        s.on_clock(clock);
         match s.next(dev) {
             Some(g) => grants.push((dev, g)),
             None => {
@@ -57,10 +83,11 @@ fn drain_random(
 
 #[test]
 fn prop_every_scheduler_covers_workspace_exactly() {
-    // No gaps, no overlap, no loss — under arbitrary request orders.
+    // No gaps, no overlap, no loss — under arbitrary request orders,
+    // with and without deadline contexts.
     for case in 0..300u64 {
         let mut rng = XorShift64::new(case);
-        let ctx = random_ctx(&mut rng);
+        let ctx = random_deadline_ctx(&mut rng);
         let kind = random_kind(&mut rng, ctx.n_devices());
         let mut s = kind.build(&ctx);
         let mut grants = drain_random(&mut s, &mut rng, ctx.n_devices());
@@ -72,6 +99,38 @@ fn prop_every_scheduler_covers_workspace_exactly() {
             cursor = g.end;
         }
         assert_eq!(cursor, ctx.total_groups, "case {case} ({})", kind.label());
+    }
+}
+
+#[test]
+fn prop_adaptive_covers_workspace_for_arbitrary_budgets() {
+    // The deadline-aware scheduler must never lose or overlap work, for
+    // any budget (feasible, infeasible, microscopic), power set, clock
+    // trajectory, and workload size — including tiny ones.
+    for case in 0..300u64 {
+        let mut rng = XorShift64::new(9000 + case);
+        let n = 1 + rng.below(6) as usize;
+        let powers: Vec<f64> = (0..n).map(|_| rng.uniform(0.05, 1.0)).collect();
+        let total = 1 + rng.below(if case % 3 == 0 { 8 } else { 500_000 });
+        let thr: Vec<f64> = (0..n).map(|_| rng.uniform(0.5, 1e6)).collect();
+        let deadline = rng.uniform(1e-6, 5.0);
+        let ctx = SchedCtx::new(total, powers).with_deadline(deadline, thr);
+        let params = AdaptiveParams {
+            min_mult: (0..n).map(|_| 1 + rng.below(40)).collect(),
+            k: (0..n).map(|_| rng.uniform(0.5, 4.0)).collect(),
+            pessimism: rng.uniform(0.0, 0.9),
+        };
+        let kind = SchedulerKind::Adaptive { params };
+        let mut s = kind.build(&ctx);
+        let mut grants = drain_random(&mut s, &mut rng, n);
+        grants.sort_by_key(|(_, g)| g.begin);
+        let mut cursor = 0;
+        for (_, g) in &grants {
+            assert!(!g.is_empty(), "case {case}: empty grant");
+            assert_eq!(g.begin, cursor, "case {case}: gap/overlap at {cursor}");
+            cursor = g.end;
+        }
+        assert_eq!(cursor, total, "case {case}: work lost (deadline {deadline:.2e})");
     }
 }
 
@@ -139,17 +198,21 @@ fn prop_simulation_conserves_work_and_time_sanity() {
         let id = BenchId::ALL[rng.below(6) as usize];
         let bench = Bench::new(id);
         let kind = random_kind(&mut rng, 3);
-        // Valid 3-device HGuided params only.
-        let kind = match kind {
-            SchedulerKind::HGuided { ref params } if params.min_mult.len() != 3 => {
-                SchedulerKind::HGuided { params: HGuidedParams::default_paper() }
-            }
-            k => k,
-        };
         let mut cfg = SimConfig::testbed(&bench, kind);
         cfg.seed = case;
         cfg.gws = Some(bench.default_gws >> (rng.below(6) + 1));
+        // A third of the cases run time-constrained, with budgets from
+        // hopeless to trivial.
+        if rng.below(3) == 0 {
+            cfg.budget = Some(TimeBudget::new(rng.uniform(1e-4, 20.0)));
+        }
         let out = simulate(&bench, &cfg);
+        if let Some(b) = cfg.budget {
+            let v = out.deadline.expect("verdict recorded");
+            assert_eq!(v.met, out.roi_time <= b.deadline_s, "case {case}");
+        } else {
+            assert!(out.deadline.is_none(), "case {case}");
+        }
         let total_groups: u64 = out.devices.iter().map(|d| d.groups).sum();
         assert_eq!(total_groups, bench.groups(cfg.gws.unwrap()), "case {case} work lost");
         assert!(out.roi_time > 0.0 && out.roi_time.is_finite(), "case {case}");
@@ -171,15 +234,12 @@ fn prop_seed_determinism_across_all_schedulers() {
         let id = BenchId::ALL[rng.below(6) as usize];
         let bench = Bench::new(id);
         let kind = random_kind(&mut rng, 3);
-        let kind = match kind {
-            SchedulerKind::HGuided { ref params } if params.min_mult.len() != 3 => {
-                SchedulerKind::HGuided { params: HGuidedParams::default_paper() }
-            }
-            k => k,
-        };
         let mut cfg = SimConfig::testbed(&bench, kind);
         cfg.seed = case * 77 + 1;
         cfg.gws = Some(bench.default_gws / 64);
+        if rng.below(2) == 0 {
+            cfg.budget = Some(TimeBudget::new(rng.uniform(1e-3, 5.0)));
+        }
         let a = simulate(&bench, &cfg);
         let b = simulate(&bench, &cfg);
         assert_eq!(a.roi_time.to_bits(), b.roi_time.to_bits(), "case {case}");
