@@ -22,7 +22,11 @@ use enginecl::runtime::ArtifactDir;
 
 fn main() -> Result<()> {
     let artifacts = ArtifactDir::open(ArtifactDir::default_path())?;
-    println!("artifacts: {} ({} kernels)", artifacts.dir.display(), artifacts.manifest.benches.len());
+    println!(
+        "artifacts: {} ({} kernels)",
+        artifacts.dir.display(),
+        artifacts.manifest.benches.len()
+    );
 
     // Problem sizes in tiles, kept CI-friendly; NBody is fixed at N by the
     // artifact (2048 bodies = 8 tiles).

@@ -66,7 +66,10 @@ fn main() -> anyhow::Result<()> {
     for i in &infl {
         match (i.gws, i.time_s) {
             (Some(g), Some(t)) => {
-                println!("{:>8} {:>15}: gws* = {:>12.0}, single-GPU t* = {:.4}s", i.mode, i.opts, g, t)
+                println!(
+                    "{:>8} {:>15}: gws* = {:>12.0}, single-GPU t* = {:.4}s",
+                    i.mode, i.opts, g, t
+                )
             }
             _ => println!("{:>8} {:>15}: co-execution never wins on this ladder", i.mode, i.opts),
         }

@@ -60,8 +60,11 @@ fn main() {
         .collect();
     let roi_mean = enginecl::stats::mean(&roi_opt);
     let bin_mean = enginecl::stats::mean(&binary_opt);
-    println!("mean optimized break-even: roi {:.1} ms (paper ~15 ms), binary {:.2} s (paper ~1.75 s)",
-        roi_mean * 1e3, bin_mean);
+    println!(
+        "mean optimized break-even: roi {:.1} ms (paper ~15 ms), binary {:.2} s (paper ~1.75 s)",
+        roi_mean * 1e3,
+        bin_mean
+    );
     assert!((0.005..0.2).contains(&roi_mean), "ROI break-even {roi_mean}s");
     assert!((0.5..4.0).contains(&bin_mean), "binary break-even {bin_mean}s");
     b.finish();

@@ -1,0 +1,69 @@
+//! Bench: regenerate the pipeline sweep (budget policies × energy
+//! policies × estimation scenarios over iterative kernel pipelines under
+//! one **global** deadline) and time the pipeline engine's hot path —
+//! per-iteration scheduler re-arming on the cumulative clock plus verdict
+//! recording.
+//!
+//! `cargo bench --bench fig_pipeline`
+
+use enginecl::benchsuite::{Bench, BenchId};
+use enginecl::engine::experiments;
+use enginecl::scheduler::{AdaptiveParams, HGuidedParams, SchedulerKind};
+use enginecl::sim::{simulate_pipeline, PipelineSpec, SimConfig};
+use enginecl::stats::benchkit::Bencher;
+use enginecl::types::{BudgetPolicy, EnergyPolicy, EstimateScenario};
+
+fn main() {
+    let mut b = Bencher::new("fig_pipeline");
+
+    // Timing: one budgeted 8-iteration pipeline per budget policy under
+    // the Adaptive scheduler with pessimistic estimates.
+    for policy in BudgetPolicy::ALL {
+        let bench = Bench::new(BenchId::Mandelbrot);
+        let spec = PipelineSpec::repeat(bench.clone(), 8)
+            .with_deadline(18.0)
+            .with_policy(policy);
+        let kind = SchedulerKind::Adaptive { params: AdaptiveParams::default_paper() };
+        let mut cfg = SimConfig::testbed(&bench, kind);
+        cfg.estimate = EstimateScenario::Pessimistic { err: 0.3 };
+        let mut seed = 0u64;
+        b.bench(&format!("simulate_pipeline/{}", policy.label()), 20, || {
+            seed += 1;
+            cfg.seed = seed;
+            let out = simulate_pipeline(&spec, &cfg);
+            assert!(out.roi_time > 0.0);
+            assert_eq!(out.iter_verdicts.len(), 8);
+        });
+    }
+
+    // Regeneration: the sweep itself at CI-friendly reps.  HGuided-opt
+    // keeps the policy comparison trajectory-identical (deadline-blind),
+    // so the carry-over-slack >= even-split ordering is exact.
+    let sched = SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() };
+    let (rows, iter_rows) = b.bench_val("regenerate/pipeline_sweep(reps=4)", 1, || {
+        experiments::pipeline_sweep(
+            4,
+            &[BenchId::Gaussian, BenchId::Mandelbrot],
+            6,
+            &sched,
+            &BudgetPolicy::ALL,
+            &[EnergyPolicy::RaceToIdle, EnergyPolicy::StretchToDeadline],
+            &[EstimateScenario::Exact, EstimateScenario::Pessimistic { err: 0.3 }],
+            &[0.9, 1.05, 1.2],
+        )
+    });
+    println!("\n{} pipeline rows, {} iteration rows", rows.len(), iter_rows.len());
+    for est in ["exact", "pessimistic(0.30)"] {
+        println!("\nper-policy means, {est}:");
+        for (policy, hit, iter_hit) in experiments::pipeline_policy_means(&rows, est) {
+            println!("{policy:<20} hit {hit:>5.2}  iter-hit {iter_hit:>5.2}");
+        }
+    }
+    let pess = experiments::pipeline_policy_means(&rows, "pessimistic(0.30)");
+    let find = |label: &str| pess.iter().find(|(p, _, _)| p.as_str() == label).unwrap().2;
+    assert!(
+        find("carry-over-slack") >= find("even-split"),
+        "carry-over slack must serve sub-deadlines at least as well as even split"
+    );
+    b.finish();
+}

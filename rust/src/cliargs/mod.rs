@@ -95,6 +95,28 @@ impl Args {
         }
     }
 
+    /// `--name A,B,C` as a comma-separated string list, with a default.
+    pub fn str_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.flag(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect(),
+        }
+    }
+
+    /// `--name N` as a u32, with a default.
+    pub fn u32_flag(&self, name: &str, default: u32) -> Result<u32> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<u32>().map_err(|_| {
+                anyhow::anyhow!("--{name} must be a non-negative integer, got '{v}'")
+            }),
+        }
+    }
+
     /// Positional `idx` with a default.
     pub fn positional_or(&self, _name: &str, idx: usize, default: &str) -> Result<String> {
         Ok(self.positional.get(idx).cloned().unwrap_or_else(|| default.to_string()))
@@ -146,6 +168,16 @@ mod tests {
         assert!(b.json().is_none());
         assert!(parse("x --err abc").f64_flag("err", 0.3).is_err());
         assert!(parse("x --budgets 1.0,zap").f64_list("budgets", &[]).is_err());
+    }
+
+    #[test]
+    fn string_lists_and_u32_flags() {
+        let a = parse("pipeline-sweep --policies even,carry, --iters 8");
+        assert_eq!(a.str_list("policies", &["even"]), vec!["even", "carry"]);
+        assert_eq!(a.str_list("benches", &["gaussian", "mandelbrot"]).len(), 2);
+        assert_eq!(a.u32_flag("iters", 6).unwrap(), 8);
+        assert_eq!(a.u32_flag("missing", 6).unwrap(), 6);
+        assert!(parse("x --iters minus").u32_flag("iters", 6).is_err());
     }
 
     #[test]

@@ -73,7 +73,8 @@ impl RunConfig {
             cfg.buffer_flags = b.as_bool().ok_or_else(|| anyhow!("'buffer_flags' must be bool"))?;
         }
         if let Some(r) = v.get("reps") {
-            cfg.reps = r.as_u64().ok_or_else(|| anyhow!("'reps' must be a positive integer"))? as usize;
+            cfg.reps =
+                r.as_u64().ok_or_else(|| anyhow!("'reps' must be a positive integer"))? as usize;
             if cfg.reps < 2 {
                 bail!("'reps' must be >= 2 (warm-up + measured runs), got {}", cfg.reps);
             }

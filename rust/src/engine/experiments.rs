@@ -8,8 +8,11 @@ use crate::benchsuite::{Bench, BenchId};
 use crate::jsonio::Json;
 use crate::metrics;
 use crate::scheduler::{HGuidedParams, SchedulerKind};
+use crate::sim::{simulate_pipeline, PipelineSpec, SimConfig};
 use crate::stats::geomean;
-use crate::types::{EstimateScenario, ExecMode, Optimizations, TimeBudget};
+use crate::types::{
+    BudgetPolicy, EnergyPolicy, EstimateScenario, ExecMode, Optimizations, TimeBudget,
+};
 
 use super::Engine;
 
@@ -587,6 +590,317 @@ pub fn deadline_scheduler_means(rows: &[DeadlineRow], estimate: &str) -> Vec<Dea
         .collect()
 }
 
+// ----------------------------------------------------- pipeline sweep
+/// One pipeline-level cell of the pipeline sweep: a (pipeline, budget
+/// policy, energy policy, estimate, budget) combination aggregated over
+/// the repetition protocol.
+#[derive(Debug, Clone)]
+pub struct PipelineRow {
+    /// Stage labels joined by `+` (single-kernel pipelines = bench name).
+    pub pipeline: String,
+    pub scheduler: String,
+    pub policy: String,
+    pub energy_policy: String,
+    pub estimate: String,
+    /// Budget as a multiple of the unconstrained pipeline ROI time.
+    pub budget_mult: f64,
+    pub deadline_s: f64,
+    pub iterations: u32,
+    pub mean_roi_s: f64,
+    /// Fraction of runs whose *pipeline-level* verdict was met.
+    pub hit_rate: f64,
+    /// Fraction of iterations (across runs) meeting their sub-deadline.
+    pub iter_hit_rate: f64,
+    /// Mean pipeline-level slack (positive = finished early).
+    pub mean_slack_s: f64,
+    pub mean_energy_j: f64,
+    /// Total energy over total iteration hits (the ROADMAP's J-per-hit);
+    /// infinite when nothing hit.
+    pub j_per_hit: f64,
+}
+
+impl CsvRow for PipelineRow {
+    fn csv_header() -> &'static str {
+        "pipeline,scheduler,policy,energy_policy,estimate,budget_mult,deadline_s,\
+         iterations,mean_roi_s,hit_rate,iter_hit_rate,mean_slack_s,mean_energy_j,j_per_hit"
+    }
+    fn csv_row(&self) -> String {
+        // No-hit cells leave j_per_hit empty, matching the JSON null.
+        let j_per_hit = if self.j_per_hit.is_finite() {
+            self.j_per_hit.to_string()
+        } else {
+            String::new()
+        };
+        format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            self.pipeline,
+            self.scheduler,
+            self.policy,
+            self.energy_policy,
+            self.estimate,
+            self.budget_mult,
+            self.deadline_s,
+            self.iterations,
+            self.mean_roi_s,
+            self.hit_rate,
+            self.iter_hit_rate,
+            self.mean_slack_s,
+            self.mean_energy_j,
+            j_per_hit
+        )
+    }
+}
+
+impl PipelineRow {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("pipeline", Json::Str(self.pipeline.clone())),
+            ("scheduler", Json::Str(self.scheduler.clone())),
+            ("policy", Json::Str(self.policy.clone())),
+            ("energy_policy", Json::Str(self.energy_policy.clone())),
+            ("estimate", Json::Str(self.estimate.clone())),
+            ("budget_mult", Json::Num(self.budget_mult)),
+            ("deadline_s", Json::Num(self.deadline_s)),
+            ("iterations", Json::Num(self.iterations as f64)),
+            ("mean_roi_s", Json::Num(self.mean_roi_s)),
+            ("hit_rate", Json::Num(self.hit_rate)),
+            ("iter_hit_rate", Json::Num(self.iter_hit_rate)),
+            ("mean_slack_s", Json::Num(self.mean_slack_s)),
+            ("mean_energy_j", Json::Num(self.mean_energy_j)),
+            ("j_per_hit", Json::opt_num(Some(self.j_per_hit))),
+        ])
+    }
+}
+
+/// One iteration-level cell of the pipeline sweep (per-iteration verdicts
+/// aggregated over the repetition protocol).
+#[derive(Debug, Clone)]
+pub struct PipelineIterRow {
+    pub pipeline: String,
+    pub policy: String,
+    pub energy_policy: String,
+    pub estimate: String,
+    pub budget_mult: f64,
+    pub stage: usize,
+    pub iter: u32,
+    /// Fraction of runs in which this iteration met its sub-deadline.
+    pub hit_rate: f64,
+    pub mean_sub_deadline_s: f64,
+    pub mean_end_s: f64,
+    pub mean_slack_s: f64,
+}
+
+impl CsvRow for PipelineIterRow {
+    fn csv_header() -> &'static str {
+        "pipeline,policy,energy_policy,estimate,budget_mult,stage,iter,hit_rate,\
+         mean_sub_deadline_s,mean_end_s,mean_slack_s"
+    }
+    fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{},{},{}",
+            self.pipeline,
+            self.policy,
+            self.energy_policy,
+            self.estimate,
+            self.budget_mult,
+            self.stage,
+            self.iter,
+            self.hit_rate,
+            self.mean_sub_deadline_s,
+            self.mean_end_s,
+            self.mean_slack_s
+        )
+    }
+}
+
+impl PipelineIterRow {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("pipeline", Json::Str(self.pipeline.clone())),
+            ("policy", Json::Str(self.policy.clone())),
+            ("energy_policy", Json::Str(self.energy_policy.clone())),
+            ("estimate", Json::Str(self.estimate.clone())),
+            ("budget_mult", Json::Num(self.budget_mult)),
+            ("stage", Json::Num(self.stage as f64)),
+            ("iter", Json::Num(self.iter as f64)),
+            ("hit_rate", Json::Num(self.hit_rate)),
+            ("mean_sub_deadline_s", Json::Num(self.mean_sub_deadline_s)),
+            ("mean_end_s", Json::Num(self.mean_end_s)),
+            ("mean_slack_s", Json::Num(self.mean_slack_s)),
+        ])
+    }
+}
+
+/// The whole pipeline sweep as one JSON document: pipeline-level and
+/// iteration-level verdict aggregates side by side.
+pub fn pipeline_rows_json(rows: &[PipelineRow], iters: &[PipelineIterRow]) -> Json {
+    Json::obj(vec![
+        ("pipelines", Json::Arr(rows.iter().map(PipelineRow::to_json).collect())),
+        ("iterations", Json::Arr(iters.iter().map(PipelineIterRow::to_json).collect())),
+    ])
+}
+
+/// The default pipeline budget ladder, as multiples of the unconstrained
+/// pipeline ROI time: just-infeasible, knife-edge, comfortably loose.
+pub fn pipeline_budget_mults() -> Vec<f64> {
+    vec![0.9, 1.05, 1.2]
+}
+
+/// Sweep budget policies × energy policies × estimation scenarios ×
+/// budgets over single-kernel iterative pipelines of each benchmark.
+/// Budgets are multiples of the *unconstrained* pipeline ROI time (so the
+/// knife edge sits near 1.0 for every kernel); repetitions follow the
+/// paper protocol (first run discarded as warm-up).
+#[allow(clippy::too_many_arguments)]
+pub fn pipeline_sweep(
+    reps: usize,
+    benches: &[BenchId],
+    iterations: u32,
+    scheduler: &SchedulerKind,
+    policies: &[BudgetPolicy],
+    energies: &[EnergyPolicy],
+    estimates: &[EstimateScenario],
+    budget_mults: &[f64],
+) -> (Vec<PipelineRow>, Vec<PipelineIterRow>) {
+    assert!(reps >= 2, "need at least warm-up + 1");
+    let mut rows = Vec::new();
+    let mut iter_rows = Vec::new();
+    for &id in benches {
+        let bench = Bench::new(id);
+        // Unconstrained reference time for the budget ladder.
+        let ref_reps = reps.clamp(2, 4);
+        let mut t_ref = 0.0;
+        for rep in 1..=ref_reps as u64 {
+            let mut cfg = SimConfig::testbed(&bench, scheduler.clone());
+            cfg.seed = rep;
+            t_ref += simulate_pipeline(&PipelineSpec::repeat(bench.clone(), iterations), &cfg)
+                .roi_time;
+        }
+        t_ref /= ref_reps as f64;
+
+        for &est in estimates {
+            for &mult in budget_mults {
+                let budget = TimeBudget::new(mult * t_ref);
+                for &policy in policies {
+                    for &energy in energies {
+                        let spec = PipelineSpec::repeat(bench.clone(), iterations)
+                            .with_budget(Some(budget))
+                            .with_policy(policy)
+                            .with_energy(energy);
+                        let cell = run_pipeline_cell(&spec, &bench, scheduler, est, reps, mult);
+                        iter_rows.extend(cell.1);
+                        rows.push(cell.0);
+                    }
+                }
+            }
+        }
+    }
+    (rows, iter_rows)
+}
+
+/// One sweep cell: `reps` runs of `spec`, first discarded as warm-up.
+fn run_pipeline_cell(
+    spec: &PipelineSpec,
+    bench: &Bench,
+    scheduler: &SchedulerKind,
+    est: EstimateScenario,
+    reps: usize,
+    budget_mult: f64,
+) -> (PipelineRow, Vec<PipelineIterRow>) {
+    let total_iters = spec.total_iterations() as usize;
+    let mut roi = Vec::new();
+    let mut slack = Vec::new();
+    let mut energy_j = Vec::new();
+    let mut hits = 0usize;
+    let mut iter_hits = vec![0usize; total_iters];
+    let mut iter_stage = vec![0usize; total_iters];
+    let mut iter_sub = vec![0.0f64; total_iters];
+    let mut iter_end = vec![0.0f64; total_iters];
+    let mut iter_slack = vec![0.0f64; total_iters];
+    for rep in 0..reps {
+        let mut cfg = SimConfig::testbed(bench, scheduler.clone());
+        cfg.estimate = est;
+        cfg.seed = rep as u64 + 1;
+        let out = simulate_pipeline(spec, &cfg);
+        if rep == 0 {
+            continue; // warm-up
+        }
+        roi.push(out.roi_time);
+        energy_j.push(out.energy_j);
+        let v = out.deadline.expect("sweep cells are budgeted");
+        hits += v.met as usize;
+        slack.push(v.slack_s);
+        assert_eq!(out.iter_verdicts.len(), total_iters);
+        for (i, iv) in out.iter_verdicts.iter().enumerate() {
+            iter_hits[i] += iv.met as usize;
+            iter_stage[i] = iv.stage;
+            iter_sub[i] += iv.sub_deadline_s;
+            iter_end[i] += iv.end_s;
+            iter_slack[i] += iv.slack_s;
+        }
+    }
+    let n = (reps - 1) as f64;
+    let total_iter_hits: usize = iter_hits.iter().sum();
+    let total_energy: f64 = energy_j.iter().sum();
+    let j_per_hit = if total_iter_hits > 0 {
+        total_energy / total_iter_hits as f64
+    } else {
+        f64::INFINITY
+    };
+    let row = PipelineRow {
+        pipeline: spec.label(),
+        scheduler: scheduler.label(),
+        policy: spec.policy.label().into(),
+        energy_policy: spec.energy.label().into(),
+        estimate: est.label(),
+        budget_mult,
+        deadline_s: spec.budget.expect("budgeted cell").deadline_s,
+        iterations: spec.total_iterations(),
+        mean_roi_s: crate::stats::mean(&roi),
+        hit_rate: hits as f64 / n,
+        iter_hit_rate: total_iter_hits as f64 / (n * total_iters as f64),
+        mean_slack_s: crate::stats::mean(&slack),
+        mean_energy_j: crate::stats::mean(&energy_j),
+        j_per_hit,
+    };
+    let iters = (0..total_iters)
+        .map(|i| PipelineIterRow {
+            pipeline: row.pipeline.clone(),
+            policy: row.policy.clone(),
+            energy_policy: row.energy_policy.clone(),
+            estimate: row.estimate.clone(),
+            budget_mult,
+            stage: iter_stage[i],
+            iter: i as u32,
+            hit_rate: iter_hits[i] as f64 / n,
+            mean_sub_deadline_s: iter_sub[i] / n,
+            mean_end_s: iter_end[i] / n,
+            mean_slack_s: iter_slack[i] / n,
+        })
+        .collect();
+    (row, iters)
+}
+
+/// Mean pipeline-level and iteration-level hit rates per budget policy
+/// (filtered to one estimate scenario) — the policy comparison the CLI
+/// prints and the acceptance test asserts on.
+pub fn pipeline_policy_means(rows: &[PipelineRow], estimate: &str) -> Vec<(String, f64, f64)> {
+    BudgetPolicy::ALL
+        .iter()
+        .filter(|p| rows.iter().any(|r| r.policy == p.label()))
+        .map(|p| {
+            let group: Vec<&PipelineRow> = rows
+                .iter()
+                .filter(|r| r.policy == p.label() && r.estimate == estimate)
+                .collect();
+            let hit = crate::stats::mean(&group.iter().map(|r| r.hit_rate).collect::<Vec<_>>());
+            let iter_hit =
+                crate::stats::mean(&group.iter().map(|r| r.iter_hit_rate).collect::<Vec<_>>());
+            (p.label().to_string(), hit, iter_hit)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -673,6 +987,62 @@ mod tests {
         // A wrong estimate label aggregates nothing.
         let empty = deadline_scheduler_means(&rows, "pessimistic(0.30)");
         assert!(empty.iter().all(|m| m.mean_efficiency == 0.0));
+    }
+
+    #[test]
+    fn pipeline_sweep_shape_and_json() {
+        let (rows, iters) = pipeline_sweep(
+            3,
+            &[BenchId::Gaussian],
+            4,
+            &SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() },
+            &[BudgetPolicy::EvenSplit, BudgetPolicy::CarryOverSlack],
+            &[EnergyPolicy::RaceToIdle],
+            &[EstimateScenario::Exact],
+            &[1.2],
+        );
+        assert_eq!(rows.len(), 2, "1 bench x 1 estimate x 1 budget x 2 policies");
+        assert_eq!(iters.len(), 2 * 4, "4 iteration rows per cell");
+        for r in &rows {
+            assert_eq!(r.iterations, 4);
+            assert!(r.deadline_s > 0.0 && r.mean_roi_s > 0.0);
+            assert!(r.mean_energy_j > 0.0);
+            assert!((0.0..=1.0).contains(&r.hit_rate));
+            assert!((0.0..=1.0).contains(&r.iter_hit_rate));
+        }
+        let doc = pipeline_rows_json(&rows, &iters).to_string();
+        let j = crate::jsonio::Json::parse(&doc).expect("sweep JSON parses");
+        assert_eq!(j.get("pipelines").unwrap().as_arr().unwrap().len(), rows.len());
+        assert_eq!(j.get("iterations").unwrap().as_arr().unwrap().len(), iters.len());
+        let first = &j.get("pipelines").unwrap().as_arr().unwrap()[0];
+        for key in ["policy", "energy_policy", "hit_rate", "iter_hit_rate", "j_per_hit"] {
+            assert!(first.get(key).is_some(), "missing '{key}'");
+        }
+        let means = pipeline_policy_means(&rows, "exact");
+        assert_eq!(means.len(), 2, "only swept policies aggregated");
+    }
+
+    #[test]
+    fn no_hit_j_per_hit_is_empty_in_csv_and_null_in_json() {
+        let row = PipelineRow {
+            pipeline: "X".into(),
+            scheduler: "Adaptive".into(),
+            policy: "even-split".into(),
+            energy_policy: "race-to-idle".into(),
+            estimate: "exact".into(),
+            budget_mult: 0.5,
+            deadline_s: 0.1,
+            iterations: 3,
+            mean_roi_s: 0.2,
+            hit_rate: 0.0,
+            iter_hit_rate: 0.0,
+            mean_slack_s: -0.1,
+            mean_energy_j: 100.0,
+            j_per_hit: f64::INFINITY,
+        };
+        assert!(row.csv_row().ends_with(','), "empty trailing j_per_hit field");
+        let j = crate::jsonio::Json::parse(&row.to_json().to_string()).unwrap();
+        assert_eq!(j.get("j_per_hit"), Some(&crate::jsonio::Json::Null));
     }
 
     #[test]

@@ -172,9 +172,23 @@ impl Engine {
     }
 
     /// One iterative run (paper §VII future work): `iterations` kernel
-    /// launches with device-resident buffers in between.
+    /// launches with device-resident buffers in between.  A budget set via
+    /// [`Engine::with_budget`] becomes the *global* pipeline budget, split
+    /// into per-iteration sub-budgets by the default carry-over-slack
+    /// policy.
     pub fn run_iterative(&self, iterations: u32, seed: u64) -> crate::sim::IterOutcome {
         crate::sim::simulate_iterative(&self.bench, &self.sim_config(seed), iterations)
+    }
+
+    /// One pipeline run ([`crate::sim::simulate_pipeline`]) with this
+    /// engine's configuration as the run template; `spec` supplies the
+    /// stages, the global budget, and the budget/energy policies.
+    pub fn run_pipeline(
+        &self,
+        spec: &crate::sim::PipelineSpec,
+        seed: u64,
+    ) -> crate::sim::PipelineOutcome {
+        crate::sim::simulate_pipeline(spec, &self.sim_config(seed))
     }
 
     /// Energy-to-solution (J) of one run — the §VII energy-efficiency
@@ -325,6 +339,19 @@ mod tests {
             .unwrap();
         assert_eq!(tight.hit_rate, 0.0);
         assert!(tight.mean_slack_s < 0.0);
+    }
+
+    #[test]
+    fn run_pipeline_uses_engine_budget_as_global() {
+        use crate::sim::PipelineSpec;
+        use crate::types::TimeBudget;
+        let e = small(BenchId::Gaussian).with_budget(TimeBudget::new(1e6));
+        let spec = PipelineSpec::repeat(e.bench().clone(), 3);
+        let out = e.run_pipeline(&spec, 1);
+        assert_eq!(out.iter_times.len(), 3);
+        let v = out.deadline.expect("engine budget flows into the pipeline");
+        assert!(v.met);
+        assert_eq!(out.iter_verdicts.len(), 3);
     }
 
     #[test]

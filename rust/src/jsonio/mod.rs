@@ -79,6 +79,15 @@ impl Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Optional-number projection: `Null` for `None` *and* for non-finite
+    /// values (JSON has no `inf`/`NaN` literals), `Num` otherwise.
+    pub fn opt_num(v: Option<f64>) -> Json {
+        match v {
+            Some(x) if x.is_finite() => Json::Num(x),
+            _ => Json::Null,
+        }
+    }
+
     /// Parse a JSON document.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
@@ -408,6 +417,16 @@ mod tests {
         assert_eq!(v.get("a").unwrap().as_f64(), Some(1.0));
         assert_eq!(v.get("b").unwrap().as_str(), Some("x"));
         assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn opt_num_guards_non_finite_values() {
+        assert_eq!(Json::opt_num(Some(1.5)), Json::Num(1.5));
+        assert_eq!(Json::opt_num(None), Json::Null);
+        assert_eq!(Json::opt_num(Some(f64::INFINITY)), Json::Null);
+        assert_eq!(Json::opt_num(Some(f64::NAN)), Json::Null);
+        let doc = Json::obj(vec![("j_per_hit", Json::opt_num(Some(f64::INFINITY)))]);
+        assert!(Json::parse(&doc.to_string()).is_ok(), "emitted JSON stays parseable");
     }
 
     #[test]

@@ -29,7 +29,12 @@
 //! simulator records deadline verdicts while the
 //! [`scheduler::adaptive::Adaptive`] scheduler adapts its package sizing
 //! to the remaining budget under pessimistic power estimation
-//! ([`types::EstimateScenario`]).
+//! ([`types::EstimateScenario`]).  The §VII iterative / multi-kernel mode
+//! is a deadline-aware pipeline engine ([`sim::pipeline`]): a global
+//! budget split into per-iteration sub-budgets ([`types::BudgetPolicy`])
+//! on a cumulative pipeline clock, with race-to-idle vs
+//! stretch-to-deadline energy policies ([`types::EnergyPolicy`]) and
+//! J-per-hit reporting (`pipeline-sweep` CLI, `fig_pipeline` bench).
 //!
 //! Start at [`engine::Engine`] (the Tier-1 API in the paper's terms) or
 //! run `cargo run --release -- fig3` / `-- deadline-sweep`.

@@ -8,7 +8,7 @@
 //! Argument parsing is hand-rolled ([`cliargs`]) — no clap in this offline
 //! environment (DESIGN.md §Substitutions).
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 #[cfg(feature = "pjrt")]
 use enginecl::benchsuite::data::Problem;
 use enginecl::benchsuite::{Bench, BenchId};
@@ -19,8 +19,9 @@ use enginecl::engine::experiments::{self, write_csv, OptLevel};
 use enginecl::engine::pjrt::{run_coexec, PjrtRunConfig};
 #[cfg(feature = "pjrt")]
 use enginecl::runtime::ArtifactDir;
+use enginecl::scheduler::{AdaptiveParams, SchedulerKind};
 use enginecl::sim::coexec::testbed_devices;
-use enginecl::types::EstimateScenario;
+use enginecl::types::{BudgetPolicy, EnergyPolicy, EstimateScenario};
 use std::path::PathBuf;
 
 const USAGE: &str = "\
@@ -42,9 +43,16 @@ USAGE:
   enginecl failure [--bench B] [--at SECONDS]
   enginecl deadline-sweep [--reps N] [--err F] [--budgets M1,M2,..]
                   [--csv PATH] [--json PATH]   # time-constrained scenarios
+  enginecl pipeline-sweep [--benches B1,B2,..] [--iters K] [--reps N]
+                  [--policies even,carry,greedy] [--energy race,stretch]
+                  [--sched S] [--err F] [--budgets M1,M2,..]
+                  [--csv PATH] [--iter-csv PATH] [--json PATH]
+                  # global-deadline pipelines: per-iteration sub-budgets
 
-benches: gaussian binomial nbody ray ray2 mandelbrot
-scheds:  static static-rev dynamic:N hguided hguided-opt adaptive
+benches:  gaussian binomial nbody ray ray2 mandelbrot
+scheds:   static static-rev dynamic:N hguided hguided-opt adaptive
+policies: even(-split) carry(-over-slack) greedy(-frontload)
+energy:   race(-to-idle) stretch(-to-deadline)
 ";
 
 fn main() -> Result<()> {
@@ -67,6 +75,7 @@ fn main() -> Result<()> {
         "iterative" => iterative(args),
         "failure" => failure(args),
         "deadline-sweep" => deadline_sweep(args),
+        "pipeline-sweep" => pipeline_sweep(args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -289,12 +298,11 @@ fn run(args: Args) -> Result<()> {
             "deadline {:.4}s: hit rate {:.2}, mean slack {:+.4}s",
             b.deadline_s, dl.hit_rate, dl.mean_slack_s
         );
-        // The budget is ROI-scoped (slack = deadline - roi per run), so
-        // derive the mean-ROI verdict from the aggregated slack rather
-        // than from the mode-dependent `rep.time` (binary mode reports
-        // init-inclusive totals there).
-        let mean_roi = b.deadline_s - dl.mean_slack_s;
-        println!("{}", enginecl::metrics::deadline_json(&b.verdict(mean_roi)));
+        // Verdicts are mode-scoped (slack = deadline - response time under
+        // the configured mode), so the aggregate verdict derives from the
+        // aggregated slack.
+        let mean_response = b.deadline_s - dl.mean_slack_s;
+        println!("{}", enginecl::metrics::deadline_json(&b.verdict(mean_response)));
     }
     Ok(())
 }
@@ -501,6 +509,118 @@ fn deadline_sweep(args: Args) -> Result<()> {
     Ok(())
 }
 
+/// Pipeline sweep: budget policies × energy policies × estimation
+/// scenarios over iterative kernel pipelines under one **global**
+/// deadline, with per-pipeline and per-iteration verdicts plus the
+/// J-per-hit energy metric.
+fn pipeline_sweep(args: Args) -> Result<()> {
+    let reps = args.reps(6)?;
+    let err = args.f64_flag("err", 0.3)?;
+    if !(0.0..1.0).contains(&err) {
+        bail!("--err must be in [0, 1), got {err}");
+    }
+    let iters = args.u32_flag("iters", 6)?;
+    if iters == 0 {
+        bail!("--iters must be >= 1");
+    }
+    let mults = args.f64_list("budgets", &experiments::pipeline_budget_mults())?;
+    if mults.is_empty() || mults.iter().any(|&m| !(m > 0.0 && m.is_finite())) {
+        bail!("--budgets must be positive finite multipliers");
+    }
+    let benches: Vec<BenchId> = args
+        .str_list("benches", &["gaussian", "mandelbrot"])
+        .iter()
+        .map(|s| parse_bench(s))
+        .collect::<Result<_>>()?;
+    if benches.is_empty() {
+        bail!("--benches must name at least one benchmark");
+    }
+    let policies: Vec<BudgetPolicy> = args
+        .str_list("policies", &["even", "carry", "greedy"])
+        .iter()
+        .map(|s| {
+            BudgetPolicy::parse(s)
+                .ok_or_else(|| anyhow!("unknown budget policy '{s}' (even|carry|greedy)"))
+        })
+        .collect::<Result<_>>()?;
+    let energies: Vec<EnergyPolicy> = args
+        .str_list("energy", &["race", "stretch"])
+        .iter()
+        .map(|s| {
+            EnergyPolicy::parse(s)
+                .ok_or_else(|| anyhow!("unknown energy policy '{s}' (race|stretch)"))
+        })
+        .collect::<Result<_>>()?;
+    if policies.is_empty() || energies.is_empty() {
+        bail!("--policies and --energy must each name at least one entry");
+    }
+    let sched = match args.flag("sched") {
+        Some(s) => parse_scheduler_str(s)?,
+        None => SchedulerKind::Adaptive { params: AdaptiveParams::default_paper() },
+    };
+    let estimates = [EstimateScenario::Exact, EstimateScenario::Pessimistic { err }];
+    println!(
+        "PIPELINE SWEEP — {iters}-iteration pipelines, global deadline split by \
+         budget policy ({reps} reps, sched {})",
+        sched.label()
+    );
+    let (rows, iter_rows) = experiments::pipeline_sweep(
+        reps,
+        &benches,
+        iters,
+        &sched,
+        &policies,
+        &energies,
+        &estimates,
+        &mults,
+    );
+    println!(
+        "{:<12}{:>18}{:>22}{:>20}{:>7}{:>10}{:>6}{:>9}{:>10}{:>11}",
+        "pipeline", "policy", "energy", "estimate", "mult", "roi(s)", "hit", "iterhit",
+        "slack(s)", "J/hit"
+    );
+    for r in &rows {
+        println!(
+            "{:<12}{:>18}{:>22}{:>20}{:>7.2}{:>10.4}{:>6.2}{:>9.2}{:>10.4}{:>11.1}",
+            r.pipeline,
+            r.policy,
+            r.energy_policy,
+            r.estimate,
+            r.budget_mult,
+            r.mean_roi_s,
+            r.hit_rate,
+            r.iter_hit_rate,
+            r.mean_slack_s,
+            r.j_per_hit
+        );
+    }
+    for est in &estimates {
+        println!("-- per-policy means, {} --", est.label());
+        println!("{:<20}{:>10}{:>12}", "policy", "hit", "iter-hit");
+        for (policy, hit, iter_hit) in experiments::pipeline_policy_means(&rows, &est.label()) {
+            println!("{policy:<20}{hit:>10.2}{iter_hit:>12.2}");
+        }
+    }
+    if let Some(p) = args.csv()? {
+        write_csv(&p, &rows)?;
+        println!("wrote {}", p.display());
+    }
+    if let Some(p) = args.flag("iter-csv") {
+        let p = PathBuf::from(p);
+        write_csv(&p, &iter_rows)?;
+        println!("wrote {}", p.display());
+    }
+    let json = experiments::pipeline_rows_json(&rows, &iter_rows);
+    match args.json() {
+        Some(p) => {
+            std::fs::write(&p, json.to_string())?;
+            println!("wrote {}", p.display());
+        }
+        None => println!("{json}"),
+    }
+    Ok(())
+}
+
 #[cfg(not(feature = "pjrt"))]
 fn coexec(_args: Args) -> Result<()> {
     bail!(
@@ -535,8 +655,16 @@ fn coexec(args: Args) -> Result<()> {
     );
     for d in &report.devices {
         println!(
-            "  {:<6} P={:<5.2} packages={:<4} tiles={:<5} busy={:.3}s finish={:.3}s verify_fail={} checksum={:.3e}",
-            d.label, d.power, d.packages, d.tiles, d.busy_s, d.finish_s, d.verify_failures, d.checksum
+            "  {:<6} P={:<5.2} packages={:<4} tiles={:<5} busy={:.3}s finish={:.3}s \
+             verify_fail={} checksum={:.3e}",
+            d.label,
+            d.power,
+            d.packages,
+            d.tiles,
+            d.busy_s,
+            d.finish_s,
+            d.verify_failures,
+            d.checksum
         );
     }
     if report.verify_failures == 0 {

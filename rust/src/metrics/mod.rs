@@ -4,15 +4,21 @@
 //! deadline sweep emits as JSON.
 
 use crate::jsonio::Json;
-use crate::sim::SimOutcome;
+use crate::sim::{DeviceTrace, IterVerdict, PipelineOutcome, SimOutcome};
 use crate::types::DeadlineVerdict;
 
 /// Load-balance effectiveness: `T_FD / T_LD` over the devices that
 /// actually received work — 1.0 when all finish simultaneously (paper
 /// §IV / Fig. 4).
 pub fn balance(outcome: &SimOutcome) -> f64 {
-    let finishes: Vec<f64> = outcome
-        .devices
+    balance_traces(&outcome.devices)
+}
+
+/// [`balance`] over raw device traces — shared with pipeline outcomes,
+/// whose `finish` clocks are pipeline-cumulative and therefore directly
+/// comparable across devices.
+pub fn balance_traces(devices: &[DeviceTrace]) -> f64 {
+    let finishes: Vec<f64> = devices
         .iter()
         .filter(|d| d.packages > 0)
         .map(|d| d.finish)
@@ -97,6 +103,40 @@ pub fn deadline_json(v: &DeadlineVerdict) -> Json {
         ("roi_s", Json::Num(v.roi_s)),
         ("met", Json::Bool(v.met)),
         ("slack_s", Json::Num(v.slack_s)),
+    ])
+}
+
+/// jsonio projection of one pipeline iteration's verdict.
+pub fn iter_verdict_json(v: &IterVerdict) -> Json {
+    Json::obj(vec![
+        ("stage", Json::Num(v.stage as f64)),
+        ("iter", Json::Num(v.iter as f64)),
+        ("sub_deadline_s", Json::Num(v.sub_deadline_s)),
+        ("end_s", Json::Num(v.end_s)),
+        ("met", Json::Bool(v.met)),
+        ("slack_s", Json::Num(v.slack_s)),
+    ])
+}
+
+/// jsonio projection of a whole pipeline run: pipeline-level verdict,
+/// per-iteration verdicts, and the energy-under-deadline metrics.
+pub fn pipeline_json(out: &PipelineOutcome) -> Json {
+    Json::obj(vec![
+        ("total_time_s", Json::Num(out.total_time)),
+        ("roi_time_s", Json::Num(out.roi_time)),
+        ("energy_j", Json::Num(out.energy_j)),
+        ("n_packages", Json::Num(out.n_packages as f64)),
+        ("balance", Json::Num(balance_traces(&out.devices))),
+        (
+            "deadline",
+            match &out.deadline {
+                Some(v) => deadline_json(v),
+                None => Json::Null,
+            },
+        ),
+        ("iter_hit_rate", Json::opt_num(out.iter_hit_rate())),
+        ("energy_per_hit_j", Json::opt_num(out.energy_per_hit_j())),
+        ("iters", Json::Arr(out.iter_verdicts.iter().map(iter_verdict_json).collect())),
     ])
 }
 
@@ -193,6 +233,32 @@ mod tests {
         assert_eq!(j.get("speedup").unwrap().as_f64(), Some(1.2));
         assert_eq!(j.get("max_speedup").unwrap().as_f64(), Some(1.5));
         assert_eq!(j.get("efficiency").unwrap().as_f64(), Some(0.8));
+    }
+
+    #[test]
+    fn pipeline_json_carries_verdicts_and_energy_metrics() {
+        use crate::benchsuite::{Bench, BenchId};
+        use crate::scheduler::{HGuidedParams, SchedulerKind};
+        use crate::sim::{simulate_pipeline, PipelineSpec, SimConfig};
+        let b = Bench::new(BenchId::Gaussian);
+        let kind = SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() };
+        let mut cfg = SimConfig::testbed(&b, kind);
+        cfg.gws = Some(b.default_gws / 16);
+        let spec = PipelineSpec::repeat(b.clone(), 3).with_deadline(1e6);
+        let out = simulate_pipeline(&spec, &cfg);
+        let j = Json::parse(&pipeline_json(&out).to_string()).unwrap();
+        assert_eq!(j.get("deadline").unwrap().get("met").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("iters").unwrap().as_arr().unwrap().len(), 3);
+        assert!(j.get("energy_per_hit_j").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("iter_hit_rate").unwrap().as_f64(), Some(1.0));
+        let bal = j.get("balance").unwrap().as_f64().unwrap();
+        assert!(bal > 0.0 && bal <= 1.0);
+        // Unconstrained pipelines project null metrics, not garbage.
+        let free = simulate_pipeline(&PipelineSpec::repeat(b, 2), &cfg);
+        let j = Json::parse(&pipeline_json(&free).to_string()).unwrap();
+        assert_eq!(j.get("deadline"), Some(&Json::Null));
+        assert_eq!(j.get("energy_per_hit_j"), Some(&Json::Null));
+        assert_eq!(j.get("iters").unwrap().as_arr().unwrap().len(), 0);
     }
 
     #[test]

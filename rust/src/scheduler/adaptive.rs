@@ -51,6 +51,14 @@ impl AdaptiveParams {
         Self { min_mult: vec![m; n], k: vec![k; n], pessimism }
     }
 
+    /// Same parameters with the completion-cap pessimism replaced — how
+    /// the pipeline engine's [`crate::types::EnergyPolicy`] modulates the
+    /// scheduler without touching the HGuided sizing.
+    pub fn with_pessimism(mut self, pessimism: f64) -> Self {
+        self.pessimism = pessimism;
+        self
+    }
+
     /// The HGuided parameter subset (sizing is delegated wholesale).
     pub fn hguided(&self) -> HGuidedParams {
         HGuidedParams { min_mult: self.min_mult.clone(), k: self.k.clone() }

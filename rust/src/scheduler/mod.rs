@@ -124,6 +124,19 @@ impl SchedulerKind {
         v
     }
 
+    /// The same configuration under a pipeline energy policy: the policy
+    /// modulates the Adaptive completion-cap pessimism (race-to-idle keeps
+    /// the configured guard, stretch-to-deadline raises it); every
+    /// deadline-blind scheduler is returned unchanged.
+    pub fn for_energy_policy(&self, policy: crate::types::EnergyPolicy) -> SchedulerKind {
+        match self {
+            SchedulerKind::Adaptive { params } => SchedulerKind::Adaptive {
+                params: params.clone().with_pessimism(policy.pessimism(params.pessimism)),
+            },
+            other => other.clone(),
+        }
+    }
+
     /// Instantiate a fresh scheduler for one run.
     pub fn build(&self, ctx: &SchedCtx) -> Box<dyn Scheduler> {
         match self {
@@ -254,5 +267,24 @@ mod tests {
     #[should_panic(expected = "powers must be positive")]
     fn zero_power_rejected() {
         SchedCtx::new(10, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn energy_policy_modulates_only_adaptive() {
+        use crate::types::EnergyPolicy;
+        let adaptive = SchedulerKind::Adaptive { params: AdaptiveParams::default_paper() };
+        let raced = adaptive.for_energy_policy(EnergyPolicy::RaceToIdle);
+        assert_eq!(raced, adaptive, "racing keeps the configured guard");
+        let stretched = adaptive.for_energy_policy(EnergyPolicy::StretchToDeadline);
+        match &stretched {
+            SchedulerKind::Adaptive { params } => {
+                assert_eq!(params.pessimism, 0.55);
+                assert_eq!(params.min_mult, AdaptiveParams::default_paper().min_mult);
+            }
+            other => panic!("adaptive stayed adaptive, got {other:?}"),
+        }
+        for kind in SchedulerKind::fig3_configs() {
+            assert_eq!(kind.for_energy_policy(EnergyPolicy::StretchToDeadline), kind);
+        }
     }
 }

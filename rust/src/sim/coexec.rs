@@ -142,7 +142,7 @@ impl SimOutcome {
 
 /// Transfer behaviour of one kernel iteration in iterative mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum IterPhase {
+pub(crate) enum IterPhase {
     /// Single-shot run (the paper's evaluation mode): all transfers paid.
     Single,
     /// First of many: inputs uploaded, outputs stay device-resident.
@@ -245,9 +245,15 @@ fn effective_powers(cfg: &SimConfig) -> Vec<f64> {
         .collect()
 }
 
-/// One ROI pass (one kernel iteration): the pull-based event loop.
+/// One ROI pass (one kernel iteration) of the pull-based event loop,
+/// starting at absolute clock `t0` (0 for single-shot runs; the cumulative
+/// pipeline clock in iterative/pipeline mode, so per-device `finish` times
+/// and `on_clock` ticks share one coherent time base).  `deadline_s` is
+/// the *absolute* deadline to arm deadline-aware schedulers with (`None`
+/// or non-positive = unconstrained scheduling); returns the absolute
+/// finish time of the pass and the next package sequence number.
 #[allow(clippy::too_many_arguments)]
-fn run_roi(
+pub(crate) fn run_roi(
     bench: &Bench,
     cfg: &SimConfig,
     gws: u64,
@@ -256,21 +262,28 @@ fn run_roi(
     traces: &mut [DeviceTrace],
     packages: &mut Vec<PackageTrace>,
     seq0: u64,
+    t0: f64,
+    deadline_s: Option<f64>,
 ) -> (f64, u64) {
     let lws = bench.props.lws;
     let total_groups = bench.groups(gws);
     let n = cfg.devices.len();
     let mut ctx = SchedCtx::new(total_groups, effective_powers(cfg));
-    if let Some(b) = cfg.budget {
-        // Throughput hints derive from the same estimated powers the
-        // packet-size formula sees (mean item cost is 1 unit by profile
-        // normalization, so groups/s = power · units/s ÷ lws).
-        let thr: Vec<f64> = ctx
-            .powers
-            .iter()
-            .map(|p| p * bench.gpu_units_per_sec / lws as f64)
-            .collect();
-        ctx = ctx.with_deadline(b.deadline_s, thr);
+    match deadline_s {
+        Some(d) if d > 0.0 => {
+            // Throughput hints derive from the same estimated powers the
+            // packet-size formula sees (mean item cost is 1 unit by profile
+            // normalization, so groups/s = power · units/s ÷ lws).
+            let thr: Vec<f64> = ctx
+                .powers
+                .iter()
+                .map(|p| p * bench.gpu_units_per_sec / lws as f64)
+                .collect();
+            ctx = ctx.with_deadline(d, thr);
+        }
+        // A deadline that is already unreachable before the pass starts
+        // is a lost deadline: run in plain efficiency mode.
+        _ => {}
     }
     let mut sched = cfg.scheduler.build(&ctx);
     let transfers = TransferModel::new(&cfg.driver, cfg.opts.buffer_flags);
@@ -281,15 +294,15 @@ fn run_roi(
     // iteration 3).
     let mut heap = EventList::with_capacity(n);
     for (slot, &d) in sched.delivery_order().iter().enumerate() {
-        heap.push(Ev { t: 0.0, tie: slot as u64, dev: d });
+        heap.push(Ev { t: t0, tie: slot as u64, dev: d });
     }
-    let mut host_free = 0.0f64;
+    let mut host_free = t0;
     let mut seq = seq0;
     let mut tie = n as u64;
     // Fault handling: work lost by the failed device, waiting survivors.
     let mut retry: Vec<GroupRange> = Vec::new();
     let mut parked: Vec<usize> = Vec::new();
-    let mut iter_finish = 0.0f64;
+    let mut iter_finish = t0;
 
     while let Some(Ev { t, dev, .. }) = heap.pop() {
         // Dead devices request nothing.
@@ -344,9 +357,12 @@ fn run_roi(
         let done = compute_start + transfers.launch(spec.class) + compute + d2h;
 
         // Fault injection: the package is lost if this device dies before
-        // completing it (only in the phase covering the failure time).
+        // completing it.  Finish clocks are pipeline-cumulative, so the
+        // comparison naturally selects the iteration covering the failure
+        // time; once `failed` is set the device stays dead for the rest of
+        // the pipeline.
         if let Some((fd, tf)) = cfg.fail {
-            if fd == dev && phase != IterPhase::Middle && done > tf && !traces[dev].failed {
+            if fd == dev && done > tf && !traces[dev].failed {
                 traces[dev].failed = true;
                 traces[dev].finish = traces[dev].finish.max(tf.min(done));
                 retry.push(groups);
@@ -386,7 +402,12 @@ fn run_roi(
     (iter_finish, seq)
 }
 
-fn fixed_costs(bench: &Bench, cfg: &SimConfig, gws: u64, rng: &mut XorShift64) -> (f64, f64) {
+pub(crate) fn fixed_costs(
+    bench: &Bench,
+    cfg: &SimConfig,
+    gws: u64,
+    rng: &mut XorShift64,
+) -> (f64, f64) {
     let classes: Vec<DeviceClass> = cfg.devices.iter().map(|d| d.class).collect();
     let n_buffers = bench.props.read_buffers + bench.props.write_buffers;
     let input_bytes = gws as f64 * bench.bytes_in_per_item + bench.bytes_in_per_package;
@@ -397,7 +418,7 @@ fn fixed_costs(bench: &Bench, cfg: &SimConfig, gws: u64, rng: &mut XorShift64) -
     )
 }
 
-fn energy(cfg: &SimConfig, makespan: f64, traces: &[DeviceTrace]) -> f64 {
+pub(crate) fn energy(cfg: &SimConfig, makespan: f64, traces: &[DeviceTrace]) -> f64 {
     let classes: Vec<usize> =
         cfg.devices.iter().map(|d| cldriver::class_idx(d.class)).collect();
     let busy: Vec<f64> = traces.iter().map(|t| t.busy).collect();
@@ -414,34 +435,57 @@ pub fn simulate(bench: &Bench, cfg: &SimConfig) -> SimOutcome {
 
     let mut traces = vec![DeviceTrace::default(); n];
     let mut packages = Vec::new();
-    let (roi_time, seq) =
-        run_roi(bench, cfg, gws, &mut rng, IterPhase::Single, &mut traces, &mut packages, 0);
+    // The budget is scoped by the execution mode: ROI runs race the ROI
+    // clock directly; binary runs must also fit init + release inside the
+    // deadline, so the scheduler is armed with the ROI share that remains
+    // after the fixed costs (a non-positive share = deadline already lost).
+    let roi_deadline = cfg
+        .budget
+        .map(|b| roi_scope_deadline(b.deadline_s, cfg.mode, init_time, release_time));
+    let (roi_time, seq) = run_roi(
+        bench,
+        cfg,
+        gws,
+        &mut rng,
+        IterPhase::Single,
+        &mut traces,
+        &mut packages,
+        0,
+        0.0,
+        roi_deadline,
+    );
     let energy_j = energy(cfg, roi_time, &traces);
+    let total_time = init_time + roi_time + release_time;
+    let timed = match cfg.mode {
+        ExecMode::Binary => total_time,
+        ExecMode::Roi => roi_time,
+    };
     SimOutcome {
         roi_time,
-        total_time: init_time + roi_time + release_time,
+        total_time,
         init_time,
         release_time,
         energy_j,
         devices: traces,
         n_packages: seq,
         packages,
-        deadline: cfg.budget.map(|b| b.verdict(roi_time)),
+        deadline: cfg.budget.map(|b| b.verdict(timed)),
     }
 }
 
-/// Outcome of an iterative run ([`simulate_iterative`]).
-#[derive(Debug, Clone)]
-pub struct IterOutcome {
-    /// init + Σ iteration ROIs + release.
-    pub total_time: f64,
-    pub init_time: f64,
-    pub release_time: f64,
-    /// Per-iteration ROI times.
-    pub iter_times: Vec<f64>,
-    pub energy_j: f64,
-    pub devices: Vec<DeviceTrace>,
-    pub n_packages: u64,
+/// The ROI-clock share of a mode-scoped deadline: binary runs must fit
+/// init + release inside the budget too, so their ROI deadline shrinks by
+/// the fixed costs (possibly below zero: deadline lost before ROI start).
+pub(crate) fn roi_scope_deadline(
+    deadline_s: f64,
+    mode: ExecMode,
+    init_time: f64,
+    release_time: f64,
+) -> f64 {
+    match mode {
+        ExecMode::Roi => deadline_s,
+        ExecMode::Binary => deadline_s - init_time - release_time,
+    }
 }
 
 /// Iterative ROI mode (paper §VII future work: "iterative and multi-kernel
@@ -449,51 +493,20 @@ pub struct IterOutcome {
 /// the kernel runs `iterations` times; between iterations the inputs stay
 /// device-resident (only the per-package broadcast is re-sent), and the
 /// outputs are only read back after the final iteration.
-pub fn simulate_iterative(bench: &Bench, cfg: &SimConfig, iterations: u32) -> IterOutcome {
-    assert!(iterations >= 1);
-    let gws = cfg.gws.unwrap_or(bench.default_gws);
-    let n = cfg.devices.len();
-    assert!(n > 0, "no devices");
-    let mut rng = XorShift64::new(cfg.seed);
-    let (init_time, release_time) = fixed_costs(bench, cfg, gws, &mut rng);
-
-    let mut traces = vec![DeviceTrace::default(); n];
-    let mut packages = Vec::new();
-    let mut iter_times = Vec::with_capacity(iterations as usize);
-    let mut seq = 0;
-    for i in 0..iterations {
-        let phase = if iterations == 1 {
-            IterPhase::Single
-        } else if i == 0 {
-            IterPhase::First
-        } else if i + 1 == iterations {
-            IterPhase::Last
-        } else {
-            IterPhase::Middle
-        };
-        // finish times accumulate per iteration; reset the per-iteration
-        // baseline by tracking the delta.
-        let before: Vec<f64> = traces.iter().map(|t| t.finish).collect();
-        let (roi, s) = run_roi(bench, cfg, gws, &mut rng, phase, &mut traces, &mut packages, seq);
-        seq = s;
-        iter_times.push(roi);
-        // Re-normalize finishes to "time within this iteration" semantics:
-        // keep the maximum of previous finishes for the balance metric.
-        for (t, b) in traces.iter_mut().zip(before) {
-            t.finish = t.finish.max(b);
-        }
-    }
-    let roi_total: f64 = iter_times.iter().sum();
-    let energy_j = energy(cfg, roi_total, &traces);
-    IterOutcome {
-        total_time: init_time + roi_total + release_time,
-        init_time,
-        release_time,
-        iter_times,
-        energy_j,
-        devices: traces,
-        n_packages: seq,
-    }
+///
+/// Implemented as a single-stage [`crate::sim::PipelineSpec`]: a
+/// configured [`TimeBudget`](crate::types::TimeBudget) is treated as the
+/// *global* pipeline budget, split into per-iteration sub-budgets by
+/// [`BudgetPolicy::CarryOverSlack`](crate::types::BudgetPolicy), and
+/// per-device `finish` clocks are pipeline-cumulative (so
+/// [`crate::metrics::balance`] is meaningful for iterative runs).
+pub fn simulate_iterative(
+    bench: &Bench,
+    cfg: &SimConfig,
+    iterations: u32,
+) -> crate::sim::IterOutcome {
+    let spec = crate::sim::PipelineSpec::repeat(bench.clone(), iterations).with_budget(cfg.budget);
+    crate::sim::simulate_pipeline(&spec, cfg)
 }
 
 #[cfg(test)]
@@ -809,6 +822,58 @@ mod tests {
             st > hg,
             "Static degradation {st:.3}x should exceed HGuided's {hg:.3}x"
         );
+    }
+
+    #[test]
+    fn binary_mode_verdict_includes_fixed_costs() {
+        // Regression (PR 2): the verdict must judge the mode's response
+        // time.  A budget between roi_time and total_time is met in ROI
+        // mode but missed in binary mode, where init + release also have
+        // to fit inside the deadline.
+        let b = Bench::new(BenchId::Gaussian);
+        let mut cfg = SimConfig::testbed(&b, hguided_opt());
+        cfg.gws = Some(b.default_gws / 16);
+        let probe = simulate(&b, &cfg);
+        assert!(probe.total_time > probe.roi_time);
+        let between = (probe.roi_time + probe.total_time) / 2.0;
+        cfg.budget = Some(crate::types::TimeBudget::new(between));
+
+        let roi = simulate(&b, &cfg);
+        let v = roi.deadline.expect("budget configured");
+        assert!(v.met, "ROI mode meets a budget above roi_time");
+        assert!((v.roi_s - roi.roi_time).abs() < 1e-12);
+
+        cfg.mode = ExecMode::Binary;
+        let bin = simulate(&b, &cfg);
+        let v = bin.deadline.expect("budget configured");
+        assert!(!v.met, "binary mode must miss a budget below total_time");
+        assert!(v.slack_s < 0.0);
+        assert!((v.roi_s - bin.total_time).abs() < 1e-12, "verdict judges total time");
+    }
+
+    #[test]
+    fn iterative_finishes_are_pipeline_cumulative() {
+        // Regression (PR 2): per-device finish clocks must share one
+        // pipeline time base.  Pre-fix they were "max within any single
+        // iteration", so the latest finish sat near one iteration's span
+        // instead of the full ROI total.
+        let b = Bench::new(BenchId::NBody);
+        let mut cfg = SimConfig::testbed(&b, hguided_opt());
+        cfg.gws = Some(b.default_gws / 8);
+        let k = 6;
+        let out = simulate_iterative(&b, &cfg, k);
+        let roi_total: f64 = out.iter_times.iter().sum();
+        let last = out.devices.iter().map(|d| d.finish).fold(0.0, f64::max);
+        assert!(
+            (last - roi_total).abs() < 1e-9,
+            "latest finish {last:.4}s must equal the pipeline ROI {roi_total:.4}s"
+        );
+        for d in &out.devices {
+            assert!(d.finish <= roi_total + 1e-12);
+            assert!(d.busy <= d.finish + 1e-9);
+        }
+        let bal = crate::metrics::balance_traces(&out.devices);
+        assert!(bal > 0.0 && bal <= 1.0, "iterative balance {bal} out of (0, 1]");
     }
 
     #[test]

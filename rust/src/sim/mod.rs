@@ -6,9 +6,16 @@
 //! co-execute faithfully on a single host core.  All figure benches
 //! (Figs 3–6) run on this backend; the PJRT backend executes the same
 //! scheduler/engine code against real kernels.
+//!
+//! [`pipeline`] layers the §VII iterative / multi-kernel execution mode on
+//! top: a [`PipelineSpec`] runs a DAG of kernel stages under one global
+//! deadline, split into per-iteration sub-budgets by a
+//! [`crate::types::BudgetPolicy`] on a cumulative pipeline clock.
 
 pub mod coexec;
+pub mod pipeline;
 
-pub use coexec::{
-    simulate, simulate_iterative, DeviceTrace, IterOutcome, PackageTrace, SimConfig, SimOutcome,
+pub use coexec::{simulate, simulate_iterative, DeviceTrace, PackageTrace, SimConfig, SimOutcome};
+pub use pipeline::{
+    simulate_pipeline, IterOutcome, IterVerdict, PipelineOutcome, PipelineSpec, PipelineStage,
 };

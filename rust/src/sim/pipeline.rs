@@ -1,0 +1,580 @@
+//! Deadline-aware iterative / multi-kernel pipeline engine (paper §VII:
+//! "iterative and multi-kernel executions, imitating the ROI operation
+//! mode of real applications", under the paper's time-constrained lens).
+//!
+//! A [`PipelineSpec`] describes a sequence — or a simple DAG — of kernel
+//! stages, each executed for a number of ROI iterations with
+//! device-resident buffers in between.  A **global** [`TimeBudget`] is
+//! split into per-iteration sub-budgets by a pluggable [`BudgetPolicy`];
+//! every iteration re-arms the deadline-aware schedulers (via
+//! `SchedCtx::with_deadline` + `Scheduler::on_clock`) against the
+//! **cumulative pipeline clock**, not a per-iteration zero, so per-device
+//! `finish` times form one coherent time base and
+//! [`crate::metrics::balance`] stays meaningful across iterations.
+//!
+//! The run yields a [`PipelineOutcome`]: the pipeline-level
+//! [`DeadlineVerdict`], one [`IterVerdict`] per iteration, and the
+//! ROADMAP's energy-under-deadline metrics (J per deadline hit, with an
+//! [`EnergyPolicy`] that modulates the Adaptive scheduler's pessimism —
+//! race-to-idle vs stretch-to-deadline).
+//!
+//! Stages sharing one device set serialize in (deterministic) topological
+//! order: the devices are the bottleneck resource, exactly as in
+//! EngineCL's single-platform deployments.
+
+use crate::benchsuite::Bench;
+use crate::stats::XorShift64;
+use crate::types::{
+    BudgetPolicy, DeadlineVerdict, DeviceSpec, EnergyPolicy, ExecMode, TimeBudget,
+};
+
+use super::coexec::{self, DeviceTrace, IterPhase, PackageTrace, SimConfig};
+
+/// One pipeline stage: a kernel iterated `iterations` times.
+#[derive(Debug, Clone)]
+pub struct PipelineStage {
+    pub bench: Bench,
+    pub iterations: u32,
+    /// Problem size override; `None` falls back to the template
+    /// [`SimConfig::gws`], then to the benchmark's paper size.
+    pub gws: Option<u64>,
+    /// Device override; `None` uses the template's devices.  All stages
+    /// must resolve to the same device count and classes (one platform).
+    pub devices: Option<Vec<DeviceSpec>>,
+    /// Indices of stages that must complete before this one starts.
+    pub deps: Vec<usize>,
+}
+
+impl PipelineStage {
+    pub fn new(bench: Bench, iterations: u32) -> Self {
+        assert!(iterations >= 1, "a stage needs at least one iteration");
+        Self { bench, iterations, gws: None, devices: None, deps: Vec::new() }
+    }
+
+    pub fn with_gws(mut self, gws: u64) -> Self {
+        self.gws = Some(gws);
+        self
+    }
+
+    pub fn with_devices(mut self, devices: Vec<DeviceSpec>) -> Self {
+        assert!(!devices.is_empty());
+        self.devices = Some(devices);
+        self
+    }
+
+    /// Add dependencies on earlier-declared stages (DAG edges).
+    pub fn after(mut self, deps: &[usize]) -> Self {
+        self.deps.extend_from_slice(deps);
+        self
+    }
+}
+
+/// A pipeline of kernel stages under one global time budget.
+#[derive(Debug, Clone)]
+pub struct PipelineSpec {
+    pub stages: Vec<PipelineStage>,
+    /// Global budget over the whole pipeline (scoped by the run's
+    /// [`ExecMode`], like single-shot verdicts); `None` = unconstrained.
+    pub budget: Option<TimeBudget>,
+    /// How the global budget splits into per-iteration sub-budgets.
+    pub policy: BudgetPolicy,
+    /// Race-to-idle vs stretch-to-deadline (modulates Adaptive pessimism).
+    pub energy: EnergyPolicy,
+}
+
+impl PipelineSpec {
+    /// Single-stage pipeline: one kernel iterated `iterations` times (the
+    /// classic §VII iterative ROI mode).
+    pub fn repeat(bench: Bench, iterations: u32) -> Self {
+        Self {
+            stages: vec![PipelineStage::new(bench, iterations)],
+            budget: None,
+            policy: BudgetPolicy::CarryOverSlack,
+            energy: EnergyPolicy::RaceToIdle,
+        }
+    }
+
+    /// Linear multi-kernel chain: each bench depends on its predecessor.
+    pub fn chain(benches: Vec<Bench>, iterations_each: u32) -> Self {
+        assert!(!benches.is_empty(), "a chain needs at least one kernel");
+        let stages = benches
+            .into_iter()
+            .enumerate()
+            .map(|(i, b)| {
+                let s = PipelineStage::new(b, iterations_each);
+                if i == 0 {
+                    s
+                } else {
+                    s.after(&[i - 1])
+                }
+            })
+            .collect();
+        Self {
+            stages,
+            budget: None,
+            policy: BudgetPolicy::CarryOverSlack,
+            energy: EnergyPolicy::RaceToIdle,
+        }
+    }
+
+    pub fn push_stage(mut self, stage: PipelineStage) -> Self {
+        self.stages.push(stage);
+        self
+    }
+
+    pub fn with_budget(mut self, budget: Option<TimeBudget>) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Convenience: global deadline in seconds.
+    pub fn with_deadline(self, deadline_s: f64) -> Self {
+        self.with_budget(Some(TimeBudget::new(deadline_s)))
+    }
+
+    pub fn with_policy(mut self, policy: BudgetPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_energy(mut self, energy: EnergyPolicy) -> Self {
+        self.energy = energy;
+        self
+    }
+
+    /// Total kernel iterations across all stages.
+    pub fn total_iterations(&self) -> u32 {
+        self.stages.iter().map(|s| s.iterations).sum()
+    }
+
+    /// Human-readable pipeline label, e.g. `Gaussian+Mandelbrot`.
+    pub fn label(&self) -> String {
+        let names: Vec<&str> = self.stages.iter().map(|s| s.bench.props.name).collect();
+        names.join("+")
+    }
+}
+
+/// Verdict of one pipeline iteration against its sub-budget (all clocks
+/// are pipeline-ROI-relative seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IterVerdict {
+    /// Stage index in [`PipelineSpec::stages`] declaration order.
+    pub stage: usize,
+    /// Global iteration index across the pipeline (execution order).
+    pub iter: u32,
+    /// Absolute sub-deadline assigned by the [`BudgetPolicy`].
+    pub sub_deadline_s: f64,
+    /// Absolute finish time of the iteration.
+    pub end_s: f64,
+    pub met: bool,
+    /// `sub_deadline_s - end_s` (positive = finished early).
+    pub slack_s: f64,
+}
+
+/// Result of one pipeline run ([`simulate_pipeline`]); also the outcome
+/// type of [`coexec::simulate_iterative`], which is a single-stage
+/// pipeline.
+#[derive(Debug, Clone)]
+pub struct PipelineOutcome {
+    /// init + Σ iteration ROIs + release.
+    pub total_time: f64,
+    pub init_time: f64,
+    pub release_time: f64,
+    /// Cumulative ROI time (Σ `iter_times`, the final pipeline clock).
+    pub roi_time: f64,
+    /// Per-iteration ROI times, in execution order.
+    pub iter_times: Vec<f64>,
+    pub energy_j: f64,
+    /// Per-device traces; `finish` is pipeline-cumulative (the completion
+    /// of the device's last package on the global ROI clock).
+    pub devices: Vec<DeviceTrace>,
+    pub n_packages: u64,
+    pub packages: Vec<PackageTrace>,
+    /// Pipeline-level verdict against the global budget, scoped by the
+    /// run's [`ExecMode`]; `None` when unconstrained.
+    pub deadline: Option<DeadlineVerdict>,
+    /// One verdict per iteration (empty when unconstrained).
+    pub iter_verdicts: Vec<IterVerdict>,
+}
+
+/// Compatibility alias: the iterative ROI outcome grew into the pipeline
+/// outcome (a single-stage pipeline *is* the iterative mode).
+pub type IterOutcome = PipelineOutcome;
+
+impl PipelineOutcome {
+    /// The response time under the configured mode.
+    pub fn time(&self, mode: ExecMode) -> f64 {
+        match mode {
+            ExecMode::Binary => self.total_time,
+            ExecMode::Roi => self.roi_time,
+        }
+    }
+
+    /// Iterations that met their sub-deadline.
+    pub fn iter_hits(&self) -> usize {
+        self.iter_verdicts.iter().filter(|v| v.met).count()
+    }
+
+    /// Fraction of iterations that met their sub-deadline; `None` when
+    /// the run was unconstrained.
+    pub fn iter_hit_rate(&self) -> Option<f64> {
+        if self.iter_verdicts.is_empty() {
+            None
+        } else {
+            Some(self.iter_hits() as f64 / self.iter_verdicts.len() as f64)
+        }
+    }
+
+    /// Energy per sub-deadline hit (the ROADMAP's J-per-hit metric);
+    /// `None` when unconstrained or when no iteration hit its deadline.
+    pub fn energy_per_hit_j(&self) -> Option<f64> {
+        match self.iter_hits() {
+            0 => None,
+            h => Some(self.energy_j / h as f64),
+        }
+    }
+}
+
+/// Deterministic topological order of the stage DAG (Kahn's algorithm,
+/// lowest stage index first among the ready set).  Panics on cycles and
+/// out-of-range dependencies.
+fn topo_order(stages: &[PipelineStage]) -> Vec<usize> {
+    let n = stages.len();
+    let deps: Vec<Vec<usize>> = stages
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let mut d = s.deps.clone();
+            d.sort_unstable();
+            d.dedup();
+            for &j in &d {
+                assert!(j < n, "stage {i}: dependency {j} out of range");
+                assert!(j != i, "stage {i} depends on itself");
+            }
+            d
+        })
+        .collect();
+    let mut indeg: Vec<usize> = deps.iter().map(Vec::len).collect();
+    let mut order = Vec::with_capacity(n);
+    let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    while !ready.is_empty() {
+        let mut pos = 0;
+        for (p, &cand) in ready.iter().enumerate() {
+            if cand < ready[pos] {
+                pos = p;
+            }
+        }
+        let next = ready.swap_remove(pos);
+        order.push(next);
+        for (i, d) in deps.iter().enumerate() {
+            if d.contains(&next) {
+                indeg[i] -= 1;
+                if indeg[i] == 0 {
+                    ready.push(i);
+                }
+            }
+        }
+    }
+    assert_eq!(order.len(), n, "pipeline stage graph has a cycle");
+    order
+}
+
+/// Run one pipeline on the virtual-clock backend.  `cfg` is the run
+/// template: scheduler, driver/power models, optimizations, estimation
+/// scenario, seed, fault injection, and the default device set / problem
+/// size for stages that don't override them.  `spec.budget` (or, if
+/// unset, `cfg.budget`) is the **global** pipeline budget.
+pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcome {
+    assert!(!spec.stages.is_empty(), "pipeline needs at least one stage");
+    assert!(!cfg.devices.is_empty(), "no devices");
+    let order = topo_order(&spec.stages);
+    let budget = spec.budget.or(cfg.budget);
+    let total_iters = spec.total_iterations();
+
+    // Resolve per-stage device sets and sizes up front; all stages must
+    // run on the same platform (same count and classes) so device traces
+    // and the power model stay index-aligned across the pipeline.
+    let stage_cfgs: Vec<(SimConfig, u64)> = order
+        .iter()
+        .map(|&si| {
+            let stage = &spec.stages[si];
+            let mut sc = cfg.clone();
+            if let Some(devs) = &stage.devices {
+                sc.devices = devs.clone();
+            }
+            sc.scheduler = cfg.scheduler.for_energy_policy(spec.energy);
+            let gws = stage.gws.or(cfg.gws).unwrap_or(stage.bench.default_gws);
+            (sc, gws)
+        })
+        .collect();
+    let n = stage_cfgs[0].0.devices.len();
+    let classes: Vec<_> = stage_cfgs[0].0.devices.iter().map(|d| d.class).collect();
+    for (sc, _) in &stage_cfgs {
+        let c: Vec<_> = sc.devices.iter().map(|d| d.class).collect();
+        assert_eq!(c, classes, "all pipeline stages must share one device platform");
+    }
+
+    let mut rng = XorShift64::new(cfg.seed);
+    // Program-level fixed costs are paid once: init before the first
+    // stage (discovery + buffer creation), release after the last.
+    // Modelling scope: they are priced from the *topologically first*
+    // stage's kernel only — later stages' program builds and buffer
+    // footprints are not added, so binary-mode fixed costs of a
+    // multi-kernel chain are a lower bound and depend on which stage
+    // sorts first (ROADMAP: aggregate fixed costs over distinct stage
+    // kernels).  Single-kernel pipelines (`simulate_iterative`) are
+    // exact.
+    let (first_cfg, first_gws) = &stage_cfgs[0];
+    let (init_time, release_time) =
+        coexec::fixed_costs(&spec.stages[order[0]].bench, first_cfg, *first_gws, &mut rng);
+    let roi_deadline = budget
+        .map(|b| coexec::roi_scope_deadline(b.deadline_s, cfg.mode, init_time, release_time));
+
+    let mut traces = vec![DeviceTrace::default(); n];
+    let mut packages = Vec::new();
+    let mut iter_times = Vec::with_capacity(total_iters as usize);
+    let mut iter_verdicts = Vec::new();
+    let mut seq = 0u64;
+    let mut clock = 0.0f64;
+    let mut prev_sub = 0.0f64;
+    let mut global_iter = 0u32;
+    for (pos, &si) in order.iter().enumerate() {
+        let stage = &spec.stages[si];
+        let (stage_cfg, gws) = &stage_cfgs[pos];
+        for i in 0..stage.iterations {
+            let phase = if stage.iterations == 1 {
+                IterPhase::Single
+            } else if i == 0 {
+                IterPhase::First
+            } else if i + 1 == stage.iterations {
+                IterPhase::Last
+            } else {
+                IterPhase::Middle
+            };
+            let sub = roi_deadline.map(|d| {
+                spec.policy.sub_deadline(d, total_iters, global_iter, clock, prev_sub)
+            });
+            let (end, s) = coexec::run_roi(
+                &stage.bench,
+                stage_cfg,
+                *gws,
+                &mut rng,
+                phase,
+                &mut traces,
+                &mut packages,
+                seq,
+                clock,
+                sub,
+            );
+            seq = s;
+            iter_times.push(end - clock);
+            if let Some(sd) = sub {
+                iter_verdicts.push(IterVerdict {
+                    stage: si,
+                    iter: global_iter,
+                    sub_deadline_s: sd,
+                    end_s: end,
+                    met: end <= sd,
+                    slack_s: sd - end,
+                });
+                prev_sub = sd;
+            }
+            clock = end;
+            global_iter += 1;
+        }
+    }
+
+    let roi_time = clock;
+    let total_time = init_time + roi_time + release_time;
+    // Classes are constant across stages (asserted above), so single-shot
+    // energy accounting applies to the cumulative ROI window.
+    let energy_j = coexec::energy(&stage_cfgs[0].0, roi_time, &traces);
+    let timed = match cfg.mode {
+        ExecMode::Binary => total_time,
+        ExecMode::Roi => roi_time,
+    };
+    PipelineOutcome {
+        total_time,
+        init_time,
+        release_time,
+        roi_time,
+        iter_times,
+        energy_j,
+        devices: traces,
+        n_packages: seq,
+        packages,
+        deadline: budget.map(|b| b.verdict(timed)),
+        iter_verdicts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchsuite::{Bench, BenchId};
+    use crate::scheduler::{HGuidedParams, SchedulerKind};
+
+    fn hguided_opt() -> SchedulerKind {
+        SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() }
+    }
+
+    fn small_cfg(bench: &Bench) -> SimConfig {
+        let mut cfg = SimConfig::testbed(bench, hguided_opt());
+        cfg.gws = Some(bench.default_gws / 16);
+        cfg
+    }
+
+    #[test]
+    fn repeat_builder_shapes_single_stage() {
+        let spec = PipelineSpec::repeat(Bench::new(BenchId::Gaussian), 5);
+        assert_eq!(spec.stages.len(), 1);
+        assert_eq!(spec.total_iterations(), 5);
+        assert_eq!(spec.label(), "Gaussian");
+        assert!(spec.budget.is_none());
+    }
+
+    #[test]
+    fn chain_builder_links_stages_linearly() {
+        let spec = PipelineSpec::chain(
+            vec![Bench::new(BenchId::Gaussian), Bench::new(BenchId::Mandelbrot)],
+            3,
+        );
+        assert_eq!(spec.stages.len(), 2);
+        assert_eq!(spec.stages[0].deps, Vec::<usize>::new());
+        assert_eq!(spec.stages[1].deps, vec![0]);
+        assert_eq!(spec.total_iterations(), 6);
+        assert_eq!(spec.label(), "Gaussian+Mandelbrot");
+    }
+
+    #[test]
+    fn topo_order_is_deterministic_and_respects_deps() {
+        // Diamond: 0 -> {1, 2} -> 3, declared out of order.
+        let b = Bench::new(BenchId::Gaussian);
+        let stages = vec![
+            PipelineStage::new(b.clone(), 1).after(&[1, 2]), // 0 = join
+            PipelineStage::new(b.clone(), 1).after(&[3]),    // 1 = left
+            PipelineStage::new(b.clone(), 1).after(&[3]),    // 2 = right
+            PipelineStage::new(b, 1),                        // 3 = source
+        ];
+        let order = topo_order(&stages);
+        assert_eq!(order, vec![3, 1, 2, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn cyclic_pipeline_rejected() {
+        let b = Bench::new(BenchId::Gaussian);
+        let stages = vec![
+            PipelineStage::new(b.clone(), 1).after(&[1]),
+            PipelineStage::new(b, 1).after(&[0]),
+        ];
+        topo_order(&stages);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn dangling_dependency_rejected() {
+        let b = Bench::new(BenchId::Gaussian);
+        topo_order(&[PipelineStage::new(b, 1).after(&[7])]);
+    }
+
+    #[test]
+    fn unconstrained_pipeline_has_no_verdicts() {
+        let b = Bench::new(BenchId::Gaussian);
+        let out = simulate_pipeline(&PipelineSpec::repeat(b.clone(), 3), &small_cfg(&b));
+        assert!(out.deadline.is_none());
+        assert!(out.iter_verdicts.is_empty());
+        assert_eq!(out.iter_hit_rate(), None);
+        assert_eq!(out.energy_per_hit_j(), None);
+        assert_eq!(out.iter_times.len(), 3);
+    }
+
+    #[test]
+    fn constrained_pipeline_verdicts_are_consistent() {
+        let b = Bench::new(BenchId::Mandelbrot);
+        let spec = PipelineSpec::repeat(b.clone(), 4).with_deadline(1e6);
+        let out = simulate_pipeline(&spec, &small_cfg(&b));
+        let v = out.deadline.expect("budget configured");
+        assert!(v.met && v.slack_s > 0.0);
+        assert_eq!(out.iter_verdicts.len(), 4);
+        for iv in &out.iter_verdicts {
+            assert_eq!(iv.met, iv.slack_s >= 0.0);
+            assert!((iv.slack_s - (iv.sub_deadline_s - iv.end_s)).abs() < 1e-12);
+        }
+        assert_eq!(out.iter_hit_rate(), Some(1.0));
+        let jph = out.energy_per_hit_j().expect("all hits");
+        assert!((jph - out.energy_j / 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hopeless_budget_still_executes_everything() {
+        let b = Bench::new(BenchId::Gaussian);
+        let spec = PipelineSpec::repeat(b.clone(), 3).with_deadline(1e-9);
+        let cfg = small_cfg(&b);
+        let out = simulate_pipeline(&spec, &cfg);
+        assert!(!out.deadline.unwrap().met);
+        assert!(out.iter_verdicts.iter().all(|v| !v.met));
+        assert_eq!(out.energy_per_hit_j(), None, "no hits, no J-per-hit");
+        let groups: u64 = out.devices.iter().map(|d| d.groups).sum();
+        assert_eq!(groups, 3 * b.groups(cfg.gws.unwrap()));
+    }
+
+    #[test]
+    fn device_finishes_share_the_pipeline_clock() {
+        let b = Bench::new(BenchId::NBody);
+        let cfg = small_cfg(&b);
+        let out = simulate_pipeline(&PipelineSpec::repeat(b.clone(), 5), &cfg);
+        let last = out.devices.iter().map(|d| d.finish).fold(0.0, f64::max);
+        assert!(
+            (last - out.roi_time).abs() < 1e-9,
+            "last finish {last} != pipeline roi {}",
+            out.roi_time
+        );
+        for d in &out.devices {
+            assert!(d.finish <= out.roi_time + 1e-12);
+            // Every device works in every iteration of this workload, so
+            // its final finish lies in the last iteration's window.
+            assert!(d.finish > out.roi_time - out.iter_times.last().unwrap() - 1e-9);
+        }
+        let bal = crate::metrics::balance_traces(&out.devices);
+        assert!(bal > 0.0 && bal <= 1.0, "balance {bal}");
+    }
+
+    #[test]
+    fn multi_kernel_chain_conserves_work_per_stage() {
+        let ga = Bench::new(BenchId::Gaussian);
+        let mb = Bench::new(BenchId::Mandelbrot);
+        let spec = PipelineSpec {
+            stages: vec![
+                PipelineStage::new(ga.clone(), 2).with_gws(ga.default_gws / 32),
+                PipelineStage::new(mb.clone(), 3)
+                    .with_gws(mb.default_gws / 32)
+                    .with_devices(coexec::testbed_devices(&mb))
+                    .after(&[0]),
+            ],
+            budget: None,
+            policy: BudgetPolicy::EvenSplit,
+            energy: EnergyPolicy::RaceToIdle,
+        };
+        let cfg = SimConfig::testbed(&ga, hguided_opt());
+        let out = simulate_pipeline(&spec, &cfg);
+        let groups: u64 = out.devices.iter().map(|d| d.groups).sum();
+        let want = 2 * ga.groups(ga.default_gws / 32) + 3 * mb.groups(mb.default_gws / 32);
+        assert_eq!(groups, want, "per-stage work conserved");
+        assert_eq!(out.iter_times.len(), 5);
+        assert!(out.iter_times.iter().all(|&t| t > 0.0));
+        assert!((out.roi_time - out.iter_times.iter().sum::<f64>()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn greedy_frontload_offers_every_iteration_the_global_deadline() {
+        let b = Bench::new(BenchId::Gaussian);
+        let spec = PipelineSpec::repeat(b.clone(), 3)
+            .with_deadline(2.0)
+            .with_policy(BudgetPolicy::GreedyFrontload);
+        let out = simulate_pipeline(&spec, &small_cfg(&b));
+        for v in &out.iter_verdicts {
+            assert_eq!(v.sub_deadline_s, 2.0);
+        }
+    }
+}

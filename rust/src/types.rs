@@ -174,6 +174,122 @@ pub struct DeadlineVerdict {
     pub slack_s: f64,
 }
 
+/// How a pipeline's **global** [`TimeBudget`] is split into per-iteration
+/// sub-budgets (the ROADMAP's "per-iteration sub-budgets, carry-over
+/// slack" item).  Sub-deadlines are *absolute* instants on the cumulative
+/// pipeline ROI clock, so the deadline-aware schedulers can be re-armed
+/// each iteration against the pipeline clock instead of a per-iteration
+/// zero.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BudgetPolicy {
+    /// Every iteration gets an equal slice: the i-th sub-deadline sits at
+    /// `(i + 1) / N` of the global deadline, regardless of how earlier
+    /// iterations actually fared.
+    EvenSplit,
+    /// Equal nominal shares, but slack left over by earlier iterations is
+    /// carried forward (and a late pipeline is re-planned from the current
+    /// clock): the sub-deadline never precedes EvenSplit's for the same
+    /// clock trajectory.
+    CarryOverSlack,
+    /// Every iteration may spend the whole remaining global budget — the
+    /// front of the pipeline is never throttled by a slice.
+    GreedyFrontload,
+}
+
+impl BudgetPolicy {
+    pub const ALL: [BudgetPolicy; 3] =
+        [BudgetPolicy::EvenSplit, BudgetPolicy::CarryOverSlack, BudgetPolicy::GreedyFrontload];
+
+    /// Absolute sub-deadline (pipeline-ROI clock, seconds) for iteration
+    /// `iter` of `total_iters`, starting at `clock_s`, where
+    /// `prev_deadline_s` is the previous iteration's sub-deadline (0 for
+    /// the first).  `roi_deadline_s` is the global ROI-scope deadline.
+    pub fn sub_deadline(
+        &self,
+        roi_deadline_s: f64,
+        total_iters: u32,
+        iter: u32,
+        clock_s: f64,
+        prev_deadline_s: f64,
+    ) -> f64 {
+        debug_assert!(total_iters >= 1 && iter < total_iters);
+        let share = roi_deadline_s / total_iters as f64;
+        match self {
+            BudgetPolicy::EvenSplit => share * (iter + 1) as f64,
+            BudgetPolicy::CarryOverSlack => prev_deadline_s.max(clock_s) + share,
+            BudgetPolicy::GreedyFrontload => roi_deadline_s,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            BudgetPolicy::EvenSplit => "even-split",
+            BudgetPolicy::CarryOverSlack => "carry-over-slack",
+            BudgetPolicy::GreedyFrontload => "greedy-frontload",
+        }
+    }
+
+    /// Parse a CLI spelling (full label or short alias).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_lowercase().as_str() {
+            "even" | "even-split" | "evensplit" => Some(BudgetPolicy::EvenSplit),
+            "carry" | "carry-over-slack" | "carryoverslack" => Some(BudgetPolicy::CarryOverSlack),
+            "greedy" | "greedy-frontload" | "greedyfrontload" => {
+                Some(BudgetPolicy::GreedyFrontload)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Energy policy of a time-constrained pipeline (the ROADMAP's
+/// "race-to-idle vs stretch-to-deadline" energy-aware Adaptive variants).
+/// The policy modulates the Adaptive scheduler's pessimism: racing keeps
+/// the configured guard (finish as early as possible, then idle), while
+/// stretching raises it so grants shrink earlier and finish times cluster
+/// in front of the deadline instead of straggling past it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnergyPolicy {
+    /// Finish as early as possible and let the devices idle afterwards:
+    /// the configured pessimism is used unchanged.
+    RaceToIdle,
+    /// Use the whole sub-budget: pessimism is raised to at least 0.55, so
+    /// the completion caps engage sooner and overshoot risk drops at the
+    /// price of more (smaller) packages.
+    StretchToDeadline,
+}
+
+impl EnergyPolicy {
+    pub const ALL: [EnergyPolicy; 2] = [EnergyPolicy::RaceToIdle, EnergyPolicy::StretchToDeadline];
+
+    /// The effective Adaptive pessimism under this policy.
+    pub fn pessimism(&self, base: f64) -> f64 {
+        match self {
+            EnergyPolicy::RaceToIdle => base,
+            // Strictly below 1.0 (AdaptiveParams::validate's bound).
+            EnergyPolicy::StretchToDeadline => base.max(0.55),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            EnergyPolicy::RaceToIdle => "race-to-idle",
+            EnergyPolicy::StretchToDeadline => "stretch-to-deadline",
+        }
+    }
+
+    /// Parse a CLI spelling (full label or short alias).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_lowercase().as_str() {
+            "race" | "race-to-idle" | "racetoidle" => Some(EnergyPolicy::RaceToIdle),
+            "stretch" | "stretch-to-deadline" | "stretchtodeadline" => {
+                Some(EnergyPolicy::StretchToDeadline)
+            }
+            _ => None,
+        }
+    }
+}
+
 /// How the scheduler's computing-power estimates `P_i` relate to the true
 /// co-execution powers.  The paper profiles powers offline, so the
 /// scheduler may run under estimation error; its headline 0.84 efficiency
@@ -284,6 +400,85 @@ mod tests {
     #[should_panic(expected = "deadline must be positive")]
     fn time_budget_rejects_nonpositive() {
         TimeBudget::new(0.0);
+    }
+
+    #[test]
+    fn even_split_grid_is_fixed() {
+        let p = BudgetPolicy::EvenSplit;
+        for (iter, want) in [(0u32, 0.25), (1, 0.5), (2, 0.75), (3, 1.0)] {
+            // The grid ignores both the clock and the previous deadline.
+            let d = p.sub_deadline(1.0, 4, iter, 123.0, 456.0);
+            assert!((d - want).abs() < 1e-12, "iter {iter}: {d}");
+        }
+    }
+
+    #[test]
+    fn carry_over_slack_dominates_even_split() {
+        // For the same clock trajectory the carried sub-deadline is never
+        // earlier than EvenSplit's slice boundary (proof by induction on
+        // prev >= even_prev), so its per-iteration hit set is a superset.
+        let mut rng_state = 88172645463325252u64;
+        let mut next = move || {
+            rng_state ^= rng_state << 13;
+            rng_state ^= rng_state >> 7;
+            rng_state ^= rng_state << 17;
+            (rng_state >> 11) as f64 / (1u64 << 53) as f64
+        };
+        for _ in 0..200 {
+            let d = 1.0 + next() * 9.0;
+            let n = 1 + (next() * 12.0) as u32;
+            let mut clock = 0.0;
+            let mut prev_carry = 0.0;
+            for iter in 0..n {
+                let even = BudgetPolicy::EvenSplit.sub_deadline(d, n, iter, clock, 0.0);
+                let carry =
+                    BudgetPolicy::CarryOverSlack.sub_deadline(d, n, iter, clock, prev_carry);
+                assert!(carry >= even - 1e-12, "iter {iter}: carry {carry} < even {even}");
+                prev_carry = carry;
+                clock += next() * 2.0 * d / n as f64; // early or late at random
+            }
+        }
+    }
+
+    #[test]
+    fn carry_over_slack_replans_from_a_late_clock() {
+        // On time: carry == even.  Late: the next slice starts at `now`.
+        let p = BudgetPolicy::CarryOverSlack;
+        let on_time = p.sub_deadline(2.0, 4, 1, 0.5, 0.5);
+        assert!((on_time - 1.0).abs() < 1e-12);
+        let late = p.sub_deadline(2.0, 4, 1, 0.9, 0.5);
+        assert!((late - 1.4).abs() < 1e-12, "late re-plan: {late}");
+    }
+
+    #[test]
+    fn greedy_frontload_always_offers_the_global_deadline() {
+        for iter in 0..5 {
+            let d = BudgetPolicy::GreedyFrontload.sub_deadline(3.0, 5, iter, 1.0, 2.0);
+            assert_eq!(d, 3.0);
+        }
+    }
+
+    #[test]
+    fn policy_labels_parse_roundtrip() {
+        for p in BudgetPolicy::ALL {
+            assert_eq!(BudgetPolicy::parse(p.label()), Some(p));
+        }
+        assert_eq!(BudgetPolicy::parse("carry"), Some(BudgetPolicy::CarryOverSlack));
+        assert_eq!(BudgetPolicy::parse("nope"), None);
+        for e in EnergyPolicy::ALL {
+            assert_eq!(EnergyPolicy::parse(e.label()), Some(e));
+        }
+        assert_eq!(EnergyPolicy::parse("race"), Some(EnergyPolicy::RaceToIdle));
+        assert_eq!(EnergyPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn energy_policies_modulate_pessimism() {
+        assert_eq!(EnergyPolicy::RaceToIdle.pessimism(0.25), 0.25);
+        assert_eq!(EnergyPolicy::StretchToDeadline.pessimism(0.25), 0.55);
+        // A harder configured guard is never weakened by stretching.
+        assert_eq!(EnergyPolicy::StretchToDeadline.pessimism(0.7), 0.7);
+        assert!(EnergyPolicy::StretchToDeadline.pessimism(0.0) < 1.0);
     }
 
     #[test]

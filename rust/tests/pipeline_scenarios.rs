@@ -1,0 +1,222 @@
+//! Integration tests for the deadline-aware pipeline engine: global
+//! budgets split into per-iteration sub-budgets, cumulative-clock verdict
+//! consistency, multi-kernel chains, energy policies, and the acceptance
+//! claim that carry-over-slack serves sub-deadlines at least as well as
+//! an even split under pessimistic power estimation.
+
+use enginecl::benchsuite::{Bench, BenchId};
+use enginecl::engine::experiments;
+use enginecl::scheduler::{AdaptiveParams, HGuidedParams, SchedulerKind};
+use enginecl::sim::{simulate, simulate_iterative, simulate_pipeline, PipelineSpec, SimConfig};
+use enginecl::types::{BudgetPolicy, EnergyPolicy, EstimateScenario, TimeBudget};
+
+fn hguided_opt() -> SchedulerKind {
+    SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() }
+}
+
+fn adaptive() -> SchedulerKind {
+    SchedulerKind::Adaptive { params: AdaptiveParams::default_paper() }
+}
+
+#[test]
+fn iterative_budget_threads_into_per_iteration_verdicts() {
+    // The ROADMAP item: `TimeBudget` through `simulate_iterative`.
+    let b = Bench::new(BenchId::Gaussian);
+    let mut cfg = SimConfig::testbed(&b, adaptive());
+    cfg.gws = Some(b.default_gws / 16);
+    let free = simulate_iterative(&b, &cfg, 4);
+    assert!(free.deadline.is_none());
+    assert!(free.iter_verdicts.is_empty());
+
+    cfg.budget = Some(TimeBudget::new(free.roi_time * 1.3));
+    let out = simulate_iterative(&b, &cfg, 4);
+    let v = out.deadline.expect("global verdict recorded");
+    assert_eq!(v.met, out.roi_time <= v.deadline_s);
+    assert_eq!(out.iter_verdicts.len(), 4, "one verdict per iteration");
+    for iv in &out.iter_verdicts {
+        assert_eq!(iv.met, iv.slack_s >= 0.0, "slack consistent with met");
+        assert!(iv.end_s > 0.0 && iv.sub_deadline_s > 0.0);
+    }
+    // Sub-deadlines are cumulative-clock instants, so they increase.
+    for w in out.iter_verdicts.windows(2) {
+        assert!(w[1].sub_deadline_s > w[0].sub_deadline_s);
+        assert!(w[1].end_s > w[0].end_s);
+    }
+}
+
+#[test]
+fn single_iteration_pipeline_matches_single_shot_run() {
+    let b = Bench::new(BenchId::Ray1);
+    let mut cfg = SimConfig::testbed(&b, adaptive());
+    cfg.gws = Some(b.default_gws / 16);
+    cfg.budget = Some(TimeBudget::new(2.0));
+    let single = simulate(&b, &cfg);
+    let pipe = simulate_iterative(&b, &cfg, 1);
+    assert!((single.roi_time - pipe.roi_time).abs() < 1e-12);
+    assert!((single.total_time - pipe.total_time).abs() < 1e-12);
+    let (a, b2) = (single.deadline.unwrap(), pipe.deadline.unwrap());
+    assert_eq!(a.met, b2.met);
+    assert!((a.slack_s - b2.slack_s).abs() < 1e-12);
+}
+
+#[test]
+fn carry_over_slack_serves_sub_deadlines_at_least_as_well_as_even_split() {
+    // Acceptance claim, exact form: with a deadline-blind scheduler the
+    // policy choice cannot alter the trajectory, so per-iteration end
+    // times are identical and carry-over-slack's sub-deadlines dominate
+    // even-split's pointwise — its iteration hit rate can only be >=.
+    let policies = [BudgetPolicy::EvenSplit, BudgetPolicy::CarryOverSlack];
+    let (rows, iters) = experiments::pipeline_sweep(
+        5,
+        &[BenchId::Gaussian, BenchId::Mandelbrot],
+        6,
+        &hguided_opt(),
+        &policies,
+        &[EnergyPolicy::RaceToIdle],
+        &[EstimateScenario::Pessimistic { err: 0.3 }],
+        &[0.9, 1.05, 1.2],
+    );
+    let est = EstimateScenario::Pessimistic { err: 0.3 }.label();
+    let means = experiments::pipeline_policy_means(&rows, &est);
+    let iter_hit = |label: &str| {
+        means
+            .iter()
+            .find(|(p, _, _)| p.as_str() == label)
+            .map(|&(_, _, ih)| ih)
+            .expect("policy swept")
+    };
+    assert!(
+        iter_hit("carry-over-slack") >= iter_hit("even-split"),
+        "carry {:.3} !>= even {:.3}",
+        iter_hit("carry-over-slack"),
+        iter_hit("even-split")
+    );
+    // The dominance holds cell-by-cell, not just on the means.
+    for r in rows.iter().filter(|r| r.policy == "even-split") {
+        let carry = rows
+            .iter()
+            .find(|c| {
+                c.policy == "carry-over-slack"
+                    && c.pipeline == r.pipeline
+                    && c.budget_mult == r.budget_mult
+            })
+            .expect("matching carry cell");
+        assert!(
+            carry.iter_hit_rate >= r.iter_hit_rate,
+            "{} x{}: carry {:.3} < even {:.3}",
+            r.pipeline,
+            r.budget_mult,
+            carry.iter_hit_rate,
+            r.iter_hit_rate
+        );
+    }
+    assert_eq!(iters.len(), rows.len() * 6, "per-iteration rows emitted");
+}
+
+#[test]
+fn adaptive_pipeline_sweep_emits_verdicts_and_j_per_hit() {
+    // The acceptance-criteria sweep shape: >= 2 benchmarks x 3 budget
+    // policies x {Exact, Pessimistic}, under the deadline-aware scheduler.
+    let (rows, iters) = experiments::pipeline_sweep(
+        4,
+        &[BenchId::Gaussian, BenchId::Mandelbrot],
+        5,
+        &adaptive(),
+        &BudgetPolicy::ALL,
+        &[EnergyPolicy::RaceToIdle],
+        &[EstimateScenario::Exact, EstimateScenario::Pessimistic { err: 0.3 }],
+        &[1.1],
+    );
+    assert_eq!(rows.len(), 2 * 3 * 2, "benches x policies x estimates");
+    assert_eq!(iters.len(), rows.len() * 5);
+    for r in &rows {
+        assert!((0.0..=1.0).contains(&r.hit_rate), "{}: hit {}", r.pipeline, r.hit_rate);
+        assert!((0.0..=1.0).contains(&r.iter_hit_rate));
+        assert!(r.deadline_s > 0.0 && r.mean_roi_s > 0.0 && r.mean_energy_j > 0.0);
+    }
+    // A comfortably loose budget must produce hits, hence finite J-per-hit.
+    assert!(
+        rows.iter().any(|r| r.iter_hit_rate > 0.0 && r.j_per_hit.is_finite()),
+        "no cell produced a finite J-per-hit"
+    );
+    // Iteration rows carry usable sub-deadline aggregates.
+    for ir in &iters {
+        assert!(ir.mean_sub_deadline_s > 0.0 && ir.mean_end_s > 0.0);
+        assert!((0.0..=1.0).contains(&ir.hit_rate));
+    }
+    // And the emitted JSON parses with both sections populated.
+    let doc = experiments::pipeline_rows_json(&rows, &iters).to_string();
+    let parsed = enginecl::jsonio::Json::parse(&doc).expect("sweep JSON parses");
+    assert_eq!(parsed.get("pipelines").unwrap().as_arr().unwrap().len(), rows.len());
+    assert_eq!(parsed.get("iterations").unwrap().as_arr().unwrap().len(), iters.len());
+}
+
+#[test]
+fn multi_kernel_chain_under_global_budget() {
+    let ga = Bench::new(BenchId::Gaussian);
+    let nb = Bench::new(BenchId::NBody);
+    let mut spec = PipelineSpec::chain(vec![ga.clone(), nb.clone()], 2)
+        .with_policy(BudgetPolicy::CarryOverSlack);
+    spec.stages[0] = spec.stages[0].clone().with_gws(ga.default_gws / 32);
+    spec.stages[1] = spec.stages[1].clone().with_gws(nb.default_gws / 4);
+    let cfg = SimConfig::testbed(&ga, adaptive());
+    let free = simulate_pipeline(&spec, &cfg);
+    let spec = spec.with_deadline(free.roi_time * 1.2);
+    let out = simulate_pipeline(&spec, &cfg);
+    assert_eq!(out.iter_verdicts.len(), 4);
+    let stages: Vec<usize> = out.iter_verdicts.iter().map(|v| v.stage).collect();
+    assert_eq!(stages, vec![0, 0, 1, 1], "chain executes in dependency order");
+    let groups: u64 = out.devices.iter().map(|d| d.groups).sum();
+    assert_eq!(groups, 2 * ga.groups(ga.default_gws / 32) + 2 * nb.groups(nb.default_gws / 4));
+    assert!(out.deadline.unwrap().met, "20% headroom over its own unconstrained time");
+}
+
+#[test]
+fn stretch_to_deadline_raises_package_count_under_pressure() {
+    // Stretching raises Adaptive's pessimism, so completion caps engage
+    // sooner: at a tight budget the stretched run grants at least as many
+    // (smaller) packages as the racing run, and both conserve work.
+    let b = Bench::new(BenchId::Mandelbrot);
+    let mut cfg = SimConfig::testbed(&b, adaptive());
+    cfg.gws = Some(b.default_gws / 8);
+    cfg.estimate = EstimateScenario::Pessimistic { err: 0.3 };
+    let free = simulate_pipeline(&PipelineSpec::repeat(b.clone(), 3), &cfg);
+    let budgeted = |energy: EnergyPolicy| {
+        let spec = PipelineSpec::repeat(b.clone(), 3)
+            .with_deadline(free.roi_time * 1.02)
+            .with_energy(energy);
+        simulate_pipeline(&spec, &cfg)
+    };
+    let race = budgeted(EnergyPolicy::RaceToIdle);
+    let stretch = budgeted(EnergyPolicy::StretchToDeadline);
+    for out in [&race, &stretch] {
+        let groups: u64 = out.devices.iter().map(|d| d.groups).sum();
+        assert_eq!(groups, 3 * b.groups(cfg.gws.unwrap()), "work conserved");
+    }
+    assert!(
+        stretch.n_packages >= race.n_packages,
+        "stretch {} packages !>= race {}",
+        stretch.n_packages,
+        race.n_packages
+    );
+    assert!(race.energy_j > 0.0 && stretch.energy_j > 0.0);
+}
+
+#[test]
+fn greedy_frontload_matches_global_verdict_on_final_iteration() {
+    let b = Bench::new(BenchId::Gaussian);
+    let mut cfg = SimConfig::testbed(&b, hguided_opt());
+    cfg.gws = Some(b.default_gws / 16);
+    let free = simulate_pipeline(&PipelineSpec::repeat(b.clone(), 3), &cfg);
+    let spec = PipelineSpec::repeat(b.clone(), 3)
+        .with_deadline(free.roi_time * 1.1)
+        .with_policy(BudgetPolicy::GreedyFrontload);
+    let out = simulate_pipeline(&spec, &cfg);
+    let last = out.iter_verdicts.last().unwrap();
+    let global = out.deadline.unwrap();
+    // Every sub-deadline is the global one, so the last iteration's
+    // verdict coincides with the pipeline verdict (ROI mode).
+    assert_eq!(last.sub_deadline_s, global.deadline_s);
+    assert_eq!(last.met, global.met);
+    assert!((last.slack_s - global.slack_s).abs() < 1e-9);
+}
