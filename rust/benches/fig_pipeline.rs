@@ -11,7 +11,9 @@ use enginecl::engine::experiments;
 use enginecl::scheduler::{AdaptiveParams, HGuidedParams, SchedulerKind};
 use enginecl::sim::{simulate_pipeline, PipelineSpec, SimConfig};
 use enginecl::stats::benchkit::Bencher;
-use enginecl::types::{BudgetPolicy, EnergyPolicy, EstimateScenario};
+use enginecl::types::{
+    BudgetPolicy, DeviceMask, EnergyPolicy, EstimateScenario, Optimizations,
+};
 
 fn main() {
     let mut b = Bencher::new("fig_pipeline");
@@ -46,6 +48,7 @@ fn main() {
             &[BenchId::Gaussian, BenchId::Mandelbrot],
             6,
             &sched,
+            Optimizations::ALL,
             &BudgetPolicy::ALL,
             &[EnergyPolicy::RaceToIdle, EnergyPolicy::StretchToDeadline],
             &[EstimateScenario::Exact, EstimateScenario::Pessimistic { err: 0.3 }],
@@ -65,5 +68,37 @@ fn main() {
         find("carry-over-slack") >= find("even-split"),
         "carry-over slack must serve sub-deadlines at least as well as even split"
     );
+
+    // Device-pool partitioning: the branch-parallel vs serial comparison
+    // on disjoint CPU+iGPU / GPU masks (the fig_pipeline DAG panel).
+    let masks = [DeviceMask::from_indices(&[0, 1]), DeviceMask::single(2)];
+    let branch_rows = b.bench_val("regenerate/branch_compare(reps=4)", 1, || {
+        experiments::branch_compare(
+            4,
+            &[BenchId::Gaussian, BenchId::Mandelbrot],
+            &masks,
+            4,
+            &sched,
+            Optimizations::ALL,
+            &[0.8, 1.1],
+        )
+    });
+    println!("\nbranch-parallel vs serial (cpu+igpu / gpu):");
+    for r in &branch_rows {
+        println!(
+            "{:<16} x{:<5.2} roi {:.4}s  hit {:.2}  util {:.3}",
+            r.mode, r.budget_mult, r.mean_roi_s, r.hit_rate, r.mean_pool_utilization
+        );
+    }
+    for (ser, par) in branch_rows
+        .iter()
+        .filter(|r| r.mode == "serial")
+        .zip(branch_rows.iter().filter(|r| r.mode == "branch-parallel"))
+    {
+        assert!(
+            par.mean_roi_s < ser.mean_roi_s,
+            "branch co-execution must beat the serial schedule"
+        );
+    }
     b.finish();
 }

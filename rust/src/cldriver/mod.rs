@@ -61,17 +61,7 @@ pub fn fixed_costs(
         }
         t * ms
     };
-    // Buffer instantiation: bulk copy (or cheap map with the optimization
-    // for shared-memory devices).
-    let buf_cost = |c: DeviceClass| -> f64 {
-        let shared = c.shares_host_memory() && opts.buffer_flags;
-        if shared {
-            p.map_latency_us * 1e-6
-        } else {
-            let i = class_idx(c);
-            input_bytes / (p.h2d_gbps[i] * 1e9) + p.transfer_latency_us[i] * 1e-6
-        }
-    };
+    let buf_cost = |c: DeviceClass| buffer_instantiation(p, c, opts, input_bytes);
 
     let discovery = p.platform_discovery_ms * ms;
     let sched_setup = p.scheduler_setup_ms * ms;
@@ -99,6 +89,96 @@ pub fn fixed_costs(
         (p.release_ms + devices.len() as f64 * p.release_dev_ms) * ms
     };
 
+    FixedCosts { init, release }
+}
+
+/// Buffer instantiation on one device: bulk copy of the inputs, or the
+/// cheap map when the buffer optimization applies to a shared-memory
+/// device.  Shared between program-level and per-kernel fixed costs.
+fn buffer_instantiation(
+    p: &DriverProfile,
+    c: DeviceClass,
+    opts: Optimizations,
+    input_bytes: f64,
+) -> f64 {
+    if c.shares_host_memory() && opts.buffer_flags {
+        p.map_latency_us * 1e-6
+    } else {
+        let i = class_idx(c);
+        input_bytes / (p.h2d_gbps[i] * 1e9) + p.transfer_latency_us[i] * 1e-6
+    }
+}
+
+/// Incremental fixed costs of initializing **additional devices** that
+/// run only later kernels of a pipeline (device init + context + queue,
+/// plus the baseline's redundant re-query), with the same overlap law as
+/// [`fixed_costs`].  Program builds and buffers are *not* included — the
+/// kernels that run on these devices price those via
+/// [`kernel_fixed_costs`].  Releases batch behind the program's single
+/// barrier under the optimization; the baseline pays one per-device pass.
+pub fn device_fixed_costs(
+    p: &DriverProfile,
+    devices: &[DeviceClass],
+    opts: Optimizations,
+) -> FixedCosts {
+    let ms = 1e-3;
+    let chains: Vec<f64> = devices
+        .iter()
+        .map(|&c| {
+            let i = class_idx(c);
+            let mut t = p.device_init_ms[i] + p.context_ms[i] + p.queue_ms[i];
+            if !opts.init_overlap {
+                t += p.redundant_query_ms;
+            }
+            t * ms
+        })
+        .collect();
+    let init = if opts.init_overlap {
+        let longest = chains.iter().cloned().fold(0.0, f64::max);
+        longest + (chains.iter().sum::<f64>() - longest) * p.overlap_residual
+    } else {
+        chains.iter().sum()
+    };
+    let release = if opts.init_overlap {
+        0.0
+    } else {
+        devices.len() as f64 * p.release_dev_ms * ms
+    };
+    FixedCosts { init, release }
+}
+
+/// Incremental fixed costs of one **additional** kernel program in an
+/// already-initialized engine (multi-kernel pipelines).  Platform
+/// discovery, device init, contexts and queues are shared with the first
+/// kernel; every extra kernel pays its program build, buffer registration
+/// and buffer instantiation per device — overlapped across devices
+/// exactly like [`fixed_costs`] when the initialization optimization is
+/// on.  At teardown the optimized runtime batches all releases behind the
+/// one barrier already priced, so only the baseline pays an extra release
+/// pass per kernel.
+pub fn kernel_fixed_costs(
+    p: &DriverProfile,
+    devices: &[DeviceClass],
+    opts: Optimizations,
+    n_buffers: u32,
+    input_bytes: f64,
+) -> FixedCosts {
+    let ms = 1e-3;
+    let chains: Vec<f64> = devices
+        .iter()
+        .map(|&c| {
+            let i = class_idx(c);
+            (p.program_build_ms[i] + n_buffers as f64 * p.buffer_reg_ms) * ms
+                + buffer_instantiation(p, c, opts, input_bytes)
+        })
+        .collect();
+    let init = if opts.init_overlap {
+        let longest = chains.iter().cloned().fold(0.0, f64::max);
+        longest + (chains.iter().sum::<f64>() - longest) * p.overlap_residual
+    } else {
+        chains.iter().sum()
+    };
+    let release = if opts.init_overlap { 0.0 } else { p.release_ms * ms };
     FixedCosts { init, release }
 }
 
@@ -158,6 +238,30 @@ mod tests {
         let one = fixed_costs(&p, &[DeviceClass::DGpu], Optimizations::NONE, 3, 0.0);
         let three = fixed_costs(&p, &TESTBED, Optimizations::NONE, 3, 0.0);
         assert!(one.total() < three.total());
+    }
+
+    #[test]
+    fn kernel_increment_is_cheaper_than_full_init() {
+        // An extra kernel skips discovery/context/queue: its increment is
+        // strictly below a full re-initialization at every opt level.
+        let p = DriverProfile::commodity_desktop();
+        for opts in [Optimizations::NONE, Optimizations::INIT, Optimizations::ALL] {
+            let full = fixed_costs(&p, &TESTBED, opts, 3, 1e6);
+            let inc = kernel_fixed_costs(&p, &TESTBED, opts, 3, 1e6);
+            assert!(inc.init > 0.0, "builds and buffers still cost something");
+            assert!(inc.init < full.init, "{opts:?}: {} !< {}", inc.init, full.init);
+            assert!(inc.release <= full.release);
+        }
+    }
+
+    #[test]
+    fn kernel_increment_release_batched_under_overlap() {
+        let p = DriverProfile::commodity_desktop();
+        let base = kernel_fixed_costs(&p, &TESTBED, Optimizations::NONE, 2, 0.0);
+        let opt = kernel_fixed_costs(&p, &TESTBED, Optimizations::INIT, 2, 0.0);
+        assert!(base.release > 0.0, "baseline pays an extra release pass");
+        assert_eq!(opt.release, 0.0, "optimized releases batch behind one barrier");
+        assert!(opt.init < base.init, "builds overlap across devices");
     }
 
     #[test]

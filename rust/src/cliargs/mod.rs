@@ -3,7 +3,8 @@
 //! Grammar: positionals, `--flag value` pairs and boolean `--switch`es.
 //! A flag is boolean iff the next token starts with `--` or is absent.
 
-use anyhow::{bail, Result};
+use crate::types::{DeviceClass, DeviceMask};
+use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
@@ -121,6 +122,25 @@ impl Args {
     pub fn positional_or(&self, _name: &str, idx: usize, default: &str) -> Result<String> {
         Ok(self.positional.get(idx).cloned().unwrap_or_else(|| default.to_string()))
     }
+
+    /// `--name M1/M2/...` as a per-stage device-mask list parsed against
+    /// the pool's `classes`: stage masks are separated by `/`, devices
+    /// within one mask by `+` or `,` — e.g. `cpu+igpu/gpu`, `0,2/1`,
+    /// `all/gpu`.  Falls back to `default` when the flag is absent.
+    pub fn mask_flag(
+        &self,
+        name: &str,
+        classes: &[DeviceClass],
+        default: &str,
+    ) -> Result<Vec<DeviceMask>> {
+        let spec = self.flag(name).unwrap_or(default);
+        spec.split('/')
+            .map(|s| {
+                DeviceMask::parse(s, classes)
+                    .map_err(|e| anyhow!("--{name}: {e} (in '{spec}')"))
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -178,6 +198,37 @@ mod tests {
         assert_eq!(a.u32_flag("iters", 6).unwrap(), 8);
         assert_eq!(a.u32_flag("missing", 6).unwrap(), 6);
         assert!(parse("x --iters minus").u32_flag("iters", 6).is_err());
+    }
+
+    #[test]
+    fn mask_flag_parses_stage_lists() {
+        let classes = [DeviceClass::Cpu, DeviceClass::IGpu, DeviceClass::DGpu];
+        let a = parse("pipeline-sweep --stage-devices cpu+igpu/gpu");
+        let masks = a.mask_flag("stage-devices", &classes, "all").unwrap();
+        assert_eq!(masks.len(), 2);
+        assert_eq!(masks[0], DeviceMask::from_indices(&[0, 1]));
+        assert_eq!(masks[1], DeviceMask::single(2));
+        let b = parse("pipeline-sweep --stage-devices 0,2/1/all");
+        let masks = b.mask_flag("stage-devices", &classes, "all").unwrap();
+        assert_eq!(masks.len(), 3);
+        assert_eq!(masks[0].indices(), vec![0, 2]);
+        assert_eq!(masks[2], DeviceMask::all(3));
+        // Absent flag: the default spec applies.
+        let d = parse("pipeline-sweep");
+        let masks = d.mask_flag("stage-devices", &classes, "cpu/gpu").unwrap();
+        assert_eq!(masks, vec![DeviceMask::single(0), DeviceMask::single(2)]);
+    }
+
+    #[test]
+    fn mask_flag_rejects_malformed_input() {
+        let classes = [DeviceClass::Cpu, DeviceClass::IGpu, DeviceClass::DGpu];
+        for bad in ["xpu", "cpu//gpu", "cpu+", "9", "cpu/"] {
+            let a = parse(&format!("pipeline-sweep --stage-devices {bad}"));
+            assert!(
+                a.mask_flag("stage-devices", &classes, "all").is_err(),
+                "'{bad}' should be rejected"
+            );
+        }
     }
 
     #[test]

@@ -19,6 +19,9 @@ pub struct RunConfig {
     pub mode: String, // "roi" | "binary"
     pub init_overlap: bool,
     pub buffer_flags: bool,
+    /// Pipeline extension: measured-throughput feedback into the next
+    /// iteration's scheduler estimates (off = the paper's runtime).
+    pub estimate_refine: bool,
     pub reps: usize,
     pub devices: Option<Vec<DeviceSpec>>,
     pub seed: u64,
@@ -34,6 +37,7 @@ impl RunConfig {
             mode: "roi".into(),
             init_overlap: true,
             buffer_flags: true,
+            estimate_refine: false,
             reps: 50,
             devices: None,
             seed: 1,
@@ -72,6 +76,10 @@ impl RunConfig {
         if let Some(b) = v.get("buffer_flags") {
             cfg.buffer_flags = b.as_bool().ok_or_else(|| anyhow!("'buffer_flags' must be bool"))?;
         }
+        if let Some(b) = v.get("estimate_refine") {
+            cfg.estimate_refine =
+                b.as_bool().ok_or_else(|| anyhow!("'estimate_refine' must be bool"))?;
+        }
         if let Some(r) = v.get("reps") {
             cfg.reps =
                 r.as_u64().ok_or_else(|| anyhow!("'reps' must be a positive integer"))? as usize;
@@ -109,7 +117,11 @@ impl RunConfig {
     }
 
     pub fn optimizations(&self) -> Optimizations {
-        Optimizations { init_overlap: self.init_overlap, buffer_flags: self.buffer_flags }
+        Optimizations {
+            init_overlap: self.init_overlap,
+            buffer_flags: self.buffer_flags,
+            estimate_refine: self.estimate_refine,
+        }
     }
 
     /// Build the configured engine.
@@ -296,6 +308,9 @@ mod tests {
         assert_eq!(c.parse_mode().unwrap(), ExecMode::Binary);
         assert!(!c.optimizations().init_overlap);
         assert!(c.optimizations().buffer_flags, "default true");
+        assert!(!c.optimizations().estimate_refine, "extension defaults off");
+        let refined = Json::parse(r#"{"bench": "gaussian", "estimate_refine": true}"#).unwrap();
+        assert!(RunConfig::from_json(&refined).unwrap().optimizations().estimate_refine);
         assert_eq!(c.scheduler.label(), "HGuided opt");
         let devs = c.devices.unwrap();
         assert_eq!(devs.len(), 2);

@@ -8,10 +8,11 @@ use crate::benchsuite::{Bench, BenchId};
 use crate::jsonio::Json;
 use crate::metrics;
 use crate::scheduler::{HGuidedParams, SchedulerKind};
-use crate::sim::{simulate_pipeline, PipelineSpec, SimConfig};
+use crate::sim::{simulate_pipeline, PipelineSpec, PipelineStage, SimConfig};
 use crate::stats::geomean;
 use crate::types::{
-    BudgetPolicy, EnergyPolicy, EstimateScenario, ExecMode, Optimizations, TimeBudget,
+    BudgetPolicy, DeviceMask, EnergyPolicy, EstimateScenario, ExecMode, Optimizations,
+    TimeBudget,
 };
 
 use super::Engine;
@@ -757,6 +758,7 @@ pub fn pipeline_sweep(
     benches: &[BenchId],
     iterations: u32,
     scheduler: &SchedulerKind,
+    opts: Optimizations,
     policies: &[BudgetPolicy],
     energies: &[EnergyPolicy],
     estimates: &[EstimateScenario],
@@ -772,6 +774,7 @@ pub fn pipeline_sweep(
         let mut t_ref = 0.0;
         for rep in 1..=ref_reps as u64 {
             let mut cfg = SimConfig::testbed(&bench, scheduler.clone());
+            cfg.opts = opts;
             cfg.seed = rep;
             t_ref += simulate_pipeline(&PipelineSpec::repeat(bench.clone(), iterations), &cfg)
                 .roi_time;
@@ -787,7 +790,8 @@ pub fn pipeline_sweep(
                             .with_budget(Some(budget))
                             .with_policy(policy)
                             .with_energy(energy);
-                        let cell = run_pipeline_cell(&spec, &bench, scheduler, est, reps, mult);
+                        let cell =
+                            run_pipeline_cell(&spec, &bench, scheduler, opts, est, reps, mult);
                         iter_rows.extend(cell.1);
                         rows.push(cell.0);
                     }
@@ -799,10 +803,12 @@ pub fn pipeline_sweep(
 }
 
 /// One sweep cell: `reps` runs of `spec`, first discarded as warm-up.
+#[allow(clippy::too_many_arguments)]
 fn run_pipeline_cell(
     spec: &PipelineSpec,
     bench: &Bench,
     scheduler: &SchedulerKind,
+    opts: Optimizations,
     est: EstimateScenario,
     reps: usize,
     budget_mult: f64,
@@ -819,6 +825,7 @@ fn run_pipeline_cell(
     let mut iter_slack = vec![0.0f64; total_iters];
     for rep in 0..reps {
         let mut cfg = SimConfig::testbed(bench, scheduler.clone());
+        cfg.opts = opts;
         cfg.estimate = est;
         cfg.seed = rep as u64 + 1;
         let out = simulate_pipeline(spec, &cfg);
@@ -899,6 +906,145 @@ pub fn pipeline_policy_means(rows: &[PipelineRow], estimate: &str) -> Vec<(Strin
             (p.label().to_string(), hit, iter_hit)
         })
         .collect()
+}
+
+// ------------------------------------------------- branch comparison
+/// One cell of the branch-parallel vs serial comparison: the same
+/// multi-branch DAG pipeline (one independent stage per device mask)
+/// executed with the event-driven branch scheduler vs the legacy serial
+/// schedule, under the same absolute deadline.
+#[derive(Debug, Clone)]
+pub struct BranchRow {
+    pub pipeline: String,
+    /// Stage masks, `/`-separated (the `--stage-devices` spelling).
+    pub masks: String,
+    /// `serial` or `branch-parallel`.
+    pub mode: &'static str,
+    /// Budget as a multiple of the unconstrained *serial* ROI time.
+    pub budget_mult: f64,
+    pub deadline_s: f64,
+    pub mean_roi_s: f64,
+    pub hit_rate: f64,
+    pub mean_slack_s: f64,
+    pub mean_pool_utilization: f64,
+    pub mean_energy_j: f64,
+}
+
+impl CsvRow for BranchRow {
+    fn csv_header() -> &'static str {
+        "pipeline,masks,mode,budget_mult,deadline_s,mean_roi_s,hit_rate,\
+         mean_slack_s,mean_pool_utilization,mean_energy_j"
+    }
+    fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{},{}",
+            self.pipeline,
+            self.masks,
+            self.mode,
+            self.budget_mult,
+            self.deadline_s,
+            self.mean_roi_s,
+            self.hit_rate,
+            self.mean_slack_s,
+            self.mean_pool_utilization,
+            self.mean_energy_j
+        )
+    }
+}
+
+/// Compare branch-parallel against serial execution of an independent
+/// multi-branch DAG: stage `i` runs `benches[i % len]` on `masks[i]`
+/// (disjoint masks co-execute).  Budgets are multiples of the
+/// unconstrained **serial** ROI time, so a sub-1.0 multiplier is
+/// infeasible for the serial schedule while branch parallelism may still
+/// reach it — the headline of the device-pool refactor.
+pub fn branch_compare(
+    reps: usize,
+    benches: &[BenchId],
+    masks: &[DeviceMask],
+    iterations: u32,
+    scheduler: &SchedulerKind,
+    opts: Optimizations,
+    budget_mults: &[f64],
+) -> Vec<BranchRow> {
+    assert!(reps >= 2, "need at least warm-up + 1");
+    assert!(!benches.is_empty(), "need at least one benchmark");
+    assert!(masks.len() >= 2, "a branch comparison needs >= 2 stage masks");
+    let stages: Vec<PipelineStage> = masks
+        .iter()
+        .enumerate()
+        .map(|(i, &m)| {
+            let b = Bench::new(benches[i % benches.len()]);
+            let gws = b.default_gws / 8;
+            // Each branch carries its own kernel's power calibration.
+            let powers = b.true_powers.to_vec();
+            PipelineStage::new(b, iterations).with_gws(gws).with_powers(powers).on_devices(m)
+        })
+        .collect();
+    let template = Bench::new(benches[0]);
+    let classes: Vec<_> =
+        SimConfig::testbed(&template, scheduler.clone()).devices.iter().map(|d| d.class).collect();
+    let mask_label =
+        masks.iter().map(|m| m.label(&classes)).collect::<Vec<_>>().join("/");
+    let mk_spec = |serial: bool| {
+        PipelineSpec {
+            stages: stages.clone(),
+            budget: None,
+            policy: BudgetPolicy::CarryOverSlack,
+            energy: EnergyPolicy::RaceToIdle,
+            serial,
+        }
+    };
+    // Unconstrained serial reference for the budget ladder.
+    let ref_reps = reps.clamp(2, 4);
+    let mut t_ref = 0.0;
+    for rep in 1..=ref_reps as u64 {
+        let mut cfg = SimConfig::testbed(&template, scheduler.clone());
+        cfg.opts = opts;
+        cfg.seed = rep;
+        t_ref += simulate_pipeline(&mk_spec(true), &cfg).roi_time;
+    }
+    t_ref /= ref_reps as f64;
+
+    let mut rows = Vec::new();
+    for &mult in budget_mults {
+        for serial in [true, false] {
+            let spec = mk_spec(serial).with_deadline(mult * t_ref);
+            let mut roi = Vec::new();
+            let mut slack = Vec::new();
+            let mut util = Vec::new();
+            let mut energy = Vec::new();
+            let mut hits = 0usize;
+            for rep in 0..reps {
+                let mut cfg = SimConfig::testbed(&template, scheduler.clone());
+                cfg.opts = opts;
+                cfg.seed = rep as u64 + 1;
+                let out = simulate_pipeline(&spec, &cfg);
+                if rep == 0 {
+                    continue; // warm-up
+                }
+                let v = out.deadline.expect("budgeted cell");
+                hits += v.met as usize;
+                slack.push(v.slack_s);
+                roi.push(out.roi_time);
+                util.push(metrics::pool_utilization(&out.devices, out.roi_time));
+                energy.push(out.energy_j);
+            }
+            rows.push(BranchRow {
+                pipeline: spec.label(),
+                masks: mask_label.clone(),
+                mode: if serial { "serial" } else { "branch-parallel" },
+                budget_mult: mult,
+                deadline_s: mult * t_ref,
+                mean_roi_s: crate::stats::mean(&roi),
+                hit_rate: hits as f64 / (reps - 1) as f64,
+                mean_slack_s: crate::stats::mean(&slack),
+                mean_pool_utilization: crate::stats::mean(&util),
+                mean_energy_j: crate::stats::mean(&energy),
+            });
+        }
+    }
+    rows
 }
 
 #[cfg(test)]
@@ -996,6 +1142,7 @@ mod tests {
             &[BenchId::Gaussian],
             4,
             &SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() },
+            Optimizations::ALL,
             &[BudgetPolicy::EvenSplit, BudgetPolicy::CarryOverSlack],
             &[EnergyPolicy::RaceToIdle],
             &[EstimateScenario::Exact],
@@ -1020,6 +1167,36 @@ mod tests {
         }
         let means = pipeline_policy_means(&rows, "exact");
         assert_eq!(means.len(), 2, "only swept policies aggregated");
+    }
+
+    #[test]
+    fn branch_compare_emits_both_modes_and_parallel_wins() {
+        let rows = branch_compare(
+            3,
+            &[BenchId::Gaussian, BenchId::Mandelbrot],
+            &[DeviceMask::from_indices(&[0, 1]), DeviceMask::single(2)],
+            2,
+            &SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() },
+            Optimizations::ALL,
+            &[1.1],
+        );
+        assert_eq!(rows.len(), 2, "one serial + one branch-parallel row");
+        let serial = rows.iter().find(|r| r.mode == "serial").unwrap();
+        let par = rows.iter().find(|r| r.mode == "branch-parallel").unwrap();
+        assert_eq!(serial.masks, "cpu+igpu/gpu");
+        assert_eq!(serial.pipeline, "Gaussian+Mandelbrot");
+        assert!((serial.deadline_s - par.deadline_s).abs() < 1e-12, "same budget");
+        assert!(
+            par.mean_roi_s < serial.mean_roi_s,
+            "branch-parallel {} !< serial {}",
+            par.mean_roi_s,
+            serial.mean_roi_s
+        );
+        assert!(
+            par.mean_pool_utilization > serial.mean_pool_utilization,
+            "co-execution lifts pool utilization"
+        );
+        assert!(par.csv_row().starts_with("Gaussian+Mandelbrot,cpu+igpu/gpu,"));
     }
 
     #[test]

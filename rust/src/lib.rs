@@ -36,6 +36,16 @@
 //! stretch-to-deadline energy policies ([`types::EnergyPolicy`]) and
 //! J-per-hit reporting (`pipeline-sweep` CLI, `fig_pipeline` bench).
 //!
+//! The pipeline core is a **device-pool** engine: the run template's
+//! device set is the machine's [`types::DevicePool`], each stage carries
+//! a [`types::DeviceMask`], and independent DAG branches on disjoint
+//! masks co-execute (event-driven launch; overlapping masks serialize on
+//! the shared devices).  Dependency edges whose producer and consumer
+//! masks differ are priced through the transfer model, multi-kernel
+//! fixed costs aggregate over distinct stage kernels, and
+//! `Optimizations::estimate_refine` feeds measured iteration throughput
+//! back into the scheduler's `P_i` estimates.
+//!
 //! Start at [`engine::Engine`] (the Tier-1 API in the paper's terms) or
 //! run `cargo run --release -- fig3` / `-- deadline-sweep`.
 
@@ -54,7 +64,8 @@ pub mod types;
 
 pub use engine::{Engine, RunReport};
 pub use types::{
-    DeadlineVerdict, DeviceClass, DeviceId, EstimateScenario, GroupRange, Package, TimeBudget,
+    DeadlineVerdict, DeviceClass, DeviceId, DeviceMask, DevicePool, EstimateScenario,
+    GroupRange, Package, TimeBudget,
 };
 
 /// Crate-wide result alias.

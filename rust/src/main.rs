@@ -21,7 +21,9 @@ use enginecl::engine::pjrt::{run_coexec, PjrtRunConfig};
 use enginecl::runtime::ArtifactDir;
 use enginecl::scheduler::{AdaptiveParams, SchedulerKind};
 use enginecl::sim::coexec::testbed_devices;
-use enginecl::types::{BudgetPolicy, EnergyPolicy, EstimateScenario};
+use enginecl::types::{
+    BudgetPolicy, DeviceClass, EnergyPolicy, EstimateScenario, Optimizations,
+};
 use std::path::PathBuf;
 
 const USAGE: &str = "\
@@ -39,20 +41,26 @@ USAGE:
   enginecl devices
   enginecl coexec [--bench B] [--tiles N] [--verify N]
   enginecl energy [--reps N]          # §VII extension: energy-to-solution
-  enginecl iterative [--bench B] [--iters K] [--reps N]
+  enginecl iterative [--bench B] [--iters K] [--reps N] [--refine]
   enginecl failure [--bench B] [--at SECONDS]
   enginecl deadline-sweep [--reps N] [--err F] [--budgets M1,M2,..]
                   [--csv PATH] [--json PATH]   # time-constrained scenarios
   enginecl pipeline-sweep [--benches B1,B2,..] [--iters K] [--reps N]
                   [--policies even,carry,greedy] [--energy race,stretch]
-                  [--sched S] [--err F] [--budgets M1,M2,..]
+                  [--sched S] [--err F] [--budgets M1,M2,..] [--refine]
+                  [--stage-devices M1/M2] [--branch-csv PATH]
                   [--csv PATH] [--iter-csv PATH] [--json PATH]
-                  # global-deadline pipelines: per-iteration sub-budgets
+                  # global-deadline pipelines: per-iteration sub-budgets,
+                  # plus a branch-parallel vs serial DAG comparison on
+                  # the --stage-devices masks
 
 benches:  gaussian binomial nbody ray ray2 mandelbrot
 scheds:   static static-rev dynamic:N hguided hguided-opt adaptive
 policies: even(-split) carry(-over-slack) greedy(-frontload)
 energy:   race(-to-idle) stretch(-to-deadline)
+masks:    per-stage device masks, '/'-separated; one mask is 'all', class
+          names (cpu, igpu, gpu) or pool indices joined by '+' or ','
+          (e.g. cpu+igpu/gpu runs branch 1 on CPU+iGPU, branch 2 on GPU)
 ";
 
 fn main() -> Result<()> {
@@ -364,7 +372,9 @@ fn energy(args: Args) -> Result<()> {
     Ok(())
 }
 
-/// Iterative ROI mode (paper §VII future work).
+/// Iterative ROI mode (paper §VII future work).  `--refine` feeds each
+/// iteration's measured throughput back into the next one's scheduler
+/// estimates (`Optimizations::estimate_refine`).
 fn iterative(args: Args) -> Result<()> {
     use enginecl::engine::Engine;
     use enginecl::types::ExecMode;
@@ -372,7 +382,8 @@ fn iterative(args: Args) -> Result<()> {
     let iters: u32 = args.flag("iters").unwrap_or("16").parse()?;
     let reps = args.reps(8)?;
     let bench = Bench::new(id);
-    let engine = Engine::new(bench.clone());
+    let engine = Engine::new(bench.clone())
+        .with_optimizations(Optimizations::ALL.with_estimate_refine(args.switch("refine")));
     println!("ITERATIVE ROI MODE: {} x{} iterations ({reps} reps)", id.label(), iters);
     let mut total = 0.0;
     let mut first = 0.0;
@@ -558,17 +569,25 @@ fn pipeline_sweep(args: Args) -> Result<()> {
         Some(s) => parse_scheduler_str(s)?,
         None => SchedulerKind::Adaptive { params: AdaptiveParams::default_paper() },
     };
+    let opts = Optimizations::ALL.with_estimate_refine(args.switch("refine"));
+    let classes = [DeviceClass::Cpu, DeviceClass::IGpu, DeviceClass::DGpu];
+    let masks = args.mask_flag("stage-devices", &classes, "cpu+igpu/gpu")?;
+    if masks.len() < 2 {
+        bail!("--stage-devices needs >= 2 '/'-separated masks (one per DAG branch)");
+    }
     let estimates = [EstimateScenario::Exact, EstimateScenario::Pessimistic { err }];
     println!(
         "PIPELINE SWEEP — {iters}-iteration pipelines, global deadline split by \
-         budget policy ({reps} reps, sched {})",
-        sched.label()
+         budget policy ({reps} reps, sched {}{})",
+        sched.label(),
+        if opts.estimate_refine { ", refined estimates" } else { "" }
     );
     let (rows, iter_rows) = experiments::pipeline_sweep(
         reps,
         &benches,
         iters,
         &sched,
+        opts,
         &policies,
         &energies,
         &estimates,
@@ -600,6 +619,34 @@ fn pipeline_sweep(args: Args) -> Result<()> {
         for (policy, hit, iter_hit) in experiments::pipeline_policy_means(&rows, &est.label()) {
             println!("{policy:<20}{hit:>10.2}{iter_hit:>12.2}");
         }
+    }
+    // Device-pool partitioning headline: the same independent-branch DAG
+    // executed serially vs branch-parallel on the --stage-devices masks,
+    // under the same absolute deadlines.
+    let branch_rows =
+        experiments::branch_compare(reps, &benches, &masks, iters, &sched, opts, &mults);
+    println!("-- branch-parallel vs serial ({} branches) --", masks.len());
+    println!(
+        "{:<24}{:<18}{:>16}{:>7}{:>10}{:>6}{:>10}{:>8}",
+        "pipeline", "masks", "mode", "mult", "roi(s)", "hit", "slack(s)", "util"
+    );
+    for r in &branch_rows {
+        println!(
+            "{:<24}{:<18}{:>16}{:>7.2}{:>10.4}{:>6.2}{:>10.4}{:>8.3}",
+            r.pipeline,
+            r.masks,
+            r.mode,
+            r.budget_mult,
+            r.mean_roi_s,
+            r.hit_rate,
+            r.mean_slack_s,
+            r.mean_pool_utilization
+        );
+    }
+    if let Some(p) = args.flag("branch-csv") {
+        let p = PathBuf::from(p);
+        write_csv(&p, &branch_rows)?;
+        println!("wrote {}", p.display());
     }
     if let Some(p) = args.csv()? {
         write_csv(&p, &rows)?;

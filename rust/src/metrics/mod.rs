@@ -4,7 +4,7 @@
 //! deadline sweep emits as JSON.
 
 use crate::jsonio::Json;
-use crate::sim::{DeviceTrace, IterVerdict, PipelineOutcome, SimOutcome};
+use crate::sim::{DeviceTrace, IterVerdict, PipelineOutcome, SimOutcome, StageTrace};
 use crate::types::DeadlineVerdict;
 
 /// Load-balance effectiveness: `T_FD / T_LD` over the devices that
@@ -33,6 +33,18 @@ pub fn balance_traces(devices: &[DeviceTrace]) -> f64 {
     } else {
         first / last
     }
+}
+
+/// Fraction of the device pool's capacity the run actually used: total
+/// busy time over `pool size × makespan`.  1.0 = every pool device busy
+/// for the whole window; masked branches that idle part of the pool (or
+/// serialized stages that idle the other branch's devices) pull it down.
+pub fn pool_utilization(devices: &[DeviceTrace], makespan: f64) -> f64 {
+    if devices.is_empty() || makespan <= 0.0 {
+        return 0.0;
+    }
+    let busy: f64 = devices.iter().map(|d| d.busy).sum();
+    (busy / (devices.len() as f64 * makespan)).min(1.0)
 }
 
 /// Empirical speedup of a co-execution against the fastest single device.
@@ -118,8 +130,25 @@ pub fn iter_verdict_json(v: &IterVerdict) -> Json {
     ])
 }
 
+/// jsonio projection of one stage's execution window (per-branch trace):
+/// the masked pool ids, the ROI-clock window, and the inter-stage
+/// transfer paid at its start.
+pub fn stage_trace_json(s: &StageTrace) -> Json {
+    Json::obj(vec![
+        ("stage", Json::Num(s.stage as f64)),
+        (
+            "devices",
+            Json::Arr(s.mask.indices().into_iter().map(|i| Json::Num(i as f64)).collect()),
+        ),
+        ("start_s", Json::Num(s.start_s)),
+        ("end_s", Json::Num(s.end_s)),
+        ("transfer_in_s", Json::Num(s.transfer_in_s)),
+    ])
+}
+
 /// jsonio projection of a whole pipeline run: pipeline-level verdict,
-/// per-iteration verdicts, and the energy-under-deadline metrics.
+/// per-iteration verdicts, per-branch stage windows, pool utilization,
+/// and the energy-under-deadline metrics.
 pub fn pipeline_json(out: &PipelineOutcome) -> Json {
     Json::obj(vec![
         ("total_time_s", Json::Num(out.total_time)),
@@ -127,6 +156,7 @@ pub fn pipeline_json(out: &PipelineOutcome) -> Json {
         ("energy_j", Json::Num(out.energy_j)),
         ("n_packages", Json::Num(out.n_packages as f64)),
         ("balance", Json::Num(balance_traces(&out.devices))),
+        ("pool_utilization", Json::Num(pool_utilization(&out.devices, out.roi_time))),
         (
             "deadline",
             match &out.deadline {
@@ -137,6 +167,7 @@ pub fn pipeline_json(out: &PipelineOutcome) -> Json {
         ("iter_hit_rate", Json::opt_num(out.iter_hit_rate())),
         ("energy_per_hit_j", Json::opt_num(out.energy_per_hit_j())),
         ("iters", Json::Arr(out.iter_verdicts.iter().map(iter_verdict_json).collect())),
+        ("stages", Json::Arr(out.stages.iter().map(stage_trace_json).collect())),
     ])
 }
 
@@ -253,12 +284,34 @@ mod tests {
         assert_eq!(j.get("iter_hit_rate").unwrap().as_f64(), Some(1.0));
         let bal = j.get("balance").unwrap().as_f64().unwrap();
         assert!(bal > 0.0 && bal <= 1.0);
+        let util = j.get("pool_utilization").unwrap().as_f64().unwrap();
+        assert!(util > 0.0 && util <= 1.0, "pool utilization {util}");
+        let stages = j.get("stages").unwrap().as_arr().unwrap();
+        assert_eq!(stages.len(), 1, "one window per stage");
+        assert_eq!(stages[0].get("devices").unwrap().as_arr().unwrap().len(), 3);
+        assert!(stages[0].get("end_s").unwrap().as_f64().unwrap() > 0.0);
         // Unconstrained pipelines project null metrics, not garbage.
         let free = simulate_pipeline(&PipelineSpec::repeat(b, 2), &cfg);
         let j = Json::parse(&pipeline_json(&free).to_string()).unwrap();
         assert_eq!(j.get("deadline"), Some(&Json::Null));
         assert_eq!(j.get("energy_per_hit_j"), Some(&Json::Null));
         assert_eq!(j.get("iters").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn pool_utilization_bounds_and_edge_cases() {
+        let full = vec![
+            DeviceTrace { packages: 1, groups: 1, busy: 2.0, finish: 2.0, failed: false };
+            3
+        ];
+        assert!((pool_utilization(&full, 2.0) - 1.0).abs() < 1e-12);
+        let half = vec![
+            DeviceTrace { packages: 1, groups: 1, busy: 2.0, finish: 2.0, failed: false },
+            DeviceTrace { packages: 0, groups: 0, busy: 0.0, finish: 0.0, failed: false },
+        ];
+        assert!((pool_utilization(&half, 2.0) - 0.5).abs() < 1e-12);
+        assert_eq!(pool_utilization(&[], 1.0), 0.0);
+        assert_eq!(pool_utilization(&full, 0.0), 0.0);
     }
 
     #[test]

@@ -21,7 +21,10 @@ pub use r#static::Static;
 use crate::types::{DeviceId, GroupRange};
 
 
-/// Immutable context a scheduler is built against.
+/// Immutable context a scheduler is built against.  For pipeline stages
+/// running on a masked device subset this is a **sub-pool** context:
+/// device slots are stage-local, and [`SchedCtx::pool_ids`] maps each
+/// slot back to its pool-wide device id.
 #[derive(Debug, Clone)]
 pub struct SchedCtx {
     /// Total work-groups in the launch.
@@ -35,13 +38,17 @@ pub struct SchedCtx {
     /// the same `P_i` estimates — the basis for deadline-aware package
     /// caps.  `None` = no hint available.
     pub groups_per_sec: Option<Vec<f64>>,
+    /// Pool device id backing each scheduler-local slot (identity for
+    /// full-pool runs).
+    pub pool_ids: Vec<DeviceId>,
 }
 
 impl SchedCtx {
     pub fn new(total_groups: u64, powers: Vec<f64>) -> Self {
         assert!(!powers.is_empty(), "scheduler needs at least one device");
         assert!(powers.iter().all(|&p| p > 0.0), "powers must be positive");
-        Self { total_groups, powers, deadline_s: None, groups_per_sec: None }
+        let pool_ids = (0..powers.len()).collect();
+        Self { total_groups, powers, deadline_s: None, groups_per_sec: None, pool_ids }
     }
 
     /// Attach a time-constrained scenario: ROI deadline plus the estimated
@@ -51,6 +58,14 @@ impl SchedCtx {
         assert_eq!(groups_per_sec.len(), self.powers.len(), "throughput arity mismatch");
         self.deadline_s = Some(deadline_s);
         self.groups_per_sec = Some(groups_per_sec);
+        self
+    }
+
+    /// Mark this context as a sub-pool view: `pool_ids[slot]` is the pool
+    /// device id behind scheduler-local slot `slot`.
+    pub fn with_pool_ids(mut self, pool_ids: Vec<DeviceId>) -> Self {
+        assert_eq!(pool_ids.len(), self.powers.len(), "pool id arity mismatch");
+        self.pool_ids = pool_ids;
         self
     }
 
@@ -137,14 +152,48 @@ impl SchedulerKind {
         }
     }
 
-    /// Instantiate a fresh scheduler for one run.
-    pub fn build(&self, ctx: &SchedCtx) -> Box<dyn Scheduler> {
+    /// The same configuration restricted to a device-pool subset: the
+    /// per-device parameter vectors (HGuided/Adaptive `m_i`, `k_i`) are
+    /// remapped by pool id so a GPU-only stage keeps the GPU's tuning
+    /// rather than inheriting the CPU's.  Parameter vectors that don't
+    /// cover the pool (already view-local, or custom arities) are kept
+    /// unchanged; parameter-free schedulers pass through.
+    pub fn for_device_subset(&self, pool_ids: &[crate::types::DeviceId]) -> SchedulerKind {
+        fn subset<T: Copy>(v: &[T], pool_ids: &[usize]) -> Option<Vec<T>> {
+            pool_ids.iter().map(|&i| v.get(i).copied()).collect()
+        }
         match self {
+            SchedulerKind::HGuided { params } => {
+                match (subset(&params.min_mult, pool_ids), subset(&params.k, pool_ids)) {
+                    (Some(min_mult), Some(k)) => {
+                        SchedulerKind::HGuided { params: HGuidedParams { min_mult, k } }
+                    }
+                    _ => self.clone(),
+                }
+            }
+            SchedulerKind::Adaptive { params } => {
+                match (subset(&params.min_mult, pool_ids), subset(&params.k, pool_ids)) {
+                    (Some(min_mult), Some(k)) => SchedulerKind::Adaptive {
+                        params: AdaptiveParams { min_mult, k, pessimism: params.pessimism },
+                    },
+                    _ => self.clone(),
+                }
+            }
+            other => other.clone(),
+        }
+    }
+
+    /// Instantiate a fresh scheduler for one run.  Sub-pool contexts
+    /// ([`SchedCtx::pool_ids`]) remap per-device parameters by pool id
+    /// via [`SchedulerKind::for_device_subset`]; the identity mapping is
+    /// a no-op.
+    pub fn build(&self, ctx: &SchedCtx) -> Box<dyn Scheduler> {
+        match self.for_device_subset(&ctx.pool_ids) {
             SchedulerKind::Static => Box::new(Static::new(ctx, false)),
             SchedulerKind::StaticRev => Box::new(Static::new(ctx, true)),
-            SchedulerKind::Dynamic { n_chunks } => Box::new(Dynamic::new(ctx, *n_chunks)),
-            SchedulerKind::HGuided { params } => Box::new(HGuided::new(ctx, params.clone())),
-            SchedulerKind::Adaptive { params } => Box::new(Adaptive::new(ctx, params.clone())),
+            SchedulerKind::Dynamic { n_chunks } => Box::new(Dynamic::new(ctx, n_chunks)),
+            SchedulerKind::HGuided { params } => Box::new(HGuided::new(ctx, params)),
+            SchedulerKind::Adaptive { params } => Box::new(Adaptive::new(ctx, params)),
         }
     }
 
@@ -183,13 +232,10 @@ mod tests {
         while !live.is_empty() {
             let mut next_live = Vec::new();
             for &d in &live {
-                match s.next(d) {
-                    Some(g) => {
-                        assert!(!g.is_empty(), "empty grant to {d}");
-                        granted.push((d, g));
-                        next_live.push(d);
-                    }
-                    None => {}
+                if let Some(g) = s.next(d) {
+                    assert!(!g.is_empty(), "empty grant to {d}");
+                    granted.push((d, g));
+                    next_live.push(d);
                 }
             }
             live = next_live;
@@ -267,6 +313,59 @@ mod tests {
     #[should_panic(expected = "powers must be positive")]
     fn zero_power_rejected() {
         SchedCtx::new(10, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn pool_ids_default_to_identity() {
+        let ctx = SchedCtx::new(10, vec![0.5, 1.0]);
+        assert_eq!(ctx.pool_ids, vec![0, 1]);
+        let sub = SchedCtx::new(10, vec![1.0]).with_pool_ids(vec![2]);
+        assert_eq!(sub.pool_ids, vec![2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "pool id arity mismatch")]
+    fn pool_ids_arity_checked() {
+        SchedCtx::new(10, vec![0.5, 1.0]).with_pool_ids(vec![0]);
+    }
+
+    #[test]
+    fn device_subset_remaps_per_device_params() {
+        // A GPU-only view keeps the GPU's tuned (m, k), not the CPU's.
+        let opt = SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() };
+        match opt.for_device_subset(&[2]) {
+            SchedulerKind::HGuided { params } => {
+                assert_eq!(params.min_mult, vec![30]);
+                assert_eq!(params.k, vec![1.0]);
+            }
+            other => panic!("kind changed: {other:?}"),
+        }
+        let ad = SchedulerKind::Adaptive { params: AdaptiveParams::default_paper() };
+        match ad.for_device_subset(&[0, 2]) {
+            SchedulerKind::Adaptive { params } => {
+                assert_eq!(params.min_mult, vec![1, 30]);
+                assert_eq!(params.k, vec![3.5, 1.0]);
+                assert_eq!(params.pessimism, 0.25);
+            }
+            other => panic!("kind changed: {other:?}"),
+        }
+        // Identity subset is a no-op; parameter-free kinds pass through.
+        assert_eq!(opt.for_device_subset(&[0, 1, 2]), opt);
+        assert_eq!(SchedulerKind::Static.for_device_subset(&[2]), SchedulerKind::Static);
+        // Already-view-local params (arity 1) can't cover pool id 2: kept.
+        let local = SchedulerKind::HGuided { params: HGuidedParams::uniform(1, 5, 2.0) };
+        assert_eq!(local.for_device_subset(&[2]), local);
+        // `build` applies the remap itself from the sub-pool context, so
+        // full-arity configurations build directly against masked views.
+        let ctx = SchedCtx::new(100, vec![1.0]).with_pool_ids(vec![2]);
+        let mut built = opt.build(&ctx);
+        assert_eq!(built.n_devices(), 1);
+        let mut cursor = 0;
+        while let Some(g) = built.next(0) {
+            assert_eq!(g.begin, cursor);
+            cursor = g.end;
+        }
+        assert_eq!(cursor, 100, "sub-pool build covers the workspace");
     }
 
     #[test]

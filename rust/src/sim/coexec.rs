@@ -222,7 +222,7 @@ impl EventList {
 /// Retention-corrected scheduler power estimates (the paper profiles
 /// device powers under co-execution), skewed by the configured estimation
 /// scenario — the *scheduler's view*; true compute times are unaffected.
-fn effective_powers(cfg: &SimConfig) -> Vec<f64> {
+pub(crate) fn effective_powers(cfg: &SimConfig) -> Vec<f64> {
     let n = cfg.devices.len();
     let fastest = cfg
         .devices
@@ -245,32 +245,59 @@ fn effective_powers(cfg: &SimConfig) -> Vec<f64> {
         .collect()
 }
 
-/// One ROI pass (one kernel iteration) of the pull-based event loop,
-/// starting at absolute clock `t0` (0 for single-shot runs; the cumulative
-/// pipeline clock in iterative/pipeline mode, so per-device `finish` times
-/// and `on_clock` ticks share one coherent time base).  `deadline_s` is
-/// the *absolute* deadline to arm deadline-aware schedulers with (`None`
-/// or non-positive = unconstrained scheduling); returns the absolute
-/// finish time of the pass and the next package sequence number.
-#[allow(clippy::too_many_arguments)]
+/// One ROI pass over a device *view*: everything [`run_roi`] needs beyond
+/// the mutable trace/package state.  `cfg.devices` holds the view's
+/// specs (a masked subset of the pool for pipeline branches; the whole
+/// pool for single-shot runs) and `pool_ids[slot]` maps each view slot to
+/// its pool-wide device id — traces and fault injection stay
+/// pool-indexed.
+#[derive(Clone, Copy)]
+pub(crate) struct RoiPass<'a> {
+    pub bench: &'a Bench,
+    pub cfg: &'a SimConfig,
+    /// View slot → pool device id (identity for full-pool runs).
+    pub pool_ids: &'a [usize],
+    pub gws: u64,
+    pub phase: IterPhase,
+    /// First package sequence number of this pass.
+    pub seq0: u64,
+    /// Absolute start clock (0 for single-shot runs; the cumulative
+    /// pipeline clock — or the branch's ready time — in pipeline mode, so
+    /// per-device `finish` times and `on_clock` ticks share one coherent
+    /// time base).
+    pub t0: f64,
+    /// Absolute deadline to arm deadline-aware schedulers with (`None` or
+    /// non-positive = unconstrained scheduling).
+    pub deadline_s: Option<f64>,
+    /// Refined `P_i` estimates (one per view slot) replacing
+    /// [`effective_powers`] — the pipeline engine's measured-throughput
+    /// feedback (`Optimizations::estimate_refine`).
+    pub powers_override: Option<&'a [f64]>,
+}
+
+/// One ROI pass (one kernel iteration) of the pull-based event loop;
+/// returns the absolute finish time of the pass and the next package
+/// sequence number.  `traces` is pool-indexed (see [`RoiPass`]).
 pub(crate) fn run_roi(
-    bench: &Bench,
-    cfg: &SimConfig,
-    gws: u64,
+    pass: &RoiPass,
     rng: &mut XorShift64,
-    phase: IterPhase,
     traces: &mut [DeviceTrace],
     packages: &mut Vec<PackageTrace>,
-    seq0: u64,
-    t0: f64,
-    deadline_s: Option<f64>,
 ) -> (f64, u64) {
+    let RoiPass { bench, cfg, pool_ids, gws, phase, seq0, t0, deadline_s, .. } = *pass;
     let lws = bench.props.lws;
     let total_groups = bench.groups(gws);
     let n = cfg.devices.len();
-    let mut ctx = SchedCtx::new(total_groups, effective_powers(cfg));
-    match deadline_s {
-        Some(d) if d > 0.0 => {
+    debug_assert_eq!(pool_ids.len(), n, "pool map arity mismatch");
+    let powers = match pass.powers_override {
+        Some(p) => p.to_vec(),
+        None => effective_powers(cfg),
+    };
+    let mut ctx = SchedCtx::new(total_groups, powers).with_pool_ids(pool_ids.to_vec());
+    if let Some(d) = deadline_s {
+        // A deadline that is already unreachable before the pass starts
+        // is a lost deadline: run in plain efficiency mode.
+        if d > 0.0 {
             // Throughput hints derive from the same estimated powers the
             // packet-size formula sees (mean item cost is 1 unit by profile
             // normalization, so groups/s = power · units/s ÷ lws).
@@ -281,9 +308,6 @@ pub(crate) fn run_roi(
                 .collect();
             ctx = ctx.with_deadline(d, thr);
         }
-        // A deadline that is already unreachable before the pass starts
-        // is a lost deadline: run in plain efficiency mode.
-        _ => {}
     }
     let mut sched = cfg.scheduler.build(&ctx);
     let transfers = TransferModel::new(&cfg.driver, cfg.opts.buffer_flags);
@@ -303,10 +327,23 @@ pub(crate) fn run_roi(
     let mut retry: Vec<GroupRange> = Vec::new();
     let mut parked: Vec<usize> = Vec::new();
     let mut iter_finish = t0;
+    let mut executed = 0u64;
 
     while let Some(Ev { t, dev, .. }) = heap.pop() {
-        // Dead devices request nothing.
-        if traces[dev].failed {
+        let pid = pool_ids[dev];
+        // Dead devices request nothing — but a one-shot scheduler may
+        // still hold work *reserved* for them (Static's pre-partitioned
+        // chunk, in iterations after the failure): pull it once and
+        // re-queue it to the survivors, exactly like an in-flight loss.
+        if traces[pid].failed {
+            if let Some(g) = sched.next(dev) {
+                retry.push(g);
+                for &p in &parked {
+                    heap.push(Ev { t, tie, dev: p });
+                    tie += 1;
+                }
+                parked.clear();
+            }
             continue;
         }
         // Deadline-aware schedulers size against the grant instant (the
@@ -362,9 +399,9 @@ pub(crate) fn run_roi(
         // time; once `failed` is set the device stays dead for the rest of
         // the pipeline.
         if let Some((fd, tf)) = cfg.fail {
-            if fd == dev && done > tf && !traces[dev].failed {
-                traces[dev].failed = true;
-                traces[dev].finish = traces[dev].finish.max(tf.min(done));
+            if fd == pid && done > tf && !traces[pid].failed {
+                traces[pid].failed = true;
+                traces[pid].finish = traces[pid].finish.max(tf.min(done));
                 retry.push(groups);
                 // Wake any parked survivors to pick up the lost work.
                 for &p in &parked {
@@ -377,17 +414,18 @@ pub(crate) fn run_roi(
             }
         }
 
-        let tr = &mut traces[dev];
+        let tr = &mut traces[pid];
         tr.packages += 1;
         tr.groups += groups.len();
         tr.busy += done - grant_at;
         tr.finish = tr.finish.max(done);
         iter_finish = iter_finish.max(done);
+        executed += groups.len();
 
         if cfg.record_packages {
             packages.push(PackageTrace {
                 seq,
-                device: dev,
+                device: pid, // pool-indexed, like the aggregate traces
                 groups,
                 grant_at,
                 compute_start,
@@ -398,7 +436,15 @@ pub(crate) fn run_roi(
         heap.push(Ev { t: done, tie, dev });
         tie += 1;
     }
-    debug_assert!(retry.is_empty(), "lost work never re-executed");
+    // Re-queue needs a surviving device *within this run's view*: if every
+    // masked device died (reachable since stage masks can be a single
+    // device), the remaining work has nowhere to go — fail loudly instead
+    // of returning a silently-faster, work-dropping schedule.
+    assert!(
+        executed == total_groups,
+        "run lost work: {executed}/{total_groups} work-groups executed — every \
+         device in this run's view failed, so re-queued packages had no survivor"
+    );
     (iter_finish, seq)
 }
 
@@ -412,6 +458,27 @@ pub(crate) fn fixed_costs(
     let n_buffers = bench.props.read_buffers + bench.props.write_buffers;
     let input_bytes = gws as f64 * bench.bytes_in_per_item + bench.bytes_in_per_package;
     let fixed = cldriver::fixed_costs(&cfg.driver, &classes, cfg.opts, n_buffers, input_bytes);
+    (
+        fixed.init * rng.jitter(cfg.driver.jitter_sigma),
+        fixed.release * rng.jitter(cfg.driver.jitter_sigma),
+    )
+}
+
+/// Jittered incremental fixed costs of one *additional* distinct kernel
+/// in a multi-kernel pipeline (program build + buffer init/release over
+/// `classes`, the union of the kernel's stage masks) — the multi-kernel
+/// aggregation that removes the topologically-first-stage lower bound.
+pub(crate) fn extra_kernel_costs(
+    bench: &Bench,
+    classes: &[DeviceClass],
+    cfg: &SimConfig,
+    gws: u64,
+    rng: &mut XorShift64,
+) -> (f64, f64) {
+    let n_buffers = bench.props.read_buffers + bench.props.write_buffers;
+    let input_bytes = gws as f64 * bench.bytes_in_per_item + bench.bytes_in_per_package;
+    let fixed =
+        cldriver::kernel_fixed_costs(&cfg.driver, classes, cfg.opts, n_buffers, input_bytes);
     (
         fixed.init * rng.jitter(cfg.driver.jitter_sigma),
         fixed.release * rng.jitter(cfg.driver.jitter_sigma),
@@ -442,18 +509,19 @@ pub fn simulate(bench: &Bench, cfg: &SimConfig) -> SimOutcome {
     let roi_deadline = cfg
         .budget
         .map(|b| roi_scope_deadline(b.deadline_s, cfg.mode, init_time, release_time));
-    let (roi_time, seq) = run_roi(
+    let pool_ids: Vec<usize> = (0..n).collect();
+    let pass = RoiPass {
         bench,
         cfg,
+        pool_ids: &pool_ids,
         gws,
-        &mut rng,
-        IterPhase::Single,
-        &mut traces,
-        &mut packages,
-        0,
-        0.0,
-        roi_deadline,
-    );
+        phase: IterPhase::Single,
+        seq0: 0,
+        t0: 0.0,
+        deadline_s: roi_deadline,
+        powers_override: None,
+    };
+    let (roi_time, seq) = run_roi(&pass, &mut rng, &mut traces, &mut packages);
     let energy_j = energy(cfg, roi_time, &traces);
     let total_time = init_time + roi_time + release_time;
     let timed = match cfg.mode {
@@ -662,6 +730,25 @@ mod tests {
             out.roi_time > healthy.roi_time,
             "losing the fastest device must cost time"
         );
+    }
+
+    #[test]
+    fn one_shot_scheduler_requeues_a_dead_devices_reserved_chunk() {
+        // Regression (PR 3): Static pre-partitions a chunk per device, so
+        // in iterations *after* a failure the dead device still holds a
+        // reservation it will never request — run_roi must pull it and
+        // re-queue it to the survivors (pre-fix this work was silently
+        // dropped; the new conservation assert would abort the run).
+        let b = Bench::new(BenchId::Gaussian);
+        let mut cfg = SimConfig::testbed(&b, SchedulerKind::Static);
+        cfg.gws = Some(b.default_gws / 16);
+        cfg.fail = Some((0, 1e-4)); // kill the CPU inside iteration 1
+        let k = 3;
+        let out = simulate_iterative(&b, &cfg, k);
+        assert!(out.devices[0].failed);
+        let groups: u64 = out.devices.iter().map(|d| d.groups).sum();
+        assert_eq!(groups, k as u64 * b.groups(cfg.gws.unwrap()), "work conserved");
+        assert_eq!(out.devices[0].groups, 0, "the dead CPU never completed a chunk");
     }
 
     #[test]

@@ -18,4 +18,5 @@ pub mod pipeline;
 pub use coexec::{simulate, simulate_iterative, DeviceTrace, PackageTrace, SimConfig, SimOutcome};
 pub use pipeline::{
     simulate_pipeline, IterOutcome, IterVerdict, PipelineOutcome, PipelineSpec, PipelineStage,
+    StageTrace,
 };

@@ -2,35 +2,67 @@
 //! "iterative and multi-kernel executions, imitating the ROI operation
 //! mode of real applications", under the paper's time-constrained lens).
 //!
-//! A [`PipelineSpec`] describes a sequence — or a simple DAG — of kernel
-//! stages, each executed for a number of ROI iterations with
-//! device-resident buffers in between.  A **global** [`TimeBudget`] is
-//! split into per-iteration sub-budgets by a pluggable [`BudgetPolicy`];
-//! every iteration re-arms the deadline-aware schedulers (via
+//! A [`PipelineSpec`] describes a sequence — or a DAG — of kernel stages,
+//! each executed for a number of ROI iterations with device-resident
+//! buffers in between.  A **global** [`TimeBudget`] is split into
+//! per-iteration sub-budgets by a pluggable [`BudgetPolicy`]; every
+//! iteration re-arms the deadline-aware schedulers (via
 //! `SchedCtx::with_deadline` + `Scheduler::on_clock`) against the
 //! **cumulative pipeline clock**, not a per-iteration zero, so per-device
 //! `finish` times form one coherent time base and
 //! [`crate::metrics::balance`] stays meaningful across iterations.
 //!
-//! The run yields a [`PipelineOutcome`]: the pipeline-level
-//! [`DeadlineVerdict`], one [`IterVerdict`] per iteration, and the
-//! ROADMAP's energy-under-deadline metrics (J per deadline hit, with an
-//! [`EnergyPolicy`] that modulates the Adaptive scheduler's pessimism —
-//! race-to-idle vs stretch-to-deadline).
+//! **Device-pool partitioning.**  The run template's device set is the
+//! machine's [`DevicePool`]; each stage carries a [`DeviceMask`]
+//! selecting the pool subset it runs on (default: the whole pool).  The
+//! engine is an event-driven branch scheduler: stages launch in
+//! deterministic topological order, each as soon as (a) every dependency
+//! has finished, (b) every masked device is free, and (c) the inter-stage
+//! input transfer has been paid — so independent DAG branches on
+//! *disjoint* masks co-execute, while stages whose masks overlap
+//! serialize on the shared devices.  `PipelineSpec::serial` forces the
+//! legacy one-global-clock schedule (the comparison baseline).  Each
+//! branch runs `run_roi` over its masked device *view* with a sub-pool
+//! `SchedCtx`; per-device traces and energy merge back into pool-indexed
+//! [`DeviceTrace`]s.
 //!
-//! Stages sharing one device set serialize in (deterministic) topological
-//! order: the devices are the bottleneck resource, exactly as in
-//! EngineCL's single-platform deployments.
+//! **Inter-stage transfer pricing.**  A dependency edge whose producer
+//! ran on a different device subset pays one gather (device→host on the
+//! producer's slowest masked link) plus one scatter (host→device on the
+//! consumer's slowest masked link) for the producer's output volume —
+//! priced exactly once per edge, whatever the mask overlap.  Equal masks
+//! leave the data device-resident: free.
+//!
+//! **Fixed-cost aggregation.**  Program-level fixed costs initialize once
+//! for the union of all stage masks, priced from the topologically-first
+//! stage's kernel; every *additional distinct* kernel adds its program
+//! build + buffer init/release increment
+//! ([`crate::cldriver::kernel_fixed_costs`]).  Single-kernel pipelines
+//! draw the same jitter values as before and stay bit-identical.
+//!
+//! Simplifications (documented modelling scope): cross-branch memory
+//! contention is not modelled — co-execution retention is scoped to each
+//! stage's own device view — and each branch serializes its grants on its
+//! own host queue.  Per-iteration **sub-budgets** are likewise assigned
+//! along the topological launch order with a shared carry chain: exact
+//! for serial schedules and chains (the only shapes PR 2 supported), but
+//! for co-executing branches the later-topo branch's [`IterVerdict`]s
+//! judge against serial-chain sub-deadlines and are therefore permissive;
+//! the *pipeline-level* verdict is always exact.  Branch-aware splitting
+//! (slack to the critical path) is a named ROADMAP follow-up.
 
-use crate::benchsuite::Bench;
+use crate::benchsuite::{Bench, BenchId};
+use crate::cldriver::TransferModel;
 use crate::stats::XorShift64;
 use crate::types::{
-    BudgetPolicy, DeadlineVerdict, DeviceSpec, EnergyPolicy, ExecMode, TimeBudget,
+    BudgetPolicy, DeadlineVerdict, DeviceClass, DeviceMask, DevicePool, DeviceView,
+    EnergyPolicy, ExecMode, TimeBudget,
 };
 
-use super::coexec::{self, DeviceTrace, IterPhase, PackageTrace, SimConfig};
+use super::coexec::{self, DeviceTrace, IterPhase, PackageTrace, RoiPass, SimConfig};
 
-/// One pipeline stage: a kernel iterated `iterations` times.
+/// One pipeline stage: a kernel iterated `iterations` times on a masked
+/// subset of the device pool.
 #[derive(Debug, Clone)]
 pub struct PipelineStage {
     pub bench: Bench,
@@ -38,9 +70,14 @@ pub struct PipelineStage {
     /// Problem size override; `None` falls back to the template
     /// [`SimConfig::gws`], then to the benchmark's paper size.
     pub gws: Option<u64>,
-    /// Device override; `None` uses the template's devices.  All stages
-    /// must resolve to the same device count and classes (one platform).
-    pub devices: Option<Vec<DeviceSpec>>,
+    /// Pool subset this stage runs on; `None` = the whole pool.
+    pub mask: Option<DeviceMask>,
+    /// Per-stage device-power calibration override, **pool-indexed** (one
+    /// entry per pool device); `None` = the pool's template powers.  The
+    /// testbed powers are calibrated per benchmark, so heterogeneous
+    /// pipelines should give each stage its own kernel's calibration
+    /// (`.with_powers(bench.true_powers.to_vec())` on the testbed pool).
+    pub powers: Option<Vec<f64>>,
     /// Indices of stages that must complete before this one starts.
     pub deps: Vec<usize>,
 }
@@ -48,7 +85,7 @@ pub struct PipelineStage {
 impl PipelineStage {
     pub fn new(bench: Bench, iterations: u32) -> Self {
         assert!(iterations >= 1, "a stage needs at least one iteration");
-        Self { bench, iterations, gws: None, devices: None, deps: Vec::new() }
+        Self { bench, iterations, gws: None, mask: None, powers: None, deps: Vec::new() }
     }
 
     pub fn with_gws(mut self, gws: u64) -> Self {
@@ -56,9 +93,19 @@ impl PipelineStage {
         self
     }
 
-    pub fn with_devices(mut self, devices: Vec<DeviceSpec>) -> Self {
-        assert!(!devices.is_empty());
-        self.devices = Some(devices);
+    /// Restrict this stage to a pool subset (disjoint masks on
+    /// independent branches co-execute).
+    pub fn on_devices(mut self, mask: DeviceMask) -> Self {
+        assert!(!mask.is_empty(), "a stage mask must select at least one device");
+        self.mask = Some(mask);
+        self
+    }
+
+    /// Calibrate this stage's device powers (pool-indexed; see
+    /// [`PipelineStage::powers`]).
+    pub fn with_powers(mut self, powers: Vec<f64>) -> Self {
+        assert!(powers.iter().all(|&p| p > 0.0), "stage powers must be positive");
+        self.powers = Some(powers);
         self
     }
 
@@ -80,6 +127,10 @@ pub struct PipelineSpec {
     pub policy: BudgetPolicy,
     /// Race-to-idle vs stretch-to-deadline (modulates Adaptive pessimism).
     pub energy: EnergyPolicy,
+    /// Force the legacy serial schedule (one global clock, stages strictly
+    /// in topological order) instead of the event-driven branch scheduler
+    /// — the baseline of the branch-parallel comparison.
+    pub serial: bool,
 }
 
 impl PipelineSpec {
@@ -91,6 +142,7 @@ impl PipelineSpec {
             budget: None,
             policy: BudgetPolicy::CarryOverSlack,
             energy: EnergyPolicy::RaceToIdle,
+            serial: false,
         }
     }
 
@@ -114,6 +166,7 @@ impl PipelineSpec {
             budget: None,
             policy: BudgetPolicy::CarryOverSlack,
             energy: EnergyPolicy::RaceToIdle,
+            serial: false,
         }
     }
 
@@ -142,6 +195,12 @@ impl PipelineSpec {
         self
     }
 
+    /// Toggle the legacy serial schedule (branch co-execution disabled).
+    pub fn with_serial(mut self, serial: bool) -> Self {
+        self.serial = serial;
+        self
+    }
+
     /// Total kernel iterations across all stages.
     pub fn total_iterations(&self) -> u32 {
         self.stages.iter().map(|s| s.iterations).sum()
@@ -160,7 +219,8 @@ impl PipelineSpec {
 pub struct IterVerdict {
     /// Stage index in [`PipelineSpec::stages`] declaration order.
     pub stage: usize,
-    /// Global iteration index across the pipeline (execution order).
+    /// Global iteration index across the pipeline (topological launch
+    /// order; concurrent branches' iterations may overlap in time).
     pub iter: u32,
     /// Absolute sub-deadline assigned by the [`BudgetPolicy`].
     pub sub_deadline_s: f64,
@@ -171,25 +231,49 @@ pub struct IterVerdict {
     pub slack_s: f64,
 }
 
+/// Execution window of one stage on the pipeline ROI clock — the
+/// per-branch trace behind pool-utilization reporting and the
+/// branch-overlap assertions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageTrace {
+    /// Stage index in [`PipelineSpec::stages`] declaration order.
+    pub stage: usize,
+    /// Pool subset the stage ran on.
+    pub mask: DeviceMask,
+    /// Absolute start of the stage's first iteration (its inter-stage
+    /// input transfer occupies `[start_s - transfer_in_s, start_s)`).
+    pub start_s: f64,
+    /// Absolute finish of the stage's last iteration.
+    pub end_s: f64,
+    /// Inter-stage gather+scatter time priced at stage start; 0 when
+    /// every producer shares this stage's mask.
+    pub transfer_in_s: f64,
+}
+
 /// Result of one pipeline run ([`simulate_pipeline`]); also the outcome
 /// type of [`coexec::simulate_iterative`], which is a single-stage
 /// pipeline.
 #[derive(Debug, Clone)]
 pub struct PipelineOutcome {
-    /// init + Σ iteration ROIs + release.
+    /// init + ROI makespan + release.
     pub total_time: f64,
     pub init_time: f64,
     pub release_time: f64,
-    /// Cumulative ROI time (Σ `iter_times`, the final pipeline clock).
+    /// ROI makespan: the latest stage finish on the pipeline clock.
+    /// Equals Σ `iter_times` for serial schedules and chains; with
+    /// co-executing branches it is smaller.
     pub roi_time: f64,
-    /// Per-iteration ROI times, in execution order.
+    /// Per-iteration ROI durations, in topological launch order.
     pub iter_times: Vec<f64>,
     pub energy_j: f64,
-    /// Per-device traces; `finish` is pipeline-cumulative (the completion
-    /// of the device's last package on the global ROI clock).
+    /// Pool-indexed per-device traces; `finish` is pipeline-cumulative
+    /// (the completion of the device's last package on the global ROI
+    /// clock).
     pub devices: Vec<DeviceTrace>,
     pub n_packages: u64,
     pub packages: Vec<PackageTrace>,
+    /// Per-stage execution windows, in topological launch order.
+    pub stages: Vec<StageTrace>,
     /// Pipeline-level verdict against the global budget, scoped by the
     /// run's [`ExecMode`]; `None` when unconstrained.
     pub deadline: Option<DeadlineVerdict>,
@@ -279,68 +363,235 @@ fn topo_order(stages: &[PipelineStage]) -> Vec<usize> {
     order
 }
 
+/// Deterministic per-stage RNG fork: concurrent branches draw identical
+/// jitter regardless of launch interleaving, and the serial baseline sees
+/// the exact same stage durations as the branch-parallel schedule.
+fn stage_seed(seed: u64, stage: usize) -> u64 {
+    seed ^ (stage as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Host-mediated price of one dependency edge whose producer and
+/// consumer run on different pool subsets: gather the producer's output
+/// volume to the host over the slowest masked producer link, scatter it
+/// to the consumer's devices over the slowest masked consumer link.
+/// Equal masks leave the data device-resident: free.  Charged exactly
+/// once per edge, whatever the mask overlap.
+fn edge_transfer_cost(
+    transfers: &TransferModel,
+    classes: &[DeviceClass],
+    producer: DeviceMask,
+    consumer: DeviceMask,
+    bytes: f64,
+) -> f64 {
+    if producer == consumer || bytes <= 0.0 {
+        return 0.0;
+    }
+    let gather = producer
+        .indices()
+        .into_iter()
+        .map(|i| transfers.d2h(classes[i], bytes))
+        .fold(0.0, f64::max);
+    let scatter = consumer
+        .indices()
+        .into_iter()
+        .map(|i| transfers.h2d(classes[i], bytes))
+        .fold(0.0, f64::max);
+    gather + scatter
+}
+
+/// Measured-throughput feedback (`Optimizations::estimate_refine`): the
+/// implied relative power of each view device from the last iteration's
+/// groups/busy delta replaces the a-priori (possibly skewed) estimate
+/// arming the next iteration's scheduler.  Devices that received no work
+/// keep their previous estimate; `busy` includes transfer time, so the
+/// refined estimate is mildly conservative.
+fn refine_powers(
+    cfg: &SimConfig,
+    bench: &Bench,
+    view: &DeviceView,
+    traces: &[DeviceTrace],
+    snap: &mut [(u64, f64)],
+    prev: Option<Vec<f64>>,
+) -> Vec<f64> {
+    let mut powers = prev.unwrap_or_else(|| coexec::effective_powers(cfg));
+    for (slot, &pid) in view.pool_ids.iter().enumerate() {
+        let (g0, b0) = snap[slot];
+        let dg = traces[pid].groups - g0;
+        let db = traces[pid].busy - b0;
+        if dg > 0 && db > 0.0 {
+            // groups/s = P · units/s ÷ lws  (the run_roi hint formula,
+            // inverted on the measurement).
+            let implied =
+                dg as f64 * bench.props.lws as f64 / (db * bench.gpu_units_per_sec);
+            powers[slot] = implied.max(1e-6);
+        }
+        snap[slot] = (traces[pid].groups, traces[pid].busy);
+    }
+    powers
+}
+
 /// Run one pipeline on the virtual-clock backend.  `cfg` is the run
-/// template: scheduler, driver/power models, optimizations, estimation
-/// scenario, seed, fault injection, and the default device set / problem
-/// size for stages that don't override them.  `spec.budget` (or, if
-/// unset, `cfg.budget`) is the **global** pipeline budget.
+/// template: its device set is the machine's [`DevicePool`], plus
+/// scheduler, driver/power models, optimizations, estimation scenario,
+/// seed, fault injection (pool-indexed), and the default problem size for
+/// stages that don't override it.  `spec.budget` (or, if unset,
+/// `cfg.budget`) is the **global** pipeline budget.
 pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcome {
     assert!(!spec.stages.is_empty(), "pipeline needs at least one stage");
     assert!(!cfg.devices.is_empty(), "no devices");
+    let pool = DevicePool::new(cfg.devices.clone());
+    let classes = pool.classes();
     let order = topo_order(&spec.stages);
     let budget = spec.budget.or(cfg.budget);
     let total_iters = spec.total_iterations();
 
-    // Resolve per-stage device sets and sizes up front; all stages must
-    // run on the same platform (same count and classes) so device traces
-    // and the power model stay index-aligned across the pipeline.
-    let stage_cfgs: Vec<(SimConfig, u64)> = order
+    // Resolve per-stage device views and sizes up front: each stage runs
+    // `run_roi` over its masked view with a sub-pool scheduler (per-device
+    // parameters remapped by pool id).
+    struct Plan {
+        mask: DeviceMask,
+        view: DeviceView,
+        cfg: SimConfig,
+        gws: u64,
+    }
+    let plans: Vec<Plan> = order
         .iter()
         .map(|&si| {
             let stage = &spec.stages[si];
-            let mut sc = cfg.clone();
-            if let Some(devs) = &stage.devices {
-                sc.devices = devs.clone();
+            let mask = stage.mask.unwrap_or_else(|| pool.full_mask());
+            let mut view = pool.view(mask);
+            if let Some(powers) = &stage.powers {
+                assert_eq!(powers.len(), pool.len(), "stage powers must cover the pool");
+                for (slot, &pid) in view.pool_ids.iter().enumerate() {
+                    view.devices[slot].power = powers[pid];
+                }
             }
+            let mut sc = cfg.clone();
+            sc.devices = view.devices.clone();
+            // Per-device (m, k) parameters are remapped to the sub-pool by
+            // `SchedulerKind::build` via the SchedCtx's pool ids.
             sc.scheduler = cfg.scheduler.for_energy_policy(spec.energy);
             let gws = stage.gws.or(cfg.gws).unwrap_or(stage.bench.default_gws);
-            (sc, gws)
+            Plan { mask, view, cfg: sc, gws }
         })
         .collect();
-    let n = stage_cfgs[0].0.devices.len();
-    let classes: Vec<_> = stage_cfgs[0].0.devices.iter().map(|d| d.class).collect();
-    for (sc, _) in &stage_cfgs {
-        let c: Vec<_> = sc.devices.iter().map(|d| d.class).collect();
-        assert_eq!(c, classes, "all pipeline stages must share one device platform");
+    // Declaration index -> position in `order` (and `plans`).
+    let mut plan_of = vec![0usize; spec.stages.len()];
+    for (pos, &si) in order.iter().enumerate() {
+        plan_of[si] = pos;
     }
 
     let mut rng = XorShift64::new(cfg.seed);
-    // Program-level fixed costs are paid once: init before the first
-    // stage (discovery + buffer creation), release after the last.
-    // Modelling scope: they are priced from the *topologically first*
-    // stage's kernel only — later stages' program builds and buffer
-    // footprints are not added, so binary-mode fixed costs of a
-    // multi-kernel chain are a lower bound and depend on which stage
-    // sorts first (ROADMAP: aggregate fixed costs over distinct stage
-    // kernels).  Single-kernel pipelines (`simulate_iterative`) are
-    // exact.
-    let (first_cfg, first_gws) = &stage_cfgs[0];
-    let (init_time, release_time) =
-        coexec::fixed_costs(&spec.stages[order[0]].bench, first_cfg, *first_gws, &mut rng);
+    // Program-level fixed costs, aggregated so nothing depends on which
+    // stage sorts first: the topologically-first kernel pays full
+    // initialization (discovery + device chains + its build/buffers) on
+    // the union of *its own* stages' masks at its largest footprint;
+    // devices used only by later kernels add bare device-init chains; and
+    // each additional *distinct* kernel adds its build + buffer increment
+    // on its own mask union.  Single-kernel pipelines draw the same two
+    // jitter values as ever: bit-identical.  (The overlap law groups
+    // chains per component, so declaration order still shuffles jitter
+    // pairing — pricing, not structure, is order-independent.)
+    let kernel_union = |id: BenchId| {
+        order
+            .iter()
+            .enumerate()
+            .filter(|&(_, &sj)| spec.stages[sj].bench.id == id)
+            .fold((DeviceMask::empty(), 0u64), |(m, g), (p, _)| {
+                (m.union(plans[p].mask), g.max(plans[p].gws))
+            })
+    };
+    let union_mask = plans.iter().fold(DeviceMask::empty(), |m, p| m.union(p.mask));
+    let first_id = spec.stages[order[0]].bench.id;
+    let (first_mask, first_gws) = kernel_union(first_id);
+    let mut first_cfg = cfg.clone();
+    first_cfg.devices = pool.view(first_mask).devices;
+    let (mut init_time, mut release_time) =
+        coexec::fixed_costs(&spec.stages[order[0]].bench, &first_cfg, first_gws, &mut rng);
+    let later_classes: Vec<DeviceClass> = union_mask
+        .indices()
+        .into_iter()
+        .filter(|&i| !first_mask.contains(i))
+        .map(|i| classes[i])
+        .collect();
+    if !later_classes.is_empty() {
+        let fixed = crate::cldriver::device_fixed_costs(&cfg.driver, &later_classes, cfg.opts);
+        init_time += fixed.init * rng.jitter(cfg.driver.jitter_sigma);
+        release_time += fixed.release * rng.jitter(cfg.driver.jitter_sigma);
+    }
+    let mut priced: Vec<BenchId> = vec![first_id];
+    for &si in order.iter().skip(1) {
+        let bench = &spec.stages[si].bench;
+        if priced.contains(&bench.id) {
+            continue;
+        }
+        priced.push(bench.id);
+        let (kmask, kgws) = kernel_union(bench.id);
+        let kclasses: Vec<DeviceClass> = kmask.indices().iter().map(|&i| classes[i]).collect();
+        let (i2, r2) = coexec::extra_kernel_costs(bench, &kclasses, cfg, kgws, &mut rng);
+        init_time += i2;
+        release_time += r2;
+    }
     let roi_deadline = budget
         .map(|b| coexec::roi_scope_deadline(b.deadline_s, cfg.mode, init_time, release_time));
 
-    let mut traces = vec![DeviceTrace::default(); n];
+    let transfers = TransferModel::new(&cfg.driver, cfg.opts.buffer_flags);
+    let n_pool = pool.len();
+    let mut traces = vec![DeviceTrace::default(); n_pool];
+    let mut dev_free = vec![0.0f64; n_pool];
+    let mut stage_end = vec![0.0f64; spec.stages.len()];
+    let mut stage_traces = Vec::with_capacity(spec.stages.len());
     let mut packages = Vec::new();
     let mut iter_times = Vec::with_capacity(total_iters as usize);
     let mut iter_verdicts = Vec::new();
     let mut seq = 0u64;
-    let mut clock = 0.0f64;
+    let mut serial_clock = 0.0f64;
     let mut prev_sub = 0.0f64;
     let mut global_iter = 0u32;
     for (pos, &si) in order.iter().enumerate() {
         let stage = &spec.stages[si];
-        let (stage_cfg, gws) = &stage_cfgs[pos];
+        let plan = &plans[pos];
+        let mut deps = stage.deps.clone();
+        deps.sort_unstable();
+        deps.dedup();
+        let dep_ready = deps.iter().map(|&d| stage_end[d]).fold(0.0, f64::max);
+        // Inter-stage data flow: one gather+scatter per dependency edge
+        // whose producer ran on a different subset.
+        let transfer_in: f64 = deps
+            .iter()
+            .map(|&d| {
+                let producer = &plans[plan_of[d]];
+                let bytes =
+                    producer.gws as f64 * spec.stages[d].bench.bytes_out_per_item;
+                edge_transfer_cost(&transfers, &classes, producer.mask, plan.mask, bytes)
+            })
+            .sum();
+        let resource_ready = if spec.serial {
+            // Legacy schedule: one global clock, no overlap.
+            serial_clock
+        } else {
+            // Event-driven: wait only for this stage's masked devices.
+            plan.view.pool_ids.iter().map(|&i| dev_free[i]).fold(0.0, f64::max)
+        };
+        let start = dep_ready.max(resource_ready) + transfer_in;
+
+        // The topologically-first stage continues the main RNG stream
+        // (single-stage pipelines stay bit-identical to the pre-pool
+        // engine); later stages fork per-stage streams so concurrent
+        // branches are deterministic regardless of interleaving.
+        let mut stage_rng = if pos == 0 {
+            rng.clone()
+        } else {
+            XorShift64::new(stage_seed(cfg.seed, si))
+        };
+        let mut clock = start;
+        let mut refined: Option<Vec<f64>> = None;
+        let mut snap: Vec<(u64, f64)> = plan
+            .view
+            .pool_ids
+            .iter()
+            .map(|&i| (traces[i].groups, traces[i].busy))
+            .collect();
         for i in 0..stage.iterations {
             let phase = if stage.iterations == 1 {
                 IterPhase::Single
@@ -354,18 +605,20 @@ pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcom
             let sub = roi_deadline.map(|d| {
                 spec.policy.sub_deadline(d, total_iters, global_iter, clock, prev_sub)
             });
-            let (end, s) = coexec::run_roi(
-                &stage.bench,
-                stage_cfg,
-                *gws,
-                &mut rng,
-                phase,
-                &mut traces,
-                &mut packages,
-                seq,
-                clock,
-                sub,
-            );
+            let (end, s) = {
+                let pass = RoiPass {
+                    bench: &stage.bench,
+                    cfg: &plan.cfg,
+                    pool_ids: &plan.view.pool_ids,
+                    gws: plan.gws,
+                    phase,
+                    seq0: seq,
+                    t0: clock,
+                    deadline_s: sub,
+                    powers_override: refined.as_deref(),
+                };
+                coexec::run_roi(&pass, &mut stage_rng, &mut traces, &mut packages)
+            };
             seq = s;
             iter_times.push(end - clock);
             if let Some(sd) = sub {
@@ -379,16 +632,39 @@ pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcom
                 });
                 prev_sub = sd;
             }
+            if cfg.opts.estimate_refine && i + 1 < stage.iterations {
+                refined = Some(refine_powers(
+                    &plan.cfg,
+                    &stage.bench,
+                    &plan.view,
+                    &traces,
+                    &mut snap,
+                    refined,
+                ));
+            }
             clock = end;
             global_iter += 1;
         }
+        stage_end[si] = clock;
+        for &i in &plan.view.pool_ids {
+            dev_free[i] = clock;
+        }
+        serial_clock = serial_clock.max(clock);
+        stage_traces.push(StageTrace {
+            stage: si,
+            mask: plan.mask,
+            start_s: start,
+            end_s: clock,
+            transfer_in_s: transfer_in,
+        });
     }
 
-    let roi_time = clock;
+    let roi_time = stage_end.iter().cloned().fold(0.0, f64::max);
     let total_time = init_time + roi_time + release_time;
-    // Classes are constant across stages (asserted above), so single-shot
-    // energy accounting applies to the cumulative ROI window.
-    let energy_j = coexec::energy(&stage_cfgs[0].0, roi_time, &traces);
+    // Pool classes are constant across stages, so single-shot energy
+    // accounting applies to the whole ROI window (idle pool devices draw
+    // idle power for the full makespan).
+    let energy_j = coexec::energy(cfg, roi_time, &traces);
     let timed = match cfg.mode {
         ExecMode::Binary => total_time,
         ExecMode::Roi => roi_time,
@@ -403,6 +679,7 @@ pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcom
         devices: traces,
         n_packages: seq,
         packages,
+        stages: stage_traces,
         deadline: budget.map(|b| b.verdict(timed)),
         iter_verdicts,
     }
@@ -431,6 +708,7 @@ mod tests {
         assert_eq!(spec.total_iterations(), 5);
         assert_eq!(spec.label(), "Gaussian");
         assert!(spec.budget.is_none());
+        assert!(!spec.serial);
     }
 
     #[test]
@@ -487,6 +765,9 @@ mod tests {
         assert_eq!(out.iter_hit_rate(), None);
         assert_eq!(out.energy_per_hit_j(), None);
         assert_eq!(out.iter_times.len(), 3);
+        assert_eq!(out.stages.len(), 1);
+        assert_eq!(out.stages[0].mask, DeviceMask::all(3));
+        assert_eq!(out.stages[0].transfer_in_s, 0.0);
     }
 
     #[test]
@@ -549,12 +830,13 @@ mod tests {
                 PipelineStage::new(ga.clone(), 2).with_gws(ga.default_gws / 32),
                 PipelineStage::new(mb.clone(), 3)
                     .with_gws(mb.default_gws / 32)
-                    .with_devices(coexec::testbed_devices(&mb))
+                    .with_powers(mb.true_powers.to_vec())
                     .after(&[0]),
             ],
             budget: None,
             policy: BudgetPolicy::EvenSplit,
             energy: EnergyPolicy::RaceToIdle,
+            serial: false,
         };
         let cfg = SimConfig::testbed(&ga, hguided_opt());
         let out = simulate_pipeline(&spec, &cfg);
@@ -563,7 +845,11 @@ mod tests {
         assert_eq!(groups, want, "per-stage work conserved");
         assert_eq!(out.iter_times.len(), 5);
         assert!(out.iter_times.iter().all(|&t| t > 0.0));
+        // A chain is fully serialized: the makespan is the iteration sum.
         assert!((out.roi_time - out.iter_times.iter().sum::<f64>()).abs() < 1e-9);
+        // Equal (full-pool) masks: the dependency edge is free.
+        assert_eq!(out.stages.len(), 2);
+        assert_eq!(out.stages[1].transfer_in_s, 0.0);
     }
 
     #[test]
@@ -576,5 +862,214 @@ mod tests {
         for v in &out.iter_verdicts {
             assert_eq!(v.sub_deadline_s, 2.0);
         }
+    }
+
+    #[test]
+    fn disjoint_branches_overlap_and_shared_devices_serialize() {
+        // Two independent stages.  On disjoint masks their windows
+        // overlap; on overlapping masks the second waits for the shared
+        // device.
+        let ga = Bench::new(BenchId::Gaussian);
+        let mb = Bench::new(BenchId::Mandelbrot);
+        let mk = |mask_a: DeviceMask, mask_b: DeviceMask| PipelineSpec {
+            stages: vec![
+                PipelineStage::new(ga.clone(), 2)
+                    .with_gws(ga.default_gws / 32)
+                    .on_devices(mask_a),
+                PipelineStage::new(mb.clone(), 2)
+                    .with_gws(mb.default_gws / 32)
+                    .on_devices(mask_b),
+            ],
+            budget: None,
+            policy: BudgetPolicy::CarryOverSlack,
+            energy: EnergyPolicy::RaceToIdle,
+            serial: false,
+        };
+        let cfg = SimConfig::testbed(&ga, hguided_opt());
+        let disjoint = simulate_pipeline(
+            &mk(DeviceMask::from_indices(&[0, 1]), DeviceMask::single(2)),
+            &cfg,
+        );
+        assert_eq!(disjoint.stages.len(), 2);
+        let (a, b) = (&disjoint.stages[0], &disjoint.stages[1]);
+        assert_eq!(a.start_s, 0.0);
+        assert_eq!(b.start_s, 0.0, "disjoint branch launches immediately");
+        assert!(a.end_s > 0.0 && b.end_s > 0.0);
+        assert!(
+            disjoint.roi_time < disjoint.iter_times.iter().sum::<f64>(),
+            "overlapping branches beat the iteration sum"
+        );
+        let shared = simulate_pipeline(
+            &mk(DeviceMask::from_indices(&[0, 2]), DeviceMask::from_indices(&[1, 2])),
+            &cfg,
+        );
+        let (a, b) = (&shared.stages[0], &shared.stages[1]);
+        assert!(
+            b.start_s - b.transfer_in_s >= a.end_s - 1e-12,
+            "shared device 2 serializes the stages"
+        );
+        for out in [&disjoint, &shared] {
+            let groups: u64 = out.devices.iter().map(|d| d.groups).sum();
+            let want =
+                2 * ga.groups(ga.default_gws / 32) + 2 * mb.groups(mb.default_gws / 32);
+            assert_eq!(groups, want, "work conserved");
+        }
+    }
+
+    #[test]
+    fn inter_stage_transfer_priced_exactly_once_per_edge() {
+        // A -> B with differing masks pays one gather+scatter; equal
+        // masks pay nothing; partial overlap still pays exactly once.
+        let ga = Bench::new(BenchId::Gaussian);
+        let gws = ga.default_gws / 32;
+        let mk = |mask_b: Option<DeviceMask>| {
+            let mut spec = PipelineSpec::chain(vec![ga.clone(), ga.clone()], 2);
+            spec.stages[0] = spec.stages[0]
+                .clone()
+                .with_gws(gws)
+                .on_devices(DeviceMask::from_indices(&[0, 1]));
+            spec.stages[1] = spec.stages[1].clone().with_gws(gws);
+            if let Some(m) = mask_b {
+                spec.stages[1] = spec.stages[1].clone().on_devices(m);
+            } else {
+                spec.stages[1] =
+                    spec.stages[1].clone().on_devices(DeviceMask::from_indices(&[0, 1]));
+            }
+            spec
+        };
+        let cfg = SimConfig::testbed(&ga, hguided_opt());
+        let equal = simulate_pipeline(&mk(None), &cfg);
+        assert_eq!(equal.stages[1].transfer_in_s, 0.0, "resident data is free");
+
+        let transfers = TransferModel::new(&cfg.driver, cfg.opts.buffer_flags);
+        let classes: Vec<DeviceClass> = cfg.devices.iter().map(|d| d.class).collect();
+        let bytes = gws as f64 * ga.bytes_out_per_item;
+        for mask_b in [DeviceMask::single(2), DeviceMask::from_indices(&[1, 2])] {
+            let out = simulate_pipeline(&mk(Some(mask_b)), &cfg);
+            let expected = edge_transfer_cost(
+                &transfers,
+                &classes,
+                DeviceMask::from_indices(&[0, 1]),
+                mask_b,
+                bytes,
+            );
+            assert!(expected > 0.0, "differing masks must price the edge");
+            let got = out.stages[1].transfer_in_s;
+            assert!(
+                (got - expected).abs() < 1e-12,
+                "edge priced once: got {got}, expected {expected}"
+            );
+        }
+    }
+
+    #[test]
+    fn serial_schedule_never_beats_branch_parallel() {
+        // Same spec, same per-stage RNG forks: stage durations are
+        // identical, so the serialized schedule can only be later.
+        let ga = Bench::new(BenchId::Gaussian);
+        let mb = Bench::new(BenchId::Mandelbrot);
+        let spec = PipelineSpec {
+            stages: vec![
+                PipelineStage::new(ga.clone(), 2)
+                    .with_gws(ga.default_gws / 32)
+                    .on_devices(DeviceMask::from_indices(&[0, 1])),
+                PipelineStage::new(mb.clone(), 2)
+                    .with_gws(mb.default_gws / 32)
+                    .on_devices(DeviceMask::single(2)),
+            ],
+            budget: None,
+            policy: BudgetPolicy::CarryOverSlack,
+            energy: EnergyPolicy::RaceToIdle,
+            serial: false,
+        };
+        let cfg = SimConfig::testbed(&ga, hguided_opt());
+        let par = simulate_pipeline(&spec, &cfg);
+        let ser = simulate_pipeline(&spec.clone().with_serial(true), &cfg);
+        assert!(
+            par.roi_time < ser.roi_time,
+            "parallel {} !< serial {}",
+            par.roi_time,
+            ser.roi_time
+        );
+        // Identical per-stage durations in both schedules.
+        for (p, s) in par.iter_times.iter().zip(&ser.iter_times) {
+            assert!((p - s).abs() < 1e-12, "stage durations diverged");
+        }
+        assert_eq!(par.n_packages, ser.n_packages);
+    }
+
+    #[test]
+    fn multi_kernel_fixed_costs_aggregate_over_distinct_kernels() {
+        let ga = Bench::new(BenchId::Gaussian);
+        let mb = Bench::new(BenchId::Mandelbrot);
+        let cfg = SimConfig::testbed(&ga, hguided_opt());
+        // Two stages of the *same* kernel price exactly one kernel: init
+        // is bitwise what the single-stage pipeline pays.
+        let twice = simulate_pipeline(&PipelineSpec::chain(vec![ga.clone(), ga.clone()], 1), &cfg);
+        let once = simulate_pipeline(&PipelineSpec::repeat(ga.clone(), 2), &cfg);
+        assert_eq!(twice.init_time.to_bits(), once.init_time.to_bits());
+        assert_eq!(twice.release_time.to_bits(), once.release_time.to_bits());
+        // A second *distinct* kernel adds its build/buffer increment.
+        let hetero = simulate_pipeline(&PipelineSpec::chain(vec![ga, mb], 1), &cfg);
+        assert!(
+            hetero.init_time > once.init_time,
+            "distinct kernel increments init: {} !> {}",
+            hetero.init_time,
+            once.init_time
+        );
+        assert!(hetero.release_time >= once.release_time);
+    }
+
+    #[test]
+    fn extra_kernel_pricing_is_topo_order_independent() {
+        // The extra kernel's buffer footprint is its *largest* stage, so
+        // swapping which of its stages comes first leaves the fixed costs
+        // bitwise unchanged (same rng draw count, same pre-jitter values).
+        let ga = Bench::new(BenchId::Gaussian);
+        let mb = Bench::new(BenchId::Mandelbrot);
+        let cfg = SimConfig::testbed(&mb, hguided_opt());
+        let mk = |first_ga_gws: u64, second_ga_gws: u64| PipelineSpec {
+            stages: vec![
+                PipelineStage::new(mb.clone(), 1).with_gws(mb.default_gws / 32),
+                PipelineStage::new(ga.clone(), 1).with_gws(first_ga_gws).after(&[0]),
+                PipelineStage::new(ga.clone(), 1).with_gws(second_ga_gws).after(&[1]),
+            ],
+            budget: None,
+            policy: BudgetPolicy::EvenSplit,
+            energy: EnergyPolicy::RaceToIdle,
+            serial: false,
+        };
+        let small = ga.default_gws / 32;
+        let big = ga.default_gws / 8;
+        let a = simulate_pipeline(&mk(small, big), &cfg);
+        let b = simulate_pipeline(&mk(big, small), &cfg);
+        assert_eq!(a.init_time.to_bits(), b.init_time.to_bits());
+        assert_eq!(a.release_time.to_bits(), b.release_time.to_bits());
+        // Same rule for the *topologically-first* kernel: a chain of two
+        // Gaussian sizes prices the larger footprint whichever is first.
+        let chain = |x: u64, y: u64| {
+            let mut s = PipelineSpec::chain(vec![ga.clone(), ga.clone()], 1);
+            s.stages[0] = s.stages[0].clone().with_gws(x);
+            s.stages[1] = s.stages[1].clone().with_gws(y);
+            s
+        };
+        let c = simulate_pipeline(&chain(small, big), &cfg);
+        let d = simulate_pipeline(&chain(big, small), &cfg);
+        assert_eq!(c.init_time.to_bits(), d.init_time.to_bits());
+        assert_eq!(c.release_time.to_bits(), d.release_time.to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "lost work")]
+    fn losing_every_masked_device_fails_loudly() {
+        // A single-device stage whose device dies has no survivor to
+        // re-execute the lost packages; the engine must fail loudly
+        // instead of reporting a work-dropping (faster) schedule.
+        let b = Bench::new(BenchId::Gaussian);
+        let mut cfg = small_cfg(&b);
+        cfg.fail = Some((2, 1e-4));
+        let mut spec = PipelineSpec::repeat(b, 2);
+        spec.stages[0] = spec.stages[0].clone().on_devices(DeviceMask::single(2));
+        simulate_pipeline(&spec, &cfg);
     }
 }

@@ -112,6 +112,215 @@ pub struct DeviceSpec {
     pub power: f64,
 }
 
+/// A subset of a [`DevicePool`], as a bitmask over *pool* device indices.
+/// Pipeline stages carry one per stage so independent DAG branches can
+/// co-execute on disjoint subsets of the machine's device roster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DeviceMask {
+    bits: u64,
+}
+
+impl DeviceMask {
+    /// Pool ids are bit positions in a u64.
+    pub const MAX_DEVICES: usize = 64;
+
+    /// No devices (the identity of [`DeviceMask::union`]).
+    pub fn empty() -> Self {
+        Self { bits: 0 }
+    }
+
+    /// The first `n` pool devices (the full pool for a pool of size `n`).
+    pub fn all(n: usize) -> Self {
+        assert!((1..=Self::MAX_DEVICES).contains(&n), "pool size {n} out of range");
+        Self { bits: if n == 64 { u64::MAX } else { (1u64 << n) - 1 } }
+    }
+
+    /// Exactly one pool device.
+    pub fn single(id: DeviceId) -> Self {
+        assert!(id < Self::MAX_DEVICES, "device id {id} out of range");
+        Self { bits: 1u64 << id }
+    }
+
+    /// The given pool devices (duplicates are harmless).
+    pub fn from_indices(ids: &[DeviceId]) -> Self {
+        let mut mask = Self::empty();
+        for &id in ids {
+            mask = mask.union(Self::single(id));
+        }
+        mask
+    }
+
+    #[inline]
+    pub fn contains(&self, id: DeviceId) -> bool {
+        id < Self::MAX_DEVICES && self.bits & (1u64 << id) != 0
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.bits == 0
+    }
+
+    /// Number of selected devices.
+    #[inline]
+    pub fn count(&self) -> usize {
+        self.bits.count_ones() as usize
+    }
+
+    #[inline]
+    pub fn union(&self, other: Self) -> Self {
+        Self { bits: self.bits | other.bits }
+    }
+
+    #[inline]
+    pub fn intersects(&self, other: Self) -> bool {
+        self.bits & other.bits != 0
+    }
+
+    #[inline]
+    pub fn is_disjoint(&self, other: Self) -> bool {
+        !self.intersects(other)
+    }
+
+    /// Selected pool ids, ascending.
+    pub fn indices(&self) -> Vec<DeviceId> {
+        (0..Self::MAX_DEVICES).filter(|&i| self.contains(i)).collect()
+    }
+
+    /// Highest selected pool id + 1 (0 for the empty mask) — the minimum
+    /// pool size this mask is valid against.
+    pub fn span(&self) -> usize {
+        Self::MAX_DEVICES - self.bits.leading_zeros() as usize
+    }
+
+    /// Parse one mask against a pool's device classes.  Tokens are
+    /// separated by `+` or `,`; each is `all`, a class name (`cpu`,
+    /// `igpu`, `gpu` — selecting every pool device of that class), or a
+    /// decimal pool index (`0`, `2`).  Errors on unknown tokens,
+    /// out-of-range indices, classes absent from the pool, and empty
+    /// masks.
+    pub fn parse(s: &str, classes: &[DeviceClass]) -> Result<Self, String> {
+        let mut mask = Self::empty();
+        for token in s.split(['+', ',']) {
+            let token = token.trim().to_lowercase();
+            if token.is_empty() {
+                return Err(format!("empty device token in mask '{s}'"));
+            }
+            if token == "all" {
+                mask = mask.union(Self::all(classes.len()));
+                continue;
+            }
+            let class = match token.as_str() {
+                "cpu" => Some(DeviceClass::Cpu),
+                "igpu" => Some(DeviceClass::IGpu),
+                "gpu" | "dgpu" => Some(DeviceClass::DGpu),
+                _ => None,
+            };
+            if let Some(class) = class {
+                let hits: Vec<DeviceId> = classes
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &c)| c == class)
+                    .map(|(i, _)| i)
+                    .collect();
+                if hits.is_empty() {
+                    return Err(format!("no '{token}' device in the pool"));
+                }
+                mask = mask.union(Self::from_indices(&hits));
+            } else if let Ok(id) = token.parse::<usize>() {
+                if id >= classes.len() {
+                    return Err(format!(
+                        "device index {id} out of range (pool has {} devices)",
+                        classes.len()
+                    ));
+                }
+                mask = mask.union(Self::single(id));
+            } else {
+                return Err(format!("unknown device '{token}' (all|cpu|igpu|gpu|index)"));
+            }
+        }
+        if mask.is_empty() {
+            return Err(format!("mask '{s}' selects no devices"));
+        }
+        Ok(mask)
+    }
+
+    /// Human-readable label against a pool's classes, e.g. `cpu+igpu`.
+    pub fn label(&self, classes: &[DeviceClass]) -> String {
+        let names: Vec<String> = self
+            .indices()
+            .into_iter()
+            .map(|i| match classes.get(i) {
+                Some(c) => c.label().to_lowercase(),
+                None => i.to_string(),
+            })
+            .collect();
+        names.join("+")
+    }
+}
+
+/// The machine's full device roster with stable pool-wide device ids.
+/// Every pipeline trace, fault-injection target and energy account is
+/// indexed by pool id; stages run on [`DeviceView`]s cut from the pool by
+/// a [`DeviceMask`].
+#[derive(Debug, Clone)]
+pub struct DevicePool {
+    devices: Vec<DeviceSpec>,
+}
+
+impl DevicePool {
+    pub fn new(devices: Vec<DeviceSpec>) -> Self {
+        assert!(!devices.is_empty(), "a device pool needs at least one device");
+        assert!(devices.len() <= DeviceMask::MAX_DEVICES, "pool too large");
+        Self { devices }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    pub fn specs(&self) -> &[DeviceSpec] {
+        &self.devices
+    }
+
+    pub fn classes(&self) -> Vec<DeviceClass> {
+        self.devices.iter().map(|d| d.class).collect()
+    }
+
+    pub fn full_mask(&self) -> DeviceMask {
+        DeviceMask::all(self.len())
+    }
+
+    /// Cut the masked view out of the pool.  Panics on empty masks and on
+    /// masks that reference devices beyond the pool.
+    pub fn view(&self, mask: DeviceMask) -> DeviceView {
+        assert!(!mask.is_empty(), "a stage mask must select at least one device");
+        assert!(
+            mask.span() <= self.len(),
+            "mask references device {} but the pool has {}",
+            mask.span() - 1,
+            self.len()
+        );
+        let pool_ids = mask.indices();
+        let devices = pool_ids.iter().map(|&i| self.devices[i].clone()).collect();
+        DeviceView { pool_ids, devices }
+    }
+}
+
+/// A masked slice of a [`DevicePool`]: the devices one pipeline stage
+/// runs on.  `pool_ids[slot]` maps the stage-local device slot back to
+/// its pool id (traces, fault injection and energy stay pool-indexed).
+#[derive(Debug, Clone)]
+pub struct DeviceView {
+    pub pool_ids: Vec<DeviceId>,
+    pub devices: Vec<DeviceSpec>,
+}
+
 /// Execution mode of a run (paper §V-B / Fig. 6).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExecMode {
@@ -330,7 +539,8 @@ impl EstimateScenario {
     }
 }
 
-/// The two runtime optimizations proposed in paper §III.
+/// The two runtime optimizations proposed in paper §III, plus the
+/// pipeline engine's estimate-refinement extension.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Optimizations {
     /// Overlap platform/device discovery with Scheduler/Device thread
@@ -339,12 +549,25 @@ pub struct Optimizations {
     /// Set buffer placement flags so same-main-memory devices map instead
     /// of copying.
     pub buffer_flags: bool,
+    /// Pipeline extension: feed each stage's *measured* iteration
+    /// throughput back into the `P_i` estimates arming the next
+    /// iteration's scheduler, recovering from skewed offline profiles.
+    pub estimate_refine: bool,
 }
 
 impl Optimizations {
-    pub const NONE: Self = Self { init_overlap: false, buffer_flags: false };
-    pub const INIT: Self = Self { init_overlap: true, buffer_flags: false };
-    pub const ALL: Self = Self { init_overlap: true, buffer_flags: true };
+    pub const NONE: Self =
+        Self { init_overlap: false, buffer_flags: false, estimate_refine: false };
+    pub const INIT: Self =
+        Self { init_overlap: true, buffer_flags: false, estimate_refine: false };
+    /// The paper's final runtime: both §III optimizations, no extensions.
+    pub const ALL: Self =
+        Self { init_overlap: true, buffer_flags: true, estimate_refine: false };
+
+    pub fn with_estimate_refine(mut self, on: bool) -> Self {
+        self.estimate_refine = on;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -366,6 +589,99 @@ mod tests {
         assert!(GroupRange::new(7, 7).is_empty());
         assert!(ItemRange::new(0, 0).is_empty());
         assert!(!GroupRange::new(0, 1).is_empty());
+    }
+
+    const TESTBED: [DeviceClass; 3] =
+        [DeviceClass::Cpu, DeviceClass::IGpu, DeviceClass::DGpu];
+
+    fn testbed_pool() -> DevicePool {
+        DevicePool::new(
+            TESTBED.iter().map(|&class| DeviceSpec { class, power: 1.0 }).collect(),
+        )
+    }
+
+    #[test]
+    fn mask_set_algebra() {
+        let a = DeviceMask::from_indices(&[0, 1]);
+        let b = DeviceMask::single(2);
+        assert!(a.contains(0) && a.contains(1) && !a.contains(2));
+        assert_eq!(a.count(), 2);
+        assert!(a.is_disjoint(b) && !a.intersects(b));
+        let all = a.union(b);
+        assert_eq!(all, DeviceMask::all(3));
+        assert_eq!(all.indices(), vec![0, 1, 2]);
+        assert_eq!(all.span(), 3);
+        assert!(DeviceMask::empty().is_empty());
+        assert!(a.intersects(DeviceMask::single(1)));
+    }
+
+    #[test]
+    fn mask_parse_accepts_classes_indices_and_all() {
+        let c = &TESTBED;
+        assert_eq!(DeviceMask::parse("all", c).unwrap(), DeviceMask::all(3));
+        assert_eq!(DeviceMask::parse("cpu", c).unwrap(), DeviceMask::single(0));
+        assert_eq!(DeviceMask::parse("gpu", c).unwrap(), DeviceMask::single(2));
+        assert_eq!(
+            DeviceMask::parse("cpu+igpu", c).unwrap(),
+            DeviceMask::from_indices(&[0, 1])
+        );
+        assert_eq!(
+            DeviceMask::parse("0,2", c).unwrap(),
+            DeviceMask::from_indices(&[0, 2])
+        );
+        assert_eq!(DeviceMask::parse(" CPU + 2 ", c).unwrap().indices(), vec![0, 2]);
+    }
+
+    #[test]
+    fn mask_parse_rejects_malformed_input() {
+        let c = &TESTBED;
+        assert!(DeviceMask::parse("", c).is_err());
+        assert!(DeviceMask::parse("xpu", c).is_err());
+        assert!(DeviceMask::parse("cpu+", c).is_err(), "trailing empty token");
+        assert!(DeviceMask::parse("9", c).is_err(), "index beyond the pool");
+        assert!(
+            DeviceMask::parse("igpu", &[DeviceClass::Cpu]).is_err(),
+            "class absent from the pool"
+        );
+    }
+
+    #[test]
+    fn mask_labels_use_pool_classes() {
+        let c = &TESTBED;
+        assert_eq!(DeviceMask::from_indices(&[0, 1]).label(c), "cpu+igpu");
+        assert_eq!(DeviceMask::single(2).label(c), "gpu");
+    }
+
+    #[test]
+    fn pool_views_remap_to_pool_ids() {
+        let pool = testbed_pool();
+        assert_eq!(pool.len(), 3);
+        assert_eq!(pool.full_mask(), DeviceMask::all(3));
+        let v = pool.view(DeviceMask::from_indices(&[0, 2]));
+        assert_eq!(v.pool_ids, vec![0, 2]);
+        assert_eq!(v.devices.len(), 2);
+        assert_eq!(v.devices[1].class, DeviceClass::DGpu);
+        let full = pool.view(pool.full_mask());
+        assert_eq!(full.pool_ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "mask references device")]
+    fn pool_view_rejects_out_of_range_masks() {
+        testbed_pool().view(DeviceMask::single(5));
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one device")]
+    fn pool_view_rejects_empty_masks() {
+        testbed_pool().view(DeviceMask::empty());
+    }
+
+    #[test]
+    fn optimizations_refine_builder() {
+        assert!(!Optimizations::ALL.estimate_refine, "paper runtime has no extension");
+        let r = Optimizations::ALL.with_estimate_refine(true);
+        assert!(r.estimate_refine && r.init_overlap && r.buffer_flags);
     }
 
     #[test]

@@ -7,8 +7,12 @@
 use enginecl::benchsuite::{Bench, BenchId};
 use enginecl::engine::experiments;
 use enginecl::scheduler::{AdaptiveParams, HGuidedParams, SchedulerKind};
-use enginecl::sim::{simulate, simulate_iterative, simulate_pipeline, PipelineSpec, SimConfig};
-use enginecl::types::{BudgetPolicy, EnergyPolicy, EstimateScenario, TimeBudget};
+use enginecl::sim::{
+    simulate, simulate_iterative, simulate_pipeline, PipelineSpec, PipelineStage, SimConfig,
+};
+use enginecl::types::{
+    BudgetPolicy, DeviceMask, EnergyPolicy, EstimateScenario, Optimizations, TimeBudget,
+};
 
 fn hguided_opt() -> SchedulerKind {
     SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() }
@@ -71,6 +75,7 @@ fn carry_over_slack_serves_sub_deadlines_at_least_as_well_as_even_split() {
         &[BenchId::Gaussian, BenchId::Mandelbrot],
         6,
         &hguided_opt(),
+        Optimizations::ALL,
         &policies,
         &[EnergyPolicy::RaceToIdle],
         &[EstimateScenario::Pessimistic { err: 0.3 }],
@@ -122,6 +127,7 @@ fn adaptive_pipeline_sweep_emits_verdicts_and_j_per_hit() {
         &[BenchId::Gaussian, BenchId::Mandelbrot],
         5,
         &adaptive(),
+        Optimizations::ALL,
         &BudgetPolicy::ALL,
         &[EnergyPolicy::RaceToIdle],
         &[EstimateScenario::Exact, EstimateScenario::Pessimistic { err: 0.3 }],
@@ -200,6 +206,120 @@ fn stretch_to_deadline_raises_package_count_under_pressure() {
         race.n_packages
     );
     assert!(race.energy_j > 0.0 && stretch.energy_j > 0.0);
+}
+
+#[test]
+fn two_branch_dag_on_disjoint_masks_beats_serial_within_the_same_budget() {
+    // Acceptance claim of the device-pool refactor: two independent DAG
+    // branches on disjoint CPU+iGPU / GPU masks co-execute, beating the
+    // serial schedule's ROI time while both meet the same TimeBudget.
+    let ga = Bench::new(BenchId::Gaussian);
+    let mb = Bench::new(BenchId::Mandelbrot);
+    let spec = PipelineSpec {
+        stages: vec![
+            PipelineStage::new(ga.clone(), 2)
+                .with_gws(ga.default_gws / 16)
+                .on_devices(DeviceMask::from_indices(&[0, 1])),
+            PipelineStage::new(mb.clone(), 2)
+                .with_gws(mb.default_gws / 16)
+                .on_devices(DeviceMask::single(2)),
+        ],
+        budget: None,
+        policy: BudgetPolicy::CarryOverSlack,
+        energy: EnergyPolicy::RaceToIdle,
+        serial: false,
+    };
+    let cfg = SimConfig::testbed(&ga, hguided_opt());
+    let free_serial = simulate_pipeline(&spec.clone().with_serial(true), &cfg);
+    let budget = TimeBudget::new(free_serial.roi_time * 1.15);
+    let serial =
+        simulate_pipeline(&spec.clone().with_serial(true).with_budget(Some(budget)), &cfg);
+    let parallel = simulate_pipeline(&spec.with_budget(Some(budget)), &cfg);
+    assert!(
+        parallel.roi_time < serial.roi_time,
+        "branch-parallel {} !< serial {}",
+        parallel.roi_time,
+        serial.roi_time
+    );
+    assert!(
+        parallel.roi_time <= serial.roi_time * 0.95,
+        "co-execution should be a real win, not jitter"
+    );
+    assert!(serial.deadline.unwrap().met, "serial meets the budget");
+    assert!(parallel.deadline.unwrap().met, "branch-parallel meets the same budget");
+    let groups = |o: &enginecl::sim::PipelineOutcome| -> u64 {
+        o.devices.iter().map(|d| d.groups).sum()
+    };
+    assert_eq!(groups(&serial), groups(&parallel), "work conserved across schedules");
+    // The parallel schedule really overlaps the branch windows.
+    let w = &parallel.stages;
+    assert_eq!(w.len(), 2);
+    assert!(
+        w[0].start_s < w[1].end_s && w[1].start_s < w[0].end_s,
+        "branches co-execute: {w:?}"
+    );
+}
+
+#[test]
+fn full_pool_mask_and_serial_flag_are_bit_identical_for_single_stage() {
+    // The pool refactor must not perturb the iterative mode: an explicit
+    // full-pool mask and the serial flag both reproduce the unmasked
+    // single-stage pipeline bit for bit.
+    let b = Bench::new(BenchId::Ray1);
+    let mut cfg = SimConfig::testbed(&b, adaptive());
+    cfg.gws = Some(b.default_gws / 16);
+    cfg.budget = Some(TimeBudget::new(2.0));
+    let plain = simulate_iterative(&b, &cfg, 3);
+    let mut masked_spec = PipelineSpec::repeat(b.clone(), 3).with_budget(cfg.budget);
+    masked_spec.stages[0] = masked_spec.stages[0].clone().on_devices(DeviceMask::all(3));
+    let masked = simulate_pipeline(&masked_spec, &cfg);
+    let serial = simulate_pipeline(&masked_spec.clone().with_serial(true), &cfg);
+    for other in [&masked, &serial] {
+        assert_eq!(plain.roi_time.to_bits(), other.roi_time.to_bits());
+        assert_eq!(plain.init_time.to_bits(), other.init_time.to_bits());
+        assert_eq!(plain.release_time.to_bits(), other.release_time.to_bits());
+        assert_eq!(plain.energy_j.to_bits(), other.energy_j.to_bits());
+        assert_eq!(plain.n_packages, other.n_packages);
+        assert_eq!(plain.iter_verdicts.len(), other.iter_verdicts.len());
+    }
+}
+
+#[test]
+fn estimate_refinement_recovers_from_skewed_profiles() {
+    // The satellite claim: feeding measured iteration throughput back
+    // into the P_i estimates fixes a badly skewed offline profile.  The
+    // one-shot Static split bakes the 50% pessimistic error into every
+    // iteration; with refinement, iterations after the first re-split
+    // from measured truth.
+    let b = Bench::new(BenchId::Gaussian);
+    let mut cfg = SimConfig::testbed(&b, SchedulerKind::Static);
+    cfg.gws = Some(b.default_gws / 16);
+    cfg.estimate = EstimateScenario::Pessimistic { err: 0.5 };
+    let skewed = simulate_iterative(&b, &cfg, 6);
+    cfg.opts = Optimizations::ALL.with_estimate_refine(true);
+    let refined = simulate_iterative(&b, &cfg, 6);
+    for out in [&skewed, &refined] {
+        let groups: u64 = out.devices.iter().map(|d| d.groups).sum();
+        assert_eq!(groups, 6 * b.groups(cfg.gws.unwrap()), "work conserved");
+    }
+    assert!(
+        refined.roi_time < skewed.roi_time,
+        "refined {} !< skewed {}",
+        refined.roi_time,
+        skewed.roi_time
+    );
+    // With exact estimates the feedback is a no-op up to measurement
+    // noise: it must not meaningfully hurt.
+    cfg.estimate = EstimateScenario::Exact;
+    let exact_refined = simulate_iterative(&b, &cfg, 6);
+    cfg.opts = Optimizations::ALL;
+    let exact = simulate_iterative(&b, &cfg, 6);
+    assert!(
+        exact_refined.roi_time < exact.roi_time * 1.05,
+        "refinement under exact estimates stays within noise: {} vs {}",
+        exact_refined.roi_time,
+        exact.roi_time
+    );
 }
 
 #[test]

@@ -9,10 +9,10 @@ use enginecl::benchsuite::{Bench, BenchId};
 use enginecl::scheduler::{
     AdaptiveParams, HGuided, HGuidedParams, SchedCtx, Scheduler, SchedulerKind,
 };
-use enginecl::sim::{simulate, simulate_pipeline, PipelineSpec, SimConfig};
+use enginecl::sim::{simulate, simulate_pipeline, PipelineSpec, PipelineStage, SimConfig};
 use enginecl::stats::XorShift64;
 use enginecl::types::{
-    BudgetPolicy, EnergyPolicy, EstimateScenario, ExecMode, GroupRange, TimeBudget,
+    BudgetPolicy, DeviceMask, EnergyPolicy, EstimateScenario, ExecMode, GroupRange, TimeBudget,
 };
 
 /// Random scheduler context: 1–6 devices, powers in (0.05, 1], any total.
@@ -311,6 +311,83 @@ fn prop_pipeline_conserves_work_and_verdicts_consistent() {
                 assert!(out.iter_verdicts.is_empty(), "case {case}");
                 assert_eq!(out.energy_per_hit_j(), None, "case {case}");
             }
+        }
+    }
+}
+
+#[test]
+fn prop_branch_parallel_conserves_work_and_never_trails_serial() {
+    // Random stage DAGs on random device masks: the event-driven branch
+    // scheduler must execute exactly the same work as the serial
+    // schedule and never finish *later* — per-stage RNG forks make stage
+    // durations schedule-invariant, so the greedy launch can only move
+    // stages earlier.  (Unconstrained runs: deadline-aware sizing is
+    // clock-relative, so the invariant is exact only without a budget.)
+    for case in 0..40u64 {
+        let mut rng = XorShift64::new(8000 + case);
+        let n_stages = 2 + rng.below(3) as usize;
+        let kind = random_kind(&mut rng, 3);
+        let mut stages = Vec::with_capacity(n_stages);
+        let mut expected_groups = 0u64;
+        let mut benches = Vec::with_capacity(n_stages);
+        for s in 0..n_stages {
+            let id = BenchId::ALL[rng.below(6) as usize];
+            let bench = Bench::new(id);
+            let gws = bench.default_gws >> (rng.below(3) + 4);
+            let iterations = 1 + rng.below(2) as u32;
+            let bits = 1 + rng.below(7); // non-empty subset of {0, 1, 2}
+            let ids: Vec<usize> = (0..3usize).filter(|&i| bits >> i & 1 == 1).collect();
+            let mut stage = PipelineStage::new(bench.clone(), iterations)
+                .with_gws(gws)
+                .on_devices(DeviceMask::from_indices(&ids));
+            for dep in 0..s {
+                if rng.below(3) == 0 {
+                    stage = stage.after(&[dep]);
+                }
+            }
+            expected_groups += iterations as u64 * bench.groups(gws);
+            benches.push(bench);
+            stages.push(stage);
+        }
+        let spec = PipelineSpec {
+            stages,
+            budget: None,
+            policy: BudgetPolicy::CarryOverSlack,
+            energy: EnergyPolicy::RaceToIdle,
+            serial: false,
+        };
+        let mut cfg = SimConfig::testbed(&benches[0], kind);
+        cfg.seed = case + 1;
+        let par = simulate_pipeline(&spec, &cfg);
+        let ser = simulate_pipeline(&spec.clone().with_serial(true), &cfg);
+
+        let groups = |out: &enginecl::sim::PipelineOutcome| -> u64 {
+            out.devices.iter().map(|d| d.groups).sum()
+        };
+        assert_eq!(groups(&par), expected_groups, "case {case}: parallel lost work");
+        assert_eq!(groups(&ser), expected_groups, "case {case}: serial lost work");
+        assert!(
+            par.roi_time <= ser.roi_time + 1e-9,
+            "case {case}: branch-parallel {} trails serial {}",
+            par.roi_time,
+            ser.roi_time
+        );
+        // Per-stage durations are schedule-invariant.
+        assert_eq!(par.iter_times.len(), ser.iter_times.len(), "case {case}");
+        for (i, (p, s)) in par.iter_times.iter().zip(&ser.iter_times).enumerate() {
+            assert!(
+                (p - s).abs() < 1e-9,
+                "case {case}: iteration {i} duration diverged ({p} vs {s})"
+            );
+        }
+        assert_eq!(par.n_packages, ser.n_packages, "case {case}");
+        // Clock coherence on the pool time base, both schedules.
+        for out in [&par, &ser] {
+            for d in &out.devices {
+                assert!(d.finish <= out.roi_time + 1e-9, "case {case}");
+                assert!(d.busy <= d.finish + 1e-9, "case {case}");
+            }
+            assert!(out.roi_time > 0.0 && out.roi_time.is_finite(), "case {case}");
         }
     }
 }
