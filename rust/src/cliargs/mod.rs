@@ -3,7 +3,7 @@
 //! Grammar: positionals, `--flag value` pairs and boolean `--switch`es.
 //! A flag is boolean iff the next token starts with `--` or is absent.
 
-use crate::types::{DeviceClass, DeviceMask};
+use crate::types::{DeviceClass, DeviceMask, MaskPolicy};
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -141,6 +141,20 @@ impl Args {
             })
             .collect()
     }
+
+    /// `--name P` as a [`MaskPolicy`], with a default.  The error names
+    /// the flag and lists the accepted spellings.
+    pub fn mask_policy_flag(&self, name: &str, default: MaskPolicy) -> Result<MaskPolicy> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => MaskPolicy::parse(v).ok_or_else(|| {
+                anyhow!(
+                    "--{name}: unknown mask policy '{v}' \
+                     (fixed|min-energy|min-time|energy-under-deadline)"
+                )
+            }),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -229,6 +243,54 @@ mod tests {
                 "'{bad}' should be rejected"
             );
         }
+    }
+
+    #[test]
+    fn mask_flag_errors_name_the_flag_and_duplicates_are_harmless() {
+        let classes = [DeviceClass::Cpu, DeviceClass::IGpu, DeviceClass::DGpu];
+        // Empty segment between separators and an unknown class name:
+        // both error, and the message names the offending flag so the
+        // user knows which argument to fix.
+        for bad in ["cpu//gpu", "cpu+/gpu", "xpu/gpu", "/gpu"] {
+            let a = parse(&format!("pipeline-sweep --stage-devices {bad}"));
+            let err = a.mask_flag("stage-devices", &classes, "all").unwrap_err();
+            let msg = format!("{err}");
+            assert!(
+                msg.contains("--stage-devices"),
+                "'{bad}': message must name the flag, got '{msg}'"
+            );
+            assert!(msg.contains(bad), "'{bad}': message echoes the input, got '{msg}'");
+        }
+        // Duplicate indices (and index+class overlaps) union away.
+        let a = parse("pipeline-sweep --stage-devices 0,0,cpu/2+gpu");
+        let masks = a.mask_flag("stage-devices", &classes, "all").unwrap();
+        assert_eq!(masks[0], DeviceMask::single(0));
+        assert_eq!(masks[1], DeviceMask::single(2));
+    }
+
+    #[test]
+    fn mask_policy_flag_parses_and_rejects_typos() {
+        use crate::types::MaskPolicy;
+        let d = MaskPolicy::EnergyUnderDeadline;
+        assert_eq!(parse("x").mask_policy_flag("mask-policy", d).unwrap(), d);
+        for (spelling, want) in [
+            ("fixed", MaskPolicy::Fixed),
+            ("min-energy", MaskPolicy::MinEnergy),
+            ("min-time", MaskPolicy::MinTime),
+            ("energy-under-deadline", MaskPolicy::EnergyUnderDeadline),
+            ("EUD", MaskPolicy::EnergyUnderDeadline),
+        ] {
+            let a = parse(&format!("x --mask-policy {spelling}"));
+            assert_eq!(a.mask_policy_flag("mask-policy", d).unwrap(), want);
+        }
+        // A typo errors, and the message names the flag and the options.
+        let err = parse("x --mask-policy energy-under-dedline")
+            .mask_policy_flag("mask-policy", d)
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--mask-policy"), "names the flag: {msg}");
+        assert!(msg.contains("energy-under-deadline"), "lists the options: {msg}");
+        assert!(msg.contains("energy-under-dedline"), "echoes the typo: {msg}");
     }
 
     #[test]

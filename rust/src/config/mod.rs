@@ -7,7 +7,7 @@
 use crate::benchsuite::BenchId;
 use crate::jsonio::Json;
 use crate::scheduler::{AdaptiveParams, HGuidedParams, SchedulerKind};
-use crate::types::{DeviceClass, DeviceSpec, ExecMode, Optimizations};
+use crate::types::{DeviceClass, DeviceSpec, ExecMode, MaskPolicy, Optimizations};
 use anyhow::{anyhow, bail, Context, Result};
 
 /// A complete experiment description.
@@ -22,6 +22,10 @@ pub struct RunConfig {
     /// Pipeline extension: measured-throughput feedback into the next
     /// iteration's scheduler estimates (off = the paper's runtime).
     pub estimate_refine: bool,
+    /// Pipeline extension: per-stage device-mask selection policy
+    /// ("fixed" | "min-energy" | "min-time" | "energy-under-deadline");
+    /// "fixed" = the spec masks verbatim.
+    pub mask_policy: String,
     pub reps: usize,
     pub devices: Option<Vec<DeviceSpec>>,
     pub seed: u64,
@@ -38,6 +42,7 @@ impl RunConfig {
             init_overlap: true,
             buffer_flags: true,
             estimate_refine: false,
+            mask_policy: MaskPolicy::Fixed.label().into(),
             reps: 50,
             devices: None,
             seed: 1,
@@ -80,6 +85,10 @@ impl RunConfig {
             cfg.estimate_refine =
                 b.as_bool().ok_or_else(|| anyhow!("'estimate_refine' must be bool"))?;
         }
+        if let Some(m) = v.get("mask_policy") {
+            cfg.mask_policy =
+                m.as_str().ok_or_else(|| anyhow!("'mask_policy' must be a string"))?.into();
+        }
         if let Some(r) = v.get("reps") {
             cfg.reps =
                 r.as_u64().ok_or_else(|| anyhow!("'reps' must be a positive integer"))? as usize;
@@ -94,6 +103,7 @@ impl RunConfig {
             cfg.devices = Some(parse_devices(d)?);
         }
         cfg.parse_mode()?; // validate eagerly
+        cfg.parse_mask_policy()?;
         Ok(cfg)
     }
 
@@ -116,6 +126,19 @@ impl RunConfig {
         }
     }
 
+    /// The pipeline mask-selection policy this config asks for (feeds
+    /// `PipelineSpec::with_mask_policy` when the config drives a
+    /// pipeline run).
+    pub fn parse_mask_policy(&self) -> Result<MaskPolicy> {
+        MaskPolicy::parse(&self.mask_policy).ok_or_else(|| {
+            anyhow!(
+                "unknown mask_policy '{}' \
+                 (fixed|min-energy|min-time|energy-under-deadline)",
+                self.mask_policy
+            )
+        })
+    }
+
     pub fn optimizations(&self) -> Optimizations {
         Optimizations {
             init_overlap: self.init_overlap,
@@ -130,7 +153,8 @@ impl RunConfig {
         let mut e = crate::engine::Engine::new(bench)
             .with_scheduler(self.scheduler.clone())
             .with_mode(self.parse_mode()?)
-            .with_optimizations(self.optimizations());
+            .with_optimizations(self.optimizations())
+            .with_mask_policy(self.parse_mask_policy()?);
         if let Some(gws) = self.gws {
             e = e.with_gws(gws);
         }
@@ -311,6 +335,13 @@ mod tests {
         assert!(!c.optimizations().estimate_refine, "extension defaults off");
         let refined = Json::parse(r#"{"bench": "gaussian", "estimate_refine": true}"#).unwrap();
         assert!(RunConfig::from_json(&refined).unwrap().optimizations().estimate_refine);
+        assert_eq!(c.parse_mask_policy().unwrap(), MaskPolicy::Fixed, "default fixed");
+        let doc = r#"{"bench": "gaussian", "mask_policy": "energy-under-deadline"}"#;
+        let masked = RunConfig::from_json(&Json::parse(doc).unwrap()).unwrap();
+        assert_eq!(masked.parse_mask_policy().unwrap(), MaskPolicy::EnergyUnderDeadline);
+        // The knob is wired through to the engine, not just validated.
+        let engine = masked.build_engine().unwrap();
+        assert_eq!(engine.mask_policy(), MaskPolicy::EnergyUnderDeadline);
         assert_eq!(c.scheduler.label(), "HGuided opt");
         let devs = c.devices.unwrap();
         assert_eq!(devs.len(), 2);
@@ -364,5 +395,7 @@ mod tests {
         assert!(RunConfig::from_json(&bad_sched).is_err());
         let bad_reps = Json::parse(r#"{"bench": "gaussian", "reps": 1}"#).unwrap();
         assert!(RunConfig::from_json(&bad_reps).is_err(), "reps < 2 rejected");
+        let bad_mask = Json::parse(r#"{"bench": "gaussian", "mask_policy": "fastest"}"#).unwrap();
+        assert!(RunConfig::from_json(&bad_mask).is_err(), "mask policy validated eagerly");
     }
 }

@@ -11,8 +11,8 @@ use crate::scheduler::{HGuidedParams, SchedulerKind};
 use crate::sim::{simulate_pipeline, PipelineSpec, PipelineStage, SimConfig};
 use crate::stats::geomean;
 use crate::types::{
-    BudgetPolicy, DeviceMask, EnergyPolicy, EstimateScenario, ExecMode, Optimizations,
-    TimeBudget,
+    BudgetPolicy, DeviceMask, EnergyPolicy, EstimateScenario, ExecMode, MaskPolicy,
+    Optimizations, TimeBudget,
 };
 
 use super::Engine;
@@ -952,6 +952,23 @@ impl CsvRow for BranchRow {
     }
 }
 
+/// The independent-branch DAG shared by [`branch_compare`] and
+/// [`mask_compare`]: stage `i` runs `benches[i % len]` on `masks[i]` at
+/// 1/8 of its paper size, each branch carrying its own kernel's power
+/// calibration.
+fn branch_stages(benches: &[BenchId], masks: &[DeviceMask], iterations: u32) -> Vec<PipelineStage> {
+    masks
+        .iter()
+        .enumerate()
+        .map(|(i, &m)| {
+            let b = Bench::new(benches[i % benches.len()]);
+            let gws = b.default_gws / 8;
+            let powers = b.true_powers.to_vec();
+            PipelineStage::new(b, iterations).with_gws(gws).with_powers(powers).on_devices(m)
+        })
+        .collect()
+}
+
 /// Compare branch-parallel against serial execution of an independent
 /// multi-branch DAG: stage `i` runs `benches[i % len]` on `masks[i]`
 /// (disjoint masks co-execute).  Budgets are multiples of the
@@ -970,17 +987,7 @@ pub fn branch_compare(
     assert!(reps >= 2, "need at least warm-up + 1");
     assert!(!benches.is_empty(), "need at least one benchmark");
     assert!(masks.len() >= 2, "a branch comparison needs >= 2 stage masks");
-    let stages: Vec<PipelineStage> = masks
-        .iter()
-        .enumerate()
-        .map(|(i, &m)| {
-            let b = Bench::new(benches[i % benches.len()]);
-            let gws = b.default_gws / 8;
-            // Each branch carries its own kernel's power calibration.
-            let powers = b.true_powers.to_vec();
-            PipelineStage::new(b, iterations).with_gws(gws).with_powers(powers).on_devices(m)
-        })
-        .collect();
+    let stages = branch_stages(benches, masks, iterations);
     let template = Bench::new(benches[0]);
     let classes: Vec<_> =
         SimConfig::testbed(&template, scheduler.clone()).devices.iter().map(|d| d.class).collect();
@@ -992,6 +999,7 @@ pub fn branch_compare(
             budget: None,
             policy: BudgetPolicy::CarryOverSlack,
             energy: EnergyPolicy::RaceToIdle,
+            mask_policy: MaskPolicy::Fixed,
             serial,
         }
     };
@@ -1041,6 +1049,178 @@ pub fn branch_compare(
                 mean_slack_s: crate::stats::mean(&slack),
                 mean_pool_utilization: crate::stats::mean(&util),
                 mean_energy_j: crate::stats::mean(&energy),
+            });
+        }
+    }
+    rows
+}
+
+// ------------------------------------------------- mask-policy comparison
+/// One cell of the mask-policy comparison: the independent-branch DAG of
+/// [`branch_compare`] executed with `Fixed` spec masks vs a searching
+/// [`MaskPolicy`], under the same absolute deadline — the J-per-hit and
+/// hit-rate evidence for the energy-aware subset selection.
+#[derive(Debug, Clone)]
+pub struct MaskRow {
+    pub pipeline: String,
+    /// Spec stage masks, `/`-separated (the `--stage-devices` spelling).
+    pub masks: String,
+    /// Mask policy label (`fixed` vs the searching policy).
+    pub policy: String,
+    /// Budget as a multiple of the unconstrained Fixed ROI time.
+    pub budget_mult: f64,
+    pub deadline_s: f64,
+    pub mean_roi_s: f64,
+    /// Fraction of runs whose pipeline-level verdict was met.
+    pub hit_rate: f64,
+    /// Fraction of iterations (across runs) meeting their sub-deadline.
+    pub iter_hit_rate: f64,
+    pub mean_slack_s: f64,
+    pub mean_energy_j: f64,
+    /// Total energy over total iteration hits; infinite when nothing hit.
+    pub j_per_hit: f64,
+    /// Mean number of stages per run whose chosen mask was a strict
+    /// subset of the spec mask (0 for `fixed` by construction).
+    pub shed_stages: f64,
+    /// Chosen stage masks of the last repetition, `/`-separated in
+    /// topological launch order (runs are deterministic per seed).
+    pub chosen: String,
+}
+
+impl CsvRow for MaskRow {
+    fn csv_header() -> &'static str {
+        "pipeline,masks,policy,budget_mult,deadline_s,mean_roi_s,hit_rate,\
+         iter_hit_rate,mean_slack_s,mean_energy_j,j_per_hit,shed_stages,chosen"
+    }
+    fn csv_row(&self) -> String {
+        let j_per_hit = if self.j_per_hit.is_finite() {
+            self.j_per_hit.to_string()
+        } else {
+            String::new()
+        };
+        format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            self.pipeline,
+            self.masks,
+            self.policy,
+            self.budget_mult,
+            self.deadline_s,
+            self.mean_roi_s,
+            self.hit_rate,
+            self.iter_hit_rate,
+            self.mean_slack_s,
+            self.mean_energy_j,
+            j_per_hit,
+            self.shed_stages,
+            self.chosen
+        )
+    }
+}
+
+/// Compare `Fixed` spec masks against a searching [`MaskPolicy`] on the
+/// independent-branch DAG (same stages as [`branch_compare`]), across
+/// budget multiples of the unconstrained **Fixed** branch-parallel ROI
+/// time.  Loose budgets let the searching policy shed devices for fewer
+/// joules per hit; tight ones make it fall back to the spec masks.
+#[allow(clippy::too_many_arguments)]
+pub fn mask_compare(
+    reps: usize,
+    benches: &[BenchId],
+    masks: &[DeviceMask],
+    iterations: u32,
+    scheduler: &SchedulerKind,
+    opts: Optimizations,
+    budget_mults: &[f64],
+    policy: MaskPolicy,
+) -> Vec<MaskRow> {
+    assert!(reps >= 2, "need at least warm-up + 1");
+    assert!(!benches.is_empty(), "need at least one benchmark");
+    assert!(masks.len() >= 2, "a mask comparison needs >= 2 stage masks");
+    let stages = branch_stages(benches, masks, iterations);
+    let template = Bench::new(benches[0]);
+    let classes: Vec<_> =
+        SimConfig::testbed(&template, scheduler.clone()).devices.iter().map(|d| d.class).collect();
+    let mask_label = masks.iter().map(|m| m.label(&classes)).collect::<Vec<_>>().join("/");
+    let mk_spec = |mp: MaskPolicy| PipelineSpec {
+        stages: stages.clone(),
+        budget: None,
+        policy: BudgetPolicy::CarryOverSlack,
+        energy: EnergyPolicy::RaceToIdle,
+        mask_policy: mp,
+        serial: false,
+    };
+    // Unconstrained Fixed reference for the budget ladder (the acceptance
+    // scenario's "full-mask makespan").
+    let ref_reps = reps.clamp(2, 4);
+    let mut t_ref = 0.0;
+    for rep in 1..=ref_reps as u64 {
+        let mut cfg = SimConfig::testbed(&template, scheduler.clone());
+        cfg.opts = opts;
+        cfg.seed = rep;
+        t_ref += simulate_pipeline(&mk_spec(MaskPolicy::Fixed), &cfg).roi_time;
+    }
+    t_ref /= ref_reps as f64;
+
+    let policies: Vec<MaskPolicy> = if policy == MaskPolicy::Fixed {
+        vec![MaskPolicy::Fixed]
+    } else {
+        vec![MaskPolicy::Fixed, policy]
+    };
+    let total_iters = iterations as usize * masks.len();
+    let mut rows = Vec::new();
+    for &mult in budget_mults {
+        for &pol in &policies {
+            let spec = mk_spec(pol).with_deadline(mult * t_ref);
+            let mut roi = Vec::new();
+            let mut slack = Vec::new();
+            let mut energy = Vec::new();
+            let mut hits = 0usize;
+            let mut iter_hits = 0usize;
+            let mut shed = Vec::new();
+            let mut chosen = String::new();
+            for rep in 0..reps {
+                let mut cfg = SimConfig::testbed(&template, scheduler.clone());
+                cfg.opts = opts;
+                cfg.seed = rep as u64 + 1;
+                let out = simulate_pipeline(&spec, &cfg);
+                if rep == 0 {
+                    continue; // warm-up
+                }
+                let v = out.deadline.expect("budgeted cell");
+                hits += v.met as usize;
+                slack.push(v.slack_s);
+                roi.push(out.roi_time);
+                energy.push(out.energy_j);
+                iter_hits += out.iter_hits();
+                shed.push(out.stages.iter().filter(|s| s.shed()).count() as f64);
+                chosen = out
+                    .stages
+                    .iter()
+                    .map(|s| s.mask.label(&classes))
+                    .collect::<Vec<_>>()
+                    .join("/");
+            }
+            let n = (reps - 1) as f64;
+            let total_energy: f64 = energy.iter().sum();
+            let j_per_hit = if iter_hits > 0 {
+                total_energy / iter_hits as f64
+            } else {
+                f64::INFINITY
+            };
+            rows.push(MaskRow {
+                pipeline: spec.label(),
+                masks: mask_label.clone(),
+                policy: pol.label().into(),
+                budget_mult: mult,
+                deadline_s: mult * t_ref,
+                mean_roi_s: crate::stats::mean(&roi),
+                hit_rate: hits as f64 / n,
+                iter_hit_rate: iter_hits as f64 / (n * total_iters as f64),
+                mean_slack_s: crate::stats::mean(&slack),
+                mean_energy_j: crate::stats::mean(&energy),
+                j_per_hit,
+                shed_stages: crate::stats::mean(&shed),
+                chosen,
             });
         }
     }
@@ -1197,6 +1377,56 @@ mod tests {
             "co-execution lifts pool utilization"
         );
         assert!(par.csv_row().starts_with("Gaussian+Mandelbrot,cpu+igpu/gpu,"));
+    }
+
+    #[test]
+    fn mask_compare_emits_fixed_and_searching_rows() {
+        let rows = mask_compare(
+            3,
+            &[BenchId::Gaussian, BenchId::Mandelbrot],
+            &[DeviceMask::from_indices(&[0, 1]), DeviceMask::single(2)],
+            2,
+            &SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() },
+            Optimizations::ALL,
+            &[0.9, 1.6],
+            MaskPolicy::EnergyUnderDeadline,
+        );
+        assert_eq!(rows.len(), 4, "2 budgets x {{fixed, energy-under-deadline}}");
+        for r in &rows {
+            assert_eq!(r.masks, "cpu+igpu/gpu");
+            assert!(r.deadline_s > 0.0 && r.mean_roi_s > 0.0 && r.mean_energy_j > 0.0);
+            assert!((0.0..=1.0).contains(&r.hit_rate));
+            assert!((0.0..=1.0).contains(&r.iter_hit_rate));
+            assert!(!r.chosen.is_empty());
+            if r.policy == "fixed" {
+                assert_eq!(r.shed_stages, 0.0, "fixed never sheds");
+            }
+        }
+        // Same budget: the searching policy never spends more energy.
+        for f in rows.iter().filter(|r| r.policy == "fixed") {
+            let s = rows
+                .iter()
+                .find(|r| r.policy != "fixed" && r.budget_mult == f.budget_mult)
+                .expect("paired searching row");
+            assert!(
+                s.mean_energy_j <= f.mean_energy_j + 1e-9,
+                "x{}: {} J !<= fixed {} J",
+                f.budget_mult,
+                s.mean_energy_j,
+                f.mean_energy_j
+            );
+            assert!(s.hit_rate >= f.hit_rate - 1e-12, "verdicts no worse");
+        }
+        // Under the loose budget the searching policy sheds a device on
+        // the CPU+iGPU branch and wins strictly on energy.
+        let at = |policy: &str| {
+            rows.iter().find(|r| r.policy == policy && r.budget_mult == 1.6).unwrap()
+        };
+        let loose = at("energy-under-deadline");
+        let loose_fixed = at("fixed");
+        assert!(loose.shed_stages > 0.0, "loose budget sheds: {loose:?}");
+        assert!(loose.mean_energy_j < loose_fixed.mean_energy_j);
+        assert!(loose.csv_row().starts_with("Gaussian+Mandelbrot,cpu+igpu/gpu,"));
     }
 
     #[test]

@@ -29,7 +29,9 @@ use crate::metrics;
 use crate::scheduler::SchedulerKind;
 use crate::sim::{simulate, SimConfig, SimOutcome};
 use crate::stats::Summary;
-use crate::types::{DeviceSpec, EstimateScenario, ExecMode, Optimizations, TimeBudget};
+use crate::types::{
+    DeviceSpec, EstimateScenario, ExecMode, MaskPolicy, Optimizations, TimeBudget,
+};
 
 /// Tier-1 entry point: configure and launch co-executions of one
 /// benchmark program.
@@ -44,6 +46,7 @@ pub struct Engine {
     gws: Option<u64>,
     budget: Option<TimeBudget>,
     estimate: EstimateScenario,
+    mask_policy: MaskPolicy,
 }
 
 /// One run's report: timing + the paper's metrics inputs.
@@ -91,6 +94,7 @@ impl Engine {
             gws: None,
             budget: None,
             estimate: EstimateScenario::Exact,
+            mask_policy: MaskPolicy::Fixed,
         }
     }
 
@@ -150,6 +154,19 @@ impl Engine {
         self
     }
 
+    /// Engine-level pipeline mask-selection policy (e.g. from a JSON
+    /// [`crate::config::RunConfig`]): applied by [`Engine::run_pipeline`]
+    /// to specs that don't choose a policy themselves.
+    pub fn with_mask_policy(mut self, mask_policy: MaskPolicy) -> Self {
+        self.mask_policy = mask_policy;
+        self
+    }
+
+    /// The configured engine-level mask policy.
+    pub fn mask_policy(&self) -> MaskPolicy {
+        self.mask_policy
+    }
+
     pub fn bench(&self) -> &Bench {
         &self.bench
     }
@@ -182,13 +199,22 @@ impl Engine {
 
     /// One pipeline run ([`crate::sim::simulate_pipeline`]) with this
     /// engine's configuration as the run template; `spec` supplies the
-    /// stages, the global budget, and the budget/energy policies.
+    /// stages, the global budget, and the budget/energy policies.  The
+    /// engine's mask policy ([`Engine::with_mask_policy`], e.g. from a
+    /// JSON `RunConfig`) applies when the spec leaves its own policy at
+    /// the `Fixed` default; an explicit spec policy wins.
     pub fn run_pipeline(
         &self,
         spec: &crate::sim::PipelineSpec,
         seed: u64,
     ) -> crate::sim::PipelineOutcome {
-        crate::sim::simulate_pipeline(spec, &self.sim_config(seed))
+        let cfg = self.sim_config(seed);
+        if spec.mask_policy == MaskPolicy::Fixed && self.mask_policy != MaskPolicy::Fixed {
+            let spec = spec.clone().with_mask_policy(self.mask_policy);
+            crate::sim::simulate_pipeline(&spec, &cfg)
+        } else {
+            crate::sim::simulate_pipeline(spec, &cfg)
+        }
     }
 
     /// Energy-to-solution (J) of one run — the §VII energy-efficiency
@@ -352,6 +378,40 @@ mod tests {
         let v = out.deadline.expect("engine budget flows into the pipeline");
         assert!(v.met);
         assert_eq!(out.iter_verdicts.len(), 3);
+    }
+
+    #[test]
+    fn engine_level_mask_policy_drives_pipeline_runs() {
+        use crate::sim::{PipelineSpec, PipelineStage};
+        use crate::types::{DeviceMask, TimeBudget};
+        let mb = Bench::new(crate::benchsuite::BenchId::Mandelbrot);
+        let ga = Bench::new(crate::benchsuite::BenchId::Gaussian);
+        // The two-branch shedding scenario: long GPU branch first, a
+        // CPU+iGPU branch the searching policy sheds to the iGPU.
+        let mut spec = PipelineSpec::repeat(mb.clone(), 2);
+        spec.stages[0] = PipelineStage::new(mb.clone(), 2)
+            .with_gws(mb.default_gws / 4)
+            .with_powers(mb.true_powers.to_vec())
+            .on_devices(DeviceMask::single(2));
+        let spec = spec.push_stage(
+            PipelineStage::new(ga.clone(), 2)
+                .with_gws(ga.default_gws / 16)
+                .with_powers(ga.true_powers.to_vec())
+                .on_devices(DeviceMask::from_indices(&[0, 1])),
+        );
+        let engine = Engine::new(mb).with_budget(TimeBudget::new(3.0));
+        assert_eq!(engine.mask_policy(), MaskPolicy::Fixed, "default fixed");
+        let fixed = engine.run_pipeline(&spec, 1);
+        assert!(fixed.stages.iter().all(|s| !s.shed()), "fixed engine never sheds");
+        let eud_engine = engine.clone().with_mask_policy(MaskPolicy::EnergyUnderDeadline);
+        let eud = eud_engine.run_pipeline(&spec, 1);
+        assert!(eud.stages.iter().any(|s| s.shed()), "engine-level policy applies");
+        assert!(eud.energy_j < fixed.energy_j);
+        // An explicit spec-level policy is equivalent (and wins over the
+        // engine default).
+        let spec_eud = spec.clone().with_mask_policy(MaskPolicy::EnergyUnderDeadline);
+        let explicit = engine.run_pipeline(&spec_eud, 1);
+        assert_eq!(explicit.energy_j.to_bits(), eud.energy_j.to_bits());
     }
 
     #[test]

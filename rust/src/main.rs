@@ -22,7 +22,7 @@ use enginecl::runtime::ArtifactDir;
 use enginecl::scheduler::{AdaptiveParams, SchedulerKind};
 use enginecl::sim::coexec::testbed_devices;
 use enginecl::types::{
-    BudgetPolicy, DeviceClass, EnergyPolicy, EstimateScenario, Optimizations,
+    BudgetPolicy, DeviceClass, EnergyPolicy, EstimateScenario, MaskPolicy, Optimizations,
 };
 use std::path::PathBuf;
 
@@ -49,15 +49,21 @@ USAGE:
                   [--policies even,carry,greedy] [--energy race,stretch]
                   [--sched S] [--err F] [--budgets M1,M2,..] [--refine]
                   [--stage-devices M1/M2] [--branch-csv PATH]
+                  [--mask-policy P] [--mask-csv PATH]
                   [--csv PATH] [--iter-csv PATH] [--json PATH]
                   # global-deadline pipelines: per-iteration sub-budgets,
-                  # plus a branch-parallel vs serial DAG comparison on
-                  # the --stage-devices masks
+                  # plus a branch-parallel vs serial DAG comparison and a
+                  # fixed-vs-searching mask-policy comparison on the
+                  # --stage-devices masks
 
 benches:  gaussian binomial nbody ray ray2 mandelbrot
 scheds:   static static-rev dynamic:N hguided hguided-opt adaptive
 policies: even(-split) carry(-over-slack) greedy(-frontload)
 energy:   race(-to-idle) stretch(-to-deadline)
+mask-policy: fixed | min-energy | min-time | energy-under-deadline
+          (per-stage device-subset selection; 'fixed' takes the spec
+          masks verbatim, the others shed energy-inefficient devices
+          when the remaining subset still serves the sub-deadlines)
 masks:    per-stage device masks, '/'-separated; one mask is 'all', class
           names (cpu, igpu, gpu) or pool indices joined by '+' or ','
           (e.g. cpu+igpu/gpu runs branch 1 on CPU+iGPU, branch 2 on GPU)
@@ -575,6 +581,7 @@ fn pipeline_sweep(args: Args) -> Result<()> {
     if masks.len() < 2 {
         bail!("--stage-devices needs >= 2 '/'-separated masks (one per DAG branch)");
     }
+    let mask_policy = args.mask_policy_flag("mask-policy", MaskPolicy::EnergyUnderDeadline)?;
     let estimates = [EstimateScenario::Exact, EstimateScenario::Pessimistic { err }];
     println!(
         "PIPELINE SWEEP — {iters}-iteration pipelines, global deadline split by \
@@ -647,6 +654,50 @@ fn pipeline_sweep(args: Args) -> Result<()> {
         let p = PathBuf::from(p);
         write_csv(&p, &branch_rows)?;
         println!("wrote {}", p.display());
+    }
+    // Energy-aware mask selection headline: the same DAG with fixed spec
+    // masks vs the searching policy, J-per-hit and hit-rate side by side.
+    // `--mask-policy fixed` would compare fixed against itself, so the
+    // extra simulations are skipped entirely.
+    if mask_policy == MaskPolicy::Fixed {
+        println!("-- mask policy: fixed (searching disabled; comparison skipped) --");
+    } else {
+        let mask_rows = experiments::mask_compare(
+            reps,
+            &benches,
+            &masks,
+            iters,
+            &sched,
+            opts,
+            &mults,
+            mask_policy,
+        );
+        println!("-- mask policy: fixed vs {} --", mask_policy.label());
+        println!(
+            "{:<24}{:>22}{:>7}{:>10}{:>6}{:>9}{:>11}{:>11}{:>6}  {}",
+            "pipeline", "policy", "mult", "roi(s)", "hit", "iterhit", "energy(J)", "J/hit",
+            "shed", "chosen"
+        );
+        for r in &mask_rows {
+            println!(
+                "{:<24}{:>22}{:>7.2}{:>10.4}{:>6.2}{:>9.2}{:>11.1}{:>11.1}{:>6.1}  {}",
+                r.pipeline,
+                r.policy,
+                r.budget_mult,
+                r.mean_roi_s,
+                r.hit_rate,
+                r.iter_hit_rate,
+                r.mean_energy_j,
+                r.j_per_hit,
+                r.shed_stages,
+                r.chosen
+            );
+        }
+        if let Some(p) = args.flag("mask-csv") {
+            let p = PathBuf::from(p);
+            write_csv(&p, &mask_rows)?;
+            println!("wrote {}", p.display());
+        }
     }
     if let Some(p) = args.csv()? {
         write_csv(&p, &rows)?;

@@ -131,18 +131,24 @@ pub fn iter_verdict_json(v: &IterVerdict) -> Json {
 }
 
 /// jsonio projection of one stage's execution window (per-branch trace):
-/// the masked pool ids, the ROI-clock window, and the inter-stage
-/// transfer paid at its start.
+/// the chosen and spec pool ids (the mask policy's decision), the
+/// ROI-clock window, the inter-stage transfer paid at its start, and the
+/// selector's predicted-vs-actual energy accounting.
 pub fn stage_trace_json(s: &StageTrace) -> Json {
+    let ids = |m: crate::types::DeviceMask| {
+        Json::Arr(m.indices().into_iter().map(|i| Json::Num(i as f64)).collect())
+    };
     Json::obj(vec![
         ("stage", Json::Num(s.stage as f64)),
-        (
-            "devices",
-            Json::Arr(s.mask.indices().into_iter().map(|i| Json::Num(i as f64)).collect()),
-        ),
+        ("devices", ids(s.mask)),
+        ("spec_devices", ids(s.spec_mask)),
+        ("shed", Json::Bool(s.shed())),
         ("start_s", Json::Num(s.start_s)),
         ("end_s", Json::Num(s.end_s)),
         ("transfer_in_s", Json::Num(s.transfer_in_s)),
+        ("pred_iter_s", Json::Num(s.pred_iter_s)),
+        ("pred_energy_j", Json::Num(s.pred_energy_j)),
+        ("marginal_energy_j", Json::Num(s.marginal_energy_j)),
     ])
 }
 
@@ -290,6 +296,12 @@ mod tests {
         assert_eq!(stages.len(), 1, "one window per stage");
         assert_eq!(stages[0].get("devices").unwrap().as_arr().unwrap().len(), 3);
         assert!(stages[0].get("end_s").unwrap().as_f64().unwrap() > 0.0);
+        // Mask-selection projection: Fixed runs choose the spec mask.
+        assert_eq!(stages[0].get("shed").unwrap().as_bool(), Some(false));
+        assert_eq!(stages[0].get("spec_devices"), stages[0].get("devices"));
+        assert!(stages[0].get("pred_iter_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(stages[0].get("pred_energy_j").unwrap().as_f64().unwrap() > 0.0);
+        assert!(stages[0].get("marginal_energy_j").unwrap().as_f64().unwrap() > 0.0);
         // Unconstrained pipelines project null metrics, not garbage.
         let free = simulate_pipeline(&PipelineSpec::repeat(b, 2), &cfg);
         let j = Json::parse(&pipeline_json(&free).to_string()).unwrap();

@@ -223,24 +223,40 @@ impl EventList {
 /// device powers under co-execution), skewed by the configured estimation
 /// scenario — the *scheduler's view*; true compute times are unaffected.
 pub(crate) fn effective_powers(cfg: &SimConfig) -> Vec<f64> {
-    let n = cfg.devices.len();
-    let fastest = cfg
-        .devices
+    let powers: Vec<f64> = cfg.devices.iter().map(|d| d.power).collect();
+    let classes: Vec<DeviceClass> = cfg.devices.iter().map(|d| d.class).collect();
+    scheduler_view_powers(&powers, &classes, &cfg.driver, cfg.estimate)
+}
+
+/// The shared per-device estimate formula behind [`effective_powers`] and
+/// the mask-policy predictor: co-execution retention applies only when
+/// more than one device is active, and the estimate scenario skews every
+/// device except the fastest (the normalization reference).  Keeping one
+/// implementation guarantees the selector predicts with exactly the
+/// `P_i` view the scheduler will be armed with.
+pub(crate) fn scheduler_view_powers(
+    powers: &[f64],
+    classes: &[DeviceClass],
+    driver: &DriverProfile,
+    estimate: EstimateScenario,
+) -> Vec<f64> {
+    let n = powers.len();
+    let fastest = powers
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.power.total_cmp(&b.1.power))
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap_or(0);
-    cfg.devices
+    powers
         .iter()
         .enumerate()
-        .map(|(i, d)| {
+        .map(|(i, &p)| {
             let r = if n > 1 {
-                cfg.driver.coexec_retention[cldriver::class_idx(d.class)]
+                driver.coexec_retention[cldriver::class_idx(classes[i])]
             } else {
                 1.0
             };
-            cfg.estimate.skew(d.power * r, i == fastest)
+            estimate.skew(p * r, i == fastest)
         })
         .collect()
 }

@@ -40,6 +40,25 @@
 //! ([`crate::cldriver::kernel_fixed_costs`]).  Single-kernel pipelines
 //! draw the same jitter values as before and stay bit-identical.
 //!
+//! **Mask selection** ([`MaskPolicy`]).  A stage's spec mask is an upper
+//! bound, not necessarily the best choice: under loose budgets, racing
+//! every device wastes energy for no hit-rate gain.  Before each stage
+//! launches, the configured policy searches the non-empty subsets of the
+//! spec mask (exhaustive for pools of ≤ 6 devices, spec mask first),
+//! predicting per subset a start time (its own devices' free instants +
+//! its own edge-transfer price), a balanced-compute iteration time from
+//! the scheduler's estimated `P_i` path, per-iteration sub-deadline hits
+//! under the run's [`BudgetPolicy`], and a marginal energy
+//! `Σ (active_w − idle_w) · duration` — plus a platform-floor charge for
+//! any predicted extension beyond the committed schedule horizon (shed
+//! devices only pay off when the stretch hides behind concurrent work or
+//! the stage's own spec window).  `Fixed` skips the search and stays
+//! bit-identical to the pre-selection engine; selections that settle on
+//! the spec mask reuse the spec plan verbatim, so they are bit-identical
+//! too.  The selection is launch-time: buffer residency pins the chosen
+//! mask for the stage's iterations (`estimate_refine` sharpens the
+//! scheduler *within* the chosen mask, not the choice itself).
+//!
 //! Simplifications (documented modelling scope): cross-branch memory
 //! contention is not modelled — co-execution retention is scoped to each
 //! stage's own device view — and each branch serializes its grants on its
@@ -52,11 +71,11 @@
 //! (slack to the critical path) is a named ROADMAP follow-up.
 
 use crate::benchsuite::{Bench, BenchId};
-use crate::cldriver::TransferModel;
+use crate::cldriver::{self, TransferModel};
 use crate::stats::XorShift64;
 use crate::types::{
     BudgetPolicy, DeadlineVerdict, DeviceClass, DeviceMask, DevicePool, DeviceView,
-    EnergyPolicy, ExecMode, TimeBudget,
+    EnergyPolicy, ExecMode, MaskPolicy, TimeBudget,
 };
 
 use super::coexec::{self, DeviceTrace, IterPhase, PackageTrace, RoiPass, SimConfig};
@@ -127,6 +146,10 @@ pub struct PipelineSpec {
     pub policy: BudgetPolicy,
     /// Race-to-idle vs stretch-to-deadline (modulates Adaptive pessimism).
     pub energy: EnergyPolicy,
+    /// How each stage's device mask is chosen: `Fixed` takes the spec
+    /// mask verbatim; the searching policies pick a subset of it per
+    /// stage against the estimate path and the power model.
+    pub mask_policy: MaskPolicy,
     /// Force the legacy serial schedule (one global clock, stages strictly
     /// in topological order) instead of the event-driven branch scheduler
     /// — the baseline of the branch-parallel comparison.
@@ -142,6 +165,7 @@ impl PipelineSpec {
             budget: None,
             policy: BudgetPolicy::CarryOverSlack,
             energy: EnergyPolicy::RaceToIdle,
+            mask_policy: MaskPolicy::Fixed,
             serial: false,
         }
     }
@@ -166,6 +190,7 @@ impl PipelineSpec {
             budget: None,
             policy: BudgetPolicy::CarryOverSlack,
             energy: EnergyPolicy::RaceToIdle,
+            mask_policy: MaskPolicy::Fixed,
             serial: false,
         }
     }
@@ -192,6 +217,12 @@ impl PipelineSpec {
 
     pub fn with_energy(mut self, energy: EnergyPolicy) -> Self {
         self.energy = energy;
+        self
+    }
+
+    /// Configure the per-stage device-mask selection policy.
+    pub fn with_mask_policy(mut self, mask_policy: MaskPolicy) -> Self {
+        self.mask_policy = mask_policy;
         self
     }
 
@@ -238,8 +269,11 @@ pub struct IterVerdict {
 pub struct StageTrace {
     /// Stage index in [`PipelineSpec::stages`] declaration order.
     pub stage: usize,
-    /// Pool subset the stage ran on.
+    /// Pool subset the stage ran on (the [`MaskPolicy`]'s choice; equal
+    /// to `spec_mask` under `Fixed`).
     pub mask: DeviceMask,
+    /// Pool subset the spec asked for (the selection search space).
+    pub spec_mask: DeviceMask,
     /// Absolute start of the stage's first iteration (its inter-stage
     /// input transfer occupies `[start_s - transfer_in_s, start_s)`).
     pub start_s: f64,
@@ -248,6 +282,23 @@ pub struct StageTrace {
     /// Inter-stage gather+scatter time priced at stage start; 0 when
     /// every producer shares this stage's mask.
     pub transfer_in_s: f64,
+    /// The selector's predicted per-iteration duration on the chosen
+    /// mask (balanced-compute estimate from the scheduler's `P_i` path).
+    pub pred_iter_s: f64,
+    /// The selector's predicted marginal energy of the chosen mask
+    /// (`Σ (active_w − idle_w) · duration` + any extension charge).
+    pub pred_energy_j: f64,
+    /// Measured marginal energy of the stage: each chosen device's busy
+    /// delta priced at `active_w − idle_w` (the prediction's actual).
+    pub marginal_energy_j: f64,
+}
+
+impl StageTrace {
+    /// True when the selection shed devices: the chosen mask is a strict
+    /// subset of the spec mask.
+    pub fn shed(&self) -> bool {
+        self.mask != self.spec_mask
+    }
 }
 
 /// Result of one pipeline run ([`simulate_pipeline`]); also the outcome
@@ -399,6 +450,252 @@ fn edge_transfer_cost(
     gather + scatter
 }
 
+/// Mask-policy search breadth cap: spec masks wider than this keep the
+/// spec mask (ROADMAP follow-up: prune the subset search with a monotone
+/// energy bound for pools of more than 6 devices).
+const MASK_SEARCH_LIMIT: usize = 6;
+
+/// Predicted durations of non-spec candidates are inflated by this guard
+/// before the deadline and extension checks: the predictor models
+/// balanced compute only (no grant overhead, per-package transfers or
+/// jitter), so a subset must win by a clear margin before the engine
+/// departs from the spec mask.
+const MASK_TIME_GUARD: f64 = 1.05;
+
+/// A non-spec candidate must beat the spec mask's predicted energy by
+/// this factor (predicted savings of at least 20 %), so prediction noise
+/// cannot flip a marginal shed into a real energy loss.
+const MASK_ENERGY_MARGIN: f64 = 0.8;
+
+/// Everything the per-stage mask search reads: the launch-time schedule
+/// state (device free instants, dependency readiness, the sub-deadline
+/// chain) plus the stage's calibration and edge volumes.
+struct SelectCtx<'a> {
+    cfg: &'a SimConfig,
+    classes: &'a [DeviceClass],
+    transfers: &'a TransferModel,
+    /// Pool-indexed stage power calibration (spec override or pool spec).
+    pool_powers: Vec<f64>,
+    bench: &'a Bench,
+    gws: u64,
+    iterations: u32,
+    /// Dependency edges: (producer's *chosen* mask, output bytes).
+    edges: Vec<(DeviceMask, f64)>,
+    dep_ready: f64,
+    dev_free: &'a [f64],
+    serial: bool,
+    serial_clock: f64,
+    /// No later stage depends on this one: extensions may hide behind
+    /// the committed schedule horizon instead of the spec window only.
+    leaf: bool,
+    roi_deadline: Option<f64>,
+    policy: BudgetPolicy,
+    total_iters: u32,
+    global_iter: u32,
+    prev_sub: f64,
+}
+
+/// One candidate subset's prediction.
+#[derive(Debug, Clone, Copy)]
+struct StagePred {
+    start_s: f64,
+    /// Balanced-compute per-iteration time (unguarded).
+    iter_s: f64,
+    /// Predicted stage end (guarded for non-spec candidates).
+    end_s: f64,
+    /// Marginal draw of the subset while busy, `Σ (active_w − idle_w)`.
+    marg_w: f64,
+    /// Predicted per-iteration sub-deadline hits (0 when unconstrained).
+    hits: u32,
+    /// Predicted stage end fits inside the global ROI deadline.
+    global_ok: bool,
+}
+
+/// The selection result threaded into [`StageTrace`].
+struct MaskChoice {
+    mask: DeviceMask,
+    pred_iter_s: f64,
+    pred_energy_j: f64,
+}
+
+impl SelectCtx<'_> {
+    /// Predict one candidate subset: start from its own devices' free
+    /// instants and its own edge-transfer price, balanced-compute
+    /// iteration time from the scheduler's estimated `P_i` path
+    /// (mirroring [`coexec::effective_powers`] and the `run_roi`
+    /// throughput hint on the candidate view), and the sub-deadline
+    /// chain the run's [`BudgetPolicy`] would arm it with.
+    fn predict(&self, mask: DeviceMask, guard: bool) -> StagePred {
+        let ids = mask.indices();
+        let resource = if self.serial {
+            self.serial_clock
+        } else {
+            ids.iter().map(|&i| self.dev_free[i]).fold(0.0, f64::max)
+        };
+        let transfer_in: f64 = self
+            .edges
+            .iter()
+            .map(|&(prod, bytes)| {
+                edge_transfer_cost(self.transfers, self.classes, prod, mask, bytes)
+            })
+            .sum();
+        let start = self.dep_ready.max(resource) + transfer_in;
+        let view_powers: Vec<f64> = ids.iter().map(|&i| self.pool_powers[i]).collect();
+        let view_classes: Vec<DeviceClass> = ids.iter().map(|&i| self.classes[i]).collect();
+        let est = coexec::scheduler_view_powers(
+            &view_powers,
+            &view_classes,
+            &self.cfg.driver,
+            self.cfg.estimate,
+        );
+        let thr: f64 = est
+            .iter()
+            .map(|p| p * self.bench.gpu_units_per_sec / self.bench.props.lws as f64)
+            .sum();
+        let iter_s = self.bench.groups(self.gws) as f64 / thr;
+        let per = iter_s * if guard { MASK_TIME_GUARD } else { 1.0 };
+        let end = start + per * self.iterations as f64;
+        let marg_w: f64 = ids
+            .iter()
+            .map(|&i| {
+                let c = cldriver::class_idx(self.classes[i]);
+                self.cfg.power.active_w[c] - self.cfg.power.idle_w[c]
+            })
+            .sum();
+        let (mut hits, mut global_ok) = (0u32, true);
+        if let Some(d) = self.roi_deadline {
+            let mut clock = start;
+            let mut prev = self.prev_sub;
+            for j in 0..self.iterations {
+                let gi = self.global_iter + j;
+                let sub = self.policy.sub_deadline(d, self.total_iters, gi, clock, prev);
+                clock += per;
+                if clock <= sub {
+                    hits += 1;
+                }
+                prev = sub;
+            }
+            global_ok = end <= d;
+        }
+        StagePred { start_s: start, iter_s, end_s: end, marg_w, hits, global_ok }
+    }
+
+    /// Committed schedule horizon: the latest instant any pool device is
+    /// already known to be busy until.  The pipeline makespan is at
+    /// least this, so stage extensions hiding under it are free.
+    fn committed_horizon(&self) -> f64 {
+        if self.serial {
+            self.serial_clock
+        } else {
+            self.dev_free.iter().cloned().fold(0.0, f64::max)
+        }
+    }
+
+    /// Platform floor draw charged for predicted extensions beyond the
+    /// horizon: host plus every pool device's idle watts.
+    fn floor_w(&self) -> f64 {
+        let idle: f64 =
+            self.classes.iter().map(|&c| self.cfg.power.idle_w[cldriver::class_idx(c)]).sum();
+        self.cfg.power.host_w + idle
+    }
+
+    /// Predicted marginal energy of one candidate: busy time at marginal
+    /// draw, plus any extension beyond `horizon` at the platform floor.
+    fn energy(&self, pred: &StagePred, horizon: f64) -> f64 {
+        pred.iter_s * self.iterations as f64 * pred.marg_w
+            + (pred.end_s - horizon).max(0.0) * self.floor_w()
+    }
+}
+
+/// Choose the stage's device mask under `policy` (see [`MaskPolicy`]).
+/// The spec mask is always a candidate and wins all ties; searching
+/// policies deviate only on a clear predicted margin, so a selection
+/// that settles on the spec mask leaves the run bit-identical to
+/// `Fixed`.
+fn select_stage_mask(policy: MaskPolicy, spec_mask: DeviceMask, sc: &SelectCtx) -> MaskChoice {
+    let spec_pred = sc.predict(spec_mask, false);
+    let horizon = if sc.leaf {
+        sc.committed_horizon().max(spec_pred.end_s)
+    } else {
+        spec_pred.end_s
+    };
+    let spec_energy = sc.energy(&spec_pred, horizon);
+    let spec_choice = MaskChoice {
+        mask: spec_mask,
+        pred_iter_s: spec_pred.iter_s,
+        pred_energy_j: spec_energy,
+    };
+    if matches!(policy, MaskPolicy::Fixed)
+        || spec_mask.count() == 1
+        || spec_mask.count() > MASK_SEARCH_LIMIT
+    {
+        return spec_choice;
+    }
+    let mut best = spec_choice;
+    match policy {
+        MaskPolicy::Fixed => unreachable!("handled above"),
+        MaskPolicy::MinTime => {
+            let mut best_end = spec_pred.end_s;
+            for cand in spec_mask.subsets().into_iter().skip(1) {
+                let p = sc.predict(cand, true);
+                if p.end_s < best_end {
+                    best_end = p.end_s;
+                    best = MaskChoice {
+                        mask: cand,
+                        pred_iter_s: p.iter_s,
+                        pred_energy_j: sc.energy(&p, horizon),
+                    };
+                }
+            }
+        }
+        MaskPolicy::MinEnergy | MaskPolicy::EnergyUnderDeadline => {
+            let deadline_gated = matches!(policy, MaskPolicy::EnergyUnderDeadline);
+            let mut best_energy = MASK_ENERGY_MARGIN * spec_energy;
+            for cand in spec_mask.subsets().into_iter().skip(1) {
+                let p = sc.predict(cand, true);
+                if deadline_gated
+                    && (p.hits < spec_pred.hits || (!p.global_ok && spec_pred.global_ok))
+                {
+                    // Predicted to serve the sub-deadlines worse than the
+                    // full spec mask: fall back rather than shed.
+                    continue;
+                }
+                let e = sc.energy(&p, horizon);
+                if e < best_energy {
+                    best_energy = e;
+                    best = MaskChoice { mask: cand, pred_iter_s: p.iter_s, pred_energy_j: e };
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Cut one stage's device view and run template out of the pool for a
+/// mask (spec or chosen): per-stage power calibration applied over the
+/// view, scheduler modulated by the energy policy.
+fn stage_view_cfg(
+    cfg: &SimConfig,
+    pool: &DevicePool,
+    stage: &PipelineStage,
+    mask: DeviceMask,
+    energy: EnergyPolicy,
+) -> (DeviceView, SimConfig) {
+    let mut view = pool.view(mask);
+    if let Some(powers) = &stage.powers {
+        assert_eq!(powers.len(), pool.len(), "stage powers must cover the pool");
+        for (slot, &pid) in view.pool_ids.iter().enumerate() {
+            view.devices[slot].power = powers[pid];
+        }
+    }
+    let mut sc = cfg.clone();
+    sc.devices = view.devices.clone();
+    // Per-device (m, k) parameters are remapped to the sub-pool by
+    // `SchedulerKind::build` via the SchedCtx's pool ids.
+    sc.scheduler = cfg.scheduler.for_energy_policy(energy);
+    (view, sc)
+}
+
 /// Measured-throughput feedback (`Optimizations::estimate_refine`): the
 /// implied relative power of each view device from the last iteration's
 /// groups/busy delta replaces the a-priori (possibly skewed) estimate
@@ -459,18 +756,7 @@ pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcom
         .map(|&si| {
             let stage = &spec.stages[si];
             let mask = stage.mask.unwrap_or_else(|| pool.full_mask());
-            let mut view = pool.view(mask);
-            if let Some(powers) = &stage.powers {
-                assert_eq!(powers.len(), pool.len(), "stage powers must cover the pool");
-                for (slot, &pid) in view.pool_ids.iter().enumerate() {
-                    view.devices[slot].power = powers[pid];
-                }
-            }
-            let mut sc = cfg.clone();
-            sc.devices = view.devices.clone();
-            // Per-device (m, k) parameters are remapped to the sub-pool by
-            // `SchedulerKind::build` via the SchedCtx's pool ids.
-            sc.scheduler = cfg.scheduler.for_energy_policy(spec.energy);
+            let (view, sc) = stage_view_cfg(cfg, &pool, stage, mask, spec.energy);
             let gws = stage.gws.or(cfg.gws).unwrap_or(stage.bench.default_gws);
             Plan { mask, view, cfg: sc, gws }
         })
@@ -548,6 +834,12 @@ pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcom
     let mut serial_clock = 0.0f64;
     let mut prev_sub = 0.0f64;
     let mut global_iter = 0u32;
+    // Masks the stages actually ran on (by `order` position): producers'
+    // chosen masks price the downstream edges.
+    let mut chosen_masks: Vec<DeviceMask> = plans.iter().map(|p| p.mask).collect();
+    let has_dependents: Vec<bool> = (0..spec.stages.len())
+        .map(|i| spec.stages.iter().any(|s| s.deps.contains(&i)))
+        .collect();
     for (pos, &si) in order.iter().enumerate() {
         let stage = &spec.stages[si];
         let plan = &plans[pos];
@@ -555,23 +847,71 @@ pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcom
         deps.sort_unstable();
         deps.dedup();
         let dep_ready = deps.iter().map(|&d| stage_end[d]).fold(0.0, f64::max);
-        // Inter-stage data flow: one gather+scatter per dependency edge
-        // whose producer ran on a different subset.
-        let transfer_in: f64 = deps
+        // Dependency edges against the producers' *chosen* masks (the
+        // data lives where the producer actually ran).
+        let edges: Vec<(DeviceMask, f64)> = deps
             .iter()
             .map(|&d| {
                 let producer = &plans[plan_of[d]];
-                let bytes =
-                    producer.gws as f64 * spec.stages[d].bench.bytes_out_per_item;
-                edge_transfer_cost(&transfers, &classes, producer.mask, plan.mask, bytes)
+                let bytes = producer.gws as f64 * spec.stages[d].bench.bytes_out_per_item;
+                (chosen_masks[plan_of[d]], bytes)
+            })
+            .collect();
+        // Mask resolution before launch: the policy searches the spec
+        // mask's subsets against the estimate path and the power model.
+        let choice = select_stage_mask(
+            spec.mask_policy,
+            plan.mask,
+            &SelectCtx {
+                cfg,
+                classes: &classes,
+                transfers: &transfers,
+                pool_powers: (0..n_pool)
+                    .map(|i| match &stage.powers {
+                        Some(p) => p[i],
+                        None => cfg.devices[i].power,
+                    })
+                    .collect(),
+                bench: &stage.bench,
+                gws: plan.gws,
+                iterations: stage.iterations,
+                edges: edges.clone(),
+                dep_ready,
+                dev_free: &dev_free,
+                serial: spec.serial,
+                serial_clock,
+                leaf: !has_dependents[si],
+                roi_deadline,
+                policy: spec.policy,
+                total_iters,
+                global_iter,
+                prev_sub,
+            },
+        );
+        chosen_masks[pos] = choice.mask;
+        // A choice equal to the spec mask reuses the spec plan verbatim,
+        // so `Fixed` (and spec-settling searches) stay bit-identical to
+        // the pre-selection engine.
+        let alt = (choice.mask != plan.mask)
+            .then(|| stage_view_cfg(cfg, &pool, stage, choice.mask, spec.energy));
+        let (view, stage_cfg) = match &alt {
+            Some((v, c)) => (v, c),
+            None => (&plan.view, &plan.cfg),
+        };
+        // Inter-stage data flow: one gather+scatter per dependency edge
+        // whose producer ran on a different subset.
+        let transfer_in: f64 = edges
+            .iter()
+            .map(|&(prod, bytes)| {
+                edge_transfer_cost(&transfers, &classes, prod, choice.mask, bytes)
             })
             .sum();
         let resource_ready = if spec.serial {
             // Legacy schedule: one global clock, no overlap.
             serial_clock
         } else {
-            // Event-driven: wait only for this stage's masked devices.
-            plan.view.pool_ids.iter().map(|&i| dev_free[i]).fold(0.0, f64::max)
+            // Event-driven: wait only for this stage's chosen devices.
+            view.pool_ids.iter().map(|&i| dev_free[i]).fold(0.0, f64::max)
         };
         let start = dep_ready.max(resource_ready) + transfer_in;
 
@@ -586,8 +926,8 @@ pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcom
         };
         let mut clock = start;
         let mut refined: Option<Vec<f64>> = None;
-        let mut snap: Vec<(u64, f64)> = plan
-            .view
+        let busy0: Vec<f64> = view.pool_ids.iter().map(|&i| traces[i].busy).collect();
+        let mut snap: Vec<(u64, f64)> = view
             .pool_ids
             .iter()
             .map(|&i| (traces[i].groups, traces[i].busy))
@@ -608,8 +948,8 @@ pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcom
             let (end, s) = {
                 let pass = RoiPass {
                     bench: &stage.bench,
-                    cfg: &plan.cfg,
-                    pool_ids: &plan.view.pool_ids,
+                    cfg: stage_cfg,
+                    pool_ids: &view.pool_ids,
                     gws: plan.gws,
                     phase,
                     seq0: seq,
@@ -634,9 +974,9 @@ pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcom
             }
             if cfg.opts.estimate_refine && i + 1 < stage.iterations {
                 refined = Some(refine_powers(
-                    &plan.cfg,
+                    stage_cfg,
                     &stage.bench,
-                    &plan.view,
+                    view,
                     &traces,
                     &mut snap,
                     refined,
@@ -646,16 +986,31 @@ pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcom
             global_iter += 1;
         }
         stage_end[si] = clock;
-        for &i in &plan.view.pool_ids {
+        for &i in &view.pool_ids {
             dev_free[i] = clock;
         }
         serial_clock = serial_clock.max(clock);
+        // Measured counterpart of the selector's energy prediction: each
+        // chosen device's busy delta priced at its marginal draw.
+        let marginal_energy_j: f64 = view
+            .pool_ids
+            .iter()
+            .enumerate()
+            .map(|(slot, &i)| {
+                let c = cldriver::class_idx(classes[i]);
+                (traces[i].busy - busy0[slot]) * (cfg.power.active_w[c] - cfg.power.idle_w[c])
+            })
+            .sum();
         stage_traces.push(StageTrace {
             stage: si,
-            mask: plan.mask,
+            mask: choice.mask,
+            spec_mask: plan.mask,
             start_s: start,
             end_s: clock,
             transfer_in_s: transfer_in,
+            pred_iter_s: choice.pred_iter_s,
+            pred_energy_j: choice.pred_energy_j,
+            marginal_energy_j,
         });
     }
 
@@ -836,6 +1191,7 @@ mod tests {
             budget: None,
             policy: BudgetPolicy::EvenSplit,
             energy: EnergyPolicy::RaceToIdle,
+            mask_policy: MaskPolicy::Fixed,
             serial: false,
         };
         let cfg = SimConfig::testbed(&ga, hguided_opt());
@@ -883,6 +1239,7 @@ mod tests {
             budget: None,
             policy: BudgetPolicy::CarryOverSlack,
             energy: EnergyPolicy::RaceToIdle,
+            mask_policy: MaskPolicy::Fixed,
             serial: false,
         };
         let cfg = SimConfig::testbed(&ga, hguided_opt());
@@ -980,6 +1337,7 @@ mod tests {
             budget: None,
             policy: BudgetPolicy::CarryOverSlack,
             energy: EnergyPolicy::RaceToIdle,
+            mask_policy: MaskPolicy::Fixed,
             serial: false,
         };
         let cfg = SimConfig::testbed(&ga, hguided_opt());
@@ -1037,6 +1395,7 @@ mod tests {
             budget: None,
             policy: BudgetPolicy::EvenSplit,
             energy: EnergyPolicy::RaceToIdle,
+            mask_policy: MaskPolicy::Fixed,
             serial: false,
         };
         let small = ga.default_gws / 32;
@@ -1057,6 +1416,124 @@ mod tests {
         let d = simulate_pipeline(&chain(big, small), &cfg);
         assert_eq!(c.init_time.to_bits(), d.init_time.to_bits());
         assert_eq!(c.release_time.to_bits(), d.release_time.to_bits());
+    }
+
+    #[test]
+    fn selector_sheds_the_cpu_when_the_gpu_window_hides_the_stretch() {
+        // Spec cpu+igpu, GPU committed elsewhere for a long window: the
+        // iGPU alone is predicted barely slower (it regains its solo
+        // retention) at less than half the marginal draw, so the energy
+        // policies shed the CPU; MinTime keeps the full (fastest) spec
+        // mask; Fixed never searches.
+        let b = Bench::new(BenchId::Gaussian);
+        let cfg = SimConfig::testbed(&b, hguided_opt());
+        let transfers = TransferModel::new(&cfg.driver, cfg.opts.buffer_flags);
+        let classes: Vec<DeviceClass> = cfg.devices.iter().map(|d| d.class).collect();
+        let dev_free = [0.0, 0.0, 10.0];
+        let sc = SelectCtx {
+            cfg: &cfg,
+            classes: &classes,
+            transfers: &transfers,
+            pool_powers: vec![0.15, 0.4, 1.0],
+            bench: &b,
+            gws: b.default_gws / 16,
+            iterations: 2,
+            edges: Vec::new(),
+            dep_ready: 0.0,
+            dev_free: &dev_free,
+            serial: false,
+            serial_clock: 0.0,
+            leaf: true,
+            roi_deadline: Some(1e6),
+            policy: BudgetPolicy::GreedyFrontload,
+            total_iters: 4,
+            global_iter: 0,
+            prev_sub: 0.0,
+        };
+        let spec_mask = DeviceMask::from_indices(&[0, 1]);
+        let igpu = DeviceMask::single(1);
+        for policy in [MaskPolicy::EnergyUnderDeadline, MaskPolicy::MinEnergy] {
+            let c = select_stage_mask(policy, spec_mask, &sc);
+            assert_eq!(c.mask, igpu, "{policy:?} sheds the CPU");
+            assert!(c.pred_iter_s > 0.0 && c.pred_energy_j > 0.0);
+        }
+        let spec_pred = sc.predict(spec_mask, false);
+        let shed = select_stage_mask(MaskPolicy::MinEnergy, spec_mask, &sc);
+        assert!(
+            shed.pred_energy_j < MASK_ENERGY_MARGIN * sc.energy(&spec_pred, 10.0),
+            "shed must clear the energy margin"
+        );
+        assert_eq!(select_stage_mask(MaskPolicy::MinTime, spec_mask, &sc).mask, spec_mask);
+        assert_eq!(select_stage_mask(MaskPolicy::Fixed, spec_mask, &sc).mask, spec_mask);
+    }
+
+    #[test]
+    fn selector_falls_back_to_the_spec_mask_under_tight_sub_deadlines() {
+        // A budget only the full spec mask is predicted to serve: every
+        // strict subset loses sub-deadline hits, so EnergyUnderDeadline
+        // falls back — while the deadline-blind MinEnergy still sheds.
+        let b = Bench::new(BenchId::Gaussian);
+        let cfg = SimConfig::testbed(&b, hguided_opt());
+        let transfers = TransferModel::new(&cfg.driver, cfg.opts.buffer_flags);
+        let classes: Vec<DeviceClass> = cfg.devices.iter().map(|d| d.class).collect();
+        let dev_free = [0.0, 0.0, 10.0];
+        let mut sc = SelectCtx {
+            cfg: &cfg,
+            classes: &classes,
+            transfers: &transfers,
+            pool_powers: vec![0.15, 0.4, 1.0],
+            bench: &b,
+            gws: b.default_gws / 16,
+            iterations: 2,
+            edges: Vec::new(),
+            dep_ready: 0.0,
+            dev_free: &dev_free,
+            serial: false,
+            serial_clock: 0.0,
+            leaf: true,
+            roi_deadline: None,
+            policy: BudgetPolicy::EvenSplit,
+            total_iters: 2,
+            global_iter: 0,
+            prev_sub: 0.0,
+        };
+        let spec_mask = DeviceMask::from_indices(&[0, 1]);
+        // Grid the sub-deadlines 3 % above the spec pace: the spec hits
+        // both, the guarded iGPU-only candidate (≈ 9 % slower × 1.05
+        // guard) hits neither.
+        let iter_s = sc.predict(spec_mask, false).iter_s;
+        sc.roi_deadline = Some(2.0 * iter_s * 1.03);
+        let eud = select_stage_mask(MaskPolicy::EnergyUnderDeadline, spec_mask, &sc);
+        assert_eq!(eud.mask, spec_mask, "no subset predicted to hit: fall back");
+        let blind = select_stage_mask(MaskPolicy::MinEnergy, spec_mask, &sc);
+        assert_eq!(blind.mask, DeviceMask::single(1), "deadline-blind policy still sheds");
+    }
+
+    #[test]
+    fn spec_settling_policies_are_bit_identical_to_fixed() {
+        // On a full-pool single stage the spec mask is predicted fastest
+        // (retention never beats an extra device's throughput here), so
+        // MinTime settles on the spec plan and must not perturb a single
+        // bit of the run — the selection layer draws no RNG.
+        let b = Bench::new(BenchId::NBody);
+        let mut cfg = small_cfg(&b);
+        cfg.budget = Some(TimeBudget::new(2.0));
+        let fixed = simulate_pipeline(&PipelineSpec::repeat(b.clone(), 4), &cfg);
+        let mintime = simulate_pipeline(
+            &PipelineSpec::repeat(b.clone(), 4).with_mask_policy(MaskPolicy::MinTime),
+            &cfg,
+        );
+        assert_eq!(fixed.roi_time.to_bits(), mintime.roi_time.to_bits());
+        assert_eq!(fixed.energy_j.to_bits(), mintime.energy_j.to_bits());
+        assert_eq!(fixed.init_time.to_bits(), mintime.init_time.to_bits());
+        assert_eq!(fixed.n_packages, mintime.n_packages);
+        for (a, c) in fixed.iter_times.iter().zip(&mintime.iter_times) {
+            assert_eq!(a.to_bits(), c.to_bits());
+        }
+        assert!(!mintime.stages[0].shed());
+        assert_eq!(mintime.stages[0].mask, mintime.stages[0].spec_mask);
+        assert!(mintime.stages[0].pred_iter_s > 0.0);
+        assert!(mintime.stages[0].marginal_energy_j > 0.0);
     }
 
     #[test]

@@ -186,6 +186,25 @@ impl DeviceMask {
         (0..Self::MAX_DEVICES).filter(|&i| self.contains(i)).collect()
     }
 
+    /// True when every device of `self` is also in `other`.
+    #[inline]
+    pub fn is_subset_of(&self, other: Self) -> bool {
+        self.bits & !other.bits == 0
+    }
+
+    /// All non-empty subsets of this mask (the mask-policy search space),
+    /// in the deterministic sub-bitmask enumeration order: the full mask
+    /// first, then numerically descending.  `2^count - 1` entries.
+    pub fn subsets(&self) -> Vec<DeviceMask> {
+        let mut out = Vec::new();
+        let mut sub = self.bits;
+        while sub != 0 {
+            out.push(DeviceMask { bits: sub });
+            sub = (sub - 1) & self.bits;
+        }
+        out
+    }
+
     /// Highest selected pool id + 1 (0 for the empty mask) — the minimum
     /// pool size this mask is valid against.
     pub fn span(&self) -> usize {
@@ -499,6 +518,67 @@ impl EnergyPolicy {
     }
 }
 
+/// How each pipeline stage's device mask is chosen (the ROADMAP's
+/// "energy-aware device *subset* selection under loose deadlines" item).
+///
+/// `Fixed` takes the stage's spec mask verbatim — the PR-3 behaviour and
+/// the bit-identical baseline.  The other policies search the non-empty
+/// subsets of the spec mask before the stage launches, predicting
+/// (time, joules) per subset from the scheduler's own `P_i` estimate
+/// path and the [`crate::cldriver::PowerModel`], including the
+/// inter-stage transfer deltas a mask change induces on the stage's
+/// dependency edges.  This is the race-to-idle vs. device-shedding
+/// trade-off of the EngineCL energy work (arXiv:1805.02755): the most
+/// energy-efficient configuration is frequently a strict subset of the
+/// available devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MaskPolicy {
+    /// Use the spec mask verbatim (no search).
+    Fixed,
+    /// Cheapest predicted marginal energy, deadline-blind (still charged
+    /// for extending the stage beyond the committed schedule horizon).
+    MinEnergy,
+    /// Earliest predicted stage finish — sheds only when a subset starts
+    /// earlier (fewer busy devices to wait for) or dodges an inter-stage
+    /// transfer by matching its producer's mask.
+    MinTime,
+    /// Cheapest predicted energy among the subsets whose predicted
+    /// per-iteration sub-deadline hits are no fewer than the spec mask's,
+    /// falling back to the full spec mask when no subset qualifies.
+    EnergyUnderDeadline,
+}
+
+impl MaskPolicy {
+    pub const ALL: [MaskPolicy; 4] = [
+        MaskPolicy::Fixed,
+        MaskPolicy::MinEnergy,
+        MaskPolicy::MinTime,
+        MaskPolicy::EnergyUnderDeadline,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            MaskPolicy::Fixed => "fixed",
+            MaskPolicy::MinEnergy => "min-energy",
+            MaskPolicy::MinTime => "min-time",
+            MaskPolicy::EnergyUnderDeadline => "energy-under-deadline",
+        }
+    }
+
+    /// Parse a CLI spelling (full label or short alias).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_lowercase().as_str() {
+            "fixed" | "spec" => Some(MaskPolicy::Fixed),
+            "min-energy" | "minenergy" | "energy" => Some(MaskPolicy::MinEnergy),
+            "min-time" | "mintime" | "time" => Some(MaskPolicy::MinTime),
+            "energy-under-deadline" | "energyunderdeadline" | "eud" => {
+                Some(MaskPolicy::EnergyUnderDeadline)
+            }
+            _ => None,
+        }
+    }
+}
+
 /// How the scheduler's computing-power estimates `P_i` relate to the true
 /// co-execution powers.  The paper profiles powers offline, so the
 /// scheduler may run under estimation error; its headline 0.84 efficiency
@@ -643,6 +723,35 @@ mod tests {
             DeviceMask::parse("igpu", &[DeviceClass::Cpu]).is_err(),
             "class absent from the pool"
         );
+    }
+
+    #[test]
+    fn mask_subset_relation_and_enumeration() {
+        let spec = DeviceMask::from_indices(&[0, 2]);
+        assert!(DeviceMask::single(0).is_subset_of(spec));
+        assert!(spec.is_subset_of(spec));
+        assert!(!DeviceMask::single(1).is_subset_of(spec));
+        assert!(DeviceMask::empty().is_subset_of(spec));
+        // Sub-bitmask enumeration: full mask first, non-empty, complete.
+        let subs = spec.subsets();
+        assert_eq!(subs.len(), 3);
+        assert_eq!(subs[0], spec, "full mask enumerated first");
+        assert!(subs.contains(&DeviceMask::single(0)));
+        assert!(subs.contains(&DeviceMask::single(2)));
+        assert!(subs.iter().all(|s| !s.is_empty() && s.is_subset_of(spec)));
+        assert_eq!(DeviceMask::all(3).subsets().len(), 7);
+        assert_eq!(DeviceMask::single(1).subsets(), vec![DeviceMask::single(1)]);
+    }
+
+    #[test]
+    fn mask_policy_labels_parse_roundtrip() {
+        for p in MaskPolicy::ALL {
+            assert_eq!(MaskPolicy::parse(p.label()), Some(p));
+        }
+        assert_eq!(MaskPolicy::parse("EUD"), Some(MaskPolicy::EnergyUnderDeadline));
+        assert_eq!(MaskPolicy::parse("time"), Some(MaskPolicy::MinTime));
+        assert_eq!(MaskPolicy::parse("energy"), Some(MaskPolicy::MinEnergy));
+        assert_eq!(MaskPolicy::parse("fastest"), None);
     }
 
     #[test]

@@ -1,0 +1,140 @@
+//! Golden-snapshot harness for the pipeline engine: three canonical
+//! scenarios (single-stage, two-branch disjoint, diamond DAG) run with
+//! fixed seeds, and their full `metrics::pipeline_json` documents are
+//! compared byte-for-byte against checked-in snapshots under
+//! `tests/golden/`.  Future refactors cannot silently change schedules,
+//! verdicts or energy accounting: any drift fails here first.
+//!
+//! Maintenance protocol:
+//! * `UPDATE_GOLDEN=1 cargo test --test golden_pipeline` rewrites the
+//!   snapshots (then commit the diff alongside the change that caused
+//!   it, with a justification).
+//! * On a checkout where a snapshot file does not exist yet, the harness
+//!   **bootstraps** it (writes the current output and passes, printing a
+//!   notice): commit the generated `tests/golden/*.json` so later runs
+//!   compare strictly.  This keeps the harness usable from authoring
+//!   environments without a Rust toolchain.
+
+use enginecl::benchsuite::{Bench, BenchId};
+use enginecl::metrics::pipeline_json;
+use enginecl::scheduler::{HGuidedParams, SchedulerKind};
+use enginecl::sim::{simulate_pipeline, PipelineSpec, PipelineStage, SimConfig};
+use enginecl::types::{DeviceMask, MaskPolicy};
+use std::path::PathBuf;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+/// Compare `doc` against the stored snapshot; `UPDATE_GOLDEN=1` (or a
+/// missing snapshot) writes it instead.
+fn check_golden(name: &str, doc: &str) {
+    let path = golden_dir().join(format!("{name}.json"));
+    let update = std::env::var("UPDATE_GOLDEN").map(|v| v == "1").unwrap_or(false);
+    if update || !path.exists() {
+        std::fs::create_dir_all(golden_dir()).expect("create tests/golden");
+        std::fs::write(&path, format!("{doc}\n")).expect("write golden snapshot");
+        if !update {
+            eprintln!(
+                "bootstrapped golden snapshot {} — commit it so future runs \
+                 compare strictly",
+                path.display()
+            );
+        }
+        return;
+    }
+    let want = std::fs::read_to_string(&path).expect("read golden snapshot");
+    assert_eq!(
+        want.trim_end(),
+        doc,
+        "pipeline output drifted from tests/golden/{name}.json — if the \
+         change is intentional, regenerate with UPDATE_GOLDEN=1 and commit \
+         the diff"
+    );
+}
+
+fn hguided_opt() -> SchedulerKind {
+    SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() }
+}
+
+/// Run one scenario and render the exact JSON document the CLI would
+/// emit for it (also asserts the document round-trips through jsonio).
+fn render(spec: &PipelineSpec, cfg: &SimConfig) -> String {
+    let out = simulate_pipeline(spec, cfg);
+    let doc = pipeline_json(&out).to_string();
+    enginecl::jsonio::Json::parse(&doc).expect("snapshot JSON parses");
+    doc
+}
+
+#[test]
+fn golden_single_stage_pipeline() {
+    let b = Bench::new(BenchId::Gaussian);
+    let mut cfg = SimConfig::testbed(&b, hguided_opt());
+    cfg.gws = Some(b.default_gws / 16);
+    let spec = PipelineSpec::repeat(b, 3).with_deadline(2.0);
+    check_golden("single_stage", &render(&spec, &cfg));
+}
+
+#[test]
+fn golden_two_branch_disjoint_pipeline() {
+    // The acceptance scenario shape: a long GPU branch committed first,
+    // a CPU+iGPU branch that the energy-under-deadline policy sheds to
+    // the iGPU — the snapshot pins the chosen masks and the energy
+    // accounting.
+    let mb = Bench::new(BenchId::Mandelbrot);
+    let ga = Bench::new(BenchId::Gaussian);
+    let spec = PipelineSpec {
+        stages: vec![
+            PipelineStage::new(mb.clone(), 2)
+                .with_gws(mb.default_gws / 4)
+                .with_powers(mb.true_powers.to_vec())
+                .on_devices(DeviceMask::single(2)),
+            PipelineStage::new(ga.clone(), 2)
+                .with_gws(ga.default_gws / 16)
+                .with_powers(ga.true_powers.to_vec())
+                .on_devices(DeviceMask::from_indices(&[0, 1])),
+        ],
+        budget: None,
+        policy: enginecl::types::BudgetPolicy::CarryOverSlack,
+        energy: enginecl::types::EnergyPolicy::RaceToIdle,
+        mask_policy: MaskPolicy::EnergyUnderDeadline,
+        serial: false,
+    }
+    .with_deadline(3.0);
+    let cfg = SimConfig::testbed(&mb, hguided_opt());
+    check_golden("two_branch_disjoint", &render(&spec, &cfg));
+}
+
+#[test]
+fn golden_diamond_dag_pipeline() {
+    // Diamond: source on the full pool, two masked middle branches, a
+    // full-pool join — exercises dependency edges whose producer and
+    // consumer masks differ (transfer pricing) under a global budget.
+    let ga = Bench::new(BenchId::Gaussian);
+    let mb = Bench::new(BenchId::Mandelbrot);
+    let spec = PipelineSpec {
+        stages: vec![
+            PipelineStage::new(ga.clone(), 1).with_gws(ga.default_gws / 16),
+            PipelineStage::new(ga.clone(), 1)
+                .with_gws(ga.default_gws / 32)
+                .on_devices(DeviceMask::from_indices(&[0, 1]))
+                .after(&[0]),
+            PipelineStage::new(mb.clone(), 1)
+                .with_gws(mb.default_gws / 32)
+                .with_powers(mb.true_powers.to_vec())
+                .on_devices(DeviceMask::single(2))
+                .after(&[0]),
+            PipelineStage::new(ga.clone(), 1)
+                .with_gws(ga.default_gws / 32)
+                .after(&[1, 2]),
+        ],
+        budget: None,
+        policy: enginecl::types::BudgetPolicy::EvenSplit,
+        energy: enginecl::types::EnergyPolicy::RaceToIdle,
+        mask_policy: MaskPolicy::Fixed,
+        serial: false,
+    }
+    .with_deadline(6.0);
+    let cfg = SimConfig::testbed(&ga, hguided_opt());
+    check_golden("diamond_dag", &render(&spec, &cfg));
+}

@@ -11,7 +11,8 @@ use enginecl::sim::{
     simulate, simulate_iterative, simulate_pipeline, PipelineSpec, PipelineStage, SimConfig,
 };
 use enginecl::types::{
-    BudgetPolicy, DeviceMask, EnergyPolicy, EstimateScenario, Optimizations, TimeBudget,
+    BudgetPolicy, DeviceMask, EnergyPolicy, EstimateScenario, MaskPolicy, Optimizations,
+    TimeBudget,
 };
 
 fn hguided_opt() -> SchedulerKind {
@@ -227,6 +228,7 @@ fn two_branch_dag_on_disjoint_masks_beats_serial_within_the_same_budget() {
         budget: None,
         policy: BudgetPolicy::CarryOverSlack,
         energy: EnergyPolicy::RaceToIdle,
+        mask_policy: MaskPolicy::Fixed,
         serial: false,
     };
     let cfg = SimConfig::testbed(&ga, hguided_opt());
@@ -320,6 +322,107 @@ fn estimate_refinement_recovers_from_skewed_profiles() {
         exact_refined.roi_time,
         exact.roi_time
     );
+}
+
+#[test]
+fn energy_under_deadline_sheds_a_device_and_saves_joules_on_two_branches() {
+    // Acceptance claim of the mask-policy layer: on the two-branch
+    // CPU+iGPU / GPU scenario with a loose budget (>= 1.5x the full-mask
+    // makespan), EnergyUnderDeadline selects a strict subset on at least
+    // one stage, reports strictly fewer joules than Fixed, and still
+    // meets the budget.  The GPU branch is declared first and sized
+    // longer, so its committed window is the horizon the CPU+iGPU branch
+    // sheds against (the iGPU alone regains its solo retention, so
+    // dropping the CPU costs almost no time at 25 W less draw).
+    let mb = Bench::new(BenchId::Mandelbrot);
+    let ga = Bench::new(BenchId::Gaussian);
+    let mk = |mask_policy: MaskPolicy| PipelineSpec {
+        stages: vec![
+            PipelineStage::new(mb.clone(), 2)
+                .with_gws(mb.default_gws / 4)
+                .with_powers(mb.true_powers.to_vec())
+                .on_devices(DeviceMask::single(2)),
+            PipelineStage::new(ga.clone(), 2)
+                .with_gws(ga.default_gws / 16)
+                .with_powers(ga.true_powers.to_vec())
+                .on_devices(DeviceMask::from_indices(&[0, 1])),
+        ],
+        budget: None,
+        policy: BudgetPolicy::CarryOverSlack,
+        energy: EnergyPolicy::RaceToIdle,
+        mask_policy,
+        serial: false,
+    };
+    let cfg = SimConfig::testbed(&mb, hguided_opt());
+    let free = simulate_pipeline(&mk(MaskPolicy::Fixed), &cfg);
+    let budget = TimeBudget::new(free.roi_time * 1.6); // >= 1.5x full-mask makespan
+    let budgeted = |mp: MaskPolicy| simulate_pipeline(&mk(mp).with_budget(Some(budget)), &cfg);
+    let fixed = budgeted(MaskPolicy::Fixed);
+    let eud = budgeted(MaskPolicy::EnergyUnderDeadline);
+    // Fixed takes every spec mask; the searching policy sheds the CPU
+    // from the CPU+iGPU branch (a strict subset on >= 1 stage).
+    assert!(fixed.stages.iter().all(|s| !s.shed()));
+    let shed: Vec<_> = eud.stages.iter().filter(|s| s.shed()).collect();
+    assert!(!shed.is_empty(), "no stage shed a device: {:?}", eud.stages);
+    for s in &shed {
+        assert!(s.mask.is_subset_of(s.spec_mask) && s.mask.count() < s.spec_mask.count());
+        assert!(s.pred_energy_j > 0.0 && s.marginal_energy_j > 0.0);
+    }
+    // Strictly fewer joules, same budget still met.
+    assert!(
+        eud.energy_j < fixed.energy_j,
+        "energy-under-deadline {} J !< fixed {} J",
+        eud.energy_j,
+        fixed.energy_j
+    );
+    assert!(fixed.deadline.unwrap().met, "fixed meets the loose budget");
+    assert!(eud.deadline.unwrap().met, "shedding must not cost the deadline");
+    // Work is conserved under the shed mask (fewer devices, same groups).
+    let groups = |o: &enginecl::sim::PipelineOutcome| -> u64 {
+        o.devices.iter().map(|d| d.groups).sum()
+    };
+    assert_eq!(groups(&fixed), groups(&eud));
+    // The shed CPU did no work in the searching run's Gaussian stage,
+    // and the measured marginal energy of the shed stage undercuts the
+    // spec mask's prediction path.
+    let gauss = eud.stages.iter().find(|s| s.stage == 1).unwrap();
+    assert_eq!(gauss.mask, DeviceMask::single(1), "iGPU-only is the cheapest hitter");
+}
+
+#[test]
+fn fixed_mask_policy_stays_bit_identical_while_the_selector_is_inserted() {
+    // Deterministic-RNG regression (the per-stage RNG-fork contract):
+    // with MaskPolicy::Fixed the selection layer must not perturb a
+    // single bit of a single-stage pipeline — same seeds, same jitter
+    // draws, same outcome as the pre-selection engine, which is pinned
+    // by the simulate() composition identity below.
+    let b = Bench::new(BenchId::Ray1);
+    let mut cfg = SimConfig::testbed(&b, adaptive());
+    cfg.gws = Some(b.default_gws / 16);
+    cfg.budget = Some(TimeBudget::new(2.0));
+    let plain = simulate_iterative(&b, &cfg, 3);
+    let explicit = simulate_pipeline(
+        &PipelineSpec::repeat(b.clone(), 3)
+            .with_budget(cfg.budget)
+            .with_mask_policy(MaskPolicy::Fixed),
+        &cfg,
+    );
+    assert_eq!(plain.roi_time.to_bits(), explicit.roi_time.to_bits());
+    assert_eq!(plain.total_time.to_bits(), explicit.total_time.to_bits());
+    assert_eq!(plain.energy_j.to_bits(), explicit.energy_j.to_bits());
+    assert_eq!(plain.n_packages, explicit.n_packages);
+    for (a, c) in plain.iter_times.iter().zip(&explicit.iter_times) {
+        assert_eq!(a.to_bits(), c.to_bits());
+    }
+    // The PR-2/PR-3 anchor: a 1-iteration Fixed pipeline is bitwise the
+    // single-shot simulate() run (same RNG stream end to end).
+    let single = simulate(&b, &cfg);
+    let pipe = simulate_iterative(&b, &cfg, 1);
+    assert_eq!(single.roi_time.to_bits(), pipe.roi_time.to_bits());
+    assert_eq!(single.total_time.to_bits(), pipe.total_time.to_bits());
+    // And the trace records the untouched spec mask.
+    assert_eq!(explicit.stages[0].mask, explicit.stages[0].spec_mask);
+    assert!(!explicit.stages[0].shed());
 }
 
 #[test]

@@ -12,7 +12,8 @@ use enginecl::scheduler::{
 use enginecl::sim::{simulate, simulate_pipeline, PipelineSpec, PipelineStage, SimConfig};
 use enginecl::stats::XorShift64;
 use enginecl::types::{
-    BudgetPolicy, DeviceMask, EnergyPolicy, EstimateScenario, ExecMode, GroupRange, TimeBudget,
+    BudgetPolicy, DeviceMask, EnergyPolicy, EstimateScenario, ExecMode, GroupRange, MaskPolicy,
+    TimeBudget,
 };
 
 /// Random scheduler context: 1–6 devices, powers in (0.05, 1], any total.
@@ -354,6 +355,7 @@ fn prop_branch_parallel_conserves_work_and_never_trails_serial() {
             budget: None,
             policy: BudgetPolicy::CarryOverSlack,
             energy: EnergyPolicy::RaceToIdle,
+            mask_policy: MaskPolicy::Fixed,
             serial: false,
         };
         let mut cfg = SimConfig::testbed(&benches[0], kind);
@@ -389,6 +391,78 @@ fn prop_branch_parallel_conserves_work_and_never_trails_serial() {
             }
             assert!(out.roi_time > 0.0 && out.roi_time.is_finite(), "case {case}");
         }
+    }
+}
+
+#[test]
+fn prop_mask_policies_never_trail_fixed_on_their_own_metric() {
+    // Random independent-branch DAGs on random masks under loose budgets:
+    // `EnergyUnderDeadline` never reports more joules than `Fixed` while
+    // its pipeline verdict is no worse, and `MinTime` never trails
+    // `Fixed` on makespan.  (The selector deviates from the spec mask
+    // only on a clear predicted margin — see MASK_ENERGY_MARGIN /
+    // MASK_TIME_GUARD in sim::pipeline — so prediction noise cannot flip
+    // a shed into a loss.)
+    for case in 0..30u64 {
+        let mut rng = XorShift64::new(11_000 + case);
+        let n_stages = 2 + rng.below(3) as usize;
+        let mut stages = Vec::with_capacity(n_stages);
+        let mut expected_groups = 0u64;
+        let mut benches = Vec::with_capacity(n_stages);
+        for _ in 0..n_stages {
+            let id = BenchId::ALL[rng.below(6) as usize];
+            let bench = Bench::new(id);
+            let gws = bench.default_gws >> (rng.below(3) + 3);
+            let iterations = 1 + rng.below(2) as u32;
+            let bits = 1 + rng.below(7); // non-empty subset of {0, 1, 2}
+            let ids: Vec<usize> = (0..3usize).filter(|&i| bits >> i & 1 == 1).collect();
+            let stage = PipelineStage::new(bench.clone(), iterations)
+                .with_gws(gws)
+                .with_powers(bench.true_powers.to_vec())
+                .on_devices(DeviceMask::from_indices(&ids));
+            expected_groups += iterations as u64 * bench.groups(gws);
+            benches.push(bench);
+            stages.push(stage);
+        }
+        let bpolicy = BudgetPolicy::ALL[rng.below(3) as usize];
+        let mk = |mask_policy: MaskPolicy| PipelineSpec {
+            stages: stages.clone(),
+            budget: None,
+            policy: bpolicy,
+            energy: EnergyPolicy::RaceToIdle,
+            mask_policy,
+            serial: false,
+        };
+        let kind = SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() };
+        let mut cfg = SimConfig::testbed(&benches[0], kind);
+        cfg.seed = case + 1;
+        let free = simulate_pipeline(&mk(MaskPolicy::Fixed), &cfg);
+        // Loose budget: 1.5-2.5x the Fixed makespan.
+        let budget = TimeBudget::new(free.roi_time * (1.5 + rng.uniform(0.0, 1.0)));
+        let run = |mask_policy: MaskPolicy| {
+            simulate_pipeline(&mk(mask_policy).with_budget(Some(budget)), &cfg)
+        };
+        let fixed = run(MaskPolicy::Fixed);
+        let eud = run(MaskPolicy::EnergyUnderDeadline);
+        let mintime = run(MaskPolicy::MinTime);
+        for (label, out) in [("fixed", &fixed), ("eud", &eud), ("min-time", &mintime)] {
+            let groups: u64 = out.devices.iter().map(|d| d.groups).sum();
+            assert_eq!(groups, expected_groups, "case {case}: {label} lost work");
+        }
+        assert!(
+            eud.energy_j <= fixed.energy_j + 1e-9,
+            "case {case}: energy-under-deadline {} J > fixed {} J",
+            eud.energy_j,
+            fixed.energy_j
+        );
+        let (fv, ev) = (fixed.deadline.unwrap(), eud.deadline.unwrap());
+        assert!(!fv.met || ev.met, "case {case}: shedding cost the pipeline verdict");
+        assert!(
+            mintime.roi_time <= fixed.roi_time + 1e-9,
+            "case {case}: min-time {} trails fixed {}",
+            mintime.roi_time,
+            fixed.roi_time
+        );
     }
 }
 
