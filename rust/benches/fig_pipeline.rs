@@ -12,7 +12,7 @@ use enginecl::scheduler::{AdaptiveParams, HGuidedParams, SchedulerKind};
 use enginecl::sim::{simulate_pipeline, PipelineSpec, SimConfig};
 use enginecl::stats::benchkit::Bencher;
 use enginecl::types::{
-    BudgetPolicy, DeviceMask, EnergyPolicy, EstimateScenario, Optimizations,
+    BudgetPolicy, ContentionModel, DeviceMask, EnergyPolicy, EstimateScenario, Optimizations,
 };
 
 fn main() {
@@ -49,6 +49,7 @@ fn main() {
             6,
             &sched,
             Optimizations::ALL,
+            ContentionModel::View,
             &BudgetPolicy::ALL,
             &[EnergyPolicy::RaceToIdle, EnergyPolicy::StretchToDeadline],
             &[EstimateScenario::Exact, EstimateScenario::Pessimistic { err: 0.3 }],
@@ -80,6 +81,7 @@ fn main() {
             4,
             &sched,
             Optimizations::ALL,
+            ContentionModel::View,
             &[0.8, 1.1],
         )
     });
@@ -98,6 +100,45 @@ fn main() {
         assert!(
             par.mean_roi_s < ser.mean_roi_s,
             "branch co-execution must beat the serial schedule"
+        );
+    }
+
+    // Cross-branch contention: two independent single-device branches
+    // (iGPU / GPU) under view-scoped vs pool-scoped retention — the pool
+    // rows price the interference the legacy scope hides entirely (each
+    // branch's own view has one device).
+    let contention_masks = [DeviceMask::single(1), DeviceMask::single(2)];
+    let contention_rows = b.bench_val("regenerate/contention_compare(reps=4)", 1, || {
+        experiments::contention_compare(
+            4,
+            &[BenchId::Gaussian, BenchId::Mandelbrot],
+            &contention_masks,
+            4,
+            &sched,
+            Optimizations::ALL,
+            &[1.1],
+        )
+    });
+    println!("\nview-scoped vs pool-scoped contention (igpu / gpu):");
+    for r in &contention_rows {
+        println!(
+            "{:<6} x{:<5.2} roi {:.4}s  hit {:.2}  util {:.3}  windows {:.1}",
+            r.contention,
+            r.budget_mult,
+            r.mean_roi_s,
+            r.hit_rate,
+            r.mean_pool_utilization,
+            r.mean_active_windows
+        );
+    }
+    for (view, pool) in contention_rows
+        .iter()
+        .filter(|r| r.contention == "view")
+        .zip(contention_rows.iter().filter(|r| r.contention == "pool"))
+    {
+        assert!(
+            pool.mean_roi_s > view.mean_roi_s,
+            "pool contention must slow co-executing branches"
         );
     }
     b.finish();

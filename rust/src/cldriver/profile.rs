@@ -52,6 +52,15 @@ pub struct DriverProfile {
     /// throughputs — this is why the paper's best efficiency is 0.84, not
     /// 1.0).  Applied only when more than one device is active.
     pub coexec_retention: [f64; 3],
+    /// Per-class contention curve beyond the two-point `coexec_retention`
+    /// law: each concurrently active device past the second multiplies
+    /// the class's retention by a further `(1 - contention_decay)` (the
+    /// oneAPI co-execution observation that interference grows with the
+    /// number of simultaneously active devices, arXiv:2106.01726).  Zero
+    /// keeps the legacy two-point behaviour — the calibrated default, so
+    /// existing configurations are bit-identical; see
+    /// [`DriverProfile::retention_at`].
+    pub contention_decay: [f64; 3],
     /// Fraction of the non-critical-path device chains that still
     /// serializes under the *initialization* optimization — vendor ICDs
     /// hold global locks, so overlap is never perfect.  0 = ideal overlap.
@@ -81,7 +90,36 @@ impl DriverProfile {
             map_latency_us: 8.0,
             jitter_sigma: 0.035,
             coexec_retention: [0.72, 0.82, 0.93],
+            contention_decay: [0.0; 3],
             overlap_residual: 0.7,
+        }
+    }
+
+    /// Per-class throughput retention with `active` devices concurrently
+    /// busy on the pool — the one shared contention formula behind the
+    /// scheduler's `P_i` estimates, the `run_roi` package throughput and
+    /// the mask-policy predictor:
+    ///
+    /// ```text
+    /// retention(1)     = 1.0                       (solo: no contention)
+    /// retention(k >= 2) = coexec_retention
+    ///                    · (1 - contention_decay)^(k - 2)
+    /// ```
+    ///
+    /// With the default zero decay this is exactly the legacy two-point
+    /// law (`coexec_retention` whenever more than one device is active),
+    /// so view-scoped runs stay bit-identical.  Non-increasing in
+    /// `active` for any decay in [0, 1] (property-tested).
+    pub fn retention_at(&self, class_idx: usize, active: usize) -> f64 {
+        if active <= 1 {
+            return 1.0;
+        }
+        let base = self.coexec_retention[class_idx];
+        let decay = self.contention_decay[class_idx];
+        if decay == 0.0 || active == 2 {
+            base
+        } else {
+            base * (1.0 - decay).powi(active as i32 - 2)
         }
     }
 
@@ -108,6 +146,7 @@ impl DriverProfile {
             map_latency_us: 0.0,
             jitter_sigma: 0.0,
             coexec_retention: [1.0; 3],
+            contention_decay: [0.0; 3],
             overlap_residual: 0.0,
         }
     }
@@ -131,6 +170,43 @@ mod tests {
         assert!(p.transfer_latency_us[2] > p.transfer_latency_us[0]);
         // map is much faster than any copy path
         assert!(p.map_gbps > p.h2d_gbps[0]);
+    }
+
+    #[test]
+    fn retention_curve_defaults_to_two_point_law() {
+        let p = DriverProfile::commodity_desktop();
+        for class in 0..3 {
+            assert_eq!(p.retention_at(class, 0), 1.0);
+            assert_eq!(p.retention_at(class, 1), 1.0, "solo device keeps full throughput");
+            // Zero decay: every active count >= 2 prices the calibrated
+            // two-point retention bit-exactly.
+            for active in 2..=8 {
+                assert_eq!(
+                    p.retention_at(class, active).to_bits(),
+                    p.coexec_retention[class].to_bits(),
+                    "class {class} active {active}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn retention_curve_decays_with_active_count() {
+        let mut p = DriverProfile::commodity_desktop();
+        p.contention_decay = [0.10, 0.08, 0.04];
+        for class in 0..3 {
+            assert_eq!(p.retention_at(class, 2), p.coexec_retention[class]);
+            let mut last = p.retention_at(class, 2);
+            for active in 3..=6 {
+                let r = p.retention_at(class, active);
+                assert!(r < last, "class {class}: retention must fall with active count");
+                assert!(r > 0.0);
+                last = r;
+            }
+        }
+        // One extra device costs exactly one decay factor.
+        let r3 = p.retention_at(0, 3);
+        assert!((r3 - 0.72 * 0.9).abs() < 1e-12);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! Grammar: positionals, `--flag value` pairs and boolean `--switch`es.
 //! A flag is boolean iff the next token starts with `--` or is absent.
 
-use crate::types::{DeviceClass, DeviceMask, MaskPolicy};
+use crate::types::{ContentionModel, DeviceClass, DeviceMask, MaskPolicy};
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -155,6 +155,21 @@ impl Args {
             }),
         }
     }
+
+    /// `--name C` as a [`ContentionModel`], with a default.  The error
+    /// names the flag and lists the accepted spellings.
+    pub fn contention_flag(
+        &self,
+        name: &str,
+        default: ContentionModel,
+    ) -> Result<ContentionModel> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => ContentionModel::parse(v).ok_or_else(|| {
+                anyhow!("--{name}: unknown contention scope '{v}' (view|pool)")
+            }),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -291,6 +306,26 @@ mod tests {
         assert!(msg.contains("--mask-policy"), "names the flag: {msg}");
         assert!(msg.contains("energy-under-deadline"), "lists the options: {msg}");
         assert!(msg.contains("energy-under-dedline"), "echoes the typo: {msg}");
+    }
+
+    #[test]
+    fn contention_flag_parses_and_rejects_typos() {
+        use crate::types::ContentionModel;
+        let d = ContentionModel::View;
+        assert_eq!(parse("x").contention_flag("contention", d).unwrap(), d);
+        for (spelling, want) in [
+            ("view", ContentionModel::View),
+            ("pool", ContentionModel::Pool),
+            ("Pool", ContentionModel::Pool),
+        ] {
+            let a = parse(&format!("x --contention {spelling}"));
+            assert_eq!(a.contention_flag("contention", d).unwrap(), want);
+        }
+        let err = parse("x --contention full").contention_flag("contention", d).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--contention"), "names the flag: {msg}");
+        assert!(msg.contains("view|pool"), "lists the options: {msg}");
+        assert!(msg.contains("full"), "echoes the typo: {msg}");
     }
 
     #[test]

@@ -7,7 +7,9 @@
 use crate::benchsuite::BenchId;
 use crate::jsonio::Json;
 use crate::scheduler::{AdaptiveParams, HGuidedParams, SchedulerKind};
-use crate::types::{DeviceClass, DeviceSpec, ExecMode, MaskPolicy, Optimizations};
+use crate::types::{
+    ContentionModel, DeviceClass, DeviceSpec, ExecMode, MaskPolicy, Optimizations,
+};
 use anyhow::{anyhow, bail, Context, Result};
 
 /// A complete experiment description.
@@ -26,6 +28,9 @@ pub struct RunConfig {
     /// ("fixed" | "min-energy" | "min-time" | "energy-under-deadline");
     /// "fixed" = the spec masks verbatim.
     pub mask_policy: String,
+    /// Pipeline extension: co-execution contention scope ("view" |
+    /// "pool"); "view" = the legacy per-stage-view retention.
+    pub contention: String,
     pub reps: usize,
     pub devices: Option<Vec<DeviceSpec>>,
     pub seed: u64,
@@ -43,6 +48,7 @@ impl RunConfig {
             buffer_flags: true,
             estimate_refine: false,
             mask_policy: MaskPolicy::Fixed.label().into(),
+            contention: ContentionModel::View.label().into(),
             reps: 50,
             devices: None,
             seed: 1,
@@ -89,6 +95,10 @@ impl RunConfig {
             cfg.mask_policy =
                 m.as_str().ok_or_else(|| anyhow!("'mask_policy' must be a string"))?.into();
         }
+        if let Some(c) = v.get("contention") {
+            cfg.contention =
+                c.as_str().ok_or_else(|| anyhow!("'contention' must be a string"))?.into();
+        }
         if let Some(r) = v.get("reps") {
             cfg.reps =
                 r.as_u64().ok_or_else(|| anyhow!("'reps' must be a positive integer"))? as usize;
@@ -104,6 +114,7 @@ impl RunConfig {
         }
         cfg.parse_mode()?; // validate eagerly
         cfg.parse_mask_policy()?;
+        cfg.parse_contention()?;
         Ok(cfg)
     }
 
@@ -139,6 +150,13 @@ impl RunConfig {
         })
     }
 
+    /// The co-execution contention scope this config asks for (feeds
+    /// `Engine::with_contention` for pipeline runs).
+    pub fn parse_contention(&self) -> Result<ContentionModel> {
+        ContentionModel::parse(&self.contention)
+            .ok_or_else(|| anyhow!("unknown contention '{}' (view|pool)", self.contention))
+    }
+
     pub fn optimizations(&self) -> Optimizations {
         Optimizations {
             init_overlap: self.init_overlap,
@@ -154,7 +172,8 @@ impl RunConfig {
             .with_scheduler(self.scheduler.clone())
             .with_mode(self.parse_mode()?)
             .with_optimizations(self.optimizations())
-            .with_mask_policy(self.parse_mask_policy()?);
+            .with_mask_policy(self.parse_mask_policy()?)
+            .with_contention(self.parse_contention()?);
         if let Some(gws) = self.gws {
             e = e.with_gws(gws);
         }
@@ -336,6 +355,15 @@ mod tests {
         let refined = Json::parse(r#"{"bench": "gaussian", "estimate_refine": true}"#).unwrap();
         assert!(RunConfig::from_json(&refined).unwrap().optimizations().estimate_refine);
         assert_eq!(c.parse_mask_policy().unwrap(), MaskPolicy::Fixed, "default fixed");
+        assert_eq!(c.parse_contention().unwrap(), ContentionModel::View, "default view");
+        let doc = r#"{"bench": "gaussian", "contention": "pool"}"#;
+        let pooled = RunConfig::from_json(&Json::parse(doc).unwrap()).unwrap();
+        assert_eq!(pooled.parse_contention().unwrap(), ContentionModel::Pool);
+        assert_eq!(
+            pooled.build_engine().unwrap().contention(),
+            ContentionModel::Pool,
+            "contention scope wired into the engine"
+        );
         let doc = r#"{"bench": "gaussian", "mask_policy": "energy-under-deadline"}"#;
         let masked = RunConfig::from_json(&Json::parse(doc).unwrap()).unwrap();
         assert_eq!(masked.parse_mask_policy().unwrap(), MaskPolicy::EnergyUnderDeadline);
@@ -397,5 +425,8 @@ mod tests {
         assert!(RunConfig::from_json(&bad_reps).is_err(), "reps < 2 rejected");
         let bad_mask = Json::parse(r#"{"bench": "gaussian", "mask_policy": "fastest"}"#).unwrap();
         assert!(RunConfig::from_json(&bad_mask).is_err(), "mask policy validated eagerly");
+        let bad_contention =
+            Json::parse(r#"{"bench": "gaussian", "contention": "global"}"#).unwrap();
+        assert!(RunConfig::from_json(&bad_contention).is_err(), "contention validated eagerly");
     }
 }

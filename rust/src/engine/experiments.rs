@@ -11,8 +11,8 @@ use crate::scheduler::{HGuidedParams, SchedulerKind};
 use crate::sim::{simulate_pipeline, PipelineSpec, PipelineStage, SimConfig};
 use crate::stats::geomean;
 use crate::types::{
-    BudgetPolicy, DeviceMask, EnergyPolicy, EstimateScenario, ExecMode, MaskPolicy,
-    Optimizations, TimeBudget,
+    BudgetPolicy, ContentionModel, DeviceMask, EnergyPolicy, EstimateScenario, ExecMode,
+    MaskPolicy, Optimizations, TimeBudget,
 };
 
 use super::Engine;
@@ -759,6 +759,7 @@ pub fn pipeline_sweep(
     iterations: u32,
     scheduler: &SchedulerKind,
     opts: Optimizations,
+    contention: ContentionModel,
     policies: &[BudgetPolicy],
     energies: &[EnergyPolicy],
     estimates: &[EstimateScenario],
@@ -775,6 +776,7 @@ pub fn pipeline_sweep(
         for rep in 1..=ref_reps as u64 {
             let mut cfg = SimConfig::testbed(&bench, scheduler.clone());
             cfg.opts = opts;
+            cfg.contention = contention;
             cfg.seed = rep;
             t_ref += simulate_pipeline(&PipelineSpec::repeat(bench.clone(), iterations), &cfg)
                 .roi_time;
@@ -790,8 +792,9 @@ pub fn pipeline_sweep(
                             .with_budget(Some(budget))
                             .with_policy(policy)
                             .with_energy(energy);
-                        let cell =
-                            run_pipeline_cell(&spec, &bench, scheduler, opts, est, reps, mult);
+                        let cell = run_pipeline_cell(
+                            &spec, &bench, scheduler, opts, contention, est, reps, mult,
+                        );
                         iter_rows.extend(cell.1);
                         rows.push(cell.0);
                     }
@@ -809,6 +812,7 @@ fn run_pipeline_cell(
     bench: &Bench,
     scheduler: &SchedulerKind,
     opts: Optimizations,
+    contention: ContentionModel,
     est: EstimateScenario,
     reps: usize,
     budget_mult: f64,
@@ -826,6 +830,7 @@ fn run_pipeline_cell(
     for rep in 0..reps {
         let mut cfg = SimConfig::testbed(bench, scheduler.clone());
         cfg.opts = opts;
+        cfg.contention = contention;
         cfg.estimate = est;
         cfg.seed = rep as u64 + 1;
         let out = simulate_pipeline(spec, &cfg);
@@ -975,6 +980,7 @@ fn branch_stages(benches: &[BenchId], masks: &[DeviceMask], iterations: u32) -> 
 /// unconstrained **serial** ROI time, so a sub-1.0 multiplier is
 /// infeasible for the serial schedule while branch parallelism may still
 /// reach it — the headline of the device-pool refactor.
+#[allow(clippy::too_many_arguments)]
 pub fn branch_compare(
     reps: usize,
     benches: &[BenchId],
@@ -982,6 +988,7 @@ pub fn branch_compare(
     iterations: u32,
     scheduler: &SchedulerKind,
     opts: Optimizations,
+    contention: ContentionModel,
     budget_mults: &[f64],
 ) -> Vec<BranchRow> {
     assert!(reps >= 2, "need at least warm-up + 1");
@@ -1009,6 +1016,7 @@ pub fn branch_compare(
     for rep in 1..=ref_reps as u64 {
         let mut cfg = SimConfig::testbed(&template, scheduler.clone());
         cfg.opts = opts;
+        cfg.contention = contention;
         cfg.seed = rep;
         t_ref += simulate_pipeline(&mk_spec(true), &cfg).roi_time;
     }
@@ -1026,6 +1034,7 @@ pub fn branch_compare(
             for rep in 0..reps {
                 let mut cfg = SimConfig::testbed(&template, scheduler.clone());
                 cfg.opts = opts;
+                cfg.contention = contention;
                 cfg.seed = rep as u64 + 1;
                 let out = simulate_pipeline(&spec, &cfg);
                 if rep == 0 {
@@ -1130,6 +1139,7 @@ pub fn mask_compare(
     iterations: u32,
     scheduler: &SchedulerKind,
     opts: Optimizations,
+    contention: ContentionModel,
     budget_mults: &[f64],
     policy: MaskPolicy,
 ) -> Vec<MaskRow> {
@@ -1156,6 +1166,7 @@ pub fn mask_compare(
     for rep in 1..=ref_reps as u64 {
         let mut cfg = SimConfig::testbed(&template, scheduler.clone());
         cfg.opts = opts;
+        cfg.contention = contention;
         cfg.seed = rep;
         t_ref += simulate_pipeline(&mk_spec(MaskPolicy::Fixed), &cfg).roi_time;
     }
@@ -1181,6 +1192,7 @@ pub fn mask_compare(
             for rep in 0..reps {
                 let mut cfg = SimConfig::testbed(&template, scheduler.clone());
                 cfg.opts = opts;
+                cfg.contention = contention;
                 cfg.seed = rep as u64 + 1;
                 let out = simulate_pipeline(&spec, &cfg);
                 if rep == 0 {
@@ -1221,6 +1233,152 @@ pub fn mask_compare(
                 j_per_hit,
                 shed_stages: crate::stats::mean(&shed),
                 chosen,
+            });
+        }
+    }
+    rows
+}
+
+// ------------------------------------------------- contention comparison
+/// One cell of the view-vs-pool contention comparison: the
+/// [`branch_compare`] independent-branch DAG executed branch-parallel
+/// under both contention scopes, same absolute deadlines.  The delta
+/// between the paired rows *is* the cross-branch interference the legacy
+/// view scope cannot see — the honesty check on every branch-parallel
+/// speedup this repo reports.
+#[derive(Debug, Clone)]
+pub struct ContentionRow {
+    pub pipeline: String,
+    /// Stage masks, `/`-separated (the `--stage-devices` spelling).
+    pub masks: String,
+    /// Contention scope label (`view` or `pool`).
+    pub contention: String,
+    /// Budget as a multiple of the unconstrained *view-scoped* ROI time.
+    pub budget_mult: f64,
+    pub deadline_s: f64,
+    pub mean_roi_s: f64,
+    pub hit_rate: f64,
+    pub mean_slack_s: f64,
+    pub mean_pool_utilization: f64,
+    pub mean_energy_j: f64,
+    /// Mean number of active-set windows per run (0 under view scope).
+    pub mean_active_windows: f64,
+}
+
+impl CsvRow for ContentionRow {
+    fn csv_header() -> &'static str {
+        "pipeline,masks,contention,budget_mult,deadline_s,mean_roi_s,hit_rate,\
+         mean_slack_s,mean_pool_utilization,mean_energy_j,mean_active_windows"
+    }
+    fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{},{},{}",
+            self.pipeline,
+            self.masks,
+            self.contention,
+            self.budget_mult,
+            self.deadline_s,
+            self.mean_roi_s,
+            self.hit_rate,
+            self.mean_slack_s,
+            self.mean_pool_utilization,
+            self.mean_energy_j,
+            self.mean_active_windows
+        )
+    }
+}
+
+/// Compare view-scoped against pool-scoped contention on the
+/// independent-branch DAG of [`branch_compare`] (branch-parallel, fixed
+/// spec masks).  Budgets are multiples of the unconstrained view-scoped
+/// ROI time, so both scopes race the same absolute deadlines and the
+/// pool rows show how much of the view-scoped headroom interference
+/// claws back.
+#[allow(clippy::too_many_arguments)]
+pub fn contention_compare(
+    reps: usize,
+    benches: &[BenchId],
+    masks: &[DeviceMask],
+    iterations: u32,
+    scheduler: &SchedulerKind,
+    opts: Optimizations,
+    budget_mults: &[f64],
+) -> Vec<ContentionRow> {
+    assert!(reps >= 2, "need at least warm-up + 1");
+    assert!(!benches.is_empty(), "need at least one benchmark");
+    assert!(masks.len() >= 2, "a contention comparison needs >= 2 stage masks");
+    let stages = branch_stages(benches, masks, iterations);
+    let template = Bench::new(benches[0]);
+    let classes: Vec<_> = SimConfig::testbed(&template, scheduler.clone())
+        .devices
+        .iter()
+        .map(|d| d.class)
+        .collect();
+    let mask_label = masks.iter().map(|m| m.label(&classes)).collect::<Vec<_>>().join("/");
+    let spec_for = |budget: Option<f64>| {
+        let s = PipelineSpec {
+            stages: stages.clone(),
+            budget: None,
+            policy: BudgetPolicy::CarryOverSlack,
+            energy: EnergyPolicy::RaceToIdle,
+            mask_policy: MaskPolicy::Fixed,
+            serial: false,
+        };
+        match budget {
+            Some(d) => s.with_deadline(d),
+            None => s,
+        }
+    };
+    // Unconstrained view-scoped reference for the budget ladder.
+    let ref_reps = reps.clamp(2, 4);
+    let mut t_ref = 0.0;
+    for rep in 1..=ref_reps as u64 {
+        let mut cfg = SimConfig::testbed(&template, scheduler.clone());
+        cfg.opts = opts;
+        cfg.seed = rep;
+        t_ref += simulate_pipeline(&spec_for(None), &cfg).roi_time;
+    }
+    t_ref /= ref_reps as f64;
+
+    let mut rows = Vec::new();
+    for &mult in budget_mults {
+        for contention in ContentionModel::ALL {
+            let spec = spec_for(Some(mult * t_ref));
+            let mut roi = Vec::new();
+            let mut slack = Vec::new();
+            let mut util = Vec::new();
+            let mut energy = Vec::new();
+            let mut windows = Vec::new();
+            let mut hits = 0usize;
+            for rep in 0..reps {
+                let mut cfg = SimConfig::testbed(&template, scheduler.clone());
+                cfg.opts = opts;
+                cfg.contention = contention;
+                cfg.seed = rep as u64 + 1;
+                let out = simulate_pipeline(&spec, &cfg);
+                if rep == 0 {
+                    continue; // warm-up
+                }
+                let v = out.deadline.expect("budgeted cell");
+                hits += v.met as usize;
+                slack.push(v.slack_s);
+                roi.push(out.roi_time);
+                util.push(metrics::pool_utilization(&out.devices, out.roi_time));
+                energy.push(out.energy_j);
+                windows.push(out.active_windows.len() as f64);
+            }
+            rows.push(ContentionRow {
+                pipeline: spec.label(),
+                masks: mask_label.clone(),
+                contention: contention.label().into(),
+                budget_mult: mult,
+                deadline_s: mult * t_ref,
+                mean_roi_s: crate::stats::mean(&roi),
+                hit_rate: hits as f64 / (reps - 1) as f64,
+                mean_slack_s: crate::stats::mean(&slack),
+                mean_pool_utilization: crate::stats::mean(&util),
+                mean_energy_j: crate::stats::mean(&energy),
+                mean_active_windows: crate::stats::mean(&windows),
             });
         }
     }
@@ -1323,6 +1481,7 @@ mod tests {
             4,
             &SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() },
             Optimizations::ALL,
+            ContentionModel::View,
             &[BudgetPolicy::EvenSplit, BudgetPolicy::CarryOverSlack],
             &[EnergyPolicy::RaceToIdle],
             &[EstimateScenario::Exact],
@@ -1358,6 +1517,7 @@ mod tests {
             2,
             &SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() },
             Optimizations::ALL,
+            ContentionModel::View,
             &[1.1],
         );
         assert_eq!(rows.len(), 2, "one serial + one branch-parallel row");
@@ -1388,6 +1548,7 @@ mod tests {
             2,
             &SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() },
             Optimizations::ALL,
+            ContentionModel::View,
             &[0.9, 1.6],
             MaskPolicy::EnergyUnderDeadline,
         );
@@ -1427,6 +1588,38 @@ mod tests {
         assert!(loose.shed_stages > 0.0, "loose budget sheds: {loose:?}");
         assert!(loose.mean_energy_j < loose_fixed.mean_energy_j);
         assert!(loose.csv_row().starts_with("Gaussian+Mandelbrot,cpu+igpu/gpu,"));
+    }
+
+    #[test]
+    fn contention_compare_prices_cross_branch_interference() {
+        // The overlap scenario: two independent single-device branches
+        // (iGPU / GPU) co-execute, so under the pool scope both lose
+        // their solo retention — interference the view scope cannot see
+        // at all (each branch's view has one device).
+        let rows = contention_compare(
+            3,
+            &[BenchId::Gaussian, BenchId::Mandelbrot],
+            &[DeviceMask::single(1), DeviceMask::single(2)],
+            2,
+            &SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() },
+            Optimizations::ALL,
+            &[1.2],
+        );
+        assert_eq!(rows.len(), 2, "one view + one pool row per budget");
+        let view = rows.iter().find(|r| r.contention == "view").unwrap();
+        let pool = rows.iter().find(|r| r.contention == "pool").unwrap();
+        assert_eq!(view.masks, "igpu/gpu");
+        assert!((view.deadline_s - pool.deadline_s).abs() < 1e-12, "same budget");
+        assert!(
+            pool.mean_roi_s > view.mean_roi_s,
+            "pool contention must slow the overlapping branches: \
+             pool {} !> view {}",
+            pool.mean_roi_s,
+            view.mean_roi_s
+        );
+        assert_eq!(view.mean_active_windows, 0.0, "view runs record no windows");
+        assert!(pool.mean_active_windows >= 2.0, "pool runs trace the active set");
+        assert!(pool.csv_row().starts_with("Gaussian+Mandelbrot,igpu/gpu,pool,"));
     }
 
     #[test]

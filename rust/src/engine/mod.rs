@@ -30,7 +30,8 @@ use crate::scheduler::SchedulerKind;
 use crate::sim::{simulate, SimConfig, SimOutcome};
 use crate::stats::Summary;
 use crate::types::{
-    DeviceSpec, EstimateScenario, ExecMode, MaskPolicy, Optimizations, TimeBudget,
+    ContentionModel, DeviceSpec, EstimateScenario, ExecMode, MaskPolicy, Optimizations,
+    TimeBudget,
 };
 
 /// Tier-1 entry point: configure and launch co-executions of one
@@ -47,6 +48,7 @@ pub struct Engine {
     budget: Option<TimeBudget>,
     estimate: EstimateScenario,
     mask_policy: MaskPolicy,
+    contention: ContentionModel,
 }
 
 /// One run's report: timing + the paper's metrics inputs.
@@ -95,6 +97,7 @@ impl Engine {
             budget: None,
             estimate: EstimateScenario::Exact,
             mask_policy: MaskPolicy::Fixed,
+            contention: ContentionModel::View,
         }
     }
 
@@ -167,6 +170,19 @@ impl Engine {
         self.mask_policy
     }
 
+    /// Scope co-execution retention per stage view (legacy default) or
+    /// against the pool's concurrently-active device count; applies to
+    /// pipeline runs ([`Engine::run_pipeline`] / [`Engine::run_iterative`]).
+    pub fn with_contention(mut self, contention: ContentionModel) -> Self {
+        self.contention = contention;
+        self
+    }
+
+    /// The configured contention scope.
+    pub fn contention(&self) -> ContentionModel {
+        self.contention
+    }
+
     pub fn bench(&self) -> &Bench {
         &self.bench
     }
@@ -185,6 +201,7 @@ impl Engine {
             fail: None,
             budget: self.budget,
             estimate: self.estimate,
+            contention: self.contention,
         }
     }
 

@@ -22,7 +22,8 @@ use enginecl::runtime::ArtifactDir;
 use enginecl::scheduler::{AdaptiveParams, SchedulerKind};
 use enginecl::sim::coexec::testbed_devices;
 use enginecl::types::{
-    BudgetPolicy, DeviceClass, EnergyPolicy, EstimateScenario, MaskPolicy, Optimizations,
+    BudgetPolicy, ContentionModel, DeviceClass, EnergyPolicy, EstimateScenario, MaskPolicy,
+    Optimizations,
 };
 use std::path::PathBuf;
 
@@ -50,10 +51,12 @@ USAGE:
                   [--sched S] [--err F] [--budgets M1,M2,..] [--refine]
                   [--stage-devices M1/M2] [--branch-csv PATH]
                   [--mask-policy P] [--mask-csv PATH]
+                  [--contention view|pool] [--contention-csv PATH]
                   [--csv PATH] [--iter-csv PATH] [--json PATH]
                   # global-deadline pipelines: per-iteration sub-budgets,
-                  # plus a branch-parallel vs serial DAG comparison and a
-                  # fixed-vs-searching mask-policy comparison on the
+                  # plus a branch-parallel vs serial DAG comparison, a
+                  # fixed-vs-searching mask-policy comparison and a
+                  # view-vs-pool contention comparison on the
                   # --stage-devices masks
 
 benches:  gaussian binomial nbody ray ray2 mandelbrot
@@ -64,6 +67,11 @@ mask-policy: fixed | min-energy | min-time | energy-under-deadline
           (per-stage device-subset selection; 'fixed' takes the spec
           masks verbatim, the others shed energy-inefficient devices
           when the remaining subset still serves the sub-deadlines)
+contention: view | pool
+          (co-execution retention scope: 'view' prices each stage
+          against its own device view — the legacy optimistic model —
+          'pool' derives it from the number of concurrently active
+          devices on the whole pool, re-priced at stage launch/finish)
 masks:    per-stage device masks, '/'-separated; one mask is 'all', class
           names (cpu, igpu, gpu) or pool indices joined by '+' or ','
           (e.g. cpu+igpu/gpu runs branch 1 on CPU+iGPU, branch 2 on GPU)
@@ -582,11 +590,13 @@ fn pipeline_sweep(args: Args) -> Result<()> {
         bail!("--stage-devices needs >= 2 '/'-separated masks (one per DAG branch)");
     }
     let mask_policy = args.mask_policy_flag("mask-policy", MaskPolicy::EnergyUnderDeadline)?;
+    let contention = args.contention_flag("contention", ContentionModel::View)?;
     let estimates = [EstimateScenario::Exact, EstimateScenario::Pessimistic { err }];
     println!(
         "PIPELINE SWEEP — {iters}-iteration pipelines, global deadline split by \
-         budget policy ({reps} reps, sched {}{})",
+         budget policy ({reps} reps, sched {}, {}-scoped contention{})",
         sched.label(),
+        contention.label(),
         if opts.estimate_refine { ", refined estimates" } else { "" }
     );
     let (rows, iter_rows) = experiments::pipeline_sweep(
@@ -595,6 +605,7 @@ fn pipeline_sweep(args: Args) -> Result<()> {
         iters,
         &sched,
         opts,
+        contention,
         &policies,
         &energies,
         &estimates,
@@ -630,8 +641,9 @@ fn pipeline_sweep(args: Args) -> Result<()> {
     // Device-pool partitioning headline: the same independent-branch DAG
     // executed serially vs branch-parallel on the --stage-devices masks,
     // under the same absolute deadlines.
-    let branch_rows =
-        experiments::branch_compare(reps, &benches, &masks, iters, &sched, opts, &mults);
+    let branch_rows = experiments::branch_compare(
+        reps, &benches, &masks, iters, &sched, opts, contention, &mults,
+    );
     println!("-- branch-parallel vs serial ({} branches) --", masks.len());
     println!(
         "{:<24}{:<18}{:>16}{:>7}{:>10}{:>6}{:>10}{:>8}",
@@ -669,6 +681,7 @@ fn pipeline_sweep(args: Args) -> Result<()> {
             iters,
             &sched,
             opts,
+            contention,
             &mults,
             mask_policy,
         );
@@ -698,6 +711,37 @@ fn pipeline_sweep(args: Args) -> Result<()> {
             write_csv(&p, &mask_rows)?;
             println!("wrote {}", p.display());
         }
+    }
+    // Cross-branch contention headline: the same branch-parallel DAG
+    // under view-scoped vs pool-scoped retention, same absolute
+    // deadlines — the delta is the interference the legacy model hides.
+    let contention_rows =
+        experiments::contention_compare(reps, &benches, &masks, iters, &sched, opts, &mults);
+    println!("-- contention: view-scoped vs pool-scoped retention --");
+    println!(
+        "{:<24}{:<18}{:>11}{:>7}{:>10}{:>6}{:>10}{:>8}{:>11}{:>9}",
+        "pipeline", "masks", "contention", "mult", "roi(s)", "hit", "slack(s)", "util",
+        "energy(J)", "windows"
+    );
+    for r in &contention_rows {
+        println!(
+            "{:<24}{:<18}{:>11}{:>7.2}{:>10.4}{:>6.2}{:>10.4}{:>8.3}{:>11.1}{:>9.1}",
+            r.pipeline,
+            r.masks,
+            r.contention,
+            r.budget_mult,
+            r.mean_roi_s,
+            r.hit_rate,
+            r.mean_slack_s,
+            r.mean_pool_utilization,
+            r.mean_energy_j,
+            r.mean_active_windows
+        );
+    }
+    if let Some(p) = args.flag("contention-csv") {
+        let p = PathBuf::from(p);
+        write_csv(&p, &contention_rows)?;
+        println!("wrote {}", p.display());
     }
     if let Some(p) = args.csv()? {
         write_csv(&p, &rows)?;

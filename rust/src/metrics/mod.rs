@@ -4,7 +4,7 @@
 //! deadline sweep emits as JSON.
 
 use crate::jsonio::Json;
-use crate::sim::{DeviceTrace, IterVerdict, PipelineOutcome, SimOutcome, StageTrace};
+use crate::sim::{ActiveWindow, DeviceTrace, IterVerdict, PipelineOutcome, SimOutcome, StageTrace};
 use crate::types::DeadlineVerdict;
 
 /// Load-balance effectiveness: `T_FD / T_LD` over the devices that
@@ -138,7 +138,7 @@ pub fn stage_trace_json(s: &StageTrace) -> Json {
     let ids = |m: crate::types::DeviceMask| {
         Json::Arr(m.indices().into_iter().map(|i| Json::Num(i as f64)).collect())
     };
-    Json::obj(vec![
+    let mut pairs = vec![
         ("stage", Json::Num(s.stage as f64)),
         ("devices", ids(s.mask)),
         ("spec_devices", ids(s.spec_mask)),
@@ -149,6 +149,28 @@ pub fn stage_trace_json(s: &StageTrace) -> Json {
         ("pred_iter_s", Json::Num(s.pred_iter_s)),
         ("pred_energy_j", Json::Num(s.pred_energy_j)),
         ("marginal_energy_j", Json::Num(s.marginal_energy_j)),
+    ];
+    // Pool-contention annotations: emitted only under pool scope, so
+    // view-scoped documents stay byte-identical to the pre-contention
+    // engine (the golden snapshots pin this).
+    if let Some(active) = s.active_at_launch {
+        pairs.push(("active_at_launch", Json::Num(active as f64)));
+    }
+    if let Some(retention) = &s.retention_at_launch {
+        pairs.push((
+            "retention_at_launch",
+            Json::Arr(retention.iter().map(|&r| Json::Num(r)).collect()),
+        ));
+    }
+    Json::obj(pairs)
+}
+
+/// jsonio projection of one active-set window (pool-scoped contention).
+pub fn active_window_json(w: &ActiveWindow) -> Json {
+    Json::obj(vec![
+        ("start_s", Json::Num(w.start_s)),
+        ("end_s", Json::Num(w.end_s)),
+        ("active", Json::Num(w.active as f64)),
     ])
 }
 
@@ -156,7 +178,7 @@ pub fn stage_trace_json(s: &StageTrace) -> Json {
 /// per-iteration verdicts, per-branch stage windows, pool utilization,
 /// and the energy-under-deadline metrics.
 pub fn pipeline_json(out: &PipelineOutcome) -> Json {
-    Json::obj(vec![
+    let mut pairs = vec![
         ("total_time_s", Json::Num(out.total_time)),
         ("roi_time_s", Json::Num(out.roi_time)),
         ("energy_j", Json::Num(out.energy_j)),
@@ -174,7 +196,22 @@ pub fn pipeline_json(out: &PipelineOutcome) -> Json {
         ("energy_per_hit_j", Json::opt_num(out.energy_per_hit_j())),
         ("iters", Json::Arr(out.iter_verdicts.iter().map(iter_verdict_json).collect())),
         ("stages", Json::Arr(out.stages.iter().map(stage_trace_json).collect())),
-    ])
+    ];
+    // Conditional fields keep legacy (view-scoped, narrow-pool) documents
+    // byte-identical to the pre-contention engine.
+    if !out.active_windows.is_empty() {
+        pairs.push((
+            "active_windows",
+            Json::Arr(out.active_windows.iter().map(active_window_json).collect()),
+        ));
+    }
+    if !out.mask_search_skipped.is_empty() {
+        pairs.push((
+            "mask_search_skipped",
+            Json::Arr(out.mask_search_skipped.iter().map(|&i| Json::Num(i as f64)).collect()),
+        ));
+    }
+    Json::obj(pairs)
 }
 
 #[cfg(test)]

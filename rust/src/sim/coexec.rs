@@ -20,8 +20,8 @@ use crate::cldriver::{self, DriverProfile, PowerModel, TransferModel};
 use crate::scheduler::{SchedCtx, SchedulerKind};
 use crate::stats::XorShift64;
 use crate::types::{
-    DeadlineVerdict, DeviceClass, DeviceSpec, EstimateScenario, ExecMode, GroupRange,
-    Optimizations, TimeBudget,
+    ContentionModel, DeadlineVerdict, DeviceClass, DeviceSpec, EstimateScenario, ExecMode,
+    GroupRange, Optimizations, TimeBudget,
 };
 use std::cmp::Ordering;
 
@@ -49,6 +49,11 @@ pub struct SimConfig {
     pub budget: Option<TimeBudget>,
     /// How the scheduler's `P_i` estimates relate to the true powers.
     pub estimate: EstimateScenario,
+    /// How co-execution retention is scoped when pipeline stages overlap:
+    /// per stage view (legacy) or against the pool's concurrently-active
+    /// device count (cross-branch contention).  Single-shot runs and
+    /// serial pipelines are unaffected (their view *is* the active set).
+    pub contention: ContentionModel,
 }
 
 impl SimConfig {
@@ -67,6 +72,7 @@ impl SimConfig {
             fail: None,
             budget: None,
             estimate: EstimateScenario::Exact,
+            contention: ContentionModel::View,
         }
     }
 
@@ -154,10 +160,10 @@ pub(crate) enum IterPhase {
 }
 
 impl IterPhase {
-    fn pay_h2d_items(&self) -> bool {
+    pub(crate) fn pay_h2d_items(&self) -> bool {
         matches!(self, IterPhase::Single | IterPhase::First)
     }
-    fn pay_d2h_items(&self) -> bool {
+    pub(crate) fn pay_d2h_items(&self) -> bool {
         matches!(self, IterPhase::Single | IterPhase::Last)
     }
 }
@@ -225,22 +231,25 @@ impl EventList {
 pub(crate) fn effective_powers(cfg: &SimConfig) -> Vec<f64> {
     let powers: Vec<f64> = cfg.devices.iter().map(|d| d.power).collect();
     let classes: Vec<DeviceClass> = cfg.devices.iter().map(|d| d.class).collect();
-    scheduler_view_powers(&powers, &classes, &cfg.driver, cfg.estimate)
+    let active = powers.len();
+    scheduler_view_powers(&powers, &classes, &cfg.driver, cfg.estimate, active)
 }
 
-/// The shared per-device estimate formula behind [`effective_powers`] and
-/// the mask-policy predictor: co-execution retention applies only when
-/// more than one device is active, and the estimate scenario skews every
-/// device except the fastest (the normalization reference).  Keeping one
-/// implementation guarantees the selector predicts with exactly the
-/// `P_i` view the scheduler will be armed with.
+/// The shared per-device estimate formula behind [`effective_powers`],
+/// the pool-contention engine and the mask-policy predictor: retention is
+/// [`DriverProfile::retention_at`] for the given concurrently-`active`
+/// device count (the view size under view-scoped contention; the pool's
+/// active-set snapshot under pool-scoped contention), and the estimate
+/// scenario skews every device except the fastest (the normalization
+/// reference).  Keeping one implementation guarantees the selector
+/// predicts with exactly the `P_i` view the scheduler will be armed with.
 pub(crate) fn scheduler_view_powers(
     powers: &[f64],
     classes: &[DeviceClass],
     driver: &DriverProfile,
     estimate: EstimateScenario,
+    active: usize,
 ) -> Vec<f64> {
-    let n = powers.len();
     let fastest = powers
         .iter()
         .enumerate()
@@ -251,11 +260,7 @@ pub(crate) fn scheduler_view_powers(
         .iter()
         .enumerate()
         .map(|(i, &p)| {
-            let r = if n > 1 {
-                driver.coexec_retention[cldriver::class_idx(classes[i])]
-            } else {
-                1.0
-            };
+            let r = driver.retention_at(cldriver::class_idx(classes[i]), active);
             estimate.skew(p * r, i == fastest)
         })
         .collect()
@@ -289,6 +294,69 @@ pub(crate) struct RoiPass<'a> {
     /// [`effective_powers`] — the pipeline engine's measured-throughput
     /// feedback (`Optimizations::estimate_refine`).
     pub powers_override: Option<&'a [f64]>,
+}
+
+/// The priced timeline of one granted package — the single package cost
+/// model shared by [`run_roi`] (view scope) and the pool-contention
+/// engine in `sim/pipeline` (which re-times `compute_end` at active-set
+/// boundaries).  `done == ((compute_start + launch) + compute) + d2h`,
+/// associativity-identical to the historical inline expression, so
+/// existing schedules are bit-identical.
+pub(crate) struct PackagePricing {
+    pub grant_at: f64,
+    pub compute_start: f64,
+    /// Compute begins here (after the kernel-launch overhead).
+    pub work_start: f64,
+    pub compute_end: f64,
+    /// Output-transfer tail after the compute.
+    pub d2h: f64,
+    pub done: f64,
+}
+
+/// Price one package grant: host serialization (grant + input transfer),
+/// retention-scaled compute with multiplicative jitter, launch overhead
+/// and the output transfer.  `retention` is the caller's contention
+/// factor ([`DriverProfile::retention_at`] at the view size or the
+/// pool's active count).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn price_package(
+    bench: &Bench,
+    spec: &DeviceSpec,
+    transfers: &TransferModel,
+    driver: &DriverProfile,
+    phase: IterPhase,
+    groups: GroupRange,
+    gws: u64,
+    retention: f64,
+    t: f64,
+    host_free: f64,
+    rng: &mut XorShift64,
+) -> PackagePricing {
+    let lws = bench.props.lws;
+    let items = groups.items(lws);
+    let eff_items = crate::types::ItemRange::new(items.begin, items.end.min(gws));
+    let grant_at = t.max(host_free);
+    let bytes_in = if phase.pay_h2d_items() {
+        eff_items.len() as f64 * bench.bytes_in_per_item + bench.bytes_in_per_package
+    } else {
+        bench.bytes_in_per_package
+    };
+    let h2d = transfers.h2d(spec.class, bytes_in);
+    let grant_overhead = driver.grant_overhead_us * 1e-6;
+    let compute_start = grant_at + grant_overhead + h2d;
+    let cost = bench.range_cost(eff_items, gws);
+    let throughput = spec.power * bench.gpu_units_per_sec * retention;
+    let compute = cost / throughput * rng.jitter(driver.jitter_sigma);
+    let bytes_out = if phase.pay_d2h_items() {
+        eff_items.len() as f64 * bench.bytes_out_per_item
+    } else {
+        0.0
+    };
+    let d2h = transfers.d2h(spec.class, bytes_out);
+    let work_start = compute_start + transfers.launch(spec.class);
+    let compute_end = work_start + compute;
+    let done = compute_end + d2h;
+    PackagePricing { grant_at, compute_start, work_start, compute_end, d2h, done }
 }
 
 /// One ROI pass (one kernel iteration) of the pull-based event loop;
@@ -327,7 +395,6 @@ pub(crate) fn run_roi(
     }
     let mut sched = cfg.scheduler.build(&ctx);
     let transfers = TransferModel::new(&cfg.driver, cfg.opts.buffer_flags);
-    let grant_overhead = cfg.driver.grant_overhead_us * 1e-6;
 
     // At most one outstanding event per device, so a linear-scan list
     // beats a BinaryHeap for the 3-device testbed (EXPERIMENTS.md §Perf,
@@ -376,38 +443,30 @@ pub(crate) fn run_roi(
             },
         };
         let spec = &cfg.devices[dev];
-        let items = groups.items(lws);
-        let eff_items = crate::types::ItemRange::new(items.begin, items.end.min(gws));
-
-        // Host serialization: grant + input transfer enqueue.
-        let grant_at = t.max(host_free);
-        let bytes_in = if phase.pay_h2d_items() {
-            eff_items.len() as f64 * bench.bytes_in_per_item + bench.bytes_in_per_package
-        } else {
-            bench.bytes_in_per_package
-        };
-        let h2d = transfers.h2d(spec.class, bytes_in);
-        let compute_start = grant_at + grant_overhead + h2d;
+        // Host serialization (grant + input transfer enqueue) and the
+        // parallel device phase (launch + compute + output transfer),
+        // priced by the shared package model.  Under co-execution each
+        // class retains only a fraction of its standalone throughput
+        // (shared DDR3 + host-thread contention); this view-scoped loop
+        // prices it at the view size (the pool engine in `sim/pipeline`
+        // prices the pool's active set instead).
+        let retention = cfg.driver.retention_at(cldriver::class_idx(spec.class), n);
+        let pricing = price_package(
+            bench,
+            spec,
+            &transfers,
+            &cfg.driver,
+            phase,
+            groups,
+            gws,
+            retention,
+            t,
+            host_free,
+            rng,
+        );
+        let (grant_at, compute_start, done) =
+            (pricing.grant_at, pricing.compute_start, pricing.done);
         host_free = compute_start;
-
-        // Parallel device phase: launch + compute + output transfer.
-        // Under co-execution each class retains only a fraction of its
-        // standalone throughput (shared DDR3 + host-thread contention).
-        let retention = if n > 1 {
-            cfg.driver.coexec_retention[cldriver::class_idx(spec.class)]
-        } else {
-            1.0
-        };
-        let cost = bench.range_cost(eff_items, gws);
-        let throughput = spec.power * bench.gpu_units_per_sec * retention;
-        let compute = cost / throughput * rng.jitter(cfg.driver.jitter_sigma);
-        let bytes_out = if phase.pay_d2h_items() {
-            eff_items.len() as f64 * bench.bytes_out_per_item
-        } else {
-            0.0
-        };
-        let d2h = transfers.d2h(spec.class, bytes_out);
-        let done = compute_start + transfers.launch(spec.class) + compute + d2h;
 
         // Fault injection: the package is lost if this device dies before
         // completing it.  Finish clocks are pipeline-cumulative, so the

@@ -17,6 +17,6 @@ pub mod pipeline;
 
 pub use coexec::{simulate, simulate_iterative, DeviceTrace, PackageTrace, SimConfig, SimOutcome};
 pub use pipeline::{
-    simulate_pipeline, IterOutcome, IterVerdict, PipelineOutcome, PipelineSpec, PipelineStage,
-    StageTrace,
+    simulate_pipeline, ActiveWindow, IterOutcome, IterVerdict, PipelineOutcome, PipelineSpec,
+    PipelineStage, StageTrace,
 };

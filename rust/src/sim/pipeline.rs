@@ -59,23 +59,49 @@
 //! mask for the stage's iterations (`estimate_refine` sharpens the
 //! scheduler *within* the chosen mask, not the choice itself).
 //!
-//! Simplifications (documented modelling scope): cross-branch memory
-//! contention is not modelled — co-execution retention is scoped to each
-//! stage's own device view — and each branch serializes its grants on its
-//! own host queue.  Per-iteration **sub-budgets** are likewise assigned
-//! along the topological launch order with a shared carry chain: exact
-//! for serial schedules and chains (the only shapes PR 2 supported), but
-//! for co-executing branches the later-topo branch's [`IterVerdict`]s
-//! judge against serial-chain sub-deadlines and are therefore permissive;
-//! the *pipeline-level* verdict is always exact.  Branch-aware splitting
-//! (slack to the critical path) is a named ROADMAP follow-up.
+//! **Cross-branch contention** ([`ContentionModel`]).  Under the legacy
+//! `View` scope, co-execution retention is priced against each stage's
+//! own device view, so branches co-executing on disjoint masks pay zero
+//! mutual interference — optimistic on shared-DDR commodity platforms.
+//! Under `Pool` scope the engine runs an *interleaved* event loop over
+//! all concurrently active branches: retention derives from the number
+//! of concurrently active devices on the whole pool
+//! ([`crate::cldriver::DriverProfile::retention_at`], the same formula
+//! arming the scheduler's `P_i` estimates and the mask-policy
+//! predictor), and every stage launch/finish event re-prices the
+//! in-flight packages of every running branch — piecewise-constant
+//! retention windows on the cumulative clock ([`ActiveWindow`]), which
+//! the energy accounting integrates over via the stretched busy times.
+//! Window granularity notes: a package samples its retention at grant
+//! and is *re-timed* (remaining compute scaled by the retention ratio)
+//! at each active-set change; transfers and launch overheads are
+//! host/PCIe-side and are not contention-scaled; scheduler `P_i`
+//! estimates re-price at iteration boundaries.  Serial schedules route
+//! through the view-scoped loop (their active set *is* the stage view),
+//! and with the default two-point retention curve a pool-scoped chain
+//! (no overlap) is bit-identical to the view-scoped run.
+//!
+//! Simplifications (documented modelling scope): each branch serializes
+//! its grants on its own host queue.  Per-iteration **sub-budgets** are
+//! assigned along the topological launch order with a shared carry
+//! chain: exact for serial schedules and chains (the only shapes PR 2
+//! supported), but for co-executing branches the later-topo branch's
+//! [`IterVerdict`]s judge against serial-chain sub-deadlines and are
+//! therefore permissive; the *pipeline-level* verdict is always exact.
+//! (Under pool contention the deadline-aware schedulers are *armed* with
+//! a per-branch carry chain — topo-earlier branches may still be running
+//! when a branch launches — while the reported verdicts replay the
+//! canonical topological chain post-hoc, so verdict semantics match the
+//! view engine.)  Branch-aware splitting (slack to the critical path) is
+//! a named ROADMAP follow-up.
 
 use crate::benchsuite::{Bench, BenchId};
-use crate::cldriver::{self, TransferModel};
+use crate::cldriver::{self, DriverProfile, TransferModel};
+use crate::scheduler::{SchedCtx, Scheduler};
 use crate::stats::XorShift64;
 use crate::types::{
-    BudgetPolicy, DeadlineVerdict, DeviceClass, DeviceMask, DevicePool, DeviceView,
-    EnergyPolicy, ExecMode, MaskPolicy, TimeBudget,
+    BudgetPolicy, ContentionModel, DeadlineVerdict, DeviceClass, DeviceMask, DevicePool,
+    DeviceView, EnergyPolicy, ExecMode, GroupRange, MaskPolicy, TimeBudget,
 };
 
 use super::coexec::{self, DeviceTrace, IterPhase, PackageTrace, RoiPass, SimConfig};
@@ -262,10 +288,23 @@ pub struct IterVerdict {
     pub slack_s: f64,
 }
 
+/// One piecewise-constant window of the pool's active-set timeline
+/// (pool-scoped contention only): `active` devices were concurrently
+/// busy on the pool during `[start_s, end_s)`.  Retention — and with it
+/// every in-flight package's effective throughput — is constant within a
+/// window and re-priced at its boundaries (stage launch/finish events).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ActiveWindow {
+    pub start_s: f64,
+    pub end_s: f64,
+    /// Concurrently active pool devices during the window.
+    pub active: usize,
+}
+
 /// Execution window of one stage on the pipeline ROI clock — the
 /// per-branch trace behind pool-utilization reporting and the
 /// branch-overlap assertions.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct StageTrace {
     /// Stage index in [`PipelineSpec::stages`] declaration order.
     pub stage: usize,
@@ -291,6 +330,13 @@ pub struct StageTrace {
     /// Measured marginal energy of the stage: each chosen device's busy
     /// delta priced at `active_w − idle_w` (the prediction's actual).
     pub marginal_energy_j: f64,
+    /// Concurrently-active pool devices (including this stage's own) at
+    /// the instant the stage launched; `None` under view-scoped
+    /// contention.
+    pub active_at_launch: Option<usize>,
+    /// Retention factor each chosen device started with (chosen-mask
+    /// ascending pool-id order); `None` under view-scoped contention.
+    pub retention_at_launch: Option<Vec<f64>>,
 }
 
 impl StageTrace {
@@ -330,6 +376,14 @@ pub struct PipelineOutcome {
     pub deadline: Option<DeadlineVerdict>,
     /// One verdict per iteration (empty when unconstrained).
     pub iter_verdicts: Vec<IterVerdict>,
+    /// The pool's piecewise-constant active-set timeline (pool-scoped
+    /// contention only; empty under the view scope).
+    pub active_windows: Vec<ActiveWindow>,
+    /// Declaration indices of stages whose mask-policy subset search was
+    /// skipped because the spec mask is wider than the search breadth cap
+    /// (`MASK_SEARCH_LIMIT`) — such stages silently keep the spec mask,
+    /// and this field (plus a stderr note) makes the fallback visible.
+    pub mask_search_skipped: Vec<usize>,
 }
 
 /// Compatibility alias: the iterative ROI outcome grew into the pipeline
@@ -493,6 +547,13 @@ struct SelectCtx<'a> {
     total_iters: u32,
     global_iter: u32,
     prev_sub: f64,
+    /// Pool devices already running (or reserved by) other stages at the
+    /// selection instant — empty under view-scoped contention.
+    running: DeviceMask,
+    /// Price candidate retention against the pool's active set (the
+    /// running devices plus the candidate) instead of the candidate view
+    /// size alone.
+    pool_contention: bool,
 }
 
 /// One candidate subset's prediction.
@@ -516,6 +577,9 @@ struct MaskChoice {
     mask: DeviceMask,
     pred_iter_s: f64,
     pred_energy_j: f64,
+    /// The searching policy wanted to enumerate subsets but the spec mask
+    /// exceeds [`MASK_SEARCH_LIMIT`]: the spec mask was kept unsearched.
+    search_skipped: bool,
 }
 
 impl SelectCtx<'_> {
@@ -542,11 +606,20 @@ impl SelectCtx<'_> {
         let start = self.dep_ready.max(resource) + transfer_in;
         let view_powers: Vec<f64> = ids.iter().map(|&i| self.pool_powers[i]).collect();
         let view_classes: Vec<DeviceClass> = ids.iter().map(|&i| self.classes[i]).collect();
+        // Contention priced through the one shared formula: the view size
+        // under the legacy scope, the pool's active set (running devices
+        // plus this candidate) under pool-scoped contention.
+        let active = if self.pool_contention {
+            self.running.union(mask).count()
+        } else {
+            ids.len()
+        };
         let est = coexec::scheduler_view_powers(
             &view_powers,
             &view_classes,
             &self.cfg.driver,
             self.cfg.estimate,
+            active,
         );
         let thr: f64 = est
             .iter()
@@ -620,10 +693,13 @@ fn select_stage_mask(policy: MaskPolicy, spec_mask: DeviceMask, sc: &SelectCtx) 
         spec_pred.end_s
     };
     let spec_energy = sc.energy(&spec_pred, horizon);
+    let search_skipped =
+        !matches!(policy, MaskPolicy::Fixed) && spec_mask.count() > MASK_SEARCH_LIMIT;
     let spec_choice = MaskChoice {
         mask: spec_mask,
         pred_iter_s: spec_pred.iter_s,
         pred_energy_j: spec_energy,
+        search_skipped,
     };
     if matches!(policy, MaskPolicy::Fixed)
         || spec_mask.count() == 1
@@ -644,6 +720,7 @@ fn select_stage_mask(policy: MaskPolicy, spec_mask: DeviceMask, sc: &SelectCtx) 
                         mask: cand,
                         pred_iter_s: p.iter_s,
                         pred_energy_j: sc.energy(&p, horizon),
+                        search_skipped: false,
                     };
                 }
             }
@@ -663,7 +740,12 @@ fn select_stage_mask(policy: MaskPolicy, spec_mask: DeviceMask, sc: &SelectCtx) 
                 let e = sc.energy(&p, horizon);
                 if e < best_energy {
                     best_energy = e;
-                    best = MaskChoice { mask: cand, pred_iter_s: p.iter_s, pred_energy_j: e };
+                    best = MaskChoice {
+                        mask: cand,
+                        pred_iter_s: p.iter_s,
+                        pred_energy_j: e,
+                        search_skipped: false,
+                    };
                 }
             }
         }
@@ -727,12 +809,21 @@ fn refine_powers(
     powers
 }
 
+/// One stage's resolved execution plan: spec mask, masked device view,
+/// and the stage-local run template (indexed by topo position).
+struct Plan {
+    mask: DeviceMask,
+    view: DeviceView,
+    cfg: SimConfig,
+    gws: u64,
+}
+
 /// Run one pipeline on the virtual-clock backend.  `cfg` is the run
 /// template: its device set is the machine's [`DevicePool`], plus
 /// scheduler, driver/power models, optimizations, estimation scenario,
-/// seed, fault injection (pool-indexed), and the default problem size for
-/// stages that don't override it.  `spec.budget` (or, if unset,
-/// `cfg.budget`) is the **global** pipeline budget.
+/// seed, fault injection (pool-indexed), the contention scope, and the
+/// default problem size for stages that don't override it.  `spec.budget`
+/// (or, if unset, `cfg.budget`) is the **global** pipeline budget.
 pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcome {
     assert!(!spec.stages.is_empty(), "pipeline needs at least one stage");
     assert!(!cfg.devices.is_empty(), "no devices");
@@ -743,14 +834,8 @@ pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcom
     let total_iters = spec.total_iterations();
 
     // Resolve per-stage device views and sizes up front: each stage runs
-    // `run_roi` over its masked view with a sub-pool scheduler (per-device
-    // parameters remapped by pool id).
-    struct Plan {
-        mask: DeviceMask,
-        view: DeviceView,
-        cfg: SimConfig,
-        gws: u64,
-    }
+    // its ROI passes over its masked view with a sub-pool scheduler
+    // (per-device parameters remapped by pool id).
     let plans: Vec<Plan> = order
         .iter()
         .map(|&si| {
@@ -822,6 +907,32 @@ pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcom
         .map(|b| coexec::roi_scope_deadline(b.deadline_s, cfg.mode, init_time, release_time));
 
     let transfers = TransferModel::new(&cfg.driver, cfg.opts.buffer_flags);
+    let has_dependents: Vec<bool> = (0..spec.stages.len())
+        .map(|i| spec.stages.iter().any(|s| s.deps.contains(&i)))
+        .collect();
+
+    // Pool-scoped contention runs the interleaved engine (serial
+    // schedules keep the view loop: one stage at a time means the active
+    // set *is* the stage view, so the two scopes coincide there).
+    if cfg.contention == ContentionModel::Pool && !spec.serial {
+        let prep = Prep {
+            spec,
+            cfg,
+            classes: &classes,
+            order: &order,
+            plans: &plans,
+            plan_of: &plan_of,
+            budget,
+            total_iters,
+            init_time,
+            release_time,
+            roi_deadline,
+            transfers: &transfers,
+            has_dependents: &has_dependents,
+        };
+        return pool_schedule(&pool, prep, rng);
+    }
+
     let n_pool = pool.len();
     let mut traces = vec![DeviceTrace::default(); n_pool];
     let mut dev_free = vec![0.0f64; n_pool];
@@ -837,9 +948,7 @@ pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcom
     // Masks the stages actually ran on (by `order` position): producers'
     // chosen masks price the downstream edges.
     let mut chosen_masks: Vec<DeviceMask> = plans.iter().map(|p| p.mask).collect();
-    let has_dependents: Vec<bool> = (0..spec.stages.len())
-        .map(|i| spec.stages.iter().any(|s| s.deps.contains(&i)))
-        .collect();
+    let mut mask_search_skipped: Vec<usize> = Vec::new();
     for (pos, &si) in order.iter().enumerate() {
         let stage = &spec.stages[si];
         let plan = &plans[pos];
@@ -886,8 +995,13 @@ pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcom
                 total_iters,
                 global_iter,
                 prev_sub,
+                running: DeviceMask::empty(),
+                pool_contention: false,
             },
         );
+        if choice.search_skipped {
+            note_mask_search_skipped(si, plan.mask, &mut mask_search_skipped);
+        }
         chosen_masks[pos] = choice.mask;
         // A choice equal to the spec mask reuses the spec plan verbatim,
         // so `Fixed` (and spec-settling searches) stay bit-identical to
@@ -933,15 +1047,7 @@ pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcom
             .map(|&i| (traces[i].groups, traces[i].busy))
             .collect();
         for i in 0..stage.iterations {
-            let phase = if stage.iterations == 1 {
-                IterPhase::Single
-            } else if i == 0 {
-                IterPhase::First
-            } else if i + 1 == stage.iterations {
-                IterPhase::Last
-            } else {
-                IterPhase::Middle
-            };
+            let phase = phase_of(i, stage.iterations);
             let sub = roi_deadline.map(|d| {
                 spec.policy.sub_deadline(d, total_iters, global_iter, clock, prev_sub)
             });
@@ -1011,6 +1117,8 @@ pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcom
             pred_iter_s: choice.pred_iter_s,
             pred_energy_j: choice.pred_energy_j,
             marginal_energy_j,
+            active_at_launch: None,
+            retention_at_launch: None,
         });
     }
 
@@ -1037,6 +1145,818 @@ pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcom
         stages: stage_traces,
         deadline: budget.map(|b| b.verdict(timed)),
         iter_verdicts,
+        active_windows: Vec::new(),
+        mask_search_skipped,
+    }
+}
+
+/// Record (and surface on stderr) a mask-policy search skipped by the
+/// [`MASK_SEARCH_LIMIT`] breadth cap — previously a silent fallback to
+/// the spec mask.  The stderr note fires once per process (sweeps run
+/// thousands of simulations; the structured record in
+/// [`PipelineOutcome::mask_search_skipped`] carries the per-run detail).
+fn note_mask_search_skipped(si: usize, spec_mask: DeviceMask, skipped: &mut Vec<usize>) {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    let count = spec_mask.count();
+    ONCE.call_once(|| {
+        eprintln!(
+            "mask_search_skipped: stage {si} spec mask selects {count} devices \
+             (> MASK_SEARCH_LIMIT = {MASK_SEARCH_LIMIT}); keeping the spec mask \
+             unsearched — prune-based wide-pool search is a ROADMAP follow-up \
+             (further notes suppressed; see pipeline_json.mask_search_skipped)"
+        );
+    });
+    skipped.push(si);
+}
+
+// ------------------------------------------------------------ pool engine
+
+/// Preamble shared with the view-scoped loop, handed to the pool engine:
+/// resolved plans, fixed costs (whose jitter was already drawn from the
+/// main RNG, keeping the stream identical across contention scopes) and
+/// the mode-scoped ROI deadline.
+struct Prep<'a> {
+    spec: &'a PipelineSpec,
+    cfg: &'a SimConfig,
+    classes: &'a [DeviceClass],
+    order: &'a [usize],
+    plans: &'a [Plan],
+    plan_of: &'a [usize],
+    budget: Option<TimeBudget>,
+    total_iters: u32,
+    init_time: f64,
+    release_time: f64,
+    roi_deadline: Option<f64>,
+    transfers: &'a TransferModel<'a>,
+    has_dependents: &'a [bool],
+}
+
+/// One in-flight package of the interleaved pool engine: enough state to
+/// re-time its remaining compute when the pool's active set changes.
+struct InFlight {
+    grant_at: f64,
+    compute_start: f64,
+    /// Compute begins here (grant + input transfer + launch overhead).
+    work_start: f64,
+    /// Current predicted end of the compute segment.
+    compute_end: f64,
+    /// Output-transfer tail after the compute (host/PCIe-side; not
+    /// contention-scaled).
+    d2h: f64,
+    /// Retention the remaining compute is currently priced at.
+    retention: f64,
+    groups: GroupRange,
+}
+
+/// A stage whose launch decision is made (mask chosen, devices reserved)
+/// but whose inter-stage input transfer has not yet arrived.
+struct Pending {
+    si: usize,
+    mask: DeviceMask,
+    spec_mask: DeviceMask,
+    view: DeviceView,
+    cfg: SimConfig,
+    gws: u64,
+    transfer_in: f64,
+    pred_iter_s: f64,
+    pred_energy_j: f64,
+}
+
+/// One running stage of the interleaved pool engine — the per-branch
+/// state `coexec::run_roi` keeps in locals, lifted into a struct so
+/// concurrent branches can advance through one global event queue.
+struct Branch {
+    si: usize,
+    bench: Bench,
+    view: DeviceView,
+    cfg: SimConfig,
+    gws: u64,
+    iterations: u32,
+    total_groups: u64,
+    rng: XorShift64,
+    sched: Option<Box<dyn Scheduler>>,
+    host_free: f64,
+    iter: u32,
+    gi_base: u32,
+    iter_start: f64,
+    iter_finish: f64,
+    stage_start: f64,
+    transfer_in: f64,
+    spec_mask: DeviceMask,
+    mask: DeviceMask,
+    pred_iter_s: f64,
+    pred_energy_j: f64,
+    phase: IterPhase,
+    retry: Vec<GroupRange>,
+    parked: Vec<usize>,
+    inflight: Vec<Option<InFlight>>,
+    /// Outstanding events of this branch (scheduled device-idle wakeups);
+    /// the current pass is complete when it reaches zero.
+    live: usize,
+    executed: u64,
+    refined: Option<Vec<f64>>,
+    snap: Vec<(u64, f64)>,
+    busy0: Vec<f64>,
+    /// Branch-local sub-deadline carry chain arming the schedulers
+    /// (verdicts replay the canonical topological chain post-hoc).
+    prev_sub: f64,
+    active_at_launch: usize,
+    retention_at_launch: Vec<f64>,
+}
+
+impl Branch {
+    fn scheduler_mut(&mut self) -> &mut dyn Scheduler {
+        self.sched.as_mut().expect("pass scheduler built").as_mut()
+    }
+}
+
+enum PoolEvKind {
+    /// Device `slot` of branch `b` becomes idle and requests work
+    /// (completing its in-flight package first when one is outstanding).
+    DevIdle { b: usize, slot: usize },
+    /// The stage at topo position `pos` starts: its input transfer has
+    /// arrived and the pool's active set grows.
+    StageStart { pos: usize },
+}
+
+struct PoolEv {
+    t: f64,
+    tie: u64,
+    kind: PoolEvKind,
+}
+
+/// Earliest-first pop (same `(t, tie)` order as `run_roi`'s event list).
+fn pop_earliest(evs: &mut Vec<PoolEv>) -> Option<PoolEv> {
+    if evs.is_empty() {
+        return None;
+    }
+    let mut best = 0;
+    for i in 1..evs.len() {
+        if evs[i]
+            .t
+            .total_cmp(&evs[best].t)
+            .then_with(|| evs[i].tie.cmp(&evs[best].tie))
+            == std::cmp::Ordering::Less
+        {
+            best = i;
+        }
+    }
+    Some(evs.swap_remove(best))
+}
+
+/// All mutable state of one pool-engine run.
+struct PoolState {
+    main_rng: XorShift64,
+    traces: Vec<DeviceTrace>,
+    packages: Vec<PackageTrace>,
+    dev_free: Vec<f64>,
+    stage_end: Vec<f64>,
+    /// By declaration index.
+    completed: Vec<bool>,
+    /// By topo position.
+    launched: Vec<bool>,
+    chosen_masks: Vec<DeviceMask>,
+    mask_search_skipped: Vec<usize>,
+    /// Sub-deadlines armed so far, by global iteration index.
+    subs_armed: Vec<Option<f64>>,
+    /// First global iteration index of each topo position.
+    gi_base: Vec<u32>,
+    /// `(stage decl index, global iter, start, end)` per finished pass.
+    iter_records: Vec<(usize, u32, f64, f64)>,
+    stage_traces: Vec<StageTrace>,
+    branches: Vec<Option<Branch>>,
+    pending: Vec<Option<Pending>>,
+    evs: Vec<PoolEv>,
+    tie: u64,
+    seq: u64,
+    /// Devices running or reserved by launched-but-unfinished stages.
+    held: DeviceMask,
+    /// Devices of *started* (transfer arrived) unfinished stages — the
+    /// contention-active set.
+    active_mask: DeviceMask,
+    window_start: f64,
+    active_windows: Vec<ActiveWindow>,
+}
+
+/// Close the current active-set window at `t` (windows with zero active
+/// devices — gaps — are implied, not recorded).  The boundary never moves
+/// backwards: a fault can date a stage end past the current event clock,
+/// and the timeline stays monotone by absorbing such corners into the
+/// later window.
+fn mark_active_change(st: &mut PoolState, t: f64, old_count: usize) {
+    if t > st.window_start && old_count > 0 {
+        st.active_windows.push(ActiveWindow {
+            start_s: st.window_start,
+            end_s: t,
+            active: old_count,
+        });
+    }
+    st.window_start = st.window_start.max(t);
+}
+
+/// The latest sub-deadline armed for any global iteration before `base`:
+/// seeds a launching branch's carry chain with the canonical topological
+/// value whenever every topo-earlier iteration is already armed (always
+/// true for chains), and with the nearest known value otherwise.
+fn latest_armed_sub(subs: &[Option<f64>], base: usize) -> f64 {
+    subs[..base].iter().rev().find_map(|s| *s).unwrap_or(0.0)
+}
+
+fn phase_of(iter: u32, iterations: u32) -> IterPhase {
+    if iterations == 1 {
+        IterPhase::Single
+    } else if iter == 0 {
+        IterPhase::First
+    } else if iter + 1 == iterations {
+        IterPhase::Last
+    } else {
+        IterPhase::Middle
+    }
+}
+
+/// Re-price every in-flight package at an active-set boundary: the
+/// remaining compute (past `t`) is scaled by the ratio of its old
+/// retention to the retention under `new_active`, and the package's
+/// completion event moves accordingly — the piecewise-constant window
+/// semantics of the pool contention model.  Work is conserved exactly:
+/// only the *pace* of the remaining compute changes.
+fn retime_inflight(st: &mut PoolState, driver: &DriverProfile, t: f64, new_active: usize) {
+    let PoolState { branches, evs, .. } = st;
+    for (b, slot_br) in branches.iter_mut().enumerate() {
+        let Some(br) = slot_br else { continue };
+        for (slot, fl) in br.inflight.iter_mut().enumerate() {
+            let Some(pkg) = fl.as_mut() else { continue };
+            let class = br.cfg.devices[slot].class;
+            let r_new = driver.retention_at(cldriver::class_idx(class), new_active);
+            if r_new == pkg.retention {
+                continue;
+            }
+            let pivot = t.max(pkg.work_start);
+            if pkg.compute_end <= pivot {
+                continue; // compute finished; only the d2h tail remains
+            }
+            pkg.compute_end = pivot + (pkg.compute_end - pivot) * (pkg.retention / r_new);
+            pkg.retention = r_new;
+            let done = pkg.compute_end + pkg.d2h;
+            for ev in evs.iter_mut() {
+                if let PoolEvKind::DevIdle { b: eb, slot: es } = ev.kind {
+                    if eb == b && es == slot {
+                        ev.t = done;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Build one pass's scheduler for a branch: `P_i` estimates priced at the
+/// pool's current active-device count through the shared formula (or the
+/// refined measured feedback), deadline-armed with the branch's carry
+/// chain — the mirror of `run_roi`'s per-pass setup.
+fn build_pass_sched(
+    stage_cfg: &SimConfig,
+    bench: &Bench,
+    view: &DeviceView,
+    refined: Option<&[f64]>,
+    active: usize,
+    total_groups: u64,
+    sub: Option<f64>,
+) -> Box<dyn Scheduler> {
+    let powers = match refined {
+        Some(p) => p.to_vec(),
+        None => {
+            let view_powers: Vec<f64> = stage_cfg.devices.iter().map(|d| d.power).collect();
+            let view_classes: Vec<DeviceClass> =
+                stage_cfg.devices.iter().map(|d| d.class).collect();
+            coexec::scheduler_view_powers(
+                &view_powers,
+                &view_classes,
+                &stage_cfg.driver,
+                stage_cfg.estimate,
+                active,
+            )
+        }
+    };
+    let mut ctx = SchedCtx::new(total_groups, powers).with_pool_ids(view.pool_ids.clone());
+    if let Some(d) = sub {
+        if d > 0.0 {
+            let thr: Vec<f64> = ctx
+                .powers
+                .iter()
+                .map(|p| p * bench.gpu_units_per_sec / bench.props.lws as f64)
+                .collect();
+            ctx = ctx.with_deadline(d, thr);
+        }
+    }
+    stage_cfg.scheduler.build(&ctx)
+}
+
+/// Arm and start one pass (iteration) of a branch at clock `t`: fresh
+/// scheduler, host queue reset, every view device's idle event enqueued
+/// in delivery order.
+fn begin_pass(st: &mut PoolState, prep: &Prep, br: &mut Branch, b_pos: usize, t: f64) {
+    let gi = br.gi_base + br.iter;
+    br.phase = phase_of(br.iter, br.iterations);
+    br.total_groups = br.bench.groups(br.gws);
+    let sub = prep.roi_deadline.map(|d| {
+        prep.spec.policy.sub_deadline(d, prep.total_iters, gi, t, br.prev_sub)
+    });
+    if let Some(sd) = sub {
+        st.subs_armed[gi as usize] = Some(sd);
+        br.prev_sub = sd;
+    }
+    br.sched = Some(build_pass_sched(
+        &br.cfg,
+        &br.bench,
+        &br.view,
+        br.refined.as_deref(),
+        st.active_mask.count(),
+        br.total_groups,
+        sub,
+    ));
+    br.host_free = t;
+    br.iter_start = t;
+    br.iter_finish = t;
+    br.executed = 0;
+    br.parked.clear();
+    let delivery = br.scheduler_mut().delivery_order();
+    for &d in &delivery {
+        st.evs.push(PoolEv { t, tie: st.tie, kind: PoolEvKind::DevIdle { b: b_pos, slot: d } });
+        st.tie += 1;
+    }
+    br.live = br.view.pool_ids.len();
+}
+
+/// Launch every stage that became eligible: dependencies complete and no
+/// spec-mask device held by a launched-but-unfinished stage.  Scanned in
+/// topological order (deterministic device claiming, like the view
+/// loop's topological processing).  Mask selection happens here, priced
+/// against the pool's running/reserved set.
+fn launch_scan(st: &mut PoolState, prep: &Prep, pool: &DevicePool, now: f64) {
+    for pos in 0..prep.order.len() {
+        if st.launched[pos] {
+            continue;
+        }
+        let si = prep.order[pos];
+        let stage = &prep.spec.stages[si];
+        let mut deps = stage.deps.clone();
+        deps.sort_unstable();
+        deps.dedup();
+        if !deps.iter().all(|&d| st.completed[d]) {
+            continue;
+        }
+        let spec_mask = prep.plans[pos].mask;
+        if spec_mask.intersects(st.held) {
+            continue;
+        }
+        // The view loop processes stages strictly in topological order, so
+        // a later-topo stage never overtakes an earlier-topo stage on a
+        // shared device even while the earlier one still waits on its
+        // dependencies.  Mirror that claiming discipline: an unlaunched
+        // earlier-topo stage with an intersecting spec mask blocks this
+        // one (otherwise the pool schedule could start work *earlier*
+        // than the view schedule, breaking the pool >= view makespan
+        // monotonicity).
+        if (0..pos).any(|p| !st.launched[p] && prep.plans[p].mask.intersects(spec_mask)) {
+            continue;
+        }
+        let dep_ready = deps.iter().map(|&d| st.stage_end[d]).fold(0.0, f64::max);
+        let edges: Vec<(DeviceMask, f64)> = deps
+            .iter()
+            .map(|&d| {
+                let producer = &prep.plans[prep.plan_of[d]];
+                let bytes = producer.gws as f64 * prep.spec.stages[d].bench.bytes_out_per_item;
+                (st.chosen_masks[prep.plan_of[d]], bytes)
+            })
+            .collect();
+        let gi_base = st.gi_base[pos];
+        let prev_sub = latest_armed_sub(&st.subs_armed, gi_base as usize);
+        let choice = select_stage_mask(
+            prep.spec.mask_policy,
+            spec_mask,
+            &SelectCtx {
+                cfg: prep.cfg,
+                classes: prep.classes,
+                transfers: prep.transfers,
+                pool_powers: (0..prep.classes.len())
+                    .map(|i| match &stage.powers {
+                        Some(p) => p[i],
+                        None => prep.cfg.devices[i].power,
+                    })
+                    .collect(),
+                bench: &stage.bench,
+                gws: prep.plans[pos].gws,
+                iterations: stage.iterations,
+                edges: edges.clone(),
+                dep_ready,
+                dev_free: &st.dev_free,
+                serial: false,
+                serial_clock: 0.0,
+                leaf: !prep.has_dependents[si],
+                roi_deadline: prep.roi_deadline,
+                policy: prep.spec.policy,
+                total_iters: prep.total_iters,
+                global_iter: gi_base,
+                prev_sub,
+                running: st.held,
+                pool_contention: true,
+            },
+        );
+        if choice.search_skipped {
+            note_mask_search_skipped(si, spec_mask, &mut st.mask_search_skipped);
+        }
+        st.chosen_masks[pos] = choice.mask;
+        let (view, stage_cfg) = if choice.mask != spec_mask {
+            stage_view_cfg(prep.cfg, pool, stage, choice.mask, prep.spec.energy)
+        } else {
+            (prep.plans[pos].view.clone(), prep.plans[pos].cfg.clone())
+        };
+        let transfer_in: f64 = edges
+            .iter()
+            .map(|&(prod, bytes)| {
+                edge_transfer_cost(prep.transfers, prep.classes, prod, choice.mask, bytes)
+            })
+            .sum();
+        let resource_ready = view.pool_ids.iter().map(|&i| st.dev_free[i]).fold(0.0, f64::max);
+        // A shed choice whose devices freed earlier than the blocking
+        // spec device must not launch into the pool clock's past: clamp
+        // to the scan instant.
+        let start = (dep_ready.max(resource_ready) + transfer_in).max(now);
+        st.held = st.held.union(choice.mask);
+        st.pending[pos] = Some(Pending {
+            si,
+            mask: choice.mask,
+            spec_mask,
+            view,
+            cfg: stage_cfg,
+            gws: prep.plans[pos].gws,
+            transfer_in,
+            pred_iter_s: choice.pred_iter_s,
+            pred_energy_j: choice.pred_energy_j,
+        });
+        st.evs.push(PoolEv { t: start, tie: st.tie, kind: PoolEvKind::StageStart { pos } });
+        st.tie += 1;
+        st.launched[pos] = true;
+    }
+}
+
+/// A stage's input transfer has arrived: grow the active set, re-price
+/// every running branch, and start the stage's first pass.
+fn stage_start(st: &mut PoolState, prep: &Prep, pos: usize, t: f64) {
+    let p = st.pending[pos].take().expect("pending stage behind StageStart event");
+    let si = p.si;
+    let old_count = st.active_mask.count();
+    st.active_mask = st.active_mask.union(p.mask);
+    let new_active = st.active_mask.count();
+    mark_active_change(st, t, old_count);
+    retime_inflight(st, &prep.cfg.driver, t, new_active);
+    let retention_at_launch: Vec<f64> = p
+        .view
+        .pool_ids
+        .iter()
+        .map(|&i| {
+            prep.cfg.driver.retention_at(cldriver::class_idx(prep.classes[i]), new_active)
+        })
+        .collect();
+    // The topologically-first stage continues the main RNG stream (as in
+    // the view loop); later stages fork per-stage streams.
+    let stage_rng = if pos == 0 {
+        st.main_rng.clone()
+    } else {
+        XorShift64::new(stage_seed(prep.cfg.seed, si))
+    };
+    let n_view = p.view.pool_ids.len();
+    let busy0: Vec<f64> = p.view.pool_ids.iter().map(|&i| st.traces[i].busy).collect();
+    let snap: Vec<(u64, f64)> =
+        p.view.pool_ids.iter().map(|&i| (st.traces[i].groups, st.traces[i].busy)).collect();
+    let gi_base = st.gi_base[pos];
+    let mut br = Branch {
+        si,
+        bench: prep.spec.stages[si].bench.clone(),
+        view: p.view,
+        cfg: p.cfg,
+        gws: p.gws,
+        iterations: prep.spec.stages[si].iterations,
+        total_groups: 0,
+        rng: stage_rng,
+        sched: None,
+        host_free: t,
+        iter: 0,
+        gi_base,
+        iter_start: t,
+        iter_finish: t,
+        stage_start: t,
+        transfer_in: p.transfer_in,
+        spec_mask: p.spec_mask,
+        mask: p.mask,
+        pred_iter_s: p.pred_iter_s,
+        pred_energy_j: p.pred_energy_j,
+        phase: IterPhase::Single,
+        retry: Vec::new(),
+        parked: Vec::new(),
+        inflight: (0..n_view).map(|_| None).collect(),
+        live: 0,
+        executed: 0,
+        refined: None,
+        snap,
+        busy0,
+        prev_sub: latest_armed_sub(&st.subs_armed, gi_base as usize),
+        active_at_launch: new_active,
+        retention_at_launch,
+    };
+    begin_pass(st, prep, &mut br, pos, t);
+    st.branches[pos] = Some(br);
+}
+
+/// A stage ran its last pass: release its devices, shrink the active set
+/// (re-pricing the survivors), record its trace, and launch whatever the
+/// freed devices unblock.
+fn complete_stage(st: &mut PoolState, prep: &Prep, pool: &DevicePool, br: Branch, end: f64) {
+    st.stage_end[br.si] = end;
+    st.completed[br.si] = true;
+    for &i in &br.view.pool_ids {
+        st.dev_free[i] = end;
+    }
+    st.held = st.held.difference(br.mask);
+    let old_count = st.active_mask.count();
+    st.active_mask = st.active_mask.difference(br.mask);
+    mark_active_change(st, end, old_count);
+    retime_inflight(st, &prep.cfg.driver, end, st.active_mask.count());
+    let marginal_energy_j: f64 = br
+        .view
+        .pool_ids
+        .iter()
+        .enumerate()
+        .map(|(slot, &i)| {
+            let c = cldriver::class_idx(prep.classes[i]);
+            (st.traces[i].busy - br.busy0[slot])
+                * (prep.cfg.power.active_w[c] - prep.cfg.power.idle_w[c])
+        })
+        .sum();
+    st.stage_traces.push(StageTrace {
+        stage: br.si,
+        mask: br.mask,
+        spec_mask: br.spec_mask,
+        start_s: br.stage_start,
+        end_s: end,
+        transfer_in_s: br.transfer_in,
+        pred_iter_s: br.pred_iter_s,
+        pred_energy_j: br.pred_energy_j,
+        marginal_energy_j,
+        active_at_launch: Some(br.active_at_launch),
+        retention_at_launch: Some(br.retention_at_launch),
+    });
+    launch_scan(st, prep, pool, end);
+}
+
+/// One device-idle event: complete the device's finished package, then
+/// request its next grant — the interleaved mirror of one `run_roi` loop
+/// step, with retention priced at the pool's current active count.
+fn dev_idle(st: &mut PoolState, prep: &Prep, pool: &DevicePool, b_pos: usize, slot: usize, t: f64) {
+    let mut br = st.branches[b_pos].take().expect("running branch behind DevIdle event");
+    br.live -= 1;
+    if let Some(pkg) = br.inflight[slot].take() {
+        let pid = br.view.pool_ids[slot];
+        let done = pkg.compute_end + pkg.d2h;
+        // Fault injection is judged against the *final* (re-timed)
+        // completion: the package is lost iff the device dies before it
+        // actually completes under the windows it really ran through.
+        // (`run_roi` decides at grant because its completion times are
+        // final there; with re-timing the decision must wait.)
+        let mut lost = false;
+        if let Some((fd, tf)) = prep.cfg.fail {
+            if fd == pid && done > tf && !st.traces[pid].failed {
+                st.traces[pid].failed = true;
+                st.traces[pid].finish = st.traces[pid].finish.max(tf.min(done));
+                br.retry.push(pkg.groups);
+                for &p in &br.parked {
+                    st.evs.push(PoolEv {
+                        t: t.max(tf),
+                        tie: st.tie,
+                        kind: PoolEvKind::DevIdle { b: b_pos, slot: p },
+                    });
+                    st.tie += 1;
+                }
+                br.live += br.parked.len();
+                br.parked.clear();
+                br.iter_finish = br.iter_finish.max(tf.min(done));
+                lost = true;
+            }
+        }
+        if !lost {
+            let tr = &mut st.traces[pid];
+            tr.packages += 1;
+            tr.groups += pkg.groups.len();
+            tr.busy += done - pkg.grant_at;
+            tr.finish = tr.finish.max(done);
+            br.iter_finish = br.iter_finish.max(done);
+            br.executed += pkg.groups.len();
+            st.seq += 1;
+            if prep.cfg.record_packages {
+                st.packages.push(PackageTrace {
+                    seq: st.seq - 1,
+                    device: pid,
+                    groups: pkg.groups,
+                    grant_at: pkg.grant_at,
+                    compute_start: pkg.compute_start,
+                    done_at: done,
+                });
+            }
+        }
+    }
+    let pid = br.view.pool_ids[slot];
+    if st.traces[pid].failed {
+        // Dead devices request nothing, but a one-shot scheduler may
+        // still hold work reserved for them: pull it and re-queue it to
+        // the survivors (see `run_roi`).
+        if let Some(g) = br.scheduler_mut().next(slot) {
+            br.retry.push(g);
+            for &p in &br.parked {
+                st.evs.push(PoolEv {
+                    t,
+                    tie: st.tie,
+                    kind: PoolEvKind::DevIdle { b: b_pos, slot: p },
+                });
+                st.tie += 1;
+            }
+            br.live += br.parked.len();
+            br.parked.clear();
+        }
+    } else {
+        let grant_clock = t.max(br.host_free);
+        br.scheduler_mut().on_clock(grant_clock);
+        let groups = br.retry.pop().or_else(|| br.scheduler_mut().next(slot));
+        match groups {
+            None => br.parked.push(slot),
+            Some(groups) => {
+                let dev_spec = &br.cfg.devices[slot];
+                let class = cldriver::class_idx(dev_spec.class);
+                let retention = prep.cfg.driver.retention_at(class, st.active_mask.count());
+                let pricing = coexec::price_package(
+                    &br.bench,
+                    dev_spec,
+                    prep.transfers,
+                    &prep.cfg.driver,
+                    br.phase,
+                    groups,
+                    br.gws,
+                    retention,
+                    t,
+                    br.host_free,
+                    &mut br.rng,
+                );
+                br.host_free = pricing.compute_start;
+                br.inflight[slot] = Some(InFlight {
+                    grant_at: pricing.grant_at,
+                    compute_start: pricing.compute_start,
+                    work_start: pricing.work_start,
+                    compute_end: pricing.compute_end,
+                    d2h: pricing.d2h,
+                    retention,
+                    groups,
+                });
+                st.evs.push(PoolEv {
+                    t: pricing.done,
+                    tie: st.tie,
+                    kind: PoolEvKind::DevIdle { b: b_pos, slot },
+                });
+                st.tie += 1;
+                br.live += 1;
+            }
+        }
+    }
+    if br.live == 0 {
+        let end = br.iter_finish;
+        assert!(
+            br.executed == br.total_groups,
+            "run lost work: {}/{} work-groups executed — every device in this \
+             run's view failed, so re-queued packages had no survivor",
+            br.executed,
+            br.total_groups
+        );
+        let gi = br.gi_base + br.iter;
+        st.iter_records.push((br.si, gi, br.iter_start, end));
+        if prep.cfg.opts.estimate_refine && br.iter + 1 < br.iterations {
+            br.refined = Some(refine_powers(
+                &br.cfg,
+                &br.bench,
+                &br.view,
+                &st.traces,
+                &mut br.snap,
+                br.refined.take(),
+            ));
+        }
+        br.iter += 1;
+        if br.iter < br.iterations {
+            begin_pass(st, prep, &mut br, b_pos, end);
+            st.branches[b_pos] = Some(br);
+        } else {
+            complete_stage(st, prep, pool, br, end);
+        }
+    } else {
+        st.branches[b_pos] = Some(br);
+    }
+}
+
+/// The interleaved pool-contention engine: all concurrently active
+/// branches advance through one global event queue, so stage launch and
+/// finish events re-price every running stage's throughput against the
+/// pool's active-set count — the cross-branch contention the view loop
+/// cannot express.  Grant serialization, package pricing, fault handling
+/// and the per-stage RNG forks mirror `coexec::run_roi` exactly, so a
+/// schedule whose stages never overlap (a chain) is bit-identical to the
+/// view-scoped engine under the default two-point retention curve.
+fn pool_schedule(pool: &DevicePool, prep: Prep, rng: XorShift64) -> PipelineOutcome {
+    let n_pool = pool.len();
+    let n_stages = prep.spec.stages.len();
+    let mut gi_base = vec![0u32; n_stages];
+    let mut acc = 0u32;
+    for (pos, &si) in prep.order.iter().enumerate() {
+        gi_base[pos] = acc;
+        acc += prep.spec.stages[si].iterations;
+    }
+    let mut st = PoolState {
+        main_rng: rng,
+        traces: vec![DeviceTrace::default(); n_pool],
+        packages: Vec::new(),
+        dev_free: vec![0.0; n_pool],
+        stage_end: vec![0.0; n_stages],
+        completed: vec![false; n_stages],
+        launched: vec![false; n_stages],
+        chosen_masks: prep.plans.iter().map(|p| p.mask).collect(),
+        mask_search_skipped: Vec::new(),
+        subs_armed: vec![None; prep.total_iters as usize],
+        gi_base,
+        iter_records: Vec::new(),
+        stage_traces: Vec::new(),
+        branches: (0..n_stages).map(|_| None).collect(),
+        pending: (0..n_stages).map(|_| None).collect(),
+        evs: Vec::new(),
+        tie: 0,
+        seq: 0,
+        held: DeviceMask::empty(),
+        active_mask: DeviceMask::empty(),
+        window_start: 0.0,
+        active_windows: Vec::new(),
+    };
+    launch_scan(&mut st, &prep, pool, 0.0);
+    while let Some(ev) = pop_earliest(&mut st.evs) {
+        match ev.kind {
+            PoolEvKind::StageStart { pos } => stage_start(&mut st, &prep, pos, ev.t),
+            PoolEvKind::DevIdle { b, slot } => dev_idle(&mut st, &prep, pool, b, slot, ev.t),
+        }
+    }
+    assert!(
+        st.completed.iter().all(|&c| c),
+        "pool engine stalled: a stage never became launchable"
+    );
+
+    let roi_time = st.stage_end.iter().cloned().fold(0.0, f64::max);
+    let total_time = prep.init_time + roi_time + prep.release_time;
+    let energy_j = coexec::energy(prep.cfg, roi_time, &st.traces);
+    // Post-hoc canonical verdict chain: replay the topological sub-budget
+    // assignment over the recorded iteration windows, so verdict
+    // semantics match the view engine exactly.
+    st.iter_records.sort_by_key(|r| r.1);
+    let mut iter_times = Vec::with_capacity(prep.total_iters as usize);
+    let mut iter_verdicts = Vec::new();
+    let mut prev_sub = 0.0;
+    for &(si, gi, start, end) in &st.iter_records {
+        iter_times.push(end - start);
+        if let Some(d) = prep.roi_deadline {
+            let sd = prep.spec.policy.sub_deadline(d, prep.total_iters, gi, start, prev_sub);
+            iter_verdicts.push(IterVerdict {
+                stage: si,
+                iter: gi,
+                sub_deadline_s: sd,
+                end_s: end,
+                met: end <= sd,
+                slack_s: sd - end,
+            });
+            prev_sub = sd;
+        }
+    }
+    st.stage_traces.sort_by_key(|s| prep.plan_of[s.stage]);
+    let timed = match prep.cfg.mode {
+        ExecMode::Binary => total_time,
+        ExecMode::Roi => roi_time,
+    };
+    PipelineOutcome {
+        total_time,
+        init_time: prep.init_time,
+        release_time: prep.release_time,
+        roi_time,
+        iter_times,
+        energy_j,
+        devices: st.traces,
+        n_packages: st.seq,
+        packages: st.packages,
+        stages: st.stage_traces,
+        deadline: prep.budget.map(|b| b.verdict(timed)),
+        iter_verdicts,
+        active_windows: st.active_windows,
+        mask_search_skipped: st.mask_search_skipped,
     }
 }
 
@@ -1449,6 +2369,8 @@ mod tests {
             total_iters: 4,
             global_iter: 0,
             prev_sub: 0.0,
+            running: DeviceMask::empty(),
+            pool_contention: false,
         };
         let spec_mask = DeviceMask::from_indices(&[0, 1]);
         let igpu = DeviceMask::single(1);
@@ -1496,6 +2418,8 @@ mod tests {
             total_iters: 2,
             global_iter: 0,
             prev_sub: 0.0,
+            running: DeviceMask::empty(),
+            pool_contention: false,
         };
         let spec_mask = DeviceMask::from_indices(&[0, 1]);
         // Grid the sub-deadlines 3 % above the spec pace: the spec hits
@@ -1534,6 +2458,53 @@ mod tests {
         assert_eq!(mintime.stages[0].mask, mintime.stages[0].spec_mask);
         assert!(mintime.stages[0].pred_iter_s > 0.0);
         assert!(mintime.stages[0].marginal_energy_j > 0.0);
+    }
+
+    #[test]
+    fn wide_pool_mask_search_skip_is_reported_not_silent() {
+        // Pools wider than MASK_SEARCH_LIMIT fall back to the spec mask;
+        // the fallback must be visible: the outcome (and its JSON) name
+        // the skipped stages.  Fixed never searches, so it never skips.
+        use crate::types::DeviceSpec;
+        let b = Bench::new(BenchId::Gaussian);
+        // Uniform 7-arity HGuided parameters: the paper-tuned triple only
+        // covers the 3-device testbed.
+        let kind = SchedulerKind::HGuided { params: HGuidedParams::uniform(7, 1, 2.0) };
+        let mut cfg = SimConfig::testbed(&b, kind);
+        cfg.gws = Some(b.default_gws / 32);
+        // A 7-device commodity farm: the testbed trio plus four more CPUs.
+        cfg.devices = (0..7)
+            .map(|i| DeviceSpec {
+                class: match i {
+                    1 => DeviceClass::IGpu,
+                    2 => DeviceClass::DGpu,
+                    _ => DeviceClass::Cpu,
+                },
+                power: if i == 2 { 1.0 } else { 0.15 },
+            })
+            .collect();
+        cfg.budget = Some(TimeBudget::new(1e6));
+        let spec = PipelineSpec::repeat(b.clone(), 2)
+            .with_budget(cfg.budget)
+            .with_mask_policy(MaskPolicy::MinEnergy);
+        let out = simulate_pipeline(&spec, &cfg);
+        assert_eq!(out.mask_search_skipped, vec![0], "the wide stage is reported");
+        assert_eq!(out.stages[0].mask, out.stages[0].spec_mask, "spec mask kept");
+        assert_eq!(out.stages[0].mask.count(), 7);
+        let doc = crate::metrics::pipeline_json(&out).to_string();
+        let j = crate::jsonio::Json::parse(&doc).unwrap();
+        let skipped = j.get("mask_search_skipped").expect("field emitted").as_arr().unwrap();
+        assert_eq!(skipped.len(), 1);
+        assert_eq!(skipped[0].as_u64(), Some(0));
+        // Fixed never searches, so nothing is "skipped" and the field is
+        // absent — narrow-pool legacy documents stay byte-identical.
+        let fixed = simulate_pipeline(
+            &PipelineSpec::repeat(b, 2).with_budget(cfg.budget),
+            &cfg,
+        );
+        assert!(fixed.mask_search_skipped.is_empty());
+        let doc = crate::metrics::pipeline_json(&fixed).to_string();
+        assert!(!doc.contains("mask_search_skipped"), "no silent-cap field for Fixed");
     }
 
     #[test]

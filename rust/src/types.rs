@@ -176,6 +176,12 @@ impl DeviceMask {
         self.bits & other.bits != 0
     }
 
+    /// The devices of `self` that are not in `other`.
+    #[inline]
+    pub fn difference(&self, other: Self) -> Self {
+        Self { bits: self.bits & !other.bits }
+    }
+
     #[inline]
     pub fn is_disjoint(&self, other: Self) -> bool {
         !self.intersects(other)
@@ -579,6 +585,48 @@ impl MaskPolicy {
     }
 }
 
+/// How co-execution retention (shared-DDR / host-thread interference) is
+/// scoped when pipeline stages run concurrently on the device pool.
+///
+/// `View` is the legacy model: each stage prices retention against the
+/// size of its *own* device view, so two branches co-executing on
+/// disjoint masks pay zero cross-branch interference — optimistic, per
+/// the oneAPI co-execution study (arXiv:2106.01726) contention grows
+/// with the number of simultaneously active devices.  `Pool` derives
+/// retention from the number of *concurrently active* devices on the
+/// whole pool, recomputed at stage launch/finish events (piecewise-
+/// constant windows on the cumulative pipeline clock).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ContentionModel {
+    /// Retention scoped to each stage's own device view (legacy; the
+    /// bit-identical baseline).
+    #[default]
+    View,
+    /// Retention derived from the pool's concurrently-active device
+    /// count (cross-branch contention).
+    Pool,
+}
+
+impl ContentionModel {
+    pub const ALL: [ContentionModel; 2] = [ContentionModel::View, ContentionModel::Pool];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ContentionModel::View => "view",
+            ContentionModel::Pool => "pool",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_lowercase().as_str() {
+            "view" | "stage" | "legacy" => Some(ContentionModel::View),
+            "pool" | "cross-branch" | "crossbranch" => Some(ContentionModel::Pool),
+            _ => None,
+        }
+    }
+}
+
 /// How the scheduler's computing-power estimates `P_i` relate to the true
 /// co-execution powers.  The paper profiles powers offline, so the
 /// scheduler may run under estimation error; its headline 0.84 efficiency
@@ -691,6 +739,9 @@ mod tests {
         assert_eq!(all, DeviceMask::all(3));
         assert_eq!(all.indices(), vec![0, 1, 2]);
         assert_eq!(all.span(), 3);
+        assert_eq!(all.difference(b), a);
+        assert_eq!(a.difference(all), DeviceMask::empty());
+        assert_eq!(a.difference(DeviceMask::empty()), a);
         assert!(DeviceMask::empty().is_empty());
         assert!(a.intersects(DeviceMask::single(1)));
     }
@@ -904,6 +955,17 @@ mod tests {
         // A harder configured guard is never weakened by stretching.
         assert_eq!(EnergyPolicy::StretchToDeadline.pessimism(0.7), 0.7);
         assert!(EnergyPolicy::StretchToDeadline.pessimism(0.0) < 1.0);
+    }
+
+    #[test]
+    fn contention_model_labels_parse_roundtrip() {
+        for c in ContentionModel::ALL {
+            assert_eq!(ContentionModel::parse(c.label()), Some(c));
+        }
+        assert_eq!(ContentionModel::default(), ContentionModel::View);
+        assert_eq!(ContentionModel::parse("Pool"), Some(ContentionModel::Pool));
+        assert_eq!(ContentionModel::parse("legacy"), Some(ContentionModel::View));
+        assert_eq!(ContentionModel::parse("both"), None);
     }
 
     #[test]

@@ -19,7 +19,7 @@ use enginecl::benchsuite::{Bench, BenchId};
 use enginecl::metrics::pipeline_json;
 use enginecl::scheduler::{HGuidedParams, SchedulerKind};
 use enginecl::sim::{simulate_pipeline, PipelineSpec, PipelineStage, SimConfig};
-use enginecl::types::{DeviceMask, MaskPolicy};
+use enginecl::types::{ContentionModel, DeviceMask, MaskPolicy};
 use std::path::PathBuf;
 
 fn golden_dir() -> PathBuf {
@@ -103,6 +103,39 @@ fn golden_two_branch_disjoint_pipeline() {
     .with_deadline(3.0);
     let cfg = SimConfig::testbed(&mb, hguided_opt());
     check_golden("two_branch_disjoint", &render(&spec, &cfg));
+}
+
+#[test]
+fn golden_pool_contention_pipeline() {
+    // The overlap-heavy two-branch DAG under pool-scoped contention:
+    // disjoint masks co-execute, so the GPU branch loses its solo
+    // retention while the CPU+iGPU branch runs, and every stage finish
+    // re-prices the survivors.  The snapshot pins the piecewise
+    // active-set windows, the per-stage retention annotations and the
+    // contention-stretched schedule/energy accounting.
+    let mb = Bench::new(BenchId::Mandelbrot);
+    let ga = Bench::new(BenchId::Gaussian);
+    let spec = PipelineSpec {
+        stages: vec![
+            PipelineStage::new(mb.clone(), 2)
+                .with_gws(mb.default_gws / 4)
+                .with_powers(mb.true_powers.to_vec())
+                .on_devices(DeviceMask::single(2)),
+            PipelineStage::new(ga.clone(), 2)
+                .with_gws(ga.default_gws / 16)
+                .with_powers(ga.true_powers.to_vec())
+                .on_devices(DeviceMask::from_indices(&[0, 1])),
+        ],
+        budget: None,
+        policy: enginecl::types::BudgetPolicy::CarryOverSlack,
+        energy: enginecl::types::EnergyPolicy::RaceToIdle,
+        mask_policy: MaskPolicy::Fixed,
+        serial: false,
+    }
+    .with_deadline(3.0);
+    let mut cfg = SimConfig::testbed(&mb, hguided_opt());
+    cfg.contention = ContentionModel::Pool;
+    check_golden("pool_contention", &render(&spec, &cfg));
 }
 
 #[test]

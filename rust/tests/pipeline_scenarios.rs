@@ -11,8 +11,8 @@ use enginecl::sim::{
     simulate, simulate_iterative, simulate_pipeline, PipelineSpec, PipelineStage, SimConfig,
 };
 use enginecl::types::{
-    BudgetPolicy, DeviceMask, EnergyPolicy, EstimateScenario, MaskPolicy, Optimizations,
-    TimeBudget,
+    BudgetPolicy, ContentionModel, DeviceMask, EnergyPolicy, EstimateScenario, MaskPolicy,
+    Optimizations, TimeBudget,
 };
 
 fn hguided_opt() -> SchedulerKind {
@@ -77,6 +77,7 @@ fn carry_over_slack_serves_sub_deadlines_at_least_as_well_as_even_split() {
         6,
         &hguided_opt(),
         Optimizations::ALL,
+        ContentionModel::View,
         &policies,
         &[EnergyPolicy::RaceToIdle],
         &[EstimateScenario::Pessimistic { err: 0.3 }],
@@ -129,6 +130,7 @@ fn adaptive_pipeline_sweep_emits_verdicts_and_j_per_hit() {
         5,
         &adaptive(),
         Optimizations::ALL,
+        ContentionModel::View,
         &BudgetPolicy::ALL,
         &[EnergyPolicy::RaceToIdle],
         &[EstimateScenario::Exact, EstimateScenario::Pessimistic { err: 0.3 }],
@@ -423,6 +425,188 @@ fn fixed_mask_policy_stays_bit_identical_while_the_selector_is_inserted() {
     // And the trace records the untouched spec mask.
     assert_eq!(explicit.stages[0].mask, explicit.stages[0].spec_mask);
     assert!(!explicit.stages[0].shed());
+}
+
+/// The overlap-heavy two-branch DAG the contention scenarios share: a
+/// long Mandelbrot branch on the GPU co-executing with a Gaussian branch
+/// on CPU+iGPU (disjoint masks, overlapping windows; the GPU branch
+/// carries the makespan, so its lost solo retention is visible).
+fn overlap_spec() -> PipelineSpec {
+    let ga = Bench::new(BenchId::Gaussian);
+    let mb = Bench::new(BenchId::Mandelbrot);
+    PipelineSpec {
+        stages: vec![
+            PipelineStage::new(mb.clone(), 2)
+                .with_gws(mb.default_gws / 4)
+                .with_powers(mb.true_powers.to_vec())
+                .on_devices(DeviceMask::single(2)),
+            PipelineStage::new(ga.clone(), 2)
+                .with_gws(ga.default_gws / 16)
+                .with_powers(ga.true_powers.to_vec())
+                .on_devices(DeviceMask::from_indices(&[0, 1])),
+        ],
+        budget: None,
+        policy: BudgetPolicy::CarryOverSlack,
+        energy: EnergyPolicy::RaceToIdle,
+        mask_policy: MaskPolicy::Fixed,
+        serial: false,
+    }
+}
+
+#[test]
+fn view_scope_is_the_default_and_pool_scope_is_bit_identical_on_chains() {
+    // Scenario (a): `--contention view` is the default (legacy runs are
+    // untouched — the golden snapshots pin the exact bytes), and on
+    // schedules with no overlapping stages the pool engine reduces to
+    // the view engine bit for bit (same RNG streams, same arithmetic,
+    // identical retention under the default two-point curve).
+    let b = Bench::new(BenchId::Gaussian);
+    let nb = Bench::new(BenchId::NBody);
+    let mut cfg = SimConfig::testbed(&b, hguided_opt());
+    assert_eq!(cfg.contention, ContentionModel::View, "view is the default");
+    cfg.gws = Some(b.default_gws / 16);
+    cfg.budget = Some(TimeBudget::new(2.0));
+    let mut pool_cfg = cfg.clone();
+    pool_cfg.contention = ContentionModel::Pool;
+    // Single-stage iterative pipeline: one stage is never contended.
+    let single_spec = PipelineSpec::repeat(b.clone(), 3).with_budget(cfg.budget);
+    // Two-kernel chain: stages serialize on the dependency, so the pool's
+    // active set always equals the running stage's view.
+    let mut chain_spec = PipelineSpec::chain(vec![b.clone(), nb.clone()], 2)
+        .with_budget(cfg.budget);
+    chain_spec.stages[0] = chain_spec.stages[0].clone().with_gws(b.default_gws / 16);
+    chain_spec.stages[1] = chain_spec.stages[1].clone().with_gws(nb.default_gws / 8);
+    for spec in [&single_spec, &chain_spec] {
+        let view = simulate_pipeline(spec, &cfg);
+        let pool = simulate_pipeline(spec, &pool_cfg);
+        assert_eq!(view.roi_time.to_bits(), pool.roi_time.to_bits(), "roi drifted");
+        assert_eq!(view.total_time.to_bits(), pool.total_time.to_bits());
+        assert_eq!(view.energy_j.to_bits(), pool.energy_j.to_bits());
+        assert_eq!(view.n_packages, pool.n_packages);
+        assert_eq!(view.iter_verdicts.len(), pool.iter_verdicts.len());
+        for (v, p) in view.iter_verdicts.iter().zip(&pool.iter_verdicts) {
+            assert_eq!(v.sub_deadline_s.to_bits(), p.sub_deadline_s.to_bits());
+            assert_eq!(v.end_s.to_bits(), p.end_s.to_bits());
+        }
+        for (v, p) in view.iter_times.iter().zip(&pool.iter_times) {
+            assert_eq!(v.to_bits(), p.to_bits());
+        }
+        // The pool run annotates its traces; the view run never does.
+        assert!(view.active_windows.is_empty());
+        assert!(!pool.active_windows.is_empty());
+        assert!(view.stages.iter().all(|s| s.active_at_launch.is_none()));
+        assert!(pool.stages.iter().all(|s| s.active_at_launch.is_some()));
+    }
+    // A serial-flag spec routes through the view loop under both scopes.
+    let serial = overlap_spec().with_serial(true).with_deadline(10.0);
+    let vs = simulate_pipeline(&serial, &cfg);
+    let ps = simulate_pipeline(&serial, &pool_cfg);
+    assert_eq!(vs.roi_time.to_bits(), ps.roi_time.to_bits(), "serial is scope-blind");
+}
+
+#[test]
+fn pool_contention_slows_overlapping_branches_but_not_their_serialized_twin() {
+    // Scenario (b): under pool-scoped contention the overlap-heavy
+    // two-branch DAG loses makespan against its view-scoped twin (the
+    // GPU branch pays coexec retention while the CPU+iGPU branch runs),
+    // while the same DAG forced serial (no overlap anywhere) is
+    // completely unaffected — the loss is *cross-branch* interference,
+    // not a global slowdown.
+    let spec = overlap_spec();
+    let b = Bench::new(BenchId::Gaussian);
+    let cfg = SimConfig::testbed(&b, hguided_opt());
+    let mut pool_cfg = cfg.clone();
+    pool_cfg.contention = ContentionModel::Pool;
+    let view = simulate_pipeline(&spec, &cfg);
+    let pool = simulate_pipeline(&spec, &pool_cfg);
+    // The branches really overlap in both runs.
+    for out in [&view, &pool] {
+        let w = &out.stages;
+        assert!(w[0].start_s < w[1].end_s && w[1].start_s < w[0].end_s, "overlap: {w:?}");
+    }
+    assert!(
+        pool.roi_time > view.roi_time * 1.02,
+        "pool contention must price real interference: pool {} !> view {}",
+        pool.roi_time,
+        view.roi_time
+    );
+    // Work conserved across the active-set recomputation events.
+    let groups = |o: &enginecl::sim::PipelineOutcome| -> u64 {
+        o.devices.iter().map(|d| d.groups).sum()
+    };
+    assert_eq!(groups(&view), groups(&pool));
+    // The pool run's timeline shows the co-execution plateau (3 active
+    // devices) and the solo tail after the shorter branch finishes.
+    let max_active = pool.active_windows.iter().map(|w| w.active).max().unwrap();
+    assert_eq!(max_active, 3, "windows: {:?}", pool.active_windows);
+    for w in pool.active_windows.windows(2) {
+        assert!(w[0].end_s <= w[1].start_s + 1e-12, "windows ordered");
+    }
+    // The CPU+iGPU branch launched into a 3-active pool (the GPU branch
+    // was already committed): its annotations show the full active set
+    // and the coexec retention in effect at launch.
+    let ga_stage = pool
+        .stages
+        .iter()
+        .find(|s| s.mask == DeviceMask::from_indices(&[0, 1]))
+        .unwrap();
+    assert_eq!(ga_stage.active_at_launch, Some(3), "whole pool active at launch");
+    let retention = ga_stage.retention_at_launch.as_ref().unwrap();
+    assert!(
+        retention.iter().all(|&r| r < 1.0),
+        "coexec retention in effect at launch: {retention:?}"
+    );
+    // Its serialized twin is scope-blind: one stage at a time means the
+    // active set equals the stage view everywhere.
+    let serial_view = simulate_pipeline(&spec.clone().with_serial(true), &cfg);
+    let serial_pool = simulate_pipeline(&spec.clone().with_serial(true), &pool_cfg);
+    assert_eq!(serial_view.roi_time.to_bits(), serial_pool.roi_time.to_bits());
+}
+
+#[test]
+fn energy_under_deadline_never_beats_fixed_on_joules_under_pool_contention() {
+    // Scenario (c): the EUD-vs-Fixed energy invariant survives the
+    // contention refactor — when the predictor prices contention through
+    // the pool's active set, EnergyUnderDeadline still never reports
+    // more joules than Fixed under the same loose budget.
+    let mb = Bench::new(BenchId::Mandelbrot);
+    let ga = Bench::new(BenchId::Gaussian);
+    let mk = |mask_policy: MaskPolicy| PipelineSpec {
+        stages: vec![
+            PipelineStage::new(mb.clone(), 2)
+                .with_gws(mb.default_gws / 4)
+                .with_powers(mb.true_powers.to_vec())
+                .on_devices(DeviceMask::single(2)),
+            PipelineStage::new(ga.clone(), 2)
+                .with_gws(ga.default_gws / 16)
+                .with_powers(ga.true_powers.to_vec())
+                .on_devices(DeviceMask::from_indices(&[0, 1])),
+        ],
+        budget: None,
+        policy: BudgetPolicy::CarryOverSlack,
+        energy: EnergyPolicy::RaceToIdle,
+        mask_policy,
+        serial: false,
+    };
+    let mut cfg = SimConfig::testbed(&mb, hguided_opt());
+    cfg.contention = ContentionModel::Pool;
+    let free = simulate_pipeline(&mk(MaskPolicy::Fixed), &cfg);
+    let budget = TimeBudget::new(free.roi_time * 1.6);
+    let budgeted = |mp: MaskPolicy| simulate_pipeline(&mk(mp).with_budget(Some(budget)), &cfg);
+    let fixed = budgeted(MaskPolicy::Fixed);
+    let eud = budgeted(MaskPolicy::EnergyUnderDeadline);
+    assert!(
+        eud.energy_j <= fixed.energy_j + 1e-9,
+        "EUD {} J must not exceed Fixed {} J under pool contention",
+        eud.energy_j,
+        fixed.energy_j
+    );
+    assert!(fixed.deadline.unwrap().met);
+    assert!(eud.deadline.unwrap().met, "shedding must not cost the deadline");
+    let groups = |o: &enginecl::sim::PipelineOutcome| -> u64 {
+        o.devices.iter().map(|d| d.groups).sum()
+    };
+    assert_eq!(groups(&fixed), groups(&eud), "work conserved");
 }
 
 #[test]

@@ -12,8 +12,8 @@ use enginecl::scheduler::{
 use enginecl::sim::{simulate, simulate_pipeline, PipelineSpec, PipelineStage, SimConfig};
 use enginecl::stats::XorShift64;
 use enginecl::types::{
-    BudgetPolicy, DeviceMask, EnergyPolicy, EstimateScenario, ExecMode, GroupRange, MaskPolicy,
-    TimeBudget,
+    BudgetPolicy, ContentionModel, DeviceMask, EnergyPolicy, EstimateScenario, ExecMode,
+    GroupRange, MaskPolicy, TimeBudget,
 };
 
 /// Random scheduler context: 1–6 devices, powers in (0.05, 1], any total.
@@ -463,6 +463,204 @@ fn prop_mask_policies_never_trail_fixed_on_their_own_metric() {
             mintime.roi_time,
             fixed.roi_time
         );
+    }
+}
+
+#[test]
+fn prop_retention_non_increasing_in_active_count() {
+    // The pool-contention curve: for any per-class base retention in
+    // (0, 1] and decay in [0, 1), retention is 1.0 solo, equals the
+    // two-point base at two active devices, and never increases as the
+    // active count grows — the monotonicity every pool-vs-view makespan
+    // argument rests on.
+    use enginecl::cldriver::DriverProfile;
+    for case in 0..300u64 {
+        let mut rng = XorShift64::new(12_000 + case);
+        let mut p = DriverProfile::commodity_desktop();
+        for c in 0..3 {
+            p.coexec_retention[c] = rng.uniform(0.05, 1.0);
+            // A third of the cases keep the legacy two-point default.
+            p.contention_decay[c] =
+                if rng.below(3) == 0 { 0.0 } else { rng.uniform(0.0, 0.9) };
+        }
+        for c in 0..3 {
+            assert_eq!(p.retention_at(c, 1), 1.0, "case {case}: solo retention");
+            assert_eq!(
+                p.retention_at(c, 2).to_bits(),
+                p.coexec_retention[c].to_bits(),
+                "case {case}: two-point anchor"
+            );
+            let mut last = 1.0f64;
+            for active in 1..=12 {
+                let r = p.retention_at(c, active);
+                assert!(r > 0.0 && r <= 1.0, "case {case}: retention {r} out of (0, 1]");
+                assert!(
+                    r <= last + 1e-15,
+                    "case {case}: class {c} retention rose {last} -> {r} at {active}"
+                );
+                last = r;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_pool_makespan_never_beats_view_on_random_masked_dags() {
+    // Pool-scoped contention can only price *more* interference than the
+    // view scope: retention is non-increasing in the active count and the
+    // pool's active set always contains the stage's own view, so every
+    // package runs at most as fast and every launch happens at most as
+    // early — the pool makespan never undercuts the view makespan.
+    // (Unconstrained runs: deadline arming differs per scope.)
+    for case in 0..40u64 {
+        let mut rng = XorShift64::new(13_000 + case);
+        let n_stages = 2 + rng.below(3) as usize;
+        let kind = random_kind(&mut rng, 3);
+        let mut stages = Vec::with_capacity(n_stages);
+        let mut expected_groups = 0u64;
+        let mut benches = Vec::with_capacity(n_stages);
+        for s in 0..n_stages {
+            let id = BenchId::ALL[rng.below(6) as usize];
+            let bench = Bench::new(id);
+            let gws = bench.default_gws >> (rng.below(3) + 4);
+            let iterations = 1 + rng.below(2) as u32;
+            let bits = 1 + rng.below(7); // non-empty subset of {0, 1, 2}
+            let ids: Vec<usize> = (0..3usize).filter(|&i| bits >> i & 1 == 1).collect();
+            let mut stage = PipelineStage::new(bench.clone(), iterations)
+                .with_gws(gws)
+                .on_devices(DeviceMask::from_indices(&ids));
+            for dep in 0..s {
+                if rng.below(3) == 0 {
+                    stage = stage.after(&[dep]);
+                }
+            }
+            expected_groups += iterations as u64 * bench.groups(gws);
+            benches.push(bench);
+            stages.push(stage);
+        }
+        let spec = PipelineSpec {
+            stages,
+            budget: None,
+            policy: BudgetPolicy::CarryOverSlack,
+            energy: EnergyPolicy::RaceToIdle,
+            mask_policy: MaskPolicy::Fixed,
+            serial: false,
+        };
+        let mut cfg = SimConfig::testbed(&benches[0], kind);
+        cfg.seed = case + 1;
+        let view = simulate_pipeline(&spec, &cfg);
+        cfg.contention = ContentionModel::Pool;
+        let pool = simulate_pipeline(&spec, &cfg);
+        let groups = |out: &enginecl::sim::PipelineOutcome| -> u64 {
+            out.devices.iter().map(|d| d.groups).sum()
+        };
+        assert_eq!(groups(&view), expected_groups, "case {case}: view lost work");
+        assert_eq!(groups(&pool), expected_groups, "case {case}: pool lost work");
+        assert!(
+            pool.roi_time >= view.roi_time - 1e-9,
+            "case {case}: pool makespan {} undercuts view {}",
+            pool.roi_time,
+            view.roi_time
+        );
+        // Same grants either way (the default two-point curve gives both
+        // scopes identical P_i whenever a stage's view co-executes).
+        assert_eq!(pool.n_packages, view.n_packages, "case {case}");
+    }
+}
+
+#[test]
+fn prop_pool_work_conserved_across_active_set_recomputation_events() {
+    // Random masked DAGs under pool contention with a *non-zero*
+    // contention curve: every stage launch/finish re-times the in-flight
+    // packages of every running branch, and a third of the cases kill a
+    // device mid-pipeline on top.  Work must be conserved exactly across
+    // all of it, and the recorded active-set windows must form a sane
+    // timeline.
+    for case in 0..40u64 {
+        let mut rng = XorShift64::new(14_000 + case);
+        let n_stages = 2 + rng.below(3) as usize;
+        let kind = random_kind(&mut rng, 3);
+        let fault = rng.below(3) == 0;
+        let mut stages = Vec::with_capacity(n_stages);
+        let mut expected_groups = 0u64;
+        let mut benches = Vec::with_capacity(n_stages);
+        for s in 0..n_stages {
+            let id = BenchId::ALL[rng.below(6) as usize];
+            let bench = Bench::new(id);
+            let gws = bench.default_gws >> (rng.below(3) + 4);
+            let iterations = 1 + rng.below(3) as u32;
+            let bits = 1 + rng.below(7);
+            let mut mask = DeviceMask::from_indices(
+                &(0..3usize).filter(|&i| bits >> i & 1 == 1).collect::<Vec<_>>(),
+            );
+            if fault {
+                // Keep survivors in every view so the re-queue has a home.
+                mask = mask.union(DeviceMask::from_indices(&[1, 2]));
+            }
+            let mut stage =
+                PipelineStage::new(bench.clone(), iterations).with_gws(gws).on_devices(mask);
+            for dep in 0..s {
+                if rng.below(3) == 0 {
+                    stage = stage.after(&[dep]);
+                }
+            }
+            expected_groups += iterations as u64 * bench.groups(gws);
+            benches.push(bench);
+            stages.push(stage);
+        }
+        let spec = PipelineSpec {
+            stages,
+            budget: if rng.below(2) == 0 {
+                Some(TimeBudget::new(rng.uniform(1e-3, 30.0)))
+            } else {
+                None
+            },
+            policy: BudgetPolicy::ALL[rng.below(3) as usize],
+            energy: EnergyPolicy::RaceToIdle,
+            mask_policy: MaskPolicy::Fixed,
+            serial: false,
+        };
+        let mut cfg = SimConfig::testbed(&benches[0], kind);
+        cfg.seed = case + 1;
+        cfg.contention = ContentionModel::Pool;
+        // Non-zero decay: the third active device really re-prices the
+        // running branches (the two-point default would leave multi-
+        // device views untouched).
+        cfg.driver.contention_decay = [
+            rng.uniform(0.02, 0.3),
+            rng.uniform(0.02, 0.3),
+            rng.uniform(0.02, 0.3),
+        ];
+        if fault {
+            cfg.fail = Some((0, rng.uniform(0.0, 2.0)));
+        }
+        let out = simulate_pipeline(&spec, &cfg);
+        let groups: u64 = out.devices.iter().map(|d| d.groups).sum();
+        assert_eq!(groups, expected_groups, "case {case}: work lost across re-timings");
+        assert!(out.roi_time > 0.0 && out.roi_time.is_finite(), "case {case}");
+        for d in &out.devices {
+            assert!(d.finish <= out.roi_time + 1e-9, "case {case}: finish beyond pipeline");
+        }
+        // The active-set timeline is ordered, positive, and bounded.
+        for w in &out.active_windows {
+            assert!(w.active >= 1 && w.active <= 3, "case {case}: {w:?}");
+            assert!(w.end_s > w.start_s - 1e-12, "case {case}: {w:?}");
+            assert!(w.end_s <= out.roi_time + 1e-9, "case {case}: {w:?}");
+        }
+        for pair in out.active_windows.windows(2) {
+            assert!(
+                pair[0].end_s <= pair[1].start_s + 1e-9,
+                "case {case}: windows overlap: {pair:?}"
+            );
+        }
+        // Stage traces carry the pool annotations.
+        for s in &out.stages {
+            let active = s.active_at_launch.expect("pool runs annotate stages");
+            assert!(active >= s.mask.count(), "case {case}: active < own view");
+            let retention = s.retention_at_launch.as_ref().unwrap();
+            assert_eq!(retention.len(), s.mask.count(), "case {case}");
+            assert!(retention.iter().all(|&r| r > 0.0 && r <= 1.0), "case {case}");
+        }
     }
 }
 
