@@ -16,7 +16,7 @@ fn main() {
     // paper-size Mandelbrot (the largest index space).
     let bench = Bench::new(BenchId::Mandelbrot);
     for kind in SchedulerKind::fig3_configs() {
-        let engine = Engine::new(bench.clone()).with_scheduler(kind.clone());
+        let engine = Engine::builder(bench.clone()).scheduler(kind.clone()).build();
         let mut seed = 0u64;
         b.bench(&format!("simulate/{}", kind.label().replace(' ', "_")), 30, || {
             seed += 1;

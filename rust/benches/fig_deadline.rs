@@ -18,10 +18,11 @@ fn main() {
     // Adaptive scheduler (the new hot path: on_clock + floor/cap sizing).
     for id in BenchId::ALL {
         let bench = Bench::new(id);
-        let engine = Engine::new(bench)
-            .with_scheduler(SchedulerKind::Adaptive { params: AdaptiveParams::default_paper() })
-            .with_budget(TimeBudget::new(2.0))
-            .with_estimate(EstimateScenario::Pessimistic { err: 0.3 });
+        let engine = Engine::builder(bench)
+            .scheduler(SchedulerKind::Adaptive { params: AdaptiveParams::default_paper() })
+            .budget(TimeBudget::new(2.0))
+            .estimate(EstimateScenario::Pessimistic { err: 0.3 })
+            .build();
         let mut seed = 0u64;
         b.bench(&format!("simulate/adaptive/{}", id.label()), 30, || {
             seed += 1;

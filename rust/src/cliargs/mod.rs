@@ -2,8 +2,18 @@
 //!
 //! Grammar: positionals, `--flag value` pairs and boolean `--switch`es.
 //! A flag is boolean iff the next token starts with `--` or is absent.
+//!
+//! The sweep subcommands (`pipeline-sweep`, `deadline-sweep`,
+//! `traffic-sweep`) share one flag-registration table, [`SWEEP_FLAGS`]:
+//! each row binds a `--flag` to the parser that fills its
+//! [`SweepConfig`] field, so a shared flag spells, validates, and errors
+//! identically across the three CLIs.
 
-use crate::types::{ContentionModel, DeviceClass, DeviceMask, MaskPolicy};
+use crate::scheduler::SchedulerKind;
+use crate::types::{
+    AdmissionPolicy, BudgetPolicy, ContentionModel, DeviceClass, DeviceMask, EnergyPolicy,
+    MaskPolicy,
+};
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -172,6 +182,247 @@ impl Args {
     }
 }
 
+/// Everything the three sweep subcommands can be configured with.
+///
+/// Each subcommand seeds the fields it cares about (e.g. its own default
+/// `reps` and `budgets`), then runs [`apply_sweep_flags`]; fields whose
+/// flags are absent keep the seeded defaults.  Fields a subcommand does
+/// not consume are parsed all the same, so a flag spells and validates
+/// identically no matter which sweep it is handed to.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub reps: usize,
+    pub err: f64,
+    pub iters: u32,
+    /// Deadline multipliers relative to the unconstrained reference time.
+    pub budgets: Vec<f64>,
+    /// Benchmark names (validated non-empty here, resolved by the caller).
+    pub benches: Vec<String>,
+    pub policies: Vec<BudgetPolicy>,
+    pub energies: Vec<EnergyPolicy>,
+    /// `None` leaves the subcommand's own scheduler default in force.
+    pub scheduler: Option<SchedulerKind>,
+    pub refine: bool,
+    /// Per-branch device masks (`--stage-devices M1/M2/..`).
+    pub masks: Vec<DeviceMask>,
+    pub mask_policy: MaskPolicy,
+    pub contention: ContentionModel,
+    /// Offered-load multipliers relative to one request per service time.
+    pub loads: Vec<f64>,
+    pub n_requests: u32,
+    /// Per-request deadline as a multiple of the solo service time.
+    pub deadline_mult: f64,
+    pub admission: Vec<AdmissionPolicy>,
+    /// Trace-driven arrivals: JSON file of arrival offsets (seconds).
+    pub trace: Option<PathBuf>,
+    pub seed: u64,
+}
+
+impl SweepConfig {
+    /// The device classes `--stage-devices` masks are parsed against.
+    pub const POOL_CLASSES: [DeviceClass; 3] =
+        [DeviceClass::Cpu, DeviceClass::IGpu, DeviceClass::DGpu];
+
+    /// The shared defaults; subcommands override before applying flags.
+    pub fn new() -> Self {
+        SweepConfig {
+            reps: 6,
+            err: 0.3,
+            iters: 6,
+            budgets: vec![],
+            benches: vec!["gaussian".into(), "mandelbrot".into()],
+            policies: BudgetPolicy::ALL.to_vec(),
+            energies: EnergyPolicy::ALL.to_vec(),
+            scheduler: None,
+            refine: false,
+            masks: vec![DeviceMask::from_indices(&[0, 1]), DeviceMask::single(2)],
+            mask_policy: MaskPolicy::EnergyUnderDeadline,
+            contention: ContentionModel::View,
+            loads: vec![],
+            n_requests: 16,
+            deadline_mult: 1.5,
+            admission: AdmissionPolicy::ALL.to_vec(),
+            trace: None,
+            seed: 1,
+        }
+    }
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One row of the shared flag table: parse `--flag` out of [`Args`] and
+/// fill the matching [`SweepConfig`] field, or explain what was wrong
+/// (always naming the flag).
+pub type SweepApply = fn(&Args, &mut SweepConfig) -> Result<()>;
+
+/// The single flag-registration table shared by `pipeline-sweep`,
+/// `deadline-sweep` and `traffic-sweep`: `(flag, help, apply)`.
+/// Registering a flag here is what makes it spell, validate and error
+/// the same way across all three sweeps.
+pub const SWEEP_FLAGS: &[(&str, &str, SweepApply)] = &[
+    ("reps", "repetitions per configuration (integer >= 2)", |a, c| {
+        c.reps = a.reps(c.reps)?;
+        Ok(())
+    }),
+    ("err", "estimation error fraction in [0, 1)", |a, c| {
+        c.err = a.f64_flag("err", c.err)?;
+        if !(0.0..1.0).contains(&c.err) {
+            bail!("--err must be in [0, 1), got {}", c.err);
+        }
+        Ok(())
+    }),
+    ("iters", "pipeline iterations per request (>= 1)", |a, c| {
+        c.iters = a.u32_flag("iters", c.iters)?;
+        if c.iters == 0 {
+            bail!("--iters must be >= 1");
+        }
+        Ok(())
+    }),
+    ("budgets", "comma-separated deadline multipliers (> 0)", |a, c| {
+        let d = c.budgets.clone();
+        c.budgets = a.f64_list("budgets", &d)?;
+        if c.budgets.is_empty() || c.budgets.iter().any(|&m| !(m > 0.0 && m.is_finite())) {
+            bail!("--budgets must be positive finite multipliers");
+        }
+        Ok(())
+    }),
+    ("benches", "comma-separated benchmark names", |a, c| {
+        let d: Vec<&str> = c.benches.iter().map(String::as_str).collect();
+        c.benches = a.str_list("benches", &d);
+        if c.benches.is_empty() {
+            bail!("--benches must name at least one benchmark");
+        }
+        Ok(())
+    }),
+    ("policies", "budget policies: even|carry|greedy", |a, c| {
+        if a.flag("policies").is_some() {
+            c.policies = a
+                .str_list("policies", &[])
+                .iter()
+                .map(|s| {
+                    BudgetPolicy::parse(s).ok_or_else(|| {
+                        anyhow!("--policies: unknown budget policy '{s}' (even|carry|greedy)")
+                    })
+                })
+                .collect::<Result<_>>()?;
+        }
+        if c.policies.is_empty() {
+            bail!("--policies must name at least one entry");
+        }
+        Ok(())
+    }),
+    ("energy", "energy policies: race|stretch", |a, c| {
+        if a.flag("energy").is_some() {
+            c.energies = a
+                .str_list("energy", &[])
+                .iter()
+                .map(|s| {
+                    EnergyPolicy::parse(s).ok_or_else(|| {
+                        anyhow!("--energy: unknown energy policy '{s}' (race|stretch)")
+                    })
+                })
+                .collect::<Result<_>>()?;
+        }
+        if c.energies.is_empty() {
+            bail!("--energy must name at least one entry");
+        }
+        Ok(())
+    }),
+    ("sched", "scheduler: static|static-rev|dynamic:N|hguided|hguided-opt|adaptive", |a, c| {
+        if let Some(s) = a.flag("sched") {
+            c.scheduler =
+                Some(crate::config::parse_scheduler_str(s).map_err(|e| anyhow!("--sched: {e}"))?);
+        }
+        Ok(())
+    }),
+    ("refine", "switch: refine estimates from observed iterations", |a, c| {
+        c.refine = c.refine || a.switch("refine");
+        Ok(())
+    }),
+    ("stage-devices", "per-branch device masks, '/'-separated (>= 2 branches)", |a, c| {
+        c.masks = a.mask_flag("stage-devices", &SweepConfig::POOL_CLASSES, "cpu+igpu/gpu")?;
+        if c.masks.len() < 2 {
+            bail!("--stage-devices needs >= 2 '/'-separated masks (one per DAG branch)");
+        }
+        Ok(())
+    }),
+    ("mask-policy", "fixed|min-energy|min-time|energy-under-deadline", |a, c| {
+        c.mask_policy = a.mask_policy_flag("mask-policy", c.mask_policy)?;
+        Ok(())
+    }),
+    ("contention", "co-execution retention scope: view|pool", |a, c| {
+        c.contention = a.contention_flag("contention", c.contention)?;
+        Ok(())
+    }),
+    ("loads", "comma-separated offered-load multipliers (> 0)", |a, c| {
+        let d = c.loads.clone();
+        c.loads = a.f64_list("loads", &d)?;
+        if c.loads.is_empty() || c.loads.iter().any(|&m| !(m > 0.0 && m.is_finite())) {
+            bail!("--loads must be positive finite multipliers");
+        }
+        Ok(())
+    }),
+    ("requests", "number of arrivals per fleet (>= 1)", |a, c| {
+        c.n_requests = a.u32_flag("requests", c.n_requests)?;
+        if c.n_requests == 0 {
+            bail!("--requests must be >= 1");
+        }
+        Ok(())
+    }),
+    ("deadline-mult", "per-request deadline as a multiple of solo time (> 0)", |a, c| {
+        c.deadline_mult = a.f64_flag("deadline-mult", c.deadline_mult)?;
+        if !(c.deadline_mult > 0.0 && c.deadline_mult.is_finite()) {
+            bail!("--deadline-mult must be a positive finite multiplier, got {}", c.deadline_mult);
+        }
+        Ok(())
+    }),
+    ("admission", "admission policies: accept|reject|queue|shed", |a, c| {
+        if a.flag("admission").is_some() {
+            c.admission = a
+                .str_list("admission", &[])
+                .iter()
+                .map(|s| {
+                    AdmissionPolicy::parse(s).ok_or_else(|| {
+                        anyhow!(
+                            "--admission: unknown admission policy '{s}' \
+                             (accept|reject-infeasible|queue-until-feasible|shed-lowest-slack)"
+                        )
+                    })
+                })
+                .collect::<Result<_>>()?;
+        }
+        if c.admission.is_empty() {
+            bail!("--admission must name at least one entry");
+        }
+        Ok(())
+    }),
+    ("trace", "JSON file of arrival offsets (replaces Poisson arrivals)", |a, c| {
+        c.trace = a.flag("trace").map(PathBuf::from);
+        Ok(())
+    }),
+    ("seed", "fleet RNG seed (non-negative integer)", |a, c| {
+        if let Some(v) = a.flag("seed") {
+            c.seed = v
+                .parse::<u64>()
+                .map_err(|_| anyhow!("--seed must be a non-negative integer, got '{v}'"))?;
+        }
+        Ok(())
+    }),
+];
+
+/// Run every [`SWEEP_FLAGS`] parser against `args`, filling `cfg`
+/// in place.  The first malformed flag aborts with its own error.
+pub fn apply_sweep_flags(args: &Args, cfg: &mut SweepConfig) -> Result<()> {
+    for (_, _, apply) in SWEEP_FLAGS {
+        apply(args, cfg)?;
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -326,6 +577,116 @@ mod tests {
         assert!(msg.contains("--contention"), "names the flag: {msg}");
         assert!(msg.contains("view|pool"), "lists the options: {msg}");
         assert!(msg.contains("full"), "echoes the typo: {msg}");
+    }
+
+    /// Seed a traffic-sweep-shaped config (loads/budgets non-empty the
+    /// way the subcommands do it) and run the shared table.
+    fn sweep(s: &str) -> Result<SweepConfig> {
+        let mut c = SweepConfig::new();
+        c.budgets = vec![1.05, 1.2];
+        c.loads = vec![0.5, 1.0, 2.0];
+        apply_sweep_flags(&parse(s), &mut c)?;
+        Ok(c)
+    }
+
+    #[test]
+    fn sweep_table_defaults_survive_absent_flags() {
+        let c = sweep("traffic-sweep").unwrap();
+        assert_eq!(c.reps, 6);
+        assert_eq!(c.err, 0.3);
+        assert_eq!(c.budgets, vec![1.05, 1.2]);
+        assert_eq!(c.loads, vec![0.5, 1.0, 2.0]);
+        assert_eq!(c.n_requests, 16);
+        assert_eq!(c.deadline_mult, 1.5);
+        assert_eq!(c.admission, AdmissionPolicy::ALL.to_vec());
+        assert_eq!(c.policies, BudgetPolicy::ALL.to_vec());
+        assert!(c.scheduler.is_none());
+        assert!(c.trace.is_none());
+        assert_eq!(c.seed, 1);
+        assert_eq!(c.masks.len(), 2, "default pool split is two branches");
+    }
+
+    #[test]
+    fn sweep_table_parses_every_flag() {
+        let c = sweep(
+            "traffic-sweep --reps 4 --err 0.1 --iters 3 --budgets 1.5 \
+             --benches gaussian --policies carry --energy stretch --sched adaptive \
+             --refine --stage-devices cpu/gpu --mask-policy fixed --contention pool \
+             --loads 0.25,4 --requests 8 --deadline-mult 2.5 --admission shed \
+             --trace arrivals.json --seed 7",
+        )
+        .unwrap();
+        assert_eq!(c.reps, 4);
+        assert_eq!(c.err, 0.1);
+        assert_eq!(c.iters, 3);
+        assert_eq!(c.budgets, vec![1.5]);
+        assert_eq!(c.benches, vec!["gaussian"]);
+        assert_eq!(c.policies, vec![BudgetPolicy::CarryOverSlack]);
+        assert_eq!(c.energies, vec![EnergyPolicy::StretchToDeadline]);
+        assert!(c.scheduler.is_some());
+        assert!(c.refine);
+        assert_eq!(c.masks, vec![DeviceMask::single(0), DeviceMask::single(2)]);
+        assert_eq!(c.mask_policy, MaskPolicy::Fixed);
+        assert_eq!(c.contention, ContentionModel::Pool);
+        assert_eq!(c.loads, vec![0.25, 4.0]);
+        assert_eq!(c.n_requests, 8);
+        assert_eq!(c.deadline_mult, 2.5);
+        assert_eq!(c.admission, vec![AdmissionPolicy::ShedLowestSlack]);
+        assert_eq!(c.trace.as_deref().and_then(|p| p.to_str()), Some("arrivals.json"));
+        assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn sweep_table_errors_name_the_offending_flag() {
+        // Every malformed input is rejected through the SAME table no
+        // matter which subcommand hands it in, and the message names
+        // the flag the user must fix.
+        for (cli, flag) in [
+            ("x --reps 1", "--reps"),
+            ("x --err 1.5", "--err"),
+            ("x --err nan", "--err"),
+            ("x --iters 0", "--iters"),
+            ("x --budgets 1.0,zap", "--budgets"),
+            ("x --budgets 0", "--budgets"),
+            ("x --budgets -1.0", "--budgets"),
+            ("x --policies even,frugal", "--policies"),
+            ("x --energy coast", "--energy"),
+            ("x --sched dynamic:none", "--sched"),
+            ("x --stage-devices xpu/gpu", "--stage-devices"),
+            ("x --stage-devices cpu+igpu+gpu", "--stage-devices"),
+            ("x --mask-policy min-joules", "--mask-policy"),
+            ("x --contention full", "--contention"),
+            ("x --loads 0.5,oops", "--loads"),
+            ("x --loads 0", "--loads"),
+            ("x --requests 0", "--requests"),
+            ("x --requests many", "--requests"),
+            ("x --deadline-mult -2", "--deadline-mult"),
+            ("x --deadline-mult inf", "--deadline-mult"),
+            ("x --admission fifo", "--admission"),
+            ("x --seed -3", "--seed"),
+            ("x --seed sixteen", "--seed"),
+        ] {
+            let err = sweep(cli).expect_err(cli);
+            let msg = format!("{err}");
+            assert!(msg.contains(flag), "'{cli}': message must name {flag}, got '{msg}'");
+        }
+    }
+
+    #[test]
+    fn sweep_table_admission_accepts_all_documented_spellings() {
+        for (spelling, want) in [
+            ("accept", AdmissionPolicy::Accept),
+            ("always", AdmissionPolicy::Accept),
+            ("reject", AdmissionPolicy::RejectInfeasible),
+            ("reject-infeasible", AdmissionPolicy::RejectInfeasible),
+            ("queue", AdmissionPolicy::QueueUntilFeasible),
+            ("queue-until-feasible", AdmissionPolicy::QueueUntilFeasible),
+            ("shed", AdmissionPolicy::ShedLowestSlack),
+            ("shed-lowest-slack", AdmissionPolicy::ShedLowestSlack),
+        ] {
+            let c = sweep(&format!("x --admission {spelling}")).unwrap();
+            assert_eq!(c.admission, vec![want], "--admission {spelling}");
+        }
     }
 
     #[test]

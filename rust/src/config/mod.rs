@@ -36,7 +36,98 @@ pub struct RunConfig {
     pub seed: u64,
 }
 
+/// Typed, validated construction of a [`RunConfig`] — the flag/JSON
+/// string fields are filled from the enum labels, so a built config
+/// always passes the eager `parse_*` validation.
+#[derive(Debug, Clone)]
+pub struct RunConfigBuilder {
+    cfg: RunConfig,
+}
+
+impl RunConfigBuilder {
+    pub fn gws(mut self, gws: u64) -> Self {
+        self.cfg.gws = Some(gws);
+        self
+    }
+
+    pub fn scheduler(mut self, scheduler: SchedulerKind) -> Self {
+        self.cfg.scheduler = scheduler;
+        self
+    }
+
+    pub fn mode(mut self, mode: ExecMode) -> Self {
+        self.cfg.mode = match mode {
+            ExecMode::Roi => "roi".into(),
+            ExecMode::Binary => "binary".into(),
+        };
+        self
+    }
+
+    pub fn optimizations(mut self, opts: Optimizations) -> Self {
+        self.cfg.init_overlap = opts.init_overlap;
+        self.cfg.buffer_flags = opts.buffer_flags;
+        self.cfg.estimate_refine = opts.estimate_refine;
+        self
+    }
+
+    pub fn mask_policy(mut self, policy: MaskPolicy) -> Self {
+        self.cfg.mask_policy = policy.label().into();
+        self
+    }
+
+    pub fn contention(mut self, contention: ContentionModel) -> Self {
+        self.cfg.contention = contention.label().into();
+        self
+    }
+
+    pub fn reps(mut self, reps: usize) -> Self {
+        self.cfg.reps = reps;
+        self
+    }
+
+    pub fn devices(mut self, devices: Vec<DeviceSpec>) -> Self {
+        self.cfg.devices = Some(devices);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Validate and return the config (same checks `from_json` runs).
+    pub fn build(self) -> Result<RunConfig> {
+        let cfg = self.cfg;
+        if cfg.reps < 2 {
+            bail!("'reps' must be >= 2 (warm-up + measured runs), got {}", cfg.reps);
+        }
+        if cfg.gws == Some(0) {
+            bail!("'gws' must be a positive integer");
+        }
+        if let Some(devices) = &cfg.devices {
+            if devices.is_empty() {
+                bail!("'devices' must not be empty");
+            }
+            for d in devices {
+                if d.power <= 0.0 {
+                    bail!("device power must be positive, got {}", d.power);
+                }
+            }
+        }
+        cfg.parse_bench()?;
+        cfg.parse_mode()?;
+        cfg.parse_mask_policy()?;
+        cfg.parse_contention()?;
+        Ok(cfg)
+    }
+}
+
 impl RunConfig {
+    /// Start a validated builder from the per-bench defaults.
+    pub fn builder(bench: BenchId) -> RunConfigBuilder {
+        RunConfigBuilder { cfg: Self::for_bench(bench) }
+    }
+
     /// Sensible default experiment for one benchmark.
     pub fn for_bench(bench: BenchId) -> Self {
         Self {
@@ -151,7 +242,7 @@ impl RunConfig {
     }
 
     /// The co-execution contention scope this config asks for (feeds
-    /// `Engine::with_contention` for pipeline runs).
+    /// `EngineBuilder::contention` for pipeline runs).
     pub fn parse_contention(&self) -> Result<ContentionModel> {
         ContentionModel::parse(&self.contention)
             .ok_or_else(|| anyhow!("unknown contention '{}' (view|pool)", self.contention))
@@ -166,21 +257,26 @@ impl RunConfig {
     }
 
     /// Build the configured engine.
-    pub fn build_engine(&self) -> Result<crate::engine::Engine> {
+    pub fn engine(&self) -> Result<crate::engine::Engine> {
         let bench = crate::benchsuite::Bench::new(self.parse_bench()?);
-        let mut e = crate::engine::Engine::new(bench)
-            .with_scheduler(self.scheduler.clone())
-            .with_mode(self.parse_mode()?)
-            .with_optimizations(self.optimizations())
-            .with_mask_policy(self.parse_mask_policy()?)
-            .with_contention(self.parse_contention()?);
+        let mut b = crate::engine::Engine::builder(bench)
+            .scheduler(self.scheduler.clone())
+            .mode(self.parse_mode()?)
+            .optimizations(self.optimizations())
+            .mask_policy(self.parse_mask_policy()?)
+            .contention(self.parse_contention()?);
         if let Some(gws) = self.gws {
-            e = e.with_gws(gws);
+            b = b.gws(gws);
         }
         if let Some(devices) = &self.devices {
-            e = e.with_devices(devices.clone());
+            b = b.devices(devices.clone());
         }
-        Ok(e)
+        Ok(b.build())
+    }
+
+    #[deprecated(note = "use RunConfig::engine()")]
+    pub fn build_engine(&self) -> Result<crate::engine::Engine> {
+        self.engine()
     }
 }
 
@@ -325,7 +421,41 @@ mod tests {
         assert_eq!(c.parse_bench().unwrap(), BenchId::Mandelbrot);
         assert_eq!(c.parse_mode().unwrap(), ExecMode::Roi);
         assert!(c.optimizations().init_overlap);
-        assert!(c.build_engine().is_ok());
+        assert!(c.engine().is_ok());
+    }
+
+    #[test]
+    fn builder_validates_and_labels_roundtrip() {
+        let c = RunConfig::builder(BenchId::Gaussian)
+            .mode(ExecMode::Binary)
+            .mask_policy(MaskPolicy::EnergyUnderDeadline)
+            .contention(ContentionModel::Pool)
+            .gws(4096)
+            .reps(4)
+            .seed(9)
+            .build()
+            .unwrap();
+        assert_eq!(c.parse_mode().unwrap(), ExecMode::Binary);
+        assert_eq!(c.parse_mask_policy().unwrap(), MaskPolicy::EnergyUnderDeadline);
+        assert_eq!(c.parse_contention().unwrap(), ContentionModel::Pool);
+        assert_eq!(c.gws, Some(4096));
+        assert_eq!(c.seed, 9);
+        let e = c.engine().unwrap();
+        assert_eq!(e.mask_policy(), MaskPolicy::EnergyUnderDeadline);
+        assert_eq!(e.contention(), ContentionModel::Pool);
+        assert!(RunConfig::builder(BenchId::Gaussian).reps(1).build().is_err());
+        assert!(RunConfig::builder(BenchId::Gaussian).gws(0).build().is_err());
+        assert!(RunConfig::builder(BenchId::Gaussian).devices(vec![]).build().is_err());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_build_engine_forwards() {
+        let c = RunConfig::for_bench(BenchId::Gaussian);
+        assert_eq!(
+            c.build_engine().unwrap().mask_policy(),
+            c.engine().unwrap().mask_policy()
+        );
     }
 
     #[test]
@@ -360,7 +490,7 @@ mod tests {
         let pooled = RunConfig::from_json(&Json::parse(doc).unwrap()).unwrap();
         assert_eq!(pooled.parse_contention().unwrap(), ContentionModel::Pool);
         assert_eq!(
-            pooled.build_engine().unwrap().contention(),
+            pooled.engine().unwrap().contention(),
             ContentionModel::Pool,
             "contention scope wired into the engine"
         );
@@ -368,7 +498,7 @@ mod tests {
         let masked = RunConfig::from_json(&Json::parse(doc).unwrap()).unwrap();
         assert_eq!(masked.parse_mask_policy().unwrap(), MaskPolicy::EnergyUnderDeadline);
         // The knob is wired through to the engine, not just validated.
-        let engine = masked.build_engine().unwrap();
+        let engine = masked.engine().unwrap();
         assert_eq!(engine.mask_policy(), MaskPolicy::EnergyUnderDeadline);
         assert_eq!(c.scheduler.label(), "HGuided opt");
         let devs = c.devices.unwrap();

@@ -10,9 +10,10 @@ use crate::metrics;
 use crate::scheduler::{HGuidedParams, SchedulerKind};
 use crate::sim::{simulate_pipeline, PipelineSpec, PipelineStage, SimConfig};
 use crate::stats::geomean;
+use crate::sim::tenancy::{ArrivalProcess, FleetOutcome, FleetSpec};
 use crate::types::{
-    BudgetPolicy, ContentionModel, DeviceMask, EnergyPolicy, EstimateScenario, ExecMode,
-    MaskPolicy, Optimizations, TimeBudget,
+    AdmissionPolicy, BudgetPolicy, ContentionModel, DeviceMask, EnergyPolicy, EstimateScenario,
+    ExecMode, MaskPolicy, Optimizations, TimeBudget,
 };
 
 use super::Engine;
@@ -72,12 +73,12 @@ pub fn fig3(reps: usize) -> Vec<Fig3Row> {
     let mut rows = Vec::new();
     for id in BenchId::ALL {
         let bench = Bench::new(id);
-        let base = Engine::new(bench.clone());
-        let standalone = base.standalone_times(reps.min(8));
+        let base = Engine::builder(bench.clone());
+        let standalone = base.clone().build().standalone_times(reps.min(8));
         let gpu_time = standalone[2];
         let s_max = metrics::max_speedup(&standalone);
         for kind in SchedulerKind::fig3_configs() {
-            let rep = base.clone().with_scheduler(kind.clone()).run_reps(reps);
+            let rep = base.clone().scheduler(kind.clone()).build().run_reps(reps);
             let s = metrics::speedup(gpu_time, rep.time.mean);
             rows.push(Fig3Row {
                 bench: id.label().into(),
@@ -138,9 +139,9 @@ pub fn fig4(reps: usize) -> Vec<Fig4Row> {
     let mut rows = Vec::new();
     for id in BenchId::ALL {
         let bench = Bench::new(id);
-        let base = Engine::new(bench);
+        let base = Engine::builder(bench);
         for kind in SchedulerKind::fig3_configs() {
-            let rep = base.clone().with_scheduler(kind.clone()).run_reps(reps);
+            let rep = base.clone().scheduler(kind.clone()).build().run_reps(reps);
             rows.push(Fig4Row {
                 bench: id.label().into(),
                 scheduler: kind.label(),
@@ -210,7 +211,7 @@ pub fn fig5_grid() -> (Vec<[u64; 3]>, Vec<[f64; 3]>) {
 /// Regenerate one benchmark's Fig.-5 surface.
 pub fn fig5(id: BenchId, reps: usize) -> Vec<Fig5Row> {
     let bench = Bench::new(id);
-    let base = Engine::new(bench);
+    let base = Engine::builder(bench);
     let (ms, ks) = fig5_grid();
     let mut rows = Vec::with_capacity(ms.len() * ks.len());
     for m in &ms {
@@ -218,7 +219,8 @@ pub fn fig5(id: BenchId, reps: usize) -> Vec<Fig5Row> {
             let params = HGuidedParams { min_mult: m.to_vec(), k: k.to_vec() };
             let rep = base
                 .clone()
-                .with_scheduler(SchedulerKind::HGuided { params })
+                .scheduler(SchedulerKind::HGuided { params })
+                .build()
                 .run_reps(reps);
             rows.push(Fig5Row {
                 bench: id.label().into(),
@@ -314,15 +316,16 @@ pub fn fig6(id: BenchId, reps: usize) -> Vec<Fig6Row> {
     for &gws in &sizes {
         for mode in [ExecMode::Binary, ExecMode::Roi] {
             for level in OptLevel::ALL_LEVELS {
-                let base = Engine::new(bench.clone())
-                    .with_gws(gws)
-                    .with_mode(mode)
-                    .with_optimizations(level.flags());
-                let single = base.clone().gpu_only().run_reps(reps).time.mean;
+                let base = Engine::builder(bench.clone())
+                    .gws(gws)
+                    .mode(mode)
+                    .optimizations(level.flags());
+                let single = base.clone().gpu_only().build().run_reps(reps).time.mean;
                 let co = base
-                    .with_scheduler(SchedulerKind::HGuided {
+                    .scheduler(SchedulerKind::HGuided {
                         params: HGuidedParams::optimized_paper(),
                     })
+                    .build()
                     .run_reps(reps)
                     .time
                     .mean;
@@ -522,8 +525,8 @@ pub fn deadline_sweep(
     let mut rows = Vec::new();
     for id in BenchId::ALL {
         let bench = Bench::new(id);
-        let base = Engine::new(bench.clone());
-        let standalone = base.standalone_times(reps.clamp(2, 8));
+        let base = Engine::builder(bench.clone());
+        let standalone = base.clone().build().standalone_times(reps.clamp(2, 8));
         let t_ideal = 1.0 / standalone.iter().map(|t| 1.0 / t).sum::<f64>();
         for &est in estimates {
             for &mult in budget_mults {
@@ -531,9 +534,10 @@ pub fn deadline_sweep(
                 for kind in SchedulerKind::all_configs() {
                     let rep = base
                         .clone()
-                        .with_scheduler(kind.clone())
-                        .with_estimate(est)
-                        .with_budget(budget)
+                        .scheduler(kind.clone())
+                        .estimate(est)
+                        .budget(budget)
+                        .build()
                         .run_reps(reps);
                     let dl = rep.deadline.expect("budget configured");
                     let eff = metrics::coexec_efficiency(&standalone, rep.time.mean);
@@ -1383,6 +1387,271 @@ pub fn contention_compare(
         }
     }
     rows
+}
+
+// ------------------------------------------------- traffic sweep
+/// One cell of the multi-tenant traffic sweep: a seeded Poisson fleet of
+/// identical branch-parallel pipelines offered at `rate_hz`, served on
+/// the shared pool under one [`AdmissionPolicy`].  Because the arrival
+/// RNG stream is fixed per fleet seed, raising the rate *uniformly
+/// compresses* the same arrival pattern — the load axis is a controlled
+/// experiment, not a re-roll.
+#[derive(Debug, Clone)]
+pub struct TrafficRow {
+    pub pipeline: String,
+    pub admission: String,
+    /// Offered load as a multiple of the single-request service rate
+    /// (`1.0` ≈ one request arriving per unconstrained service time).
+    pub load_mult: f64,
+    pub rate_hz: f64,
+    /// Per-request relative deadline (seconds after arrival).
+    pub deadline_s: f64,
+    pub n_requests: usize,
+    pub n_completed: usize,
+    pub n_rejected: usize,
+    pub n_shed: usize,
+    /// Deadline hit rate over *offered* requests (rejected/shed = miss).
+    pub hit_rate: f64,
+    pub slack_p50_s: Option<f64>,
+    pub slack_p95_s: Option<f64>,
+    pub slack_p99_s: Option<f64>,
+    pub makespan_s: f64,
+    pub energy_j: f64,
+    /// Total fleet energy over deadline hits; `None` when nothing hit.
+    pub j_per_hit: Option<f64>,
+}
+
+fn opt_cell(v: Option<f64>) -> String {
+    v.map(|x| x.to_string()).unwrap_or_default()
+}
+
+impl CsvRow for TrafficRow {
+    fn csv_header() -> &'static str {
+        "pipeline,admission,load_mult,rate_hz,deadline_s,n_requests,n_completed,\
+         n_rejected,n_shed,hit_rate,slack_p50_s,slack_p95_s,slack_p99_s,\
+         makespan_s,energy_j,j_per_hit"
+    }
+    fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            self.pipeline,
+            self.admission,
+            self.load_mult,
+            self.rate_hz,
+            self.deadline_s,
+            self.n_requests,
+            self.n_completed,
+            self.n_rejected,
+            self.n_shed,
+            self.hit_rate,
+            opt_cell(self.slack_p50_s),
+            opt_cell(self.slack_p95_s),
+            opt_cell(self.slack_p99_s),
+            self.makespan_s,
+            self.energy_j,
+            opt_cell(self.j_per_hit)
+        )
+    }
+}
+
+impl TrafficRow {
+    /// Project one fleet outcome onto the sweep-table shape.
+    pub fn from_fleet(
+        pipeline: &str,
+        load_mult: f64,
+        rate_hz: f64,
+        deadline_s: f64,
+        out: &FleetOutcome,
+    ) -> Self {
+        TrafficRow {
+            pipeline: pipeline.into(),
+            admission: out.admission.label().into(),
+            load_mult,
+            rate_hz,
+            deadline_s,
+            n_requests: out.n_requests,
+            n_completed: out.n_completed,
+            n_rejected: out.n_rejected,
+            n_shed: out.n_shed,
+            hit_rate: out.hit_rate,
+            slack_p50_s: out.slack_p50_s,
+            slack_p95_s: out.slack_p95_s,
+            slack_p99_s: out.slack_p99_s,
+            makespan_s: out.makespan_s,
+            energy_j: out.energy_j,
+            j_per_hit: out.joules_per_hit,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("pipeline", Json::Str(self.pipeline.clone())),
+            ("admission", Json::Str(self.admission.clone())),
+            ("load_mult", Json::Num(self.load_mult)),
+            ("rate_hz", Json::Num(self.rate_hz)),
+            ("deadline_s", Json::Num(self.deadline_s)),
+            ("n_requests", Json::Num(self.n_requests as f64)),
+            ("n_completed", Json::Num(self.n_completed as f64)),
+            ("n_rejected", Json::Num(self.n_rejected as f64)),
+            ("n_shed", Json::Num(self.n_shed as f64)),
+            ("hit_rate", Json::Num(self.hit_rate)),
+            ("slack_p50_s", Json::opt_num(self.slack_p50_s)),
+            ("slack_p95_s", Json::opt_num(self.slack_p95_s)),
+            ("slack_p99_s", Json::opt_num(self.slack_p99_s)),
+            ("makespan_s", Json::Num(self.makespan_s)),
+            ("energy_j", Json::Num(self.energy_j)),
+            ("j_per_hit", Json::opt_num(self.j_per_hit)),
+        ])
+    }
+}
+
+/// The whole traffic sweep as one JSON array.
+pub fn traffic_rows_json(rows: &[TrafficRow]) -> Json {
+    Json::Arr(rows.iter().map(TrafficRow::to_json).collect())
+}
+
+/// The default offered-load ladder, as multiples of the single-request
+/// service rate: idle, light, critical, saturated, overloaded.  Five
+/// levels bracket the saturation knee.
+pub fn traffic_load_mults() -> Vec<f64> {
+    vec![0.25, 0.5, 1.0, 2.0, 4.0]
+}
+
+/// Sweep offered load × admission policy over a Poisson fleet of
+/// identical branch-parallel pipelines (the [`branch_compare`] DAG) on
+/// the shared pool.  Each request carries the same relative deadline
+/// (`deadline_mult` × the unconstrained single-request pool ROI time);
+/// offered loads are multiples of that service rate, so the saturation
+/// knee sits near `load_mult` ≈ number of independent branches.
+#[allow(clippy::too_many_arguments)]
+pub fn traffic_sweep(
+    benches: &[BenchId],
+    masks: &[DeviceMask],
+    iterations: u32,
+    scheduler: &SchedulerKind,
+    opts: Optimizations,
+    deadline_mult: f64,
+    load_mults: &[f64],
+    n_requests: usize,
+    policies: &[AdmissionPolicy],
+    seed: u64,
+) -> Vec<TrafficRow> {
+    assert!(!load_mults.is_empty(), "need at least one offered-load level");
+    assert!(n_requests >= 1, "need at least one request");
+    assert!(!policies.is_empty(), "need at least one admission policy");
+    let stages = branch_stages(benches, masks, iterations);
+    let template = Bench::new(benches[0]);
+    let mk_spec = || PipelineSpec {
+        stages: stages.clone(),
+        budget: None,
+        policy: BudgetPolicy::CarryOverSlack,
+        energy: EnergyPolicy::RaceToIdle,
+        mask_policy: MaskPolicy::Fixed,
+        serial: false,
+    };
+    let mut cfg = SimConfig::testbed(&template, scheduler.clone());
+    cfg.opts = opts;
+    cfg.contention = ContentionModel::Pool;
+    cfg.seed = seed;
+    // Unconstrained single-request service time anchors both the relative
+    // deadline and the load ladder.
+    let t_ref = simulate_pipeline(&mk_spec(), &cfg).roi_time;
+    let spec = mk_spec().with_deadline(deadline_mult * t_ref);
+    let mut rows = Vec::new();
+    for &mult in load_mults {
+        let rate_hz = mult / t_ref;
+        for &admission in policies {
+            let fleet = FleetSpec {
+                template: spec.clone(),
+                arrivals: ArrivalProcess::Poisson { rate_hz, n: n_requests },
+                admission,
+            };
+            let out = crate::sim::simulate_fleet(&fleet, &cfg);
+            rows.push(TrafficRow::from_fleet(
+                &spec.label(),
+                mult,
+                rate_hz,
+                deadline_mult * t_ref,
+                &out,
+            ));
+        }
+    }
+    rows
+}
+
+/// Run ONE fleet (arbitrary arrival process) on the [`traffic_sweep`]
+/// pipeline template and shared-pool config.  Returns the full
+/// [`FleetOutcome`] (for the fleet JSON document), the unconstrained
+/// single-request reference time `t_ref` that anchors the relative
+/// deadline (`deadline_mult * t_ref` seconds after each arrival), and
+/// the pipeline label.
+#[allow(clippy::too_many_arguments)]
+pub fn traffic_fleet(
+    benches: &[BenchId],
+    masks: &[DeviceMask],
+    iterations: u32,
+    scheduler: &SchedulerKind,
+    opts: Optimizations,
+    deadline_mult: f64,
+    arrivals: ArrivalProcess,
+    admission: AdmissionPolicy,
+    seed: u64,
+) -> (FleetOutcome, f64, String) {
+    let stages = branch_stages(benches, masks, iterations);
+    let template = Bench::new(benches[0]);
+    let mk_spec = || PipelineSpec {
+        stages: stages.clone(),
+        budget: None,
+        policy: BudgetPolicy::CarryOverSlack,
+        energy: EnergyPolicy::RaceToIdle,
+        mask_policy: MaskPolicy::Fixed,
+        serial: false,
+    };
+    let mut cfg = SimConfig::testbed(&template, scheduler.clone());
+    cfg.opts = opts;
+    cfg.contention = ContentionModel::Pool;
+    cfg.seed = seed;
+    let t_ref = simulate_pipeline(&mk_spec(), &cfg).roi_time;
+    let spec = mk_spec().with_deadline(deadline_mult * t_ref);
+    let label = spec.label();
+    let fleet = FleetSpec { template: spec, arrivals, admission };
+    (crate::sim::simulate_fleet(&fleet, &cfg), t_ref, label)
+}
+
+/// Trace-driven companion to [`traffic_sweep`]: the same pipeline
+/// template and shared pool, but arrivals replayed from an explicit
+/// trace — one row per admission policy.
+#[allow(clippy::too_many_arguments)]
+pub fn traffic_trace(
+    benches: &[BenchId],
+    masks: &[DeviceMask],
+    iterations: u32,
+    scheduler: &SchedulerKind,
+    opts: Optimizations,
+    deadline_mult: f64,
+    arrivals: &ArrivalProcess,
+    policies: &[AdmissionPolicy],
+    seed: u64,
+) -> Vec<TrafficRow> {
+    assert!(!policies.is_empty(), "need at least one admission policy");
+    policies
+        .iter()
+        .map(|&admission| {
+            let (out, t_ref, label) = traffic_fleet(
+                benches,
+                masks,
+                iterations,
+                scheduler,
+                opts,
+                deadline_mult,
+                arrivals.clone(),
+                admission,
+                seed,
+            );
+            let rate_hz = out.offered_load;
+            TrafficRow::from_fleet(&label, rate_hz * t_ref, rate_hz, deadline_mult * t_ref, &out)
+        })
+        .collect()
 }
 
 #[cfg(test)]

@@ -2,22 +2,36 @@
 //!
 //! ```no_run
 //! use enginecl::benchsuite::{Bench, BenchId};
-//! use enginecl::engine::Engine;
+//! use enginecl::engine::{Engine, Request};
 //! use enginecl::scheduler::{HGuidedParams, SchedulerKind};
-//! use enginecl::types::{ExecMode, Optimizations};
+//! use enginecl::sim::PipelineSpec;
+//! use enginecl::types::{ExecMode, Optimizations, TimeBudget};
 //!
 //! let bench = Bench::new(BenchId::Mandelbrot);
-//! let report = Engine::new(bench)
-//!     .with_scheduler(SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() })
-//!     .with_mode(ExecMode::Roi)
-//!     .with_optimizations(Optimizations::ALL)
-//!     .run(1);
+//! let engine = Engine::builder(bench.clone())
+//!     .scheduler(SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() })
+//!     .mode(ExecMode::Roi)
+//!     .optimizations(Optimizations::ALL)
+//!     .build();
+//! let report = engine.run(1);
 //! println!("response time {:.3}s balance {:.2}", report.time, report.balance);
+//! // Deadline-bound pipeline work goes through the request surface:
+//! let out = engine.submit(
+//!     Request::new(PipelineSpec::repeat(bench, 4)).budget(TimeBudget::new(2.0)),
+//! );
+//! println!("hit = {:?}", out.deadline.map(|v| v.met));
 //! ```
 //!
 //! `Engine::run` drives the virtual-clock backend; the PJRT threaded
 //! backend lives in `pjrt` (behind the non-default `pjrt` feature) and
 //! the figure-regeneration harness in [`experiments`].
+//!
+//! **Configuration surface.**  [`Engine::builder`] (or the JSON-facing
+//! [`crate::config::RunConfig::builder`]) is the one validated way to
+//! configure an engine; the historical `with_*` mutator chain survives
+//! as thin `#[deprecated]` forwarding shims.  Work is submitted as a
+//! [`Request`] (spec + budget + seed) via [`Engine::submit`], or as a
+//! whole fleet via [`Engine::submit_fleet`].
 
 pub mod experiments;
 #[cfg(feature = "pjrt")]
@@ -27,12 +41,44 @@ use crate::benchsuite::Bench;
 use crate::cldriver::DriverProfile;
 use crate::metrics;
 use crate::scheduler::SchedulerKind;
-use crate::sim::{simulate, SimConfig, SimOutcome};
+use crate::sim::{simulate, FleetOutcome, FleetSpec, PipelineSpec, SimConfig, SimOutcome};
 use crate::stats::Summary;
 use crate::types::{
     ContentionModel, DeviceSpec, EstimateScenario, ExecMode, MaskPolicy, Optimizations,
     TimeBudget,
 };
+
+/// What [`Engine::submit`] returns (the full pipeline outcome).
+pub type Outcome = crate::sim::PipelineOutcome;
+
+/// One unit of work for [`Engine::submit`]: the pipeline spec (a single
+/// kernel is a one-stage spec), an optional budget override, and the run
+/// seed.  Policies (budget split, energy, mask selection) ride on the
+/// spec itself; the budget resolution order is spec > request > engine.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub spec: PipelineSpec,
+    /// Used when the spec carries no budget of its own.
+    pub budget: Option<TimeBudget>,
+    pub seed: u64,
+}
+
+impl Request {
+    pub fn new(spec: PipelineSpec) -> Self {
+        Self { spec, budget: None, seed: 1 }
+    }
+
+    /// Budget override for specs that don't carry one.
+    pub fn budget(mut self, budget: TimeBudget) -> Self {
+        self.budget = Some(budget);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
 
 /// Tier-1 entry point: configure and launch co-executions of one
 /// benchmark program.
@@ -80,6 +126,96 @@ pub struct DeadlineStats {
     pub mean_slack_s: f64,
 }
 
+/// Validated construction surface for [`Engine`] — the one place an
+/// engine's knobs are set (the `Engine::with_*` chain forwards here and
+/// is deprecated).  Obtain via [`Engine::builder`], finish with
+/// [`EngineBuilder::build`].
+#[derive(Debug, Clone)]
+pub struct EngineBuilder {
+    inner: Engine,
+}
+
+impl EngineBuilder {
+    pub fn devices(mut self, devices: Vec<DeviceSpec>) -> Self {
+        self.inner.devices = devices;
+        self
+    }
+
+    /// Restrict to the fastest device only (the paper's baseline).  The
+    /// scheduler degenerates to a single Static package.
+    pub fn gpu_only(mut self) -> Self {
+        self.inner.devices = vec![crate::types::DeviceSpec {
+            class: crate::types::DeviceClass::DGpu,
+            power: 1.0,
+        }];
+        self.inner.scheduler = SchedulerKind::Static;
+        self
+    }
+
+    pub fn scheduler(mut self, scheduler: SchedulerKind) -> Self {
+        self.inner.scheduler = scheduler;
+        self
+    }
+
+    pub fn mode(mut self, mode: ExecMode) -> Self {
+        self.inner.mode = mode;
+        self
+    }
+
+    pub fn optimizations(mut self, opts: Optimizations) -> Self {
+        self.inner.opts = opts;
+        self
+    }
+
+    pub fn driver(mut self, driver: DriverProfile) -> Self {
+        self.inner.driver = driver;
+        self
+    }
+
+    /// Override the problem size (work-items); default = paper size.
+    pub fn gws(mut self, gws: u64) -> Self {
+        self.inner.gws = Some(gws);
+        self
+    }
+
+    /// Attach an ROI time budget (the paper's time-constrained scenario):
+    /// runs record deadline verdicts and deadline-aware schedulers adapt.
+    pub fn budget(mut self, budget: TimeBudget) -> Self {
+        self.inner.budget = Some(budget);
+        self
+    }
+
+    /// Configure the scheduler's power-estimation scenario.
+    pub fn estimate(mut self, estimate: EstimateScenario) -> Self {
+        self.inner.estimate = estimate;
+        self
+    }
+
+    /// Engine-level pipeline mask-selection policy: applied by
+    /// [`Engine::submit`] to specs that don't choose a policy themselves.
+    pub fn mask_policy(mut self, mask_policy: MaskPolicy) -> Self {
+        self.inner.mask_policy = mask_policy;
+        self
+    }
+
+    /// Scope co-execution retention per stage view (legacy default) or
+    /// against the pool's concurrently-active device count; applies to
+    /// pipeline runs ([`Engine::submit`] / [`Engine::run_iterative`]).
+    pub fn contention(mut self, contention: ContentionModel) -> Self {
+        self.inner.contention = contention;
+        self
+    }
+
+    /// Validate and finish.
+    pub fn build(self) -> Engine {
+        assert!(!self.inner.devices.is_empty(), "engine needs at least one device");
+        if let Some(g) = self.inner.gws {
+            assert!(g > 0, "gws must be positive");
+        }
+        self.inner
+    }
+}
+
 impl Engine {
     /// New engine over the paper testbed with HGuided-optimized defaults.
     pub fn new(bench: Bench) -> Self {
@@ -101,14 +237,26 @@ impl Engine {
         }
     }
 
+    /// The validated configuration surface (paper-testbed defaults).
+    pub fn builder(bench: Bench) -> EngineBuilder {
+        EngineBuilder { inner: Engine::new(bench) }
+    }
+
+    /// Reopen a built engine for further configuration (e.g. layering a
+    /// CLI-provided budget over a [`crate::config::RunConfig`] engine).
+    pub fn into_builder(self) -> EngineBuilder {
+        EngineBuilder { inner: self }
+    }
+
+    #[deprecated(note = "use Engine::builder(bench).devices(..).build()")]
     pub fn with_devices(mut self, devices: Vec<DeviceSpec>) -> Self {
         assert!(!devices.is_empty());
         self.devices = devices;
         self
     }
 
-    /// Restrict to the fastest device only (the paper's baseline).  The
-    /// scheduler degenerates to a single Static package.
+    /// Restrict to the fastest device only (the paper's baseline).
+    #[deprecated(note = "use Engine::builder(bench).gpu_only().build()")]
     pub fn gpu_only(mut self) -> Self {
         self.devices = vec![crate::types::DeviceSpec {
             class: crate::types::DeviceClass::DGpu,
@@ -118,48 +266,53 @@ impl Engine {
         self
     }
 
+    #[deprecated(note = "use Engine::builder(bench).scheduler(..).build()")]
     pub fn with_scheduler(mut self, scheduler: SchedulerKind) -> Self {
         self.scheduler = scheduler;
         self
     }
 
+    #[deprecated(note = "use Engine::builder(bench).mode(..).build()")]
     pub fn with_mode(mut self, mode: ExecMode) -> Self {
         self.mode = mode;
         self
     }
 
+    #[deprecated(note = "use Engine::builder(bench).optimizations(..).build()")]
     pub fn with_optimizations(mut self, opts: Optimizations) -> Self {
         self.opts = opts;
         self
     }
 
+    #[deprecated(note = "use Engine::builder(bench).driver(..).build()")]
     pub fn with_driver(mut self, driver: DriverProfile) -> Self {
         self.driver = driver;
         self
     }
 
     /// Override the problem size (work-items); default = paper size.
+    #[deprecated(note = "use Engine::builder(bench).gws(..).build()")]
     pub fn with_gws(mut self, gws: u64) -> Self {
         self.gws = Some(gws);
         self
     }
 
-    /// Attach an ROI time budget (the paper's time-constrained scenario):
-    /// runs record deadline verdicts and deadline-aware schedulers adapt.
+    /// Attach an ROI time budget (the paper's time-constrained scenario).
+    #[deprecated(note = "use Engine::builder(bench).budget(..).build()")]
     pub fn with_budget(mut self, budget: TimeBudget) -> Self {
         self.budget = Some(budget);
         self
     }
 
     /// Configure the scheduler's power-estimation scenario.
+    #[deprecated(note = "use Engine::builder(bench).estimate(..).build()")]
     pub fn with_estimate(mut self, estimate: EstimateScenario) -> Self {
         self.estimate = estimate;
         self
     }
 
-    /// Engine-level pipeline mask-selection policy (e.g. from a JSON
-    /// [`crate::config::RunConfig`]): applied by [`Engine::run_pipeline`]
-    /// to specs that don't choose a policy themselves.
+    /// Engine-level pipeline mask-selection policy.
+    #[deprecated(note = "use Engine::builder(bench).mask_policy(..).build()")]
     pub fn with_mask_policy(mut self, mask_policy: MaskPolicy) -> Self {
         self.mask_policy = mask_policy;
         self
@@ -170,9 +323,8 @@ impl Engine {
         self.mask_policy
     }
 
-    /// Scope co-execution retention per stage view (legacy default) or
-    /// against the pool's concurrently-active device count; applies to
-    /// pipeline runs ([`Engine::run_pipeline`] / [`Engine::run_iterative`]).
+    /// Scope co-execution retention per stage view or pool.
+    #[deprecated(note = "use Engine::builder(bench).contention(..).build()")]
     pub fn with_contention(mut self, contention: ContentionModel) -> Self {
         self.contention = contention;
         self
@@ -214,24 +366,39 @@ impl Engine {
         crate::sim::simulate_iterative(&self.bench, &self.sim_config(seed), iterations)
     }
 
-    /// One pipeline run ([`crate::sim::simulate_pipeline`]) with this
-    /// engine's configuration as the run template; `spec` supplies the
-    /// stages, the global budget, and the budget/energy policies.  The
-    /// engine's mask policy ([`Engine::with_mask_policy`], e.g. from a
-    /// JSON `RunConfig`) applies when the spec leaves its own policy at
-    /// the `Fixed` default; an explicit spec policy wins.
+    /// Serve one [`Request`] on this engine's configuration
+    /// ([`crate::sim::simulate_pipeline`]): the spec supplies the stages
+    /// and its own policies; the budget resolves spec > request > engine;
+    /// the engine-level mask policy applies when the spec leaves its own
+    /// policy at the `Fixed` default (an explicit spec policy wins).
+    pub fn submit(&self, req: Request) -> Outcome {
+        let Request { mut spec, budget, seed } = req;
+        if spec.budget.is_none() {
+            spec.budget = budget.or(self.budget);
+        }
+        if spec.mask_policy == MaskPolicy::Fixed && self.mask_policy != MaskPolicy::Fixed {
+            spec = spec.with_mask_policy(self.mask_policy);
+        }
+        crate::sim::simulate_pipeline(&spec, &self.sim_config(seed))
+    }
+
+    /// Serve a whole fleet of requests ([`crate::sim::simulate_fleet`])
+    /// on this engine's pool: open-loop arrivals, admission control and
+    /// tail metrics.  The engine budget is each request's default, dated
+    /// to its own arrival.
+    pub fn submit_fleet(&self, fleet: &FleetSpec, seed: u64) -> FleetOutcome {
+        crate::sim::simulate_fleet(fleet, &self.sim_config(seed))
+    }
+
+    /// One pipeline run with this engine's configuration as the run
+    /// template.
+    #[deprecated(note = "use Engine::submit(Request::new(spec).seed(seed))")]
     pub fn run_pipeline(
         &self,
         spec: &crate::sim::PipelineSpec,
         seed: u64,
     ) -> crate::sim::PipelineOutcome {
-        let cfg = self.sim_config(seed);
-        if spec.mask_policy == MaskPolicy::Fixed && self.mask_policy != MaskPolicy::Fixed {
-            let spec = spec.clone().with_mask_policy(self.mask_policy);
-            crate::sim::simulate_pipeline(&spec, &cfg)
-        } else {
-            crate::sim::simulate_pipeline(spec, &cfg)
-        }
+        self.submit(Request::new(spec.clone()).seed(seed))
     }
 
     /// Energy-to-solution (J) of one run — the §VII energy-efficiency
@@ -300,10 +467,9 @@ impl Engine {
         self.devices
             .iter()
             .map(|d| {
-                let solo = self
-                    .clone()
-                    .with_devices(vec![d.clone()])
-                    .with_scheduler(SchedulerKind::Static);
+                let mut solo = self.clone();
+                solo.devices = vec![d.clone()];
+                solo.scheduler = SchedulerKind::Static;
                 solo.run_reps(reps).time.mean
             })
             .collect()
@@ -315,21 +481,52 @@ mod tests {
     use super::*;
     use crate::benchsuite::BenchId;
 
-    fn small(id: BenchId) -> Engine {
+    fn small_b(id: BenchId) -> EngineBuilder {
         let b = Bench::new(id);
         let gws = b.default_gws / 16;
-        Engine::new(b).with_gws(gws)
+        Engine::builder(b).gws(gws)
+    }
+
+    fn small(id: BenchId) -> Engine {
+        small_b(id).build()
     }
 
     #[test]
     fn builder_roundtrip() {
-        let e = small(BenchId::Gaussian)
-            .with_mode(ExecMode::Binary)
-            .with_optimizations(Optimizations::NONE);
+        let e = small_b(BenchId::Gaussian)
+            .mode(ExecMode::Binary)
+            .optimizations(Optimizations::NONE)
+            .build();
         let r = e.run(1);
         assert!(r.time > 0.0);
         assert!(r.outcome.total_time >= r.outcome.roi_time);
         assert_eq!(r.time, r.outcome.total_time, "binary mode reports total");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_with_chain_forwards_to_the_builder() {
+        // The shims must stay bit-identical to the builder surface until
+        // they are removed.
+        let new = small_b(BenchId::Gaussian)
+            .mode(ExecMode::Binary)
+            .budget(crate::types::TimeBudget::new(2.0))
+            .build()
+            .run(1);
+        let b = Bench::new(BenchId::Gaussian);
+        let old = Engine::new(b.clone())
+            .with_gws(b.default_gws / 16)
+            .with_mode(ExecMode::Binary)
+            .with_budget(crate::types::TimeBudget::new(2.0))
+            .run(1);
+        assert_eq!(new.time.to_bits(), old.time.to_bits());
+        // run_pipeline forwards to submit.
+        let e = small_b(BenchId::Gaussian).build();
+        let spec = crate::sim::PipelineSpec::repeat(e.bench().clone(), 2);
+        let via_shim = e.run_pipeline(&spec, 7);
+        let via_submit = e.submit(Request::new(spec).seed(7));
+        assert_eq!(via_shim.roi_time.to_bits(), via_submit.roi_time.to_bits());
+        assert_eq!(via_shim.energy_j.to_bits(), via_submit.energy_j.to_bits());
     }
 
     #[test]
@@ -342,7 +539,7 @@ mod tests {
 
     #[test]
     fn gpu_only_is_single_device() {
-        let r = small(BenchId::Ray1).gpu_only().run(1);
+        let r = small_b(BenchId::Ray1).gpu_only().build().run(1);
         assert_eq!(r.outcome.devices.len(), 1);
         assert_eq!(r.balance, 1.0);
     }
@@ -357,9 +554,8 @@ mod tests {
 
     #[test]
     fn hguided_beats_gpu_only_in_roi() {
-        let e = small(BenchId::Mandelbrot);
-        let co = e.run_reps(4).time.mean;
-        let solo = e.clone().gpu_only().run_reps(4).time.mean;
+        let co = small(BenchId::Mandelbrot).run_reps(4).time.mean;
+        let solo = small_b(BenchId::Mandelbrot).gpu_only().build().run_reps(4).time.mean;
         assert!(co < solo, "coexec {co} !< solo {solo}");
     }
 
@@ -368,15 +564,17 @@ mod tests {
         use crate::types::TimeBudget;
         let plain = small(BenchId::Gaussian).run_reps(4);
         assert!(plain.deadline.is_none(), "no budget, no stats");
-        let loose = small(BenchId::Gaussian)
-            .with_budget(TimeBudget::new(1e9))
+        let loose = small_b(BenchId::Gaussian)
+            .budget(TimeBudget::new(1e9))
+            .build()
             .run_reps(4)
             .deadline
             .expect("budget configured");
         assert_eq!(loose.hit_rate, 1.0);
         assert!(loose.mean_slack_s > 0.0);
-        let tight = small(BenchId::Gaussian)
-            .with_budget(TimeBudget::new(1e-6))
+        let tight = small_b(BenchId::Gaussian)
+            .budget(TimeBudget::new(1e-6))
+            .build()
             .run_reps(4)
             .deadline
             .unwrap();
@@ -385,16 +583,27 @@ mod tests {
     }
 
     #[test]
-    fn run_pipeline_uses_engine_budget_as_global() {
+    fn submit_uses_engine_budget_as_global() {
         use crate::sim::PipelineSpec;
         use crate::types::TimeBudget;
-        let e = small(BenchId::Gaussian).with_budget(TimeBudget::new(1e6));
+        let e = small_b(BenchId::Gaussian).budget(TimeBudget::new(1e6)).build();
         let spec = PipelineSpec::repeat(e.bench().clone(), 3);
-        let out = e.run_pipeline(&spec, 1);
+        let out = e.submit(Request::new(spec.clone()));
         assert_eq!(out.iter_times.len(), 3);
         let v = out.deadline.expect("engine budget flows into the pipeline");
         assert!(v.met);
         assert_eq!(out.iter_verdicts.len(), 3);
+        // A request-level budget fills in when the spec has none; the
+        // spec's own budget always wins.
+        let plain = small(BenchId::Gaussian);
+        let via_req =
+            plain.submit(Request::new(spec.clone()).budget(TimeBudget::new(1e6)));
+        assert_eq!(via_req.deadline.map(|v| v.met), Some(true));
+        let spec_budget = spec.with_deadline(1e-6);
+        let via_spec = plain.submit(
+            Request::new(spec_budget).budget(TimeBudget::new(1e6)),
+        );
+        assert_eq!(via_spec.deadline.map(|v| v.met), Some(false), "spec budget wins");
     }
 
     #[test]
@@ -416,18 +625,21 @@ mod tests {
                 .with_powers(ga.true_powers.to_vec())
                 .on_devices(DeviceMask::from_indices(&[0, 1])),
         );
-        let engine = Engine::new(mb).with_budget(TimeBudget::new(3.0));
+        let engine = Engine::builder(mb.clone()).budget(TimeBudget::new(3.0)).build();
         assert_eq!(engine.mask_policy(), MaskPolicy::Fixed, "default fixed");
-        let fixed = engine.run_pipeline(&spec, 1);
+        let fixed = engine.submit(Request::new(spec.clone()));
         assert!(fixed.stages.iter().all(|s| !s.shed()), "fixed engine never sheds");
-        let eud_engine = engine.clone().with_mask_policy(MaskPolicy::EnergyUnderDeadline);
-        let eud = eud_engine.run_pipeline(&spec, 1);
+        let eud_engine = Engine::builder(mb)
+            .budget(TimeBudget::new(3.0))
+            .mask_policy(MaskPolicy::EnergyUnderDeadline)
+            .build();
+        let eud = eud_engine.submit(Request::new(spec.clone()));
         assert!(eud.stages.iter().any(|s| s.shed()), "engine-level policy applies");
         assert!(eud.energy_j < fixed.energy_j);
         // An explicit spec-level policy is equivalent (and wins over the
         // engine default).
         let spec_eud = spec.clone().with_mask_policy(MaskPolicy::EnergyUnderDeadline);
-        let explicit = engine.run_pipeline(&spec_eud, 1);
+        let explicit = engine.submit(Request::new(spec_eud));
         assert_eq!(explicit.energy_j.to_bits(), eud.energy_j.to_bits());
     }
 
@@ -435,14 +647,16 @@ mod tests {
     fn estimate_builder_changes_runs_deterministically() {
         use crate::types::EstimateScenario;
         let exact = small(BenchId::Mandelbrot).run(1);
-        let pess = small(BenchId::Mandelbrot)
-            .with_estimate(EstimateScenario::Pessimistic { err: 0.3 })
+        let pess = small_b(BenchId::Mandelbrot)
+            .estimate(EstimateScenario::Pessimistic { err: 0.3 })
+            .build()
             .run(1);
         // Same seed, different scheduler view -> different trace.
         assert_ne!(exact.outcome.n_packages, 0);
         assert!(pess.time > 0.0);
-        let pess2 = small(BenchId::Mandelbrot)
-            .with_estimate(EstimateScenario::Pessimistic { err: 0.3 })
+        let pess2 = small_b(BenchId::Mandelbrot)
+            .estimate(EstimateScenario::Pessimistic { err: 0.3 })
+            .build()
             .run(1);
         assert_eq!(pess.time.to_bits(), pess2.time.to_bits(), "deterministic");
     }

@@ -46,6 +46,15 @@
 //! `Optimizations::estimate_refine` feeds measured iteration throughput
 //! back into the scheduler's `P_i` estimates.
 //!
+//! On top of the pool engine sits a **multi-tenant traffic simulator**
+//! ([`sim::tenancy`]): an open-loop arrival process (Poisson or
+//! trace-driven) injects many concurrent pipeline requests onto one
+//! shared pool, deadline-aware admission control
+//! ([`types::AdmissionPolicy`]) gates each arrival on its *predicted*
+//! chain completion, and a [`sim::tenancy::FleetOutcome`] reports tail
+//! metrics (p50/p95/p99 slack, hit rate vs offered load, J/hit) — the
+//! `traffic-sweep` CLI.
+//!
 //! Start at [`engine::Engine`] (the Tier-1 API in the paper's terms) or
 //! run `cargo run --release -- fig3` / `-- deadline-sweep`.
 

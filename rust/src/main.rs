@@ -8,23 +8,22 @@
 //! Argument parsing is hand-rolled ([`cliargs`]) — no clap in this offline
 //! environment (DESIGN.md §Substitutions).
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 #[cfg(feature = "pjrt")]
 use enginecl::benchsuite::data::Problem;
 use enginecl::benchsuite::{Bench, BenchId};
-use enginecl::cliargs::Args;
+use enginecl::cliargs::{apply_sweep_flags, Args, SweepConfig};
 use enginecl::config::{parse_bench, parse_scheduler_str, RunConfig};
 use enginecl::engine::experiments::{self, write_csv, OptLevel};
 #[cfg(feature = "pjrt")]
 use enginecl::engine::pjrt::{run_coexec, PjrtRunConfig};
 #[cfg(feature = "pjrt")]
 use enginecl::runtime::ArtifactDir;
+use enginecl::metrics;
 use enginecl::scheduler::{AdaptiveParams, SchedulerKind};
 use enginecl::sim::coexec::testbed_devices;
-use enginecl::types::{
-    BudgetPolicy, ContentionModel, DeviceClass, EnergyPolicy, EstimateScenario, MaskPolicy,
-    Optimizations,
-};
+use enginecl::sim::tenancy::ArrivalProcess;
+use enginecl::types::{EstimateScenario, MaskPolicy, Optimizations};
 use std::path::PathBuf;
 
 const USAGE: &str = "\
@@ -58,6 +57,15 @@ USAGE:
                   # fixed-vs-searching mask-policy comparison and a
                   # view-vs-pool contention comparison on the
                   # --stage-devices masks
+  enginecl traffic-sweep [--benches B1,B2,..] [--iters K] [--sched S]
+                  [--stage-devices M1/M2] [--loads L1,L2,..] [--requests N]
+                  [--deadline-mult F] [--admission P1,P2,..] [--seed N]
+                  [--trace FILE.json] [--refine]
+                  [--csv PATH] [--json PATH]
+                  # multi-tenant fleet on ONE shared pool: Poisson (or
+                  # trace-driven) arrivals of deadline-bound pipeline
+                  # requests, swept over offered load x admission policy;
+                  # reports hit rate, p50/p95/p99 slack and J/hit
 
 benches:  gaussian binomial nbody ray ray2 mandelbrot
 scheds:   static static-rev dynamic:N hguided hguided-opt adaptive
@@ -72,6 +80,13 @@ contention: view | pool
           against its own device view — the legacy optimistic model —
           'pool' derives it from the number of concurrently active
           devices on the whole pool, re-priced at stage launch/finish)
+admission: accept | reject-infeasible | queue-until-feasible |
+          shed-lowest-slack
+          (traffic-sweep fleet admission control: 'accept' admits all,
+          'reject-infeasible' turns away predicted deadline misses,
+          'queue-until-feasible' holds them until the pool drains,
+          'shed-lowest-slack' drops the tightest not-yet-started
+          request when a new arrival would overload the pool)
 masks:    per-stage device masks, '/'-separated; one mask is 'all', class
           names (cpu, igpu, gpu) or pool indices joined by '+' or ','
           (e.g. cpu+igpu/gpu runs branch 1 on CPU+iGPU, branch 2 on GPU)
@@ -98,6 +113,7 @@ fn main() -> Result<()> {
         "failure" => failure(args),
         "deadline-sweep" => deadline_sweep(args),
         "pipeline-sweep" => pipeline_sweep(args),
+        "traffic-sweep" => traffic_sweep_cmd(args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -280,18 +296,20 @@ fn run(args: Args) -> Result<()> {
             c
         }
     };
-    let mut engine = cfg.build_engine()?;
+    let engine = cfg.engine()?;
     let budget = match args.flag("deadline") {
         Some(d) => {
             let secs: f64 = d.parse()?;
             if !(secs > 0.0 && secs.is_finite()) {
                 bail!("--deadline must be a positive number of seconds, got '{d}'");
             }
-            let b = enginecl::types::TimeBudget::new(secs);
-            engine = engine.with_budget(b);
-            Some(b)
+            Some(enginecl::types::TimeBudget::new(secs))
         }
         None => None,
+    };
+    let engine = match budget {
+        Some(b) => engine.into_builder().budget(b).build(),
+        None => engine,
     };
     let rep = engine.run_reps(cfg.reps);
     println!(
@@ -358,7 +376,7 @@ fn energy(args: Args) -> Result<()> {
     for id in BenchId::ALL {
         let bench = Bench::new(id);
         let co = Engine::new(bench.clone());
-        let solo = co.clone().gpu_only();
+        let solo = Engine::builder(bench.clone()).gpu_only().build();
         let mut co_e = 0.0;
         let mut solo_e = 0.0;
         let mut co_t = 0.0;
@@ -396,8 +414,9 @@ fn iterative(args: Args) -> Result<()> {
     let iters: u32 = args.flag("iters").unwrap_or("16").parse()?;
     let reps = args.reps(8)?;
     let bench = Bench::new(id);
-    let engine = Engine::new(bench.clone())
-        .with_optimizations(Optimizations::ALL.with_estimate_refine(args.switch("refine")));
+    let engine = Engine::builder(bench.clone())
+        .optimizations(Optimizations::ALL.with_estimate_refine(args.switch("refine")))
+        .build();
     println!("ITERATIVE ROI MODE: {} x{} iterations ({reps} reps)", id.label(), iters);
     let mut total = 0.0;
     let mut first = 0.0;
@@ -410,7 +429,7 @@ fn iterative(args: Args) -> Result<()> {
     }
     let n = reps as f64;
     // Re-launching the program per iteration = `iters` binary executions.
-    let single_bin = Engine::new(bench).with_mode(ExecMode::Binary).run_reps(reps);
+    let single_bin = Engine::builder(bench).mode(ExecMode::Binary).build().run_reps(reps);
     println!("first iteration : {:.4}s (pays input upload)", first / n);
     println!("middle iteration: {:.4}s (device-resident buffers)", mid / n);
     println!("total {iters} iters : {:.4}s (one init/release, resident data)", total / n);
@@ -454,15 +473,12 @@ fn failure(args: Args) -> Result<()> {
 /// Time-constrained scenario sweep: budgets x estimation scenarios x
 /// schedulers (the seven Fig.-3 bars + the deadline-aware Adaptive).
 fn deadline_sweep(args: Args) -> Result<()> {
-    let reps = args.reps(8)?;
-    let err = args.f64_flag("err", 0.3)?;
-    let mults = args.f64_list("budgets", &experiments::deadline_budget_mults())?;
-    if !(0.0..1.0).contains(&err) {
-        bail!("--err must be in [0, 1), got {err}");
-    }
-    if mults.is_empty() || mults.iter().any(|&m| !(m > 0.0 && m.is_finite())) {
-        bail!("--budgets must be positive finite multipliers");
-    }
+    // Seed this sweep's defaults, then parse through the shared table.
+    let mut cfg = SweepConfig::new();
+    cfg.reps = 8;
+    cfg.budgets = experiments::deadline_budget_mults();
+    apply_sweep_flags(&args, &mut cfg)?;
+    let (reps, err, mults) = (cfg.reps, cfg.err, cfg.budgets);
     let estimates = [
         EstimateScenario::Exact,
         EstimateScenario::Optimistic { err },
@@ -539,58 +555,20 @@ fn deadline_sweep(args: Args) -> Result<()> {
 /// deadline, with per-pipeline and per-iteration verdicts plus the
 /// J-per-hit energy metric.
 fn pipeline_sweep(args: Args) -> Result<()> {
-    let reps = args.reps(6)?;
-    let err = args.f64_flag("err", 0.3)?;
-    if !(0.0..1.0).contains(&err) {
-        bail!("--err must be in [0, 1), got {err}");
-    }
-    let iters = args.u32_flag("iters", 6)?;
-    if iters == 0 {
-        bail!("--iters must be >= 1");
-    }
-    let mults = args.f64_list("budgets", &experiments::pipeline_budget_mults())?;
-    if mults.is_empty() || mults.iter().any(|&m| !(m > 0.0 && m.is_finite())) {
-        bail!("--budgets must be positive finite multipliers");
-    }
-    let benches: Vec<BenchId> = args
-        .str_list("benches", &["gaussian", "mandelbrot"])
-        .iter()
-        .map(|s| parse_bench(s))
-        .collect::<Result<_>>()?;
-    if benches.is_empty() {
-        bail!("--benches must name at least one benchmark");
-    }
-    let policies: Vec<BudgetPolicy> = args
-        .str_list("policies", &["even", "carry", "greedy"])
-        .iter()
-        .map(|s| {
-            BudgetPolicy::parse(s)
-                .ok_or_else(|| anyhow!("unknown budget policy '{s}' (even|carry|greedy)"))
-        })
-        .collect::<Result<_>>()?;
-    let energies: Vec<EnergyPolicy> = args
-        .str_list("energy", &["race", "stretch"])
-        .iter()
-        .map(|s| {
-            EnergyPolicy::parse(s)
-                .ok_or_else(|| anyhow!("unknown energy policy '{s}' (race|stretch)"))
-        })
-        .collect::<Result<_>>()?;
-    if policies.is_empty() || energies.is_empty() {
-        bail!("--policies and --energy must each name at least one entry");
-    }
-    let sched = match args.flag("sched") {
-        Some(s) => parse_scheduler_str(s)?,
-        None => SchedulerKind::Adaptive { params: AdaptiveParams::default_paper() },
-    };
-    let opts = Optimizations::ALL.with_estimate_refine(args.switch("refine"));
-    let classes = [DeviceClass::Cpu, DeviceClass::IGpu, DeviceClass::DGpu];
-    let masks = args.mask_flag("stage-devices", &classes, "cpu+igpu/gpu")?;
-    if masks.len() < 2 {
-        bail!("--stage-devices needs >= 2 '/'-separated masks (one per DAG branch)");
-    }
-    let mask_policy = args.mask_policy_flag("mask-policy", MaskPolicy::EnergyUnderDeadline)?;
-    let contention = args.contention_flag("contention", ContentionModel::View)?;
+    // Seed this sweep's defaults, then parse through the shared table.
+    let mut cfg = SweepConfig::new();
+    cfg.budgets = experiments::pipeline_budget_mults();
+    apply_sweep_flags(&args, &mut cfg)?;
+    let (reps, err, iters, mults) = (cfg.reps, cfg.err, cfg.iters, cfg.budgets);
+    let benches: Vec<BenchId> =
+        cfg.benches.iter().map(|s| parse_bench(s)).collect::<Result<_>>()?;
+    let (policies, energies) = (cfg.policies, cfg.energies);
+    let sched = cfg
+        .scheduler
+        .unwrap_or(SchedulerKind::Adaptive { params: AdaptiveParams::default_paper() });
+    let opts = Optimizations::ALL.with_estimate_refine(cfg.refine);
+    let masks = cfg.masks;
+    let (mask_policy, contention) = (cfg.mask_policy, cfg.contention);
     let estimates = [EstimateScenario::Exact, EstimateScenario::Pessimistic { err }];
     println!(
         "PIPELINE SWEEP — {iters}-iteration pipelines, global deadline split by \
@@ -753,6 +731,133 @@ fn pipeline_sweep(args: Args) -> Result<()> {
         println!("wrote {}", p.display());
     }
     let json = experiments::pipeline_rows_json(&rows, &iter_rows);
+    match args.json() {
+        Some(p) => {
+            std::fs::write(&p, json.to_string())?;
+            println!("wrote {}", p.display());
+        }
+        None => println!("{json}"),
+    }
+    Ok(())
+}
+
+/// Multi-tenant traffic simulation: an open-loop arrival process injects
+/// deadline-bound pipeline requests onto ONE shared device pool; sweep
+/// offered load × admission policy (or replay a `--trace` file) and
+/// report the fleet tail metrics.
+fn traffic_sweep_cmd(args: Args) -> Result<()> {
+    // Seed this sweep's defaults, then parse through the shared table.
+    let mut cfg = SweepConfig::new();
+    cfg.loads = experiments::traffic_load_mults();
+    apply_sweep_flags(&args, &mut cfg)?;
+    let benches: Vec<BenchId> =
+        cfg.benches.iter().map(|s| parse_bench(s)).collect::<Result<_>>()?;
+    let sched = cfg
+        .scheduler
+        .unwrap_or(SchedulerKind::Adaptive { params: AdaptiveParams::default_paper() });
+    let opts = Optimizations::ALL.with_estimate_refine(cfg.refine);
+    // The showcase fleet backing the `fleet` JSON document: the lightest
+    // configured load (trace mode: the trace itself), first admission
+    // policy — the regime where slack percentiles are populated.
+    let showcase_arrivals: ArrivalProcess;
+    let rows = match &cfg.trace {
+        Some(path) => {
+            let doc = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("--trace {}: {e}", path.display()))?;
+            let arrivals = enginecl::sim::parse_trace(&doc)?;
+            println!(
+                "TRAFFIC SWEEP — {} trace arrivals from {}, deadline x{:.2}, seed {}",
+                arrivals.n(),
+                path.display(),
+                cfg.deadline_mult,
+                cfg.seed
+            );
+            let rows = experiments::traffic_trace(
+                &benches,
+                &cfg.masks,
+                cfg.iters,
+                &sched,
+                opts,
+                cfg.deadline_mult,
+                &arrivals,
+                &cfg.admission,
+                cfg.seed,
+            );
+            showcase_arrivals = arrivals;
+            rows
+        }
+        None => {
+            println!(
+                "TRAFFIC SWEEP — Poisson fleets of {} requests, loads x{:?}, \
+                 deadline x{:.2}, seed {}",
+                cfg.n_requests, cfg.loads, cfg.deadline_mult, cfg.seed
+            );
+            let rows = experiments::traffic_sweep(
+                &benches,
+                &cfg.masks,
+                cfg.iters,
+                &sched,
+                opts,
+                cfg.deadline_mult,
+                &cfg.loads,
+                cfg.n_requests as usize,
+                &cfg.admission,
+                cfg.seed,
+            );
+            // rate_hz of the lightest load is recomputed inside
+            // traffic_fleet from the same t_ref, so reuse the multiplier.
+            let lightest = cfg.loads.iter().cloned().fold(f64::INFINITY, f64::min);
+            let rate_hz = rows
+                .iter()
+                .find(|r| r.load_mult == lightest)
+                .map(|r| r.rate_hz)
+                .expect("sweep emits every load level");
+            showcase_arrivals =
+                ArrivalProcess::Poisson { rate_hz, n: cfg.n_requests as usize };
+            rows
+        }
+    };
+    println!(
+        "{:<24}{:>22}{:>7}{:>10}{:>6}{:>6}{:>6}{:>6}{:>10}{:>10}{:>10}{:>11}",
+        "pipeline", "admission", "load", "rate(/s)", "req", "done", "rej", "shed", "hit",
+        "p50(s)", "p99(s)", "J/hit"
+    );
+    for r in &rows {
+        println!(
+            "{:<24}{:>22}{:>7.2}{:>10.3}{:>6}{:>6}{:>6}{:>6}{:>10.2}{:>10.4}{:>10.4}{:>11.1}",
+            r.pipeline,
+            r.admission,
+            r.load_mult,
+            r.rate_hz,
+            r.n_requests,
+            r.n_completed,
+            r.n_rejected,
+            r.n_shed,
+            r.hit_rate,
+            r.slack_p50_s.unwrap_or(f64::NAN),
+            r.slack_p99_s.unwrap_or(f64::NAN),
+            r.j_per_hit.unwrap_or(f64::NAN)
+        );
+    }
+    if let Some(p) = args.csv()? {
+        write_csv(&p, &rows)?;
+        println!("wrote {}", p.display());
+    }
+    let (showcase, _, _) = experiments::traffic_fleet(
+        &benches,
+        &cfg.masks,
+        cfg.iters,
+        &sched,
+        opts,
+        cfg.deadline_mult,
+        showcase_arrivals,
+        cfg.admission[0],
+        cfg.seed,
+    );
+    let json = enginecl::jsonio::Json::obj(vec![
+        ("rows", experiments::traffic_rows_json(&rows)),
+        ("fleet", metrics::fleet_json(&showcase)),
+    ]);
     match args.json() {
         Some(p) => {
             std::fs::write(&p, json.to_string())?;

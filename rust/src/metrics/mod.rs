@@ -4,7 +4,10 @@
 //! deadline sweep emits as JSON.
 
 use crate::jsonio::Json;
-use crate::sim::{ActiveWindow, DeviceTrace, IterVerdict, PipelineOutcome, SimOutcome, StageTrace};
+use crate::sim::{
+    ActiveWindow, DeviceTrace, FleetOutcome, IterVerdict, PipelineOutcome, RequestOutcome,
+    SimOutcome, StageTrace,
+};
 use crate::types::DeadlineVerdict;
 
 /// Load-balance effectiveness: `T_FD / T_LD` over the devices that
@@ -214,6 +217,46 @@ pub fn pipeline_json(out: &PipelineOutcome) -> Json {
     Json::obj(pairs)
 }
 
+/// jsonio projection of one fleet request's outcome.
+pub fn request_json(r: &RequestOutcome) -> Json {
+    Json::obj(vec![
+        ("arrival_s", Json::Num(r.arrival_s)),
+        ("disposition", Json::Str(r.disposition.label().into())),
+        ("end_s", Json::Num(r.end_s)),
+        ("deadline_s", Json::opt_num(r.deadline_s)),
+        ("slack_s", Json::opt_num(r.slack_s)),
+        ("hit", Json::Bool(r.hit)),
+        ("iters", Json::Num(r.iter_times.len() as f64)),
+        ("iter_hits", Json::Num(r.iter_hits as f64)),
+    ])
+}
+
+/// jsonio projection of a whole fleet run: admission accounting, the
+/// tail metrics (slack percentiles, hit rate, J/hit), pool utilization
+/// over the fleet makespan, and the per-request outcomes.
+pub fn fleet_json(out: &FleetOutcome) -> Json {
+    Json::obj(vec![
+        ("admission", Json::Str(out.admission.label().into())),
+        ("offered_load_hz", Json::Num(out.offered_load)),
+        ("n_requests", Json::Num(out.n_requests as f64)),
+        ("n_completed", Json::Num(out.n_completed as f64)),
+        ("n_rejected", Json::Num(out.n_rejected as f64)),
+        ("n_shed", Json::Num(out.n_shed as f64)),
+        ("hit_rate", Json::Num(out.hit_rate)),
+        ("slack_p50_s", Json::opt_num(out.slack_p50_s)),
+        ("slack_p95_s", Json::opt_num(out.slack_p95_s)),
+        ("slack_p99_s", Json::opt_num(out.slack_p99_s)),
+        ("makespan_s", Json::Num(out.makespan_s)),
+        ("energy_j", Json::Num(out.energy_j)),
+        ("j_per_hit", Json::opt_num(out.joules_per_hit)),
+        (
+            "pool_utilization",
+            Json::Num(pool_utilization(&out.traces, out.makespan_s)),
+        ),
+        ("requests", Json::Arr(out.requests.iter().map(request_json).collect())),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -361,6 +404,42 @@ mod tests {
         assert!((pool_utilization(&half, 2.0) - 0.5).abs() < 1e-12);
         assert_eq!(pool_utilization(&[], 1.0), 0.0);
         assert_eq!(pool_utilization(&full, 0.0), 0.0);
+    }
+
+    #[test]
+    fn fleet_json_roundtrips_tail_metrics() {
+        use crate::benchsuite::{Bench, BenchId};
+        use crate::scheduler::{HGuidedParams, SchedulerKind};
+        use crate::sim::{simulate_fleet, ArrivalProcess, FleetSpec, PipelineSpec, SimConfig};
+        use crate::types::AdmissionPolicy;
+        let b = Bench::new(BenchId::Gaussian);
+        let kind = SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() };
+        let mut cfg = SimConfig::testbed(&b, kind);
+        cfg.gws = Some(b.default_gws / 16);
+        let fleet = FleetSpec {
+            template: PipelineSpec::repeat(b, 2).with_deadline(1e6),
+            arrivals: ArrivalProcess::Poisson { rate_hz: 10.0, n: 3 },
+            admission: AdmissionPolicy::Accept,
+        };
+        let out = simulate_fleet(&fleet, &cfg);
+        let j = Json::parse(&fleet_json(&out).to_string()).unwrap();
+        assert_eq!(j.get("admission").unwrap().as_str(), Some("accept"));
+        assert_eq!(j.get("n_requests").unwrap().as_f64(), Some(3.0));
+        let hit = j.get("hit_rate").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&hit));
+        let reqs = j.get("requests").unwrap().as_arr().unwrap();
+        assert_eq!(reqs.len(), 3);
+        for r in reqs {
+            assert!(r.get("end_s").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(r.get("disposition").unwrap().as_str().is_some());
+        }
+        let (p50, p99) = (
+            j.get("slack_p50_s").unwrap().as_f64().unwrap(),
+            j.get("slack_p99_s").unwrap().as_f64().unwrap(),
+        );
+        assert!(p99 >= p50, "percentiles are monotone in p");
+        let util = j.get("pool_utilization").unwrap().as_f64().unwrap();
+        assert!(util > 0.0 && util <= 1.0);
     }
 
     #[test]

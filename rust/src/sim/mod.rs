@@ -11,12 +11,21 @@
 //! top: a [`PipelineSpec`] runs a DAG of kernel stages under one global
 //! deadline, split into per-iteration sub-budgets by a
 //! [`crate::types::BudgetPolicy`] on a cumulative pipeline clock.
+//!
+//! [`tenancy`] serves a *fleet* of such pipelines on one shared pool: an
+//! open-loop arrival process plus deadline-aware admission control over
+//! the interleaved pool engine.
 
 pub mod coexec;
 pub mod pipeline;
+pub mod tenancy;
 
 pub use coexec::{simulate, simulate_iterative, DeviceTrace, PackageTrace, SimConfig, SimOutcome};
 pub use pipeline::{
     simulate_pipeline, ActiveWindow, IterOutcome, IterVerdict, PipelineOutcome, PipelineSpec,
-    PipelineStage, StageTrace,
+    PipelineStage, ReqDisposition, StageTrace,
+};
+pub use tenancy::{
+    parse_trace, simulate_fleet, simulate_fleet_of, ArrivalProcess, FleetOutcome, FleetSpec,
+    RequestOutcome,
 };

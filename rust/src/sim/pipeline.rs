@@ -100,8 +100,8 @@ use crate::cldriver::{self, DriverProfile, TransferModel};
 use crate::scheduler::{SchedCtx, Scheduler};
 use crate::stats::XorShift64;
 use crate::types::{
-    BudgetPolicy, ContentionModel, DeadlineVerdict, DeviceClass, DeviceMask, DevicePool,
-    DeviceView, EnergyPolicy, ExecMode, GroupRange, MaskPolicy, TimeBudget,
+    AdmissionPolicy, BudgetPolicy, ContentionModel, DeadlineVerdict, DeviceClass, DeviceMask,
+    DevicePool, DeviceView, EnergyPolicy, ExecMode, GroupRange, MaskPolicy, TimeBudget,
 };
 
 use super::coexec::{self, DeviceTrace, IterPhase, PackageTrace, RoiPass, SimConfig};
@@ -554,6 +554,45 @@ struct SelectCtx<'a> {
     /// running devices plus the candidate) instead of the candidate view
     /// size alone.
     pool_contention: bool,
+    /// Latest *predicted* end across stages that are launched but not yet
+    /// finished — extends the committed horizon so pricing is not
+    /// systematically pessimistic while work is in flight (ROADMAP
+    /// item 5).  Zero under the view loop, where stages run one at a
+    /// time and `dev_free` is always current.
+    running_until: f64,
+    /// The owning request's arrival instant: the sub-deadline chain is
+    /// computed in request-relative time and shifted back, so a request
+    /// arriving at `t` behaves exactly like a standalone run delayed by
+    /// `t`.  Zero for single-request simulations.
+    arrival_s: f64,
+}
+
+/// Sub-deadline of one global iteration for a request that arrived at
+/// `arrival_s`: the policy chain runs in request-relative time (deadline,
+/// clock and carry all shifted by the arrival) and the result is shifted
+/// back to absolute time.  `arrival_s == 0.0` reduces to the policy call
+/// itself, keeping single-request runs bit-identical.
+pub(crate) fn sub_deadline_at(
+    policy: BudgetPolicy,
+    deadline_s: f64,
+    arrival_s: f64,
+    total_iters: u32,
+    iter: u32,
+    clock_s: f64,
+    prev_sub_s: f64,
+) -> f64 {
+    if arrival_s == 0.0 {
+        return policy.sub_deadline(deadline_s, total_iters, iter, clock_s, prev_sub_s);
+    }
+    let prev_rel = if prev_sub_s > arrival_s { prev_sub_s - arrival_s } else { 0.0 };
+    arrival_s
+        + policy.sub_deadline(
+            deadline_s - arrival_s,
+            total_iters,
+            iter,
+            (clock_s - arrival_s).max(0.0),
+            prev_rel,
+        )
 }
 
 /// One candidate subset's prediction.
@@ -641,7 +680,15 @@ impl SelectCtx<'_> {
             let mut prev = self.prev_sub;
             for j in 0..self.iterations {
                 let gi = self.global_iter + j;
-                let sub = self.policy.sub_deadline(d, self.total_iters, gi, clock, prev);
+                let sub = sub_deadline_at(
+                    self.policy,
+                    d,
+                    self.arrival_s,
+                    self.total_iters,
+                    gi,
+                    clock,
+                    prev,
+                );
                 clock += per;
                 if clock <= sub {
                     hits += 1;
@@ -654,14 +701,21 @@ impl SelectCtx<'_> {
     }
 
     /// Committed schedule horizon: the latest instant any pool device is
-    /// already known to be busy until.  The pipeline makespan is at
-    /// least this, so stage extensions hiding under it are free.
+    /// already known to be busy until — completed work (`dev_free`) plus
+    /// the *predicted* ends of stages still running
+    /// ([`Self::running_until`]).  The pipeline makespan is at least
+    /// this, so stage extensions hiding under it are free.  Counting
+    /// running stages keeps the horizon honest under load: `dev_free`
+    /// alone only records completed stages, which made pricing (and any
+    /// admission prediction built on it) systematically pessimistic
+    /// while work was in flight.
     fn committed_horizon(&self) -> f64 {
-        if self.serial {
+        let base = if self.serial {
             self.serial_clock
         } else {
             self.dev_free.iter().cloned().fold(0.0, f64::max)
-        }
+        };
+        base.max(self.running_until)
     }
 
     /// Platform floor draw charged for predicted extensions beyond the
@@ -818,16 +872,66 @@ struct Plan {
     gws: u64,
 }
 
-/// Run one pipeline on the virtual-clock backend.  `cfg` is the run
-/// template: its device set is the machine's [`DevicePool`], plus
-/// scheduler, driver/power models, optimizations, estimation scenario,
-/// seed, fault injection (pool-indexed), the contention scope, and the
-/// default problem size for stages that don't override it.  `spec.budget`
-/// (or, if unset, `cfg.budget`) is the **global** pipeline budget.
-pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcome {
+/// Owned per-request preamble: resolved plans, topo order, fixed costs
+/// (whose jitter is drawn from the request's own main RNG stream,
+/// keeping the stream identical across contention scopes) and the
+/// mode-scoped ROI deadline **relative to the request's arrival** (time
+/// zero for a standalone run).  Built once per request by
+/// [`prepare_request`]; borrowed by [`Prep`] for both engines and by the
+/// multi-tenant fleet driver ([`super::tenancy`]).
+pub(crate) struct ReqPrep {
+    pub(crate) order: Vec<usize>,
+    plans: Vec<Plan>,
+    plan_of: Vec<usize>,
+    pub(crate) budget: Option<TimeBudget>,
+    pub(crate) total_iters: u32,
+    pub(crate) init_time: f64,
+    pub(crate) release_time: f64,
+    /// ROI-scope deadline relative to arrival (`None` when unbudgeted).
+    pub(crate) roi_deadline: Option<f64>,
+    has_dependents: Vec<bool>,
+    /// Main RNG positioned after the fixed-cost draws (the
+    /// topologically-first stage continues this stream).
+    pub(crate) rng: XorShift64,
+}
+
+impl ReqPrep {
+    /// Borrow this preamble as the engine-facing [`Prep`], dating the ROI
+    /// deadline to the request's absolute `arrival_s`.
+    pub(crate) fn as_prep<'a>(
+        &'a self,
+        spec: &'a PipelineSpec,
+        cfg: &'a SimConfig,
+        classes: &'a [DeviceClass],
+        transfers: &'a TransferModel<'a>,
+        arrival_s: f64,
+    ) -> Prep<'a> {
+        Prep {
+            spec,
+            cfg,
+            classes,
+            order: &self.order,
+            plans: &self.plans,
+            plan_of: &self.plan_of,
+            budget: self.budget,
+            total_iters: self.total_iters,
+            init_time: self.init_time,
+            release_time: self.release_time,
+            roi_deadline: self.roi_deadline.map(|d| arrival_s + d),
+            transfers,
+            has_dependents: &self.has_dependents,
+            arrival_s,
+        }
+    }
+}
+
+/// Resolve one request's plans, fixed costs and deadline against a pool.
+pub(crate) fn prepare_request(
+    spec: &PipelineSpec,
+    cfg: &SimConfig,
+    pool: &DevicePool,
+) -> ReqPrep {
     assert!(!spec.stages.is_empty(), "pipeline needs at least one stage");
-    assert!(!cfg.devices.is_empty(), "no devices");
-    let pool = DevicePool::new(cfg.devices.clone());
     let classes = pool.classes();
     let order = topo_order(&spec.stages);
     let budget = spec.budget.or(cfg.budget);
@@ -906,33 +1010,58 @@ pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcom
     let roi_deadline = budget
         .map(|b| coexec::roi_scope_deadline(b.deadline_s, cfg.mode, init_time, release_time));
 
-    let transfers = TransferModel::new(&cfg.driver, cfg.opts.buffer_flags);
     let has_dependents: Vec<bool> = (0..spec.stages.len())
         .map(|i| spec.stages.iter().any(|s| s.deps.contains(&i)))
         .collect();
+
+    ReqPrep {
+        order,
+        plans,
+        plan_of,
+        budget,
+        total_iters,
+        init_time,
+        release_time,
+        roi_deadline,
+        has_dependents,
+        rng,
+    }
+}
+
+/// Run one pipeline on the virtual-clock backend.  `cfg` is the run
+/// template: its device set is the machine's [`DevicePool`], plus
+/// scheduler, driver/power models, optimizations, estimation scenario,
+/// seed, fault injection (pool-indexed), the contention scope, and the
+/// default problem size for stages that don't override it.  `spec.budget`
+/// (or, if unset, `cfg.budget`) is the **global** pipeline budget.
+pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcome {
+    assert!(!cfg.devices.is_empty(), "no devices");
+    let pool = DevicePool::new(cfg.devices.clone());
+    let classes = pool.classes();
+    let rp = prepare_request(spec, cfg, &pool);
+    let transfers = TransferModel::new(&cfg.driver, cfg.opts.buffer_flags);
 
     // Pool-scoped contention runs the interleaved engine (serial
     // schedules keep the view loop: one stage at a time means the active
     // set *is* the stage view, so the two scopes coincide there).
     if cfg.contention == ContentionModel::Pool && !spec.serial {
-        let prep = Prep {
-            spec,
-            cfg,
-            classes: &classes,
-            order: &order,
-            plans: &plans,
-            plan_of: &plan_of,
-            budget,
-            total_iters,
-            init_time,
-            release_time,
-            roi_deadline,
-            transfers: &transfers,
-            has_dependents: &has_dependents,
-        };
+        let rng = rp.rng.clone();
+        let prep = rp.as_prep(spec, cfg, &classes, &transfers, 0.0);
         return pool_schedule(&pool, prep, rng);
     }
 
+    let ReqPrep {
+        order,
+        plans,
+        plan_of,
+        budget,
+        total_iters,
+        init_time,
+        release_time,
+        roi_deadline,
+        has_dependents,
+        rng,
+    } = rp;
     let n_pool = pool.len();
     let mut traces = vec![DeviceTrace::default(); n_pool];
     let mut dev_free = vec![0.0f64; n_pool];
@@ -997,6 +1126,8 @@ pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcom
                 prev_sub,
                 running: DeviceMask::empty(),
                 pool_contention: false,
+                running_until: 0.0,
+                arrival_s: 0.0,
             },
         );
         if choice.search_skipped {
@@ -1174,8 +1305,10 @@ fn note_mask_search_skipped(si: usize, spec_mask: DeviceMask, skipped: &mut Vec<
 /// Preamble shared with the view-scoped loop, handed to the pool engine:
 /// resolved plans, fixed costs (whose jitter was already drawn from the
 /// main RNG, keeping the stream identical across contention scopes) and
-/// the mode-scoped ROI deadline.
-struct Prep<'a> {
+/// the mode-scoped ROI deadline.  One `Prep` per request: the fleet
+/// engine runs over a slice of these, and a standalone pool run is the
+/// one-request special case (`arrival_s == 0.0`).
+pub(crate) struct Prep<'a> {
     spec: &'a PipelineSpec,
     cfg: &'a SimConfig,
     classes: &'a [DeviceClass],
@@ -1186,9 +1319,12 @@ struct Prep<'a> {
     total_iters: u32,
     init_time: f64,
     release_time: f64,
+    /// Absolute (arrival-dated) ROI deadline.
     roi_deadline: Option<f64>,
     transfers: &'a TransferModel<'a>,
     has_dependents: &'a [bool],
+    /// Absolute arrival instant of the owning request.
+    arrival_s: f64,
 }
 
 /// One in-flight package of the interleaved pool engine: enough state to
@@ -1271,12 +1407,15 @@ impl Branch {
 }
 
 enum PoolEvKind {
-    /// Device `slot` of branch `b` becomes idle and requests work
-    /// (completing its in-flight package first when one is outstanding).
-    DevIdle { b: usize, slot: usize },
-    /// The stage at topo position `pos` starts: its input transfer has
-    /// arrived and the pool's active set grows.
-    StageStart { pos: usize },
+    /// Device `slot` of branch `b` (topo position, request `r`) becomes
+    /// idle and requests work (completing its in-flight package first
+    /// when one is outstanding).
+    DevIdle { r: usize, b: usize, slot: usize },
+    /// Request `r`'s stage at topo position `pos` starts: its input
+    /// transfer has arrived and the pool's active set grows.
+    StageStart { r: usize, pos: usize },
+    /// Request `r` arrives at the pool and faces admission control.
+    Arrival { r: usize },
 }
 
 struct PoolEv {
@@ -1304,12 +1443,24 @@ fn pop_earliest(evs: &mut Vec<PoolEv>) -> Option<PoolEv> {
     Some(evs.swap_remove(best))
 }
 
-/// All mutable state of one pool-engine run.
-struct PoolState {
+/// Where one request stands with admission control.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ReqStatus {
+    /// Arrival event not yet processed.
+    NotArrived,
+    Admitted,
+    /// Held by `QueueUntilFeasible`; re-evaluated at stage completions.
+    Queued,
+    Rejected,
+    /// Admitted, then shed by `ShedLowestSlack` before any stage started.
+    Shed,
+}
+
+/// Per-request mutable state of the fleet engine — exactly the fields the
+/// single-request pool engine kept globally, now one set per request.
+struct ReqState {
+    status: ReqStatus,
     main_rng: XorShift64,
-    traces: Vec<DeviceTrace>,
-    packages: Vec<PackageTrace>,
-    dev_free: Vec<f64>,
     stage_end: Vec<f64>,
     /// By declaration index.
     completed: Vec<bool>,
@@ -1317,15 +1468,36 @@ struct PoolState {
     launched: Vec<bool>,
     chosen_masks: Vec<DeviceMask>,
     mask_search_skipped: Vec<usize>,
-    /// Sub-deadlines armed so far, by global iteration index.
+    /// Sub-deadlines armed so far, by request-local global iteration.
     subs_armed: Vec<Option<f64>>,
-    /// First global iteration index of each topo position.
+    /// First request-local global iteration index of each topo position.
     gi_base: Vec<u32>,
     /// `(stage decl index, global iter, start, end)` per finished pass.
     iter_records: Vec<(usize, u32, f64, f64)>,
     stage_traces: Vec<StageTrace>,
     branches: Vec<Option<Branch>>,
     pending: Vec<Option<Pending>>,
+    /// Predicted absolute end of each launched stage (by topo position),
+    /// recorded at launch from the mask choice — extends the committed
+    /// horizon and backs the admission predictor while the stage runs.
+    pred_end: Vec<f64>,
+}
+
+impl ReqState {
+    fn started(&self) -> bool {
+        self.launched.iter().any(|&l| l)
+    }
+}
+
+/// All mutable state of one fleet run: shared pool/device state plus one
+/// [`ReqState`] per request.  A standalone pool run is the one-request
+/// fleet under [`AdmissionPolicy::Accept`].
+struct PoolState {
+    admission: AdmissionPolicy,
+    reqs: Vec<ReqState>,
+    traces: Vec<DeviceTrace>,
+    packages: Vec<PackageTrace>,
+    dev_free: Vec<f64>,
     evs: Vec<PoolEv>,
     tie: u64,
     seq: u64,
@@ -1381,28 +1553,30 @@ fn phase_of(iter: u32, iterations: u32) -> IterPhase {
 /// semantics of the pool contention model.  Work is conserved exactly:
 /// only the *pace* of the remaining compute changes.
 fn retime_inflight(st: &mut PoolState, driver: &DriverProfile, t: f64, new_active: usize) {
-    let PoolState { branches, evs, .. } = st;
-    for (b, slot_br) in branches.iter_mut().enumerate() {
-        let Some(br) = slot_br else { continue };
-        for (slot, fl) in br.inflight.iter_mut().enumerate() {
-            let Some(pkg) = fl.as_mut() else { continue };
-            let class = br.cfg.devices[slot].class;
-            let r_new = driver.retention_at(cldriver::class_idx(class), new_active);
-            if r_new == pkg.retention {
-                continue;
-            }
-            let pivot = t.max(pkg.work_start);
-            if pkg.compute_end <= pivot {
-                continue; // compute finished; only the d2h tail remains
-            }
-            pkg.compute_end = pivot + (pkg.compute_end - pivot) * (pkg.retention / r_new);
-            pkg.retention = r_new;
-            let done = pkg.compute_end + pkg.d2h;
-            for ev in evs.iter_mut() {
-                if let PoolEvKind::DevIdle { b: eb, slot: es } = ev.kind {
-                    if eb == b && es == slot {
-                        ev.t = done;
-                        break;
+    let PoolState { reqs, evs, .. } = st;
+    for (r, rs) in reqs.iter_mut().enumerate() {
+        for (b, slot_br) in rs.branches.iter_mut().enumerate() {
+            let Some(br) = slot_br else { continue };
+            for (slot, fl) in br.inflight.iter_mut().enumerate() {
+                let Some(pkg) = fl.as_mut() else { continue };
+                let class = br.cfg.devices[slot].class;
+                let r_new = driver.retention_at(cldriver::class_idx(class), new_active);
+                if r_new == pkg.retention {
+                    continue;
+                }
+                let pivot = t.max(pkg.work_start);
+                if pkg.compute_end <= pivot {
+                    continue; // compute finished; only the d2h tail remains
+                }
+                pkg.compute_end = pivot + (pkg.compute_end - pivot) * (pkg.retention / r_new);
+                pkg.retention = r_new;
+                let done = pkg.compute_end + pkg.d2h;
+                for ev in evs.iter_mut() {
+                    if let PoolEvKind::DevIdle { r: er, b: eb, slot: es } = ev.kind {
+                        if er == r && eb == b && es == slot {
+                            ev.t = done;
+                            break;
+                        }
                     }
                 }
             }
@@ -1455,15 +1629,23 @@ fn build_pass_sched(
 /// Arm and start one pass (iteration) of a branch at clock `t`: fresh
 /// scheduler, host queue reset, every view device's idle event enqueued
 /// in delivery order.
-fn begin_pass(st: &mut PoolState, prep: &Prep, br: &mut Branch, b_pos: usize, t: f64) {
+fn begin_pass(st: &mut PoolState, prep: &Prep, r: usize, br: &mut Branch, b_pos: usize, t: f64) {
     let gi = br.gi_base + br.iter;
     br.phase = phase_of(br.iter, br.iterations);
     br.total_groups = br.bench.groups(br.gws);
     let sub = prep.roi_deadline.map(|d| {
-        prep.spec.policy.sub_deadline(d, prep.total_iters, gi, t, br.prev_sub)
+        sub_deadline_at(
+            prep.spec.policy,
+            d,
+            prep.arrival_s,
+            prep.total_iters,
+            gi,
+            t,
+            br.prev_sub,
+        )
     });
     if let Some(sd) = sub {
-        st.subs_armed[gi as usize] = Some(sd);
+        st.reqs[r].subs_armed[gi as usize] = Some(sd);
         br.prev_sub = sd;
     }
     br.sched = Some(build_pass_sched(
@@ -1482,20 +1664,51 @@ fn begin_pass(st: &mut PoolState, prep: &Prep, br: &mut Branch, b_pos: usize, t:
     br.parked.clear();
     let delivery = br.scheduler_mut().delivery_order();
     for &d in &delivery {
-        st.evs.push(PoolEv { t, tie: st.tie, kind: PoolEvKind::DevIdle { b: b_pos, slot: d } });
+        st.evs.push(PoolEv {
+            t,
+            tie: st.tie,
+            kind: PoolEvKind::DevIdle { r, b: b_pos, slot: d },
+        });
         st.tie += 1;
     }
     br.live = br.view.pool_ids.len();
 }
 
-/// Launch every stage that became eligible: dependencies complete and no
-/// spec-mask device held by a launched-but-unfinished stage.  Scanned in
-/// topological order (deterministic device claiming, like the view
-/// loop's topological processing).  Mask selection happens here, priced
-/// against the pool's running/reserved set.
-fn launch_scan(st: &mut PoolState, prep: &Prep, pool: &DevicePool, now: f64) {
+/// Latest predicted absolute end across every launched-but-unfinished
+/// stage of every request — the running-stage extension of the committed
+/// schedule horizon (ROADMAP item 5: pricing must count running stages'
+/// *predicted* ends, not only completed stages).
+fn fleet_running_until(st: &PoolState, preps: &[Prep]) -> f64 {
+    let mut until = 0.0f64;
+    for (r, rs) in st.reqs.iter().enumerate() {
+        for pos in 0..rs.launched.len() {
+            if rs.launched[pos] && !rs.completed[preps[r].order[pos]] {
+                until = until.max(rs.pred_end[pos]);
+            }
+        }
+    }
+    until
+}
+
+/// Launch every stage that became eligible, across all admitted
+/// requests in arrival order.
+fn launch_scan(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, now: f64) {
+    for r in 0..preps.len() {
+        if st.reqs[r].status == ReqStatus::Admitted {
+            launch_scan_req(st, preps, pool, r, now);
+        }
+    }
+}
+
+/// Launch every stage of request `r` that became eligible: dependencies
+/// complete and no spec-mask device held by a launched-but-unfinished
+/// stage.  Scanned in topological order (deterministic device claiming,
+/// like the view loop's topological processing).  Mask selection happens
+/// here, priced against the pool's running/reserved set.
+fn launch_scan_req(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usize, now: f64) {
+    let prep = &preps[r];
     for pos in 0..prep.order.len() {
-        if st.launched[pos] {
+        if st.reqs[r].launched[pos] {
             continue;
         }
         let si = prep.order[pos];
@@ -1503,7 +1716,7 @@ fn launch_scan(st: &mut PoolState, prep: &Prep, pool: &DevicePool, now: f64) {
         let mut deps = stage.deps.clone();
         deps.sort_unstable();
         deps.dedup();
-        if !deps.iter().all(|&d| st.completed[d]) {
+        if !deps.iter().all(|&d| st.reqs[r].completed[d]) {
             continue;
         }
         let spec_mask = prep.plans[pos].mask;
@@ -1513,25 +1726,30 @@ fn launch_scan(st: &mut PoolState, prep: &Prep, pool: &DevicePool, now: f64) {
         // The view loop processes stages strictly in topological order, so
         // a later-topo stage never overtakes an earlier-topo stage on a
         // shared device even while the earlier one still waits on its
-        // dependencies.  Mirror that claiming discipline: an unlaunched
-        // earlier-topo stage with an intersecting spec mask blocks this
-        // one (otherwise the pool schedule could start work *earlier*
-        // than the view schedule, breaking the pool >= view makespan
-        // monotonicity).
-        if (0..pos).any(|p| !st.launched[p] && prep.plans[p].mask.intersects(spec_mask)) {
+        // dependencies.  Mirror that claiming discipline *within the
+        // request*: an unlaunched earlier-topo stage with an intersecting
+        // spec mask blocks this one (otherwise the pool schedule could
+        // start work *earlier* than the view schedule, breaking the
+        // pool >= view makespan monotonicity).  Across requests only the
+        // `held` reservation serializes shared devices: the fleet is
+        // work-conserving, not globally FIFO.
+        if (0..pos).any(|p| !st.reqs[r].launched[p] && prep.plans[p].mask.intersects(spec_mask))
+        {
             continue;
         }
-        let dep_ready = deps.iter().map(|&d| st.stage_end[d]).fold(0.0, f64::max);
+        let dep_ready =
+            deps.iter().map(|&d| st.reqs[r].stage_end[d]).fold(prep.arrival_s, f64::max);
         let edges: Vec<(DeviceMask, f64)> = deps
             .iter()
             .map(|&d| {
                 let producer = &prep.plans[prep.plan_of[d]];
                 let bytes = producer.gws as f64 * prep.spec.stages[d].bench.bytes_out_per_item;
-                (st.chosen_masks[prep.plan_of[d]], bytes)
+                (st.reqs[r].chosen_masks[prep.plan_of[d]], bytes)
             })
             .collect();
-        let gi_base = st.gi_base[pos];
-        let prev_sub = latest_armed_sub(&st.subs_armed, gi_base as usize);
+        let gi_base = st.reqs[r].gi_base[pos];
+        let prev_sub = latest_armed_sub(&st.reqs[r].subs_armed, gi_base as usize);
+        let running_until = fleet_running_until(st, preps);
         let choice = select_stage_mask(
             prep.spec.mask_policy,
             spec_mask,
@@ -1561,12 +1779,14 @@ fn launch_scan(st: &mut PoolState, prep: &Prep, pool: &DevicePool, now: f64) {
                 prev_sub,
                 running: st.held,
                 pool_contention: true,
+                running_until,
+                arrival_s: prep.arrival_s,
             },
         );
         if choice.search_skipped {
-            note_mask_search_skipped(si, spec_mask, &mut st.mask_search_skipped);
+            note_mask_search_skipped(si, spec_mask, &mut st.reqs[r].mask_search_skipped);
         }
-        st.chosen_masks[pos] = choice.mask;
+        st.reqs[r].chosen_masks[pos] = choice.mask;
         let (view, stage_cfg) = if choice.mask != spec_mask {
             stage_view_cfg(prep.cfg, pool, stage, choice.mask, prep.spec.energy)
         } else {
@@ -1584,7 +1804,8 @@ fn launch_scan(st: &mut PoolState, prep: &Prep, pool: &DevicePool, now: f64) {
         // to the scan instant.
         let start = (dep_ready.max(resource_ready) + transfer_in).max(now);
         st.held = st.held.union(choice.mask);
-        st.pending[pos] = Some(Pending {
+        st.reqs[r].pred_end[pos] = start + choice.pred_iter_s * stage.iterations as f64;
+        st.reqs[r].pending[pos] = Some(Pending {
             si,
             mask: choice.mask,
             spec_mask,
@@ -1595,16 +1816,16 @@ fn launch_scan(st: &mut PoolState, prep: &Prep, pool: &DevicePool, now: f64) {
             pred_iter_s: choice.pred_iter_s,
             pred_energy_j: choice.pred_energy_j,
         });
-        st.evs.push(PoolEv { t: start, tie: st.tie, kind: PoolEvKind::StageStart { pos } });
+        st.evs.push(PoolEv { t: start, tie: st.tie, kind: PoolEvKind::StageStart { r, pos } });
         st.tie += 1;
-        st.launched[pos] = true;
+        st.reqs[r].launched[pos] = true;
     }
 }
 
 /// A stage's input transfer has arrived: grow the active set, re-price
 /// every running branch, and start the stage's first pass.
-fn stage_start(st: &mut PoolState, prep: &Prep, pos: usize, t: f64) {
-    let p = st.pending[pos].take().expect("pending stage behind StageStart event");
+fn stage_start(st: &mut PoolState, prep: &Prep, r: usize, pos: usize, t: f64) {
+    let p = st.reqs[r].pending[pos].take().expect("pending stage behind StageStart event");
     let si = p.si;
     let old_count = st.active_mask.count();
     st.active_mask = st.active_mask.union(p.mask);
@@ -1619,10 +1840,10 @@ fn stage_start(st: &mut PoolState, prep: &Prep, pos: usize, t: f64) {
             prep.cfg.driver.retention_at(cldriver::class_idx(prep.classes[i]), new_active)
         })
         .collect();
-    // The topologically-first stage continues the main RNG stream (as in
-    // the view loop); later stages fork per-stage streams.
+    // The topologically-first stage continues the request's main RNG
+    // stream (as in the view loop); later stages fork per-stage streams.
     let stage_rng = if pos == 0 {
-        st.main_rng.clone()
+        st.reqs[r].main_rng.clone()
     } else {
         XorShift64::new(stage_seed(prep.cfg.seed, si))
     };
@@ -1630,7 +1851,7 @@ fn stage_start(st: &mut PoolState, prep: &Prep, pos: usize, t: f64) {
     let busy0: Vec<f64> = p.view.pool_ids.iter().map(|&i| st.traces[i].busy).collect();
     let snap: Vec<(u64, f64)> =
         p.view.pool_ids.iter().map(|&i| (st.traces[i].groups, st.traces[i].busy)).collect();
-    let gi_base = st.gi_base[pos];
+    let gi_base = st.reqs[r].gi_base[pos];
     let mut br = Branch {
         si,
         bench: prep.spec.stages[si].bench.clone(),
@@ -1661,20 +1882,29 @@ fn stage_start(st: &mut PoolState, prep: &Prep, pos: usize, t: f64) {
         refined: None,
         snap,
         busy0,
-        prev_sub: latest_armed_sub(&st.subs_armed, gi_base as usize),
+        prev_sub: latest_armed_sub(&st.reqs[r].subs_armed, gi_base as usize),
         active_at_launch: new_active,
         retention_at_launch,
     };
-    begin_pass(st, prep, &mut br, pos, t);
-    st.branches[pos] = Some(br);
+    begin_pass(st, prep, r, &mut br, pos, t);
+    st.reqs[r].branches[pos] = Some(br);
 }
 
 /// A stage ran its last pass: release its devices, shrink the active set
-/// (re-pricing the survivors), record its trace, and launch whatever the
-/// freed devices unblock.
-fn complete_stage(st: &mut PoolState, prep: &Prep, pool: &DevicePool, br: Branch, end: f64) {
-    st.stage_end[br.si] = end;
-    st.completed[br.si] = true;
+/// (re-pricing the survivors), record its trace, re-evaluate any queued
+/// admissions against the freed capacity, and launch whatever became
+/// eligible.
+fn complete_stage(
+    st: &mut PoolState,
+    preps: &[Prep],
+    pool: &DevicePool,
+    r: usize,
+    br: Branch,
+    end: f64,
+) {
+    let prep = &preps[r];
+    st.reqs[r].stage_end[br.si] = end;
+    st.reqs[r].completed[br.si] = true;
     for &i in &br.view.pool_ids {
         st.dev_free[i] = end;
     }
@@ -1694,7 +1924,7 @@ fn complete_stage(st: &mut PoolState, prep: &Prep, pool: &DevicePool, br: Branch
                 * (prep.cfg.power.active_w[c] - prep.cfg.power.idle_w[c])
         })
         .sum();
-    st.stage_traces.push(StageTrace {
+    st.reqs[r].stage_traces.push(StageTrace {
         stage: br.si,
         mask: br.mask,
         spec_mask: br.spec_mask,
@@ -1707,14 +1937,41 @@ fn complete_stage(st: &mut PoolState, prep: &Prep, pool: &DevicePool, br: Branch
         active_at_launch: Some(br.active_at_launch),
         retention_at_launch: Some(br.retention_at_launch),
     });
-    launch_scan(st, prep, pool, end);
+    reconsider_queued(st, preps, end);
+    launch_scan(st, preps, pool, end);
+}
+
+/// Re-evaluate every `QueueUntilFeasible` hold in arrival order: admit
+/// the now-feasible, permanently reject any request even an idle pool
+/// could no longer serve (capacity only recedes from here).
+fn reconsider_queued(st: &mut PoolState, preps: &[Prep], now: f64) {
+    for r in 0..preps.len() {
+        if st.reqs[r].status != ReqStatus::Queued {
+            continue;
+        }
+        if admission_feasible(st, preps, r, now, false) {
+            st.reqs[r].status = ReqStatus::Admitted;
+        } else if !admission_feasible(st, preps, r, now, true) {
+            st.reqs[r].status = ReqStatus::Rejected;
+        }
+    }
 }
 
 /// One device-idle event: complete the device's finished package, then
 /// request its next grant — the interleaved mirror of one `run_roi` loop
 /// step, with retention priced at the pool's current active count.
-fn dev_idle(st: &mut PoolState, prep: &Prep, pool: &DevicePool, b_pos: usize, slot: usize, t: f64) {
-    let mut br = st.branches[b_pos].take().expect("running branch behind DevIdle event");
+fn dev_idle(
+    st: &mut PoolState,
+    preps: &[Prep],
+    pool: &DevicePool,
+    r: usize,
+    b_pos: usize,
+    slot: usize,
+    t: f64,
+) {
+    let prep = &preps[r];
+    let mut br =
+        st.reqs[r].branches[b_pos].take().expect("running branch behind DevIdle event");
     br.live -= 1;
     if let Some(pkg) = br.inflight[slot].take() {
         let pid = br.view.pool_ids[slot];
@@ -1734,7 +1991,7 @@ fn dev_idle(st: &mut PoolState, prep: &Prep, pool: &DevicePool, b_pos: usize, sl
                     st.evs.push(PoolEv {
                         t: t.max(tf),
                         tie: st.tie,
-                        kind: PoolEvKind::DevIdle { b: b_pos, slot: p },
+                        kind: PoolEvKind::DevIdle { r, b: b_pos, slot: p },
                     });
                     st.tie += 1;
                 }
@@ -1776,7 +2033,7 @@ fn dev_idle(st: &mut PoolState, prep: &Prep, pool: &DevicePool, b_pos: usize, sl
                 st.evs.push(PoolEv {
                     t,
                     tie: st.tie,
-                    kind: PoolEvKind::DevIdle { b: b_pos, slot: p },
+                    kind: PoolEvKind::DevIdle { r, b: b_pos, slot: p },
                 });
                 st.tie += 1;
             }
@@ -1819,7 +2076,7 @@ fn dev_idle(st: &mut PoolState, prep: &Prep, pool: &DevicePool, b_pos: usize, sl
                 st.evs.push(PoolEv {
                     t: pricing.done,
                     tie: st.tie,
-                    kind: PoolEvKind::DevIdle { b: b_pos, slot },
+                    kind: PoolEvKind::DevIdle { r, b: b_pos, slot },
                 });
                 st.tie += 1;
                 br.live += 1;
@@ -1836,7 +2093,7 @@ fn dev_idle(st: &mut PoolState, prep: &Prep, pool: &DevicePool, b_pos: usize, sl
             br.total_groups
         );
         let gi = br.gi_base + br.iter;
-        st.iter_records.push((br.si, gi, br.iter_start, end));
+        st.reqs[r].iter_records.push((br.si, gi, br.iter_start, end));
         if prep.cfg.opts.estimate_refine && br.iter + 1 < br.iterations {
             br.refined = Some(refine_powers(
                 &br.cfg,
@@ -1849,49 +2106,280 @@ fn dev_idle(st: &mut PoolState, prep: &Prep, pool: &DevicePool, b_pos: usize, sl
         }
         br.iter += 1;
         if br.iter < br.iterations {
-            begin_pass(st, prep, &mut br, b_pos, end);
-            st.branches[b_pos] = Some(br);
+            begin_pass(st, prep, r, &mut br, b_pos, end);
+            st.reqs[r].branches[b_pos] = Some(br);
         } else {
-            complete_stage(st, prep, pool, br, end);
+            complete_stage(st, preps, pool, r, br, end);
         }
     } else {
-        st.branches[b_pos] = Some(br);
+        st.reqs[r].branches[b_pos] = Some(br);
     }
 }
 
-/// The interleaved pool-contention engine: all concurrently active
-/// branches advance through one global event queue, so stage launch and
-/// finish events re-price every running stage's throughput against the
-/// pool's active-set count — the cross-branch contention the view loop
-/// cannot express.  Grant serialization, package pricing, fault handling
-/// and the per-stage RNG forks mirror `coexec::run_roi` exactly, so a
-/// schedule whose stages never overlap (a chain) is bit-identical to the
-/// view-scoped engine under the default two-point retention curve.
-fn pool_schedule(pool: &DevicePool, prep: Prep, rng: XorShift64) -> PipelineOutcome {
-    let n_pool = pool.len();
-    let n_stages = prep.spec.stages.len();
-    let mut gi_base = vec![0u32; n_stages];
-    let mut acc = 0u32;
-    for (pos, &si) in prep.order.iter().enumerate() {
-        gi_base[pos] = acc;
-        acc += prep.spec.stages[si].iterations;
+/// Predicted absolute completion of request `r`'s full stage chain, via
+/// the mask predictor's own time model ([`SelectCtx::predict`]) walked in
+/// topological order against the pool's committed schedule: device free
+/// instants, plus running/pending stages held to their *predicted* ends
+/// (the committed-horizon fix — `dev_free` alone only records completed
+/// stages, which made admission systematically pessimistic under load).
+/// `idle_pool` evaluates the best case instead (a pool with no
+/// commitments at `now`).
+fn predict_chain_end(st: &PoolState, preps: &[Prep], r: usize, now: f64, idle_pool: bool) -> f64 {
+    let prep = &preps[r];
+    let n_pool = st.dev_free.len();
+    let mut dev_free: Vec<f64> = if idle_pool {
+        vec![now; n_pool]
+    } else {
+        let mut df = st.dev_free.clone();
+        for (q, rs) in st.reqs.iter().enumerate() {
+            for pos in 0..rs.launched.len() {
+                if rs.launched[pos] && !rs.completed[preps[q].order[pos]] {
+                    for i in rs.chosen_masks[pos].indices() {
+                        df[i] = df[i].max(rs.pred_end[pos]);
+                    }
+                }
+            }
+        }
+        df
+    };
+    let running = if idle_pool { DeviceMask::empty() } else { st.held };
+    let mut stage_end = vec![0.0f64; prep.spec.stages.len()];
+    let mut end_max = now;
+    let mut gi = 0u32;
+    for pos in 0..prep.order.len() {
+        let si = prep.order[pos];
+        let stage = &prep.spec.stages[si];
+        let mut deps = stage.deps.clone();
+        deps.sort_unstable();
+        deps.dedup();
+        let dep_ready = deps.iter().map(|&d| stage_end[d]).fold(now, f64::max);
+        let edges: Vec<(DeviceMask, f64)> = deps
+            .iter()
+            .map(|&d| {
+                let producer = &prep.plans[prep.plan_of[d]];
+                let bytes = producer.gws as f64 * prep.spec.stages[d].bench.bytes_out_per_item;
+                (producer.mask, bytes)
+            })
+            .collect();
+        let sc = SelectCtx {
+            cfg: prep.cfg,
+            classes: prep.classes,
+            transfers: prep.transfers,
+            pool_powers: (0..prep.classes.len())
+                .map(|i| match &stage.powers {
+                    Some(p) => p[i],
+                    None => prep.cfg.devices[i].power,
+                })
+                .collect(),
+            bench: &stage.bench,
+            gws: prep.plans[pos].gws,
+            iterations: stage.iterations,
+            edges,
+            dep_ready,
+            dev_free: &dev_free,
+            serial: false,
+            serial_clock: 0.0,
+            leaf: !prep.has_dependents[si],
+            roi_deadline: prep.roi_deadline,
+            policy: prep.spec.policy,
+            total_iters: prep.total_iters,
+            global_iter: gi,
+            prev_sub: 0.0,
+            running,
+            pool_contention: true,
+            running_until: 0.0,
+            arrival_s: prep.arrival_s,
+        };
+        let p = sc.predict(prep.plans[pos].mask, false);
+        let start = p.start_s.max(now);
+        let end = start + (p.end_s - p.start_s);
+        stage_end[si] = end;
+        for i in prep.plans[pos].mask.indices() {
+            dev_free[i] = end;
+        }
+        end_max = end_max.max(end);
+        gi += stage.iterations;
     }
+    end_max
+}
+
+/// Is `r` predicted to meet its deadline if admitted at `now`?
+/// Unbudgeted requests are always feasible.
+fn admission_feasible(
+    st: &PoolState,
+    preps: &[Prep],
+    r: usize,
+    now: f64,
+    idle_pool: bool,
+) -> bool {
+    let Some(d) = preps[r].roi_deadline else { return true };
+    predict_chain_end(st, preps, r, now, idle_pool) <= d
+}
+
+/// Predicted slack of a request at `now` (infinite when unbudgeted —
+/// such requests are never shed).
+fn predicted_slack(st: &PoolState, preps: &[Prep], r: usize, now: f64) -> f64 {
+    match preps[r].roi_deadline {
+        Some(d) => d - predict_chain_end(st, preps, r, now, false),
+        None => f64::INFINITY,
+    }
+}
+
+/// Process one arrival under the fleet's admission policy (see
+/// [`AdmissionPolicy`]): admitted requests launch immediately; the
+/// gating policies judge the *predicted* chain completion against the
+/// arrival's deadline.
+fn arrive(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usize, t: f64) {
+    let feasible = matches!(st.admission, AdmissionPolicy::Accept)
+        || admission_feasible(st, preps, r, t, false);
+    let status = if feasible {
+        ReqStatus::Admitted
+    } else {
+        match st.admission {
+            AdmissionPolicy::Accept => unreachable!("Accept admits everything"),
+            AdmissionPolicy::RejectInfeasible => ReqStatus::Rejected,
+            AdmissionPolicy::QueueUntilFeasible => {
+                if admission_feasible(st, preps, r, t, true) {
+                    ReqStatus::Queued
+                } else {
+                    ReqStatus::Rejected
+                }
+            }
+            AdmissionPolicy::ShedLowestSlack => {
+                // Shed the lowest-predicted-slack not-yet-started request
+                // (possibly this arrival) to protect the rest of the
+                // fleet; running stages are never preempted (priority /
+                // preemption is a recorded ROADMAP follow-up).
+                let mut victim = r;
+                let mut worst = predicted_slack(st, preps, r, t);
+                for q in 0..preps.len() {
+                    if q != r
+                        && st.reqs[q].status == ReqStatus::Admitted
+                        && !st.reqs[q].started()
+                    {
+                        let s = predicted_slack(st, preps, q, t);
+                        if s < worst {
+                            worst = s;
+                            victim = q;
+                        }
+                    }
+                }
+                if victim == r {
+                    ReqStatus::Rejected
+                } else {
+                    st.reqs[victim].status = ReqStatus::Shed;
+                    ReqStatus::Admitted
+                }
+            }
+        }
+    };
+    st.reqs[r].status = status;
+    if status == ReqStatus::Admitted {
+        launch_scan(st, preps, pool, t);
+    }
+}
+
+/// Final admission disposition of one fleet request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqDisposition {
+    /// Admitted and ran to completion.
+    Completed,
+    /// Rejected at arrival, or starved in the feasibility queue.
+    Rejected,
+    /// Admitted, then shed by `ShedLowestSlack` before any stage started.
+    Shed,
+}
+
+impl ReqDisposition {
+    /// Stable lower-case label (JSON/CSV field value).
+    pub fn label(self) -> &'static str {
+        match self {
+            ReqDisposition::Completed => "completed",
+            ReqDisposition::Rejected => "rejected",
+            ReqDisposition::Shed => "shed",
+        }
+    }
+}
+
+/// Per-request slice of a fleet run.  Device traces, packages, energy
+/// and the active-set windows are pool-shared and live on [`FleetRaw`].
+pub(crate) struct ReqSlice {
+    pub(crate) disposition: ReqDisposition,
+    /// Absolute end of the request's last stage (its arrival instant
+    /// when it never ran).
+    pub(crate) end_s: f64,
+    pub(crate) iter_times: Vec<f64>,
+    pub(crate) iter_verdicts: Vec<IterVerdict>,
+    pub(crate) stage_traces: Vec<StageTrace>,
+    pub(crate) mask_search_skipped: Vec<usize>,
+    /// Absolute (arrival-dated) ROI deadline.
+    pub(crate) roi_deadline: Option<f64>,
+}
+
+/// Everything a fleet run produces, before the tail-metric aggregation
+/// in [`super::tenancy`].
+pub(crate) struct FleetRaw {
+    pub(crate) reqs: Vec<ReqSlice>,
+    pub(crate) traces: Vec<DeviceTrace>,
+    pub(crate) packages: Vec<PackageTrace>,
+    pub(crate) n_packages: u64,
+    pub(crate) active_windows: Vec<ActiveWindow>,
+    /// Latest stage end across completed requests.
+    pub(crate) makespan_s: f64,
+}
+
+/// The interleaved multi-request pool engine: every branch of every
+/// admitted request advances through one global event queue, so stage
+/// launch and finish events re-price every running stage's throughput
+/// against the pool-wide active-set count — cross-branch *and*
+/// cross-request contention through the same retention curve.  Grant
+/// serialization, package pricing, fault handling and the per-stage RNG
+/// forks mirror `coexec::run_roi` exactly; a one-request fleet arriving
+/// at time zero replays the single-request engine's event and tie stream
+/// bit-for-bit (arrivals at zero are admitted before the event loop, so
+/// no extra events are interleaved).
+pub(crate) fn fleet_schedule(
+    pool: &DevicePool,
+    preps: &[Prep],
+    rngs: Vec<XorShift64>,
+    admission: AdmissionPolicy,
+) -> FleetRaw {
+    assert_eq!(preps.len(), rngs.len(), "one RNG per request");
+    let n_pool = pool.len();
     let mut st = PoolState {
-        main_rng: rng,
+        admission,
+        reqs: preps
+            .iter()
+            .zip(rngs)
+            .map(|(prep, rng)| {
+                let n_stages = prep.spec.stages.len();
+                let mut gi_base = vec![0u32; n_stages];
+                let mut acc = 0u32;
+                for (pos, &si) in prep.order.iter().enumerate() {
+                    gi_base[pos] = acc;
+                    acc += prep.spec.stages[si].iterations;
+                }
+                ReqState {
+                    status: ReqStatus::NotArrived,
+                    main_rng: rng,
+                    stage_end: vec![0.0; n_stages],
+                    completed: vec![false; n_stages],
+                    launched: vec![false; n_stages],
+                    chosen_masks: prep.plans.iter().map(|p| p.mask).collect(),
+                    mask_search_skipped: Vec::new(),
+                    subs_armed: vec![None; prep.total_iters as usize],
+                    gi_base,
+                    iter_records: Vec::new(),
+                    stage_traces: Vec::new(),
+                    branches: (0..n_stages).map(|_| None).collect(),
+                    pending: (0..n_stages).map(|_| None).collect(),
+                    pred_end: vec![0.0; n_stages],
+                }
+            })
+            .collect(),
         traces: vec![DeviceTrace::default(); n_pool],
         packages: Vec::new(),
         dev_free: vec![0.0; n_pool],
-        stage_end: vec![0.0; n_stages],
-        completed: vec![false; n_stages],
-        launched: vec![false; n_stages],
-        chosen_masks: prep.plans.iter().map(|p| p.mask).collect(),
-        mask_search_skipped: Vec::new(),
-        subs_armed: vec![None; prep.total_iters as usize],
-        gi_base,
-        iter_records: Vec::new(),
-        stage_traces: Vec::new(),
-        branches: (0..n_stages).map(|_| None).collect(),
-        pending: (0..n_stages).map(|_| None).collect(),
         evs: Vec::new(),
         tie: 0,
         seq: 0,
@@ -1900,63 +2388,147 @@ fn pool_schedule(pool: &DevicePool, prep: Prep, rng: XorShift64) -> PipelineOutc
         window_start: 0.0,
         active_windows: Vec::new(),
     };
-    launch_scan(&mut st, &prep, pool, 0.0);
+    // Later arrivals enter through events; time-zero arrivals face
+    // admission before the event loop, exactly like the standalone
+    // engine's initial launch scan.
+    for (r, prep) in preps.iter().enumerate() {
+        if prep.arrival_s > 0.0 {
+            st.evs.push(PoolEv {
+                t: prep.arrival_s,
+                tie: st.tie,
+                kind: PoolEvKind::Arrival { r },
+            });
+            st.tie += 1;
+        }
+    }
+    for (r, prep) in preps.iter().enumerate() {
+        if prep.arrival_s == 0.0 {
+            arrive(&mut st, preps, pool, r, 0.0);
+        }
+    }
     while let Some(ev) = pop_earliest(&mut st.evs) {
         match ev.kind {
-            PoolEvKind::StageStart { pos } => stage_start(&mut st, &prep, pos, ev.t),
-            PoolEvKind::DevIdle { b, slot } => dev_idle(&mut st, &prep, pool, b, slot, ev.t),
+            PoolEvKind::Arrival { r } => arrive(&mut st, preps, pool, r, ev.t),
+            PoolEvKind::StageStart { r, pos } => stage_start(&mut st, preps, r, pos, ev.t),
+            PoolEvKind::DevIdle { r, b, slot } => {
+                dev_idle(&mut st, preps, pool, r, b, slot, ev.t)
+            }
         }
     }
-    assert!(
-        st.completed.iter().all(|&c| c),
-        "pool engine stalled: a stage never became launchable"
-    );
+    for rs in &st.reqs {
+        if rs.status == ReqStatus::Admitted {
+            assert!(
+                rs.completed.iter().all(|&c| c),
+                "pool engine stalled: a stage never became launchable"
+            );
+        }
+    }
 
-    let roi_time = st.stage_end.iter().cloned().fold(0.0, f64::max);
-    let total_time = prep.init_time + roi_time + prep.release_time;
-    let energy_j = coexec::energy(prep.cfg, roi_time, &st.traces);
-    // Post-hoc canonical verdict chain: replay the topological sub-budget
-    // assignment over the recorded iteration windows, so verdict
-    // semantics match the view engine exactly.
-    st.iter_records.sort_by_key(|r| r.1);
-    let mut iter_times = Vec::with_capacity(prep.total_iters as usize);
-    let mut iter_verdicts = Vec::new();
-    let mut prev_sub = 0.0;
-    for &(si, gi, start, end) in &st.iter_records {
-        iter_times.push(end - start);
-        if let Some(d) = prep.roi_deadline {
-            let sd = prep.spec.policy.sub_deadline(d, prep.total_iters, gi, start, prev_sub);
-            iter_verdicts.push(IterVerdict {
-                stage: si,
-                iter: gi,
-                sub_deadline_s: sd,
-                end_s: end,
-                met: end <= sd,
-                slack_s: sd - end,
-            });
-            prev_sub = sd;
+    let mut makespan = 0.0f64;
+    let mut reqs = Vec::with_capacity(preps.len());
+    for (r, prep) in preps.iter().enumerate() {
+        let rs = &mut st.reqs[r];
+        let disposition = match rs.status {
+            ReqStatus::Admitted => ReqDisposition::Completed,
+            ReqStatus::Shed => ReqDisposition::Shed,
+            // Starved queue holds reject at drain: no completion event is
+            // coming that could ever admit them.
+            ReqStatus::Rejected | ReqStatus::Queued => ReqDisposition::Rejected,
+            ReqStatus::NotArrived => unreachable!("arrival event never fired"),
+        };
+        // Post-hoc canonical verdict chain: replay the topological
+        // sub-budget assignment over the recorded iteration windows (in
+        // request-relative time), so verdict semantics match the view
+        // engine exactly.
+        rs.iter_records.sort_by_key(|rec| rec.1);
+        let mut iter_times = Vec::with_capacity(rs.iter_records.len());
+        let mut iter_verdicts = Vec::new();
+        let mut prev_sub = 0.0;
+        for &(si, gi, start, end) in &rs.iter_records {
+            iter_times.push(end - start);
+            if let Some(d) = prep.roi_deadline {
+                let sd = sub_deadline_at(
+                    prep.spec.policy,
+                    d,
+                    prep.arrival_s,
+                    prep.total_iters,
+                    gi,
+                    start,
+                    prev_sub,
+                );
+                iter_verdicts.push(IterVerdict {
+                    stage: si,
+                    iter: gi,
+                    sub_deadline_s: sd,
+                    end_s: end,
+                    met: end <= sd,
+                    slack_s: sd - end,
+                });
+                prev_sub = sd;
+            }
         }
+        rs.stage_traces.sort_by_key(|s| prep.plan_of[s.stage]);
+        let end_s = if disposition == ReqDisposition::Completed {
+            let e = rs.stage_end.iter().cloned().fold(0.0, f64::max);
+            makespan = makespan.max(e);
+            e
+        } else {
+            prep.arrival_s
+        };
+        reqs.push(ReqSlice {
+            disposition,
+            end_s,
+            iter_times,
+            iter_verdicts,
+            stage_traces: std::mem::take(&mut rs.stage_traces),
+            mask_search_skipped: std::mem::take(&mut rs.mask_search_skipped),
+            roi_deadline: prep.roi_deadline,
+        });
     }
-    st.stage_traces.sort_by_key(|s| prep.plan_of[s.stage]);
-    let timed = match prep.cfg.mode {
+    FleetRaw {
+        reqs,
+        traces: st.traces,
+        packages: st.packages,
+        n_packages: st.seq,
+        active_windows: st.active_windows,
+        makespan_s: makespan,
+    }
+}
+
+/// The single-request pool-contention entry point: the one-request fleet
+/// under [`AdmissionPolicy::Accept`], reassembled into the classic
+/// [`PipelineOutcome`] (bit-identical to the pre-fleet engine — the
+/// golden snapshots hold it to that).
+fn pool_schedule(pool: &DevicePool, prep: Prep, rng: XorShift64) -> PipelineOutcome {
+    let cfg = prep.cfg;
+    let budget = prep.budget;
+    let init_time = prep.init_time;
+    let release_time = prep.release_time;
+    let preps = [prep];
+    let mut raw = fleet_schedule(pool, &preps, vec![rng], AdmissionPolicy::Accept);
+    let one = raw.reqs.remove(0);
+    let roi_time = raw.makespan_s;
+    let total_time = init_time + roi_time + release_time;
+    let energy_j = coexec::energy(cfg, roi_time, &raw.traces);
+    let timed = match cfg.mode {
         ExecMode::Binary => total_time,
         ExecMode::Roi => roi_time,
     };
     PipelineOutcome {
         total_time,
-        init_time: prep.init_time,
-        release_time: prep.release_time,
+        init_time,
+        release_time,
         roi_time,
-        iter_times,
+        iter_times: one.iter_times,
         energy_j,
-        devices: st.traces,
-        n_packages: st.seq,
-        packages: st.packages,
-        stages: st.stage_traces,
-        deadline: prep.budget.map(|b| b.verdict(timed)),
-        iter_verdicts,
-        active_windows: st.active_windows,
-        mask_search_skipped: st.mask_search_skipped,
+        devices: raw.traces,
+        n_packages: raw.n_packages,
+        packages: raw.packages,
+        stages: one.stage_traces,
+        deadline: budget.map(|b| b.verdict(timed)),
+        iter_verdicts: one.iter_verdicts,
+        active_windows: raw.active_windows,
+        mask_search_skipped: one.mask_search_skipped,
     }
 }
 
@@ -2371,6 +2943,8 @@ mod tests {
             prev_sub: 0.0,
             running: DeviceMask::empty(),
             pool_contention: false,
+            running_until: 0.0,
+            arrival_s: 0.0,
         };
         let spec_mask = DeviceMask::from_indices(&[0, 1]);
         let igpu = DeviceMask::single(1);
@@ -2420,6 +2994,8 @@ mod tests {
             prev_sub: 0.0,
             running: DeviceMask::empty(),
             pool_contention: false,
+            running_until: 0.0,
+            arrival_s: 0.0,
         };
         let spec_mask = DeviceMask::from_indices(&[0, 1]);
         // Grid the sub-deadlines 3 % above the spec pace: the spec hits
@@ -2431,6 +3007,79 @@ mod tests {
         assert_eq!(eud.mask, spec_mask, "no subset predicted to hit: fall back");
         let blind = select_stage_mask(MaskPolicy::MinEnergy, spec_mask, &sc);
         assert_eq!(blind.mask, DeviceMask::single(1), "deadline-blind policy still sheds");
+    }
+
+    #[test]
+    fn committed_horizon_counts_running_stages_predicted_ends() {
+        // ROADMAP item 5: `dev_free` only records *completed* stages, so
+        // while a long branch was still in flight the horizon collapsed
+        // to the completed frontier and extensions that in fact hide
+        // behind the running branch were priced at the platform floor.
+        // Same geometry as `selector_sheds_the_cpu_...` above, but the
+        // GPU's t=10 window is a *running* stage's predicted end
+        // (`running_until`) instead of a completed one (`dev_free`):
+        // the selection must come out identical.
+        let b = Bench::new(BenchId::Gaussian);
+        let cfg = SimConfig::testbed(&b, hguided_opt());
+        let transfers = TransferModel::new(&cfg.driver, cfg.opts.buffer_flags);
+        let classes: Vec<DeviceClass> = cfg.devices.iter().map(|d| d.class).collect();
+        let dev_free = [0.0, 0.0, 0.0]; // nothing completed yet
+        let mut sc = SelectCtx {
+            cfg: &cfg,
+            classes: &classes,
+            transfers: &transfers,
+            pool_powers: vec![0.15, 0.4, 1.0],
+            bench: &b,
+            gws: b.default_gws / 16,
+            iterations: 2,
+            edges: Vec::new(),
+            dep_ready: 0.0,
+            dev_free: &dev_free,
+            serial: false,
+            serial_clock: 0.0,
+            leaf: true,
+            roi_deadline: Some(1e6),
+            policy: BudgetPolicy::GreedyFrontload,
+            total_iters: 4,
+            global_iter: 0,
+            prev_sub: 0.0,
+            running: DeviceMask::empty(),
+            pool_contention: false,
+            running_until: 0.0,
+            arrival_s: 0.0,
+        };
+        // Pre-fix view: no completed work, horizon at zero.
+        assert_eq!(sc.committed_horizon(), 0.0);
+        // The GPU branch is launched and predicted to run until t=10:
+        // the horizon must extend to its predicted end.
+        sc.running_until = 10.0;
+        assert_eq!(sc.committed_horizon(), 10.0);
+        let spec_mask = DeviceMask::from_indices(&[0, 1]);
+        let igpu = DeviceMask::single(1);
+        let spec_pred = sc.predict(spec_mask, false);
+        let shed_pred = sc.predict(igpu, true);
+        assert!(
+            shed_pred.end_s > spec_pred.end_s,
+            "the shed candidate stretches past the spec window"
+        );
+        // The stretch hides entirely under the running branch, so the
+        // in-flight-aware horizon prices it strictly cheaper than the
+        // completed-only horizon did.
+        assert!(
+            sc.energy(&shed_pred, sc.committed_horizon())
+                < sc.energy(&shed_pred, spec_pred.end_s),
+            "extension under the running branch must be free"
+        );
+        for policy in [MaskPolicy::EnergyUnderDeadline, MaskPolicy::MinEnergy] {
+            let c = select_stage_mask(policy, spec_mask, &sc);
+            assert_eq!(c.mask, igpu, "{policy:?} sheds behind the running branch");
+        }
+        let shed = select_stage_mask(MaskPolicy::MinEnergy, spec_mask, &sc);
+        assert!(
+            shed.pred_energy_j < MASK_ENERGY_MARGIN * sc.energy(&spec_pred, 10.0),
+            "shed must clear the energy margin"
+        );
+        assert_eq!(select_stage_mask(MaskPolicy::Fixed, spec_mask, &sc).mask, spec_mask);
     }
 
     #[test]

@@ -1,0 +1,414 @@
+//! Multi-tenant traffic simulation: a fleet of deadline-bound pipeline
+//! requests served on **one shared** [`DevicePool`].
+//!
+//! The paper measures co-execution one application at a time, but the
+//! commodity systems it targets (desktops, medium service servers) serve
+//! *streams* of concurrent requests.  This module closes that gap: an
+//! open-loop [`ArrivalProcess`] (Poisson with a fixed seed, or
+//! trace-driven from a JSON arrival file) injects many copies of one
+//! [`PipelineSpec`] template onto the pool, the interleaved pool engine
+//! (`pipeline::fleet_schedule`) co-executes every branch of every
+//! admitted request through one global event queue — cross-request
+//! contention priced through the same retention curve as cross-branch
+//! contention — and an [`AdmissionPolicy`] gates each arrival on its
+//! *predicted* chain completion (the mask-predictor machinery, not an
+//! oracle).
+//!
+//! **Determinism.**  Request `r` runs under the template `SimConfig` with
+//! its seed forked as `seed ^ r·STRIDE` (an odd 64-bit stride), so
+//! request 0 keeps the fleet seed unchanged: a one-request fleet arriving
+//! at `t = 0` is **bit-identical** to `simulate_pipeline` under
+//! `--contention pool` (guarded by the golden snapshots and the fleet
+//! scenario tests).  Poisson inter-arrival gaps draw from a *dedicated*
+//! RNG stream (the fleet seed salted), so arrival timing never perturbs
+//! any request's compute jitter.
+//!
+//! **Tail metrics.**  [`FleetOutcome`] reports the servable-traffic view:
+//! request-level deadline hit rate at the offered load (rejected and shed
+//! requests count as misses — admission control pays for what it turns
+//! away), p50/p95/p99 completion slack, fleet energy and J-per-hit.
+//! Sweeping the offered load over a grid locates the saturation knee
+//! (`traffic-sweep` CLI, `experiments::traffic_sweep`).
+
+use crate::cldriver::TransferModel;
+use crate::jsonio::Json;
+use crate::stats::{percentile, XorShift64};
+use crate::types::{AdmissionPolicy, DevicePool};
+
+use super::coexec::{self, DeviceTrace, SimConfig};
+use super::pipeline::{fleet_schedule, prepare_request, PipelineSpec, ReqDisposition};
+
+/// Odd 64-bit stride for per-request seed forks: request `r` simulates
+/// under `cfg.seed ^ r·STRIDE`, so request 0 replays the template seed
+/// bit-for-bit and distinct requests draw decorrelated jitter streams.
+const REQ_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Salt separating the arrival-timing RNG stream from every per-request
+/// compute stream.
+const ARRIVAL_SEED_SALT: u64 = 0xA076_1D64_78BD_642F;
+
+/// Per-request seed fork (request 0 keeps the fleet seed unchanged).
+pub fn request_seed(fleet_seed: u64, r: usize) -> u64 {
+    fleet_seed ^ (r as u64).wrapping_mul(REQ_SEED_STRIDE)
+}
+
+/// Open-loop arrival process of the fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// `n` requests; the first arrives at `t = 0` (so a one-request fleet
+    /// replays the standalone engine), subsequent gaps are Exp(`rate_hz`)
+    /// drawn from the fleet seed's dedicated arrival stream.
+    Poisson { rate_hz: f64, n: usize },
+    /// Trace-driven: explicit arrival instants in seconds (sorted
+    /// ascending before use).  See [`parse_trace`] for the file schema.
+    Trace { arrivals_s: Vec<f64> },
+}
+
+impl ArrivalProcess {
+    /// Number of requests the process injects.
+    pub fn n(&self) -> usize {
+        match self {
+            ArrivalProcess::Poisson { n, .. } => *n,
+            ArrivalProcess::Trace { arrivals_s } => arrivals_s.len(),
+        }
+    }
+
+    /// Materialize the arrival instants (ascending; one per request).
+    pub fn arrivals(&self, fleet_seed: u64) -> Vec<f64> {
+        match self {
+            ArrivalProcess::Poisson { rate_hz, n } => {
+                assert!(*n >= 1, "a fleet needs at least one request");
+                assert!(
+                    rate_hz.is_finite() && *rate_hz > 0.0,
+                    "Poisson rate must be positive, got {rate_hz}"
+                );
+                let mut rng = XorShift64::new(fleet_seed ^ ARRIVAL_SEED_SALT);
+                let mut t = 0.0;
+                let mut out = Vec::with_capacity(*n);
+                out.push(0.0);
+                for _ in 1..*n {
+                    // Inverse-CDF exponential gap; 1-u ∈ (0, 1] keeps the
+                    // log finite.
+                    t += -(1.0 - rng.next_f64()).ln() / rate_hz;
+                    out.push(t);
+                }
+                out
+            }
+            ArrivalProcess::Trace { arrivals_s } => {
+                assert!(!arrivals_s.is_empty(), "a fleet needs at least one request");
+                for &a in arrivals_s {
+                    assert!(a.is_finite() && a >= 0.0, "arrival instants must be >= 0, got {a}");
+                }
+                let mut out = arrivals_s.clone();
+                out.sort_by(|a, b| a.partial_cmp(b).expect("finite arrivals"));
+                out
+            }
+        }
+    }
+
+    /// Offered load in requests/s: the nominal rate for Poisson, the
+    /// empirical mean rate for traces (0 for a single request).
+    pub fn offered_load(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate_hz, .. } => *rate_hz,
+            ArrivalProcess::Trace { arrivals_s } => {
+                let n = arrivals_s.len();
+                if n < 2 {
+                    return 0.0;
+                }
+                let lo = arrivals_s.iter().cloned().fold(f64::INFINITY, f64::min);
+                let hi = arrivals_s.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                if hi > lo {
+                    (n - 1) as f64 / (hi - lo)
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+}
+
+/// Parse a trace file: either `{"arrivals_s": [0.0, 0.4, ...]}` or a
+/// bare JSON array `[0.0, 0.4, ...]`; instants are seconds, must be
+/// finite and non-negative (order does not matter — they are sorted).
+pub fn parse_trace(doc: &str) -> crate::Result<ArrivalProcess> {
+    let j = Json::parse(doc).map_err(|e| anyhow::anyhow!("trace file: {e}"))?;
+    let arr = match j.get("arrivals_s") {
+        Some(a) => a.as_arr(),
+        None => j.as_arr(),
+    }
+    .ok_or_else(|| {
+        anyhow::anyhow!("trace file: expected {{\"arrivals_s\": [..]}} or a bare array")
+    })?;
+    if arr.is_empty() {
+        anyhow::bail!("trace file: needs at least one arrival");
+    }
+    let mut arrivals_s = Vec::with_capacity(arr.len());
+    for (i, v) in arr.iter().enumerate() {
+        let a = v
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("trace file: arrival #{i} is not a number"))?;
+        if !a.is_finite() || a < 0.0 {
+            anyhow::bail!("trace file: arrival #{i} must be a finite non-negative time, got {a}");
+        }
+        arrivals_s.push(a);
+    }
+    Ok(ArrivalProcess::Trace { arrivals_s })
+}
+
+/// A fleet: one pipeline template served many times on the shared pool.
+/// Every request carries the template's budget *relative to its own
+/// arrival* (a request arriving at `t` with a 3 s deadline must finish
+/// by `t + 3`).
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub template: PipelineSpec,
+    pub arrivals: ArrivalProcess,
+    pub admission: AdmissionPolicy,
+}
+
+/// One request's fate in the fleet run.
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    pub arrival_s: f64,
+    pub disposition: ReqDisposition,
+    /// Absolute ROI-clock end of the last stage (the arrival instant for
+    /// requests that never ran).
+    pub end_s: f64,
+    /// Absolute (arrival-dated) ROI-scope deadline, when budgeted.
+    pub deadline_s: Option<f64>,
+    /// `deadline - end` for budgeted completed requests.
+    pub slack_s: Option<f64>,
+    /// Request-level deadline hit: completed and within its deadline
+    /// (unbudgeted completions always hit; rejected/shed never do).
+    pub hit: bool,
+    /// Per-iteration durations (empty unless completed).
+    pub iter_times: Vec<f64>,
+    /// Per-iteration sub-deadline hits (0 when unbudgeted).
+    pub iter_hits: usize,
+}
+
+/// Tail metrics of one fleet run at one offered load.
+#[derive(Debug, Clone)]
+pub struct FleetOutcome {
+    pub admission: AdmissionPolicy,
+    /// Offered load in requests/s ([`ArrivalProcess::offered_load`]).
+    pub offered_load: f64,
+    pub n_requests: usize,
+    pub n_completed: usize,
+    pub n_rejected: usize,
+    pub n_shed: usize,
+    /// Request-level deadline hits / offered requests — admission control
+    /// is charged for everything it turns away.
+    pub hit_rate: f64,
+    /// Completion-slack percentiles over budgeted *completed* requests
+    /// (`None` when no budgeted request completed).
+    pub slack_p50_s: Option<f64>,
+    pub slack_p95_s: Option<f64>,
+    pub slack_p99_s: Option<f64>,
+    /// Latest stage end across completed requests (ROI clock).
+    pub makespan_s: f64,
+    /// Fleet energy over the shared-pool makespan.
+    pub energy_j: f64,
+    /// `energy_j` per request-level deadline hit (`None` without hits).
+    pub joules_per_hit: Option<f64>,
+    /// Pool-indexed device traces (shared across requests).
+    pub traces: Vec<DeviceTrace>,
+    pub requests: Vec<RequestOutcome>,
+}
+
+impl FleetOutcome {
+    /// Total scheduled work groups across the pool (conservation checks).
+    pub fn total_groups(&self) -> u64 {
+        self.traces.iter().map(|t| t.groups).sum()
+    }
+}
+
+/// Serve the fleet on the template config's device pool.  `cfg` is the
+/// shared run template (devices, scheduler, driver/power models, seed,
+/// contention scope is implicitly pool — the fleet engine *is* the
+/// pool-scoped engine); request `r` forks its seed via [`request_seed`].
+pub fn simulate_fleet(fleet: &FleetSpec, cfg: &SimConfig) -> FleetOutcome {
+    simulate_fleet_of(
+        std::slice::from_ref(&fleet.template),
+        &fleet.arrivals,
+        fleet.admission,
+        cfg,
+    )
+}
+
+/// Mixed-tenant fleet: request `r` is served from
+/// `templates[r % templates.len()]` (round-robin over the template
+/// list), so heterogeneous request populations — e.g. tenants pinned to
+/// disjoint device masks — contend for one pool.  [`simulate_fleet`] is
+/// the single-template special case.
+pub fn simulate_fleet_of(
+    templates: &[PipelineSpec],
+    arrival_proc: &ArrivalProcess,
+    admission: AdmissionPolicy,
+    cfg: &SimConfig,
+) -> FleetOutcome {
+    assert!(!cfg.devices.is_empty(), "no devices");
+    assert!(!templates.is_empty(), "a fleet needs at least one template");
+    for t in templates {
+        assert!(
+            !t.serial,
+            "serial pipelines run one stage at a time; a serial fleet is a queue, \
+             not co-execution — unsupported"
+        );
+    }
+    let arrivals = arrival_proc.arrivals(cfg.seed);
+    let n = arrivals.len();
+    let pool = DevicePool::new(cfg.devices.clone());
+    let classes = pool.classes();
+    let transfers = TransferModel::new(&cfg.driver, cfg.opts.buffer_flags);
+
+    // Per-request config: the shared template with a forked seed.
+    let cfgs: Vec<SimConfig> = (0..n)
+        .map(|r| {
+            let mut c = cfg.clone();
+            c.seed = request_seed(cfg.seed, r);
+            c
+        })
+        .collect();
+    let rps: Vec<_> = cfgs
+        .iter()
+        .enumerate()
+        .map(|(r, c)| prepare_request(&templates[r % templates.len()], c, &pool))
+        .collect();
+    let preps: Vec<_> = rps
+        .iter()
+        .zip(&cfgs)
+        .zip(&arrivals)
+        .enumerate()
+        .map(|(r, ((rp, c), &a))| {
+            rp.as_prep(&templates[r % templates.len()], c, &classes, &transfers, a)
+        })
+        .collect();
+    let rngs: Vec<XorShift64> = rps.iter().map(|rp| rp.rng.clone()).collect();
+
+    let raw = fleet_schedule(&pool, &preps, rngs, admission);
+
+    let mut requests = Vec::with_capacity(n);
+    let mut slacks = Vec::new();
+    let (mut n_completed, mut n_rejected, mut n_shed, mut hits) = (0, 0, 0, 0usize);
+    for (slice, &arrival_s) in raw.reqs.iter().zip(&arrivals) {
+        match slice.disposition {
+            ReqDisposition::Completed => n_completed += 1,
+            ReqDisposition::Rejected => n_rejected += 1,
+            ReqDisposition::Shed => n_shed += 1,
+        }
+        let completed = slice.disposition == ReqDisposition::Completed;
+        let slack_s = match (completed, slice.roi_deadline) {
+            (true, Some(d)) => Some(d - slice.end_s),
+            _ => None,
+        };
+        if let Some(s) = slack_s {
+            slacks.push(s);
+        }
+        let hit = completed && slice.roi_deadline.is_none_or(|d| slice.end_s <= d);
+        if hit {
+            hits += 1;
+        }
+        requests.push(RequestOutcome {
+            arrival_s,
+            disposition: slice.disposition,
+            end_s: slice.end_s,
+            deadline_s: slice.roi_deadline,
+            slack_s,
+            hit,
+            iter_times: slice.iter_times.clone(),
+            iter_hits: slice.iter_verdicts.iter().filter(|v| v.met).count(),
+        });
+    }
+    let energy_j = coexec::energy(cfg, raw.makespan_s, &raw.traces);
+    FleetOutcome {
+        admission,
+        offered_load: arrival_proc.offered_load(),
+        n_requests: n,
+        n_completed,
+        n_rejected,
+        n_shed,
+        hit_rate: hits as f64 / n as f64,
+        slack_p50_s: percentile(&slacks, 50.0),
+        slack_p95_s: percentile(&slacks, 95.0),
+        slack_p99_s: percentile(&slacks, 99.0),
+        makespan_s: raw.makespan_s,
+        energy_j,
+        joules_per_hit: if hits > 0 { Some(energy_j / hits as f64) } else { None },
+        traces: raw.traces,
+        requests,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_arrivals_are_deterministic_ascending_and_anchored() {
+        let p = ArrivalProcess::Poisson { rate_hz: 4.0, n: 8 };
+        let a = p.arrivals(42);
+        let b = p.arrivals(42);
+        assert_eq!(a, b, "same seed, same arrivals");
+        assert_eq!(a.len(), 8);
+        assert_eq!(a[0], 0.0, "first request arrives immediately");
+        for w in a.windows(2) {
+            assert!(w[1] > w[0], "gaps are strictly positive");
+        }
+        let c = p.arrivals(43);
+        assert_ne!(a, c, "seed moves the arrival stream");
+        // Mean gap tracks 1/rate loosely (n is tiny; just sanity).
+        let span = a.last().unwrap() - a[0];
+        assert!(span > 0.0 && span.is_finite());
+        assert_eq!(p.offered_load(), 4.0);
+    }
+
+    #[test]
+    fn arrival_seed_stream_is_salted_away_from_request_zero() {
+        // The arrival stream must not replay request 0's compute jitter
+        // stream: same seed, different first draw.
+        let mut arrival = XorShift64::new(request_seed(7, 0) ^ ARRIVAL_SEED_SALT);
+        let mut compute = XorShift64::new(request_seed(7, 0));
+        assert_ne!(arrival.next_u64(), compute.next_u64());
+        // And request 0 keeps the fleet seed bit-for-bit.
+        assert_eq!(request_seed(123, 0), 123);
+        assert_ne!(request_seed(123, 1), 123);
+        assert_ne!(request_seed(123, 1), request_seed(123, 2));
+    }
+
+    #[test]
+    fn trace_arrivals_sort_and_validate() {
+        let t = ArrivalProcess::Trace { arrivals_s: vec![1.5, 0.0, 0.5] };
+        assert_eq!(t.arrivals(0), vec![0.0, 0.5, 1.5]);
+        assert_eq!(t.n(), 3);
+        // (3-1) requests over a 1.5 s span.
+        assert!((t.offered_load() - 2.0 / 1.5).abs() < 1e-12);
+        let one = ArrivalProcess::Trace { arrivals_s: vec![0.0] };
+        assert_eq!(one.offered_load(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be >= 0")]
+    fn negative_trace_arrival_rejected() {
+        ArrivalProcess::Trace { arrivals_s: vec![0.0, -1.0] }.arrivals(0);
+    }
+
+    #[test]
+    fn parse_trace_accepts_both_schemas_and_names_errors() {
+        let obj = parse_trace("{\"arrivals_s\": [0.0, 0.25, 1.0]}").unwrap();
+        assert_eq!(obj, ArrivalProcess::Trace { arrivals_s: vec![0.0, 0.25, 1.0] });
+        let bare = parse_trace("[0.5, 0.0]").unwrap();
+        assert_eq!(bare, ArrivalProcess::Trace { arrivals_s: vec![0.5, 0.0] });
+        for (doc, needle) in [
+            ("{}", "expected"),
+            ("[]", "at least one"),
+            ("[\"x\"]", "not a number"),
+            ("[-1.0]", "non-negative"),
+            ("nope", "trace file"),
+        ] {
+            let err = parse_trace(doc).unwrap_err().to_string();
+            assert!(err.contains(needle), "{doc:?}: {err}");
+        }
+    }
+}

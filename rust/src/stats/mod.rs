@@ -7,4 +7,4 @@ pub mod rng;
 pub mod summary;
 
 pub use rng::XorShift64;
-pub use summary::{geomean, mean, stddev, Summary};
+pub use summary::{geomean, mean, percentile, stddev, Summary};

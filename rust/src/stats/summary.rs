@@ -34,6 +34,23 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (log_sum / xs.len() as f64).exp()
 }
 
+/// Linear-interpolated percentile (`p` in 0..=100) over an unsorted
+/// sample; the tail metrics of the traffic simulator (p50/p95/p99
+/// slack) are computed with this.  Returns `None` for an empty sample.
+pub fn percentile(xs: &[f64], p: f64) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
+    debug_assert!((0.0..=100.0).contains(&p), "percentile {p} out of range");
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("percentile over NaN"));
+    let rank = p.clamp(0.0, 100.0) / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    Some(sorted[lo] + (sorted[hi] - sorted[lo]) * frac)
+}
+
 /// Aggregate of a repetition set: the paper reports means of 50 runs with
 /// the first (warm-up) run discarded; `Summary::over` implements exactly
 /// that protocol.
@@ -109,6 +126,24 @@ mod tests {
         assert_eq!(geomean(&[]), 0.0);
         let s = Summary::over(&[], 0);
         assert_eq!(s.n, 0);
+        assert_eq!(percentile(&[], 50.0), None);
+    }
+
+    #[test]
+    fn percentile_interpolates_and_orders() {
+        let xs = [4.0, 1.0, 3.0, 2.0]; // unsorted on purpose
+        assert_eq!(percentile(&xs, 0.0), Some(1.0));
+        assert_eq!(percentile(&xs, 100.0), Some(4.0));
+        assert!((percentile(&xs, 50.0).unwrap() - 2.5).abs() < 1e-12);
+        // p99 >= p95 >= p50 on any sample.
+        let ys = [0.3, -1.2, 5.0, 2.2, 0.0, 7.5, 7.5];
+        let (p50, p95, p99) = (
+            percentile(&ys, 50.0).unwrap(),
+            percentile(&ys, 95.0).unwrap(),
+            percentile(&ys, 99.0).unwrap(),
+        );
+        assert!(p50 <= p95 && p95 <= p99);
+        assert_eq!(percentile(&[42.0], 99.0), Some(42.0));
     }
 
     #[test]

@@ -627,6 +627,66 @@ impl ContentionModel {
     }
 }
 
+/// Deadline-aware admission control for the multi-tenant fleet driver
+/// (`sim::tenancy`): what happens when a new pipeline request arrives at
+/// a shared device pool.  Decisions are made against the *predicted*
+/// completion of the request's stage chain (the mask predictor's own
+/// time model, priced against the pool's committed schedule), so a
+/// request is never admitted on hope alone under the gating policies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// Admit every request unconditionally (open-loop baseline).
+    #[default]
+    Accept,
+    /// Reject a request at arrival when its predicted chain completion
+    /// misses its deadline under the pool's current commitments.
+    RejectInfeasible,
+    /// Hold an infeasible arrival in a queue and re-evaluate it whenever
+    /// a stage completes; permanently reject once even an idle pool
+    /// could no longer meet its deadline.
+    QueueUntilFeasible,
+    /// Like `RejectInfeasible`, but an infeasible arrival may instead
+    /// shed the *lowest-slack* not-yet-started request (possibly
+    /// itself), protecting the requests most likely to hit their
+    /// deadlines.  Running stages are never preempted.
+    ShedLowestSlack,
+}
+
+impl AdmissionPolicy {
+    pub const ALL: [AdmissionPolicy; 4] = [
+        AdmissionPolicy::Accept,
+        AdmissionPolicy::RejectInfeasible,
+        AdmissionPolicy::QueueUntilFeasible,
+        AdmissionPolicy::ShedLowestSlack,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Accept => "accept",
+            AdmissionPolicy::RejectInfeasible => "reject-infeasible",
+            AdmissionPolicy::QueueUntilFeasible => "queue-until-feasible",
+            AdmissionPolicy::ShedLowestSlack => "shed-lowest-slack",
+        }
+    }
+
+    /// Parse a CLI spelling (full label or short alias).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_lowercase().as_str() {
+            "accept" | "always" => Some(AdmissionPolicy::Accept),
+            "reject-infeasible" | "rejectinfeasible" | "reject" => {
+                Some(AdmissionPolicy::RejectInfeasible)
+            }
+            "queue-until-feasible" | "queueuntilfeasible" | "queue" => {
+                Some(AdmissionPolicy::QueueUntilFeasible)
+            }
+            "shed-lowest-slack" | "shedlowestslack" | "shed" => {
+                Some(AdmissionPolicy::ShedLowestSlack)
+            }
+            _ => None,
+        }
+    }
+}
+
 /// How the scheduler's computing-power estimates `P_i` relate to the true
 /// co-execution powers.  The paper profiles powers offline, so the
 /// scheduler may run under estimation error; its headline 0.84 efficiency
@@ -966,6 +1026,18 @@ mod tests {
         assert_eq!(ContentionModel::parse("Pool"), Some(ContentionModel::Pool));
         assert_eq!(ContentionModel::parse("legacy"), Some(ContentionModel::View));
         assert_eq!(ContentionModel::parse("both"), None);
+    }
+
+    #[test]
+    fn admission_policy_labels_parse_roundtrip() {
+        for a in AdmissionPolicy::ALL {
+            assert_eq!(AdmissionPolicy::parse(a.label()), Some(a));
+        }
+        assert_eq!(AdmissionPolicy::default(), AdmissionPolicy::Accept);
+        assert_eq!(AdmissionPolicy::parse("reject"), Some(AdmissionPolicy::RejectInfeasible));
+        assert_eq!(AdmissionPolicy::parse("queue"), Some(AdmissionPolicy::QueueUntilFeasible));
+        assert_eq!(AdmissionPolicy::parse("Shed"), Some(AdmissionPolicy::ShedLowestSlack));
+        assert_eq!(AdmissionPolicy::parse("drop"), None);
     }
 
     #[test]

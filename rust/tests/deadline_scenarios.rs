@@ -19,17 +19,19 @@ fn budget_verdicts_bracket_feasibility() {
     for id in [BenchId::Gaussian, BenchId::Mandelbrot] {
         let bench = Bench::new(id);
         let gws = bench.default_gws / 8;
-        let loose = Engine::new(bench.clone())
-            .with_gws(gws)
-            .with_budget(TimeBudget::new(1e6))
+        let loose = Engine::builder(bench.clone())
+            .gws(gws)
+            .budget(TimeBudget::new(1e6))
+            .build()
             .run_reps(4)
             .deadline
             .expect("budget configured");
         assert_eq!(loose.hit_rate, 1.0, "{}: loose budget must be met", id.label());
         assert!(loose.mean_slack_s > 0.0);
-        let hopeless = Engine::new(bench)
-            .with_gws(gws)
-            .with_budget(TimeBudget::new(1e-6))
+        let hopeless = Engine::builder(bench)
+            .gws(gws)
+            .budget(TimeBudget::new(1e-6))
+            .build()
             .run_reps(4)
             .deadline
             .unwrap();
@@ -45,7 +47,7 @@ fn adaptive_is_hguided_opt_when_unconstrained() {
     for id in BenchId::ALL {
         let bench = Bench::new(id);
         let hg = Engine::new(bench.clone()).run_reps(8).time.mean;
-        let ad = Engine::new(bench).with_scheduler(adaptive()).run_reps(8).time.mean;
+        let ad = Engine::builder(bench).scheduler(adaptive()).build().run_reps(8).time.mean;
         assert_eq!(
             ad.to_bits(),
             hg.to_bits(),

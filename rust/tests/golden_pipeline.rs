@@ -1,6 +1,7 @@
-//! Golden-snapshot harness for the pipeline engine: three canonical
-//! scenarios (single-stage, two-branch disjoint, diamond DAG) run with
-//! fixed seeds, and their full `metrics::pipeline_json` documents are
+//! Golden-snapshot harness for the pipeline engine: canonical scenarios
+//! (single-stage, two-branch disjoint, pool contention, diamond DAG,
+//! and a small Poisson fleet) run with fixed seeds, and their full
+//! `metrics::pipeline_json` / `metrics::fleet_json` documents are
 //! compared byte-for-byte against checked-in snapshots under
 //! `tests/golden/`.  Future refactors cannot silently change schedules,
 //! verdicts or energy accounting: any drift fails here first.
@@ -18,8 +19,11 @@
 use enginecl::benchsuite::{Bench, BenchId};
 use enginecl::metrics::pipeline_json;
 use enginecl::scheduler::{HGuidedParams, SchedulerKind};
-use enginecl::sim::{simulate_pipeline, PipelineSpec, PipelineStage, SimConfig};
-use enginecl::types::{ContentionModel, DeviceMask, MaskPolicy};
+use enginecl::sim::{
+    simulate_fleet, simulate_pipeline, ArrivalProcess, FleetSpec, PipelineSpec, PipelineStage,
+    SimConfig,
+};
+use enginecl::types::{AdmissionPolicy, ContentionModel, DeviceMask, MaskPolicy};
 use std::path::PathBuf;
 
 fn golden_dir() -> PathBuf {
@@ -136,6 +140,47 @@ fn golden_pool_contention_pipeline() {
     let mut cfg = SimConfig::testbed(&mb, hguided_opt());
     cfg.contention = ContentionModel::Pool;
     check_golden("pool_contention", &render(&spec, &cfg));
+}
+
+#[test]
+fn golden_poisson_fleet() {
+    // A small Poisson fleet of the pool-contention DAG on the shared
+    // pool: four requests at 2 req/s, open-loop admission.  The snapshot
+    // pins the fleet JSON document — arrival pattern (fixed fleet seed),
+    // per-request dispositions/slacks, tail percentiles, and the shared
+    // energy accounting — so the multi-tenant driver cannot drift
+    // silently.
+    let mb = Bench::new(BenchId::Mandelbrot);
+    let ga = Bench::new(BenchId::Gaussian);
+    let spec = PipelineSpec {
+        stages: vec![
+            PipelineStage::new(mb.clone(), 2)
+                .with_gws(mb.default_gws / 4)
+                .with_powers(mb.true_powers.to_vec())
+                .on_devices(DeviceMask::single(2)),
+            PipelineStage::new(ga.clone(), 2)
+                .with_gws(ga.default_gws / 16)
+                .with_powers(ga.true_powers.to_vec())
+                .on_devices(DeviceMask::from_indices(&[0, 1])),
+        ],
+        budget: None,
+        policy: enginecl::types::BudgetPolicy::CarryOverSlack,
+        energy: enginecl::types::EnergyPolicy::RaceToIdle,
+        mask_policy: MaskPolicy::Fixed,
+        serial: false,
+    }
+    .with_deadline(3.0);
+    let mut cfg = SimConfig::testbed(&mb, hguided_opt());
+    cfg.contention = ContentionModel::Pool;
+    let fleet = FleetSpec {
+        template: spec,
+        arrivals: ArrivalProcess::Poisson { rate_hz: 2.0, n: 4 },
+        admission: AdmissionPolicy::Accept,
+    };
+    let out = simulate_fleet(&fleet, &cfg);
+    let doc = enginecl::metrics::fleet_json(&out).to_string();
+    enginecl::jsonio::Json::parse(&doc).expect("fleet snapshot JSON parses");
+    check_golden("poisson_fleet", &doc);
 }
 
 #[test]

@@ -17,7 +17,7 @@ fn eff_for(bench: &Bench, kind: SchedulerKind) -> f64 {
     let base = Engine::new(bench.clone());
     let standalone = base.standalone_times(6);
     let s_max = metrics::max_speedup(&standalone);
-    let rep = base.with_scheduler(kind).run_reps(REPS);
+    let rep = Engine::builder(bench.clone()).scheduler(kind).build().run_reps(REPS);
     metrics::efficiency(metrics::speedup(standalone[2], rep.time.mean), s_max)
 }
 
@@ -68,9 +68,8 @@ fn coexecution_always_beats_single_gpu_at_paper_sizes() {
     // Paper: HGuided is "always better than using the fastest device".
     for id in BenchId::ALL {
         let bench = Bench::new(id);
-        let base = Engine::new(bench);
-        let co = base.clone().run_reps(REPS).time.mean;
-        let solo = base.gpu_only().run_reps(REPS).time.mean;
+        let co = Engine::new(bench.clone()).run_reps(REPS).time.mean;
+        let solo = Engine::builder(bench).gpu_only().build().run_reps(REPS).time.mean;
         assert!(co < solo, "{}: {co:.3}s !< {solo:.3}s", id.label());
     }
 }
@@ -100,17 +99,19 @@ fn hguided_balance_is_near_one_and_best_in_class() {
     // Paper Fig. 4 + abstract: balance effectiveness ~0.97 for HGuided.
     for id in BenchId::ALL {
         let bench = Bench::new(id);
-        let base = Engine::new(bench);
+        let base = Engine::builder(bench);
         let hg = base
             .clone()
-            .with_scheduler(SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() })
+            .scheduler(SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() })
+            .build()
             .run_reps(REPS)
             .balance
             .mean;
         assert!(hg > 0.93, "{}: HGuided balance {hg:.3}", id.label());
         let st = base
             .clone()
-            .with_scheduler(SchedulerKind::Static)
+            .scheduler(SchedulerKind::Static)
+            .build()
             .run_reps(REPS)
             .balance
             .mean;
@@ -123,8 +124,9 @@ fn static_is_imbalanced_on_mandelbrot() {
     // Paper §V-A on Fig. 4: Mandelbrot suffers imbalance under Static
     // (the set body makes contiguous thirds unequal in cost).
     let bench = Bench::new(BenchId::Mandelbrot);
-    let st = Engine::new(bench)
-        .with_scheduler(SchedulerKind::Static)
+    let st = Engine::builder(bench)
+        .scheduler(SchedulerKind::Static)
+        .build()
         .run_reps(REPS)
         .balance
         .mean;
@@ -137,9 +139,10 @@ fn runtime_optimizations_shrink_binary_time() {
     for id in [BenchId::Gaussian, BenchId::NBody] {
         let bench = Bench::new(id);
         let t = |opts| {
-            Engine::new(bench.clone())
-                .with_mode(ExecMode::Binary)
-                .with_optimizations(opts)
+            Engine::builder(bench.clone())
+                .mode(ExecMode::Binary)
+                .optimizations(opts)
+                .build()
                 .run_reps(8)
                 .time
                 .mean
@@ -192,8 +195,9 @@ fn paper_tuning_beats_untuned_hguided_on_average() {
     for id in BenchId::ALL {
         let bench = Bench::new(id);
         let t = |params: HGuidedParams| {
-            Engine::new(bench.clone())
-                .with_scheduler(SchedulerKind::HGuided { params })
+            Engine::builder(bench.clone())
+                .scheduler(SchedulerKind::HGuided { params })
+                .build()
                 .run_reps(REPS)
                 .time
                 .mean
