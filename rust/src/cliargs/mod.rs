@@ -298,14 +298,17 @@ pub const SWEEP_FLAGS: &[(&str, &str, SweepApply)] = &[
         }
         Ok(())
     }),
-    ("policies", "budget policies: even|carry|greedy", |a, c| {
+    ("policies", "budget policies: even|carry|greedy|critical", |a, c| {
         if a.flag("policies").is_some() {
             c.policies = a
                 .str_list("policies", &[])
                 .iter()
                 .map(|s| {
                     BudgetPolicy::parse(s).ok_or_else(|| {
-                        anyhow!("--policies: unknown budget policy '{s}' (even|carry|greedy)")
+                        anyhow!(
+                            "--policies: unknown budget policy '{s}' \
+                             (even|carry|greedy|critical)"
+                        )
                     })
                 })
                 .collect::<Result<_>>()?;

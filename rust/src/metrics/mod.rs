@@ -208,12 +208,6 @@ pub fn pipeline_json(out: &PipelineOutcome) -> Json {
             Json::Arr(out.active_windows.iter().map(active_window_json).collect()),
         ));
     }
-    if !out.mask_search_skipped.is_empty() {
-        pairs.push((
-            "mask_search_skipped",
-            Json::Arr(out.mask_search_skipped.iter().map(|&i| Json::Num(i as f64)).collect()),
-        ));
-    }
     Json::obj(pairs)
 }
 

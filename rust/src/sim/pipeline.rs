@@ -15,14 +15,16 @@
 //! **Device-pool partitioning.**  The run template's device set is the
 //! machine's [`DevicePool`]; each stage carries a [`DeviceMask`]
 //! selecting the pool subset it runs on (default: the whole pool).  The
-//! engine is an event-driven branch scheduler: stages launch in
-//! deterministic topological order, each as soon as (a) every dependency
-//! has finished, (b) every masked device is free, and (c) the inter-stage
-//! input transfer has been paid — so independent DAG branches on
-//! *disjoint* masks co-execute, while stages whose masks overlap
-//! serialize on the shared devices.  `PipelineSpec::serial` forces the
-//! legacy one-global-clock schedule (the comparison baseline).  Each
-//! branch runs `run_roi` over its masked device *view* with a sub-pool
+//! engine is **one event-driven core** ([`fleet_schedule`]) over a
+//! binary event heap of `StageStart` / `DevIdle` events, parameterized
+//! by a [`PricingScope`]: stages launch in deterministic topological
+//! order, each as soon as (a) every dependency has finished, (b) the
+//! scope's resource rule admits it, and (c) the inter-stage input
+//! transfer has been paid — so independent DAG branches on *disjoint*
+//! masks co-execute, while stages whose masks overlap serialize on the
+//! shared devices.  `PipelineSpec::serial` forces the legacy
+//! one-global-clock schedule (the comparison baseline).  Each branch
+//! runs its packages over its masked device *view* with a sub-pool
 //! `SchedCtx`; per-device traces and energy merge back into pool-indexed
 //! [`DeviceTrace`]s.
 //!
@@ -44,7 +46,9 @@
 //! bound, not necessarily the best choice: under loose budgets, racing
 //! every device wastes energy for no hit-rate gain.  Before each stage
 //! launches, the configured policy searches the non-empty subsets of the
-//! spec mask (exhaustive for pools of ≤ 6 devices, spec mask first),
+//! spec mask (exhaustive for pools of ≤ 6 devices, spec mask first;
+//! wider pools run a branch-and-bound search with monotone
+//! throughput/energy bounds — see [`select_wide_mask`]),
 //! predicting per subset a start time (its own devices' free instants +
 //! its own edge-transfer price), a balanced-compute iteration time from
 //! the scheduler's estimated `P_i` path, per-iteration sub-deadline hits
@@ -59,13 +63,17 @@
 //! mask for the stage's iterations (`estimate_refine` sharpens the
 //! scheduler *within* the chosen mask, not the choice itself).
 //!
-//! **Cross-branch contention** ([`ContentionModel`]).  Under the legacy
-//! `View` scope, co-execution retention is priced against each stage's
-//! own device view, so branches co-executing on disjoint masks pay zero
-//! mutual interference — optimistic on shared-DDR commodity platforms.
-//! Under `Pool` scope the engine runs an *interleaved* event loop over
-//! all concurrently active branches: retention derives from the number
-//! of concurrently active devices on the whole pool
+//! **Pricing scopes** ([`PricingScope`], driven by [`ContentionModel`]).
+//! The same event core runs under two scopes.  Under the legacy `View`
+//! scope the core drains stages *sequentially* in topological order
+//! (each launches only after every topo-earlier stage completed, with
+//! starts priced from dependency readiness and device free instants, not
+//! the event clock): co-execution retention is priced against each
+//! stage's own device view, so branches co-executing on disjoint masks
+//! pay zero mutual interference — optimistic on shared-DDR commodity
+//! platforms.  Under the `Pool` scope the core interleaves all
+//! concurrently active branches: retention derives from the number of
+//! concurrently active devices on the whole pool
 //! ([`crate::cldriver::DriverProfile::retention_at`], the same formula
 //! arming the scheduler's `P_i` estimates and the mask-policy
 //! predictor), and every stage launch/finish event re-prices the
@@ -77,9 +85,11 @@
 //! at each active-set change; transfers and launch overheads are
 //! host/PCIe-side and are not contention-scaled; scheduler `P_i`
 //! estimates re-price at iteration boundaries.  Serial schedules route
-//! through the view-scoped loop (their active set *is* the stage view),
-//! and with the default two-point retention curve a pool-scoped chain
-//! (no overlap) is bit-identical to the view-scoped run.
+//! through the `View` scope (their active set *is* the stage view), and
+//! with the default two-point retention curve a pool-scoped chain (no
+//! overlap) is bit-identical to the view-scoped run.  Fleets
+//! ([`super::tenancy`]) are the `Pool` scope over many requests'
+//! branches — the identical loop, heap, and pricing.
 //!
 //! Simplifications (documented modelling scope): each branch serializes
 //! its grants on its own host queue.  Per-iteration **sub-budgets** are
@@ -89,11 +99,13 @@
 //! [`IterVerdict`]s judge against serial-chain sub-deadlines and are
 //! therefore permissive; the *pipeline-level* verdict is always exact.
 //! (Under pool contention the deadline-aware schedulers are *armed* with
-//! a per-branch carry chain — topo-earlier branches may still be running
-//! when a branch launches — while the reported verdicts replay the
-//! canonical topological chain post-hoc, so verdict semantics match the
-//! view engine.)  Branch-aware splitting (slack to the critical path) is
-//! a named ROADMAP follow-up.
+//! a **branch-aware** sub-deadline chain — each branch carries from the
+//! latest armed sub-deadline of its own dependencies, so slack flows
+//! along DAG edges instead of the topological launch order — while the
+//! reported verdicts replay the canonical topological chain post-hoc,
+//! so verdict semantics match the view scope.)
+//! [`BudgetPolicy::CriticalPath`] additionally splits the budget along
+//! each stage's longest dependency chain; see `prepare_request`.
 
 use crate::benchsuite::{Bench, BenchId};
 use crate::cldriver::{self, DriverProfile, TransferModel};
@@ -379,11 +391,6 @@ pub struct PipelineOutcome {
     /// The pool's piecewise-constant active-set timeline (pool-scoped
     /// contention only; empty under the view scope).
     pub active_windows: Vec<ActiveWindow>,
-    /// Declaration indices of stages whose mask-policy subset search was
-    /// skipped because the spec mask is wider than the search breadth cap
-    /// (`MASK_SEARCH_LIMIT`) — such stages silently keep the spec mask,
-    /// and this field (plus a stderr note) makes the fallback visible.
-    pub mask_search_skipped: Vec<usize>,
 }
 
 /// Compatibility alias: the iterative ROI outcome grew into the pipeline
@@ -504,10 +511,18 @@ fn edge_transfer_cost(
     gather + scatter
 }
 
-/// Mask-policy search breadth cap: spec masks wider than this keep the
-/// spec mask (ROADMAP follow-up: prune the subset search with a monotone
-/// energy bound for pools of more than 6 devices).
+/// Mask-policy exhaustive-search breadth cap: spec masks up to this wide
+/// enumerate every non-empty subset (spec mask first); wider masks
+/// switch to a branch-and-bound search pruned by a monotone
+/// marginal-energy / throughput bound (see `select_stage_mask`), so wide
+/// pools still search instead of silently keeping the spec mask.
 const MASK_SEARCH_LIMIT: usize = 6;
+
+/// Branch-and-bound leaf-visit cap for spec masks wider than
+/// [`MASK_SEARCH_LIMIT`]: the DFS stops evaluating new leaves after this
+/// many, bounding worst-case work on very wide pools (a 12-device pool
+/// has 4095 subsets; anything wider is genuinely truncated).
+const MASK_SEARCH_LEAF_CAP: usize = 4096;
 
 /// Predicted durations of non-spec candidates are inflated by this guard
 /// before the deadline and extension checks: the predictor models
@@ -565,13 +580,21 @@ struct SelectCtx<'a> {
     /// arriving at `t` behaves exactly like a standalone run delayed by
     /// `t`.  Zero for single-request simulations.
     arrival_s: f64,
+    /// Per-global-iteration critical-path deadline fractions
+    /// (`BudgetPolicy::CriticalPath` only; see `prepare_request`).
+    crit_frac: Option<&'a [f64]>,
 }
 
 /// Sub-deadline of one global iteration for a request that arrived at
 /// `arrival_s`: the policy chain runs in request-relative time (deadline,
 /// clock and carry all shifted by the arrival) and the result is shifted
 /// back to absolute time.  `arrival_s == 0.0` reduces to the policy call
-/// itself, keeping single-request runs bit-identical.
+/// itself, keeping single-request runs bit-identical.  `frac` carries
+/// the per-global-iteration critical-path fractions computed at prepare
+/// time; [`BudgetPolicy::CriticalPath`] places the sub-deadline at that
+/// fraction of the (request-relative) budget and every other policy
+/// ignores it.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn sub_deadline_at(
     policy: BudgetPolicy,
     deadline_s: f64,
@@ -580,7 +603,11 @@ pub(crate) fn sub_deadline_at(
     iter: u32,
     clock_s: f64,
     prev_sub_s: f64,
+    frac: Option<&[f64]>,
 ) -> f64 {
+    if let (BudgetPolicy::CriticalPath, Some(f)) = (policy, frac) {
+        return arrival_s + (deadline_s - arrival_s) * f[iter as usize];
+    }
     if arrival_s == 0.0 {
         return policy.sub_deadline(deadline_s, total_iters, iter, clock_s, prev_sub_s);
     }
@@ -616,9 +643,6 @@ struct MaskChoice {
     mask: DeviceMask,
     pred_iter_s: f64,
     pred_energy_j: f64,
-    /// The searching policy wanted to enumerate subsets but the spec mask
-    /// exceeds [`MASK_SEARCH_LIMIT`]: the spec mask was kept unsearched.
-    search_skipped: bool,
 }
 
 impl SelectCtx<'_> {
@@ -688,6 +712,7 @@ impl SelectCtx<'_> {
                     gi,
                     clock,
                     prev,
+                    self.crit_frac,
                 );
                 clock += per;
                 if clock <= sub {
@@ -747,19 +772,16 @@ fn select_stage_mask(policy: MaskPolicy, spec_mask: DeviceMask, sc: &SelectCtx) 
         spec_pred.end_s
     };
     let spec_energy = sc.energy(&spec_pred, horizon);
-    let search_skipped =
-        !matches!(policy, MaskPolicy::Fixed) && spec_mask.count() > MASK_SEARCH_LIMIT;
     let spec_choice = MaskChoice {
         mask: spec_mask,
         pred_iter_s: spec_pred.iter_s,
         pred_energy_j: spec_energy,
-        search_skipped,
     };
-    if matches!(policy, MaskPolicy::Fixed)
-        || spec_mask.count() == 1
-        || spec_mask.count() > MASK_SEARCH_LIMIT
-    {
+    if matches!(policy, MaskPolicy::Fixed) || spec_mask.count() == 1 {
         return spec_choice;
+    }
+    if spec_mask.count() > MASK_SEARCH_LIMIT {
+        return select_wide_mask(policy, spec_mask, sc, &spec_pred, horizon, spec_energy);
     }
     let mut best = spec_choice;
     match policy {
@@ -774,7 +796,6 @@ fn select_stage_mask(policy: MaskPolicy, spec_mask: DeviceMask, sc: &SelectCtx) 
                         mask: cand,
                         pred_iter_s: p.iter_s,
                         pred_energy_j: sc.energy(&p, horizon),
-                        search_skipped: false,
                     };
                 }
             }
@@ -798,13 +819,203 @@ fn select_stage_mask(policy: MaskPolicy, spec_mask: DeviceMask, sc: &SelectCtx) 
                         mask: cand,
                         pred_iter_s: p.iter_s,
                         pred_energy_j: e,
-                        search_skipped: false,
                     };
                 }
             }
         }
     }
     best
+}
+
+/// Branch-and-bound subset search for spec masks wider than
+/// [`MASK_SEARCH_LIMIT`] (ROADMAP item 5c).  A DFS over
+/// include/exclude decisions per masked device (ascending pool id,
+/// include-first) prunes partial assignments with monotone bounds:
+///
+/// * **Throughput bound.**  A subset's balanced-compute throughput is at
+///   most the sum of its devices' solo (retention-1) throughputs —
+///   retention is non-increasing in the active count
+///   (`prop_retention_non_increasing_in_active_count`) — so
+///   `groups / thr_ub(committed ∪ undecided)` lower-bounds any
+///   completion's per-iteration time.
+/// * **Energy bound.**  Marginal watts only grow with more devices and
+///   the horizon-extension charge is non-negative, so
+///   `busy_lb · marg_w(committed)` lower-bounds any completion's
+///   predicted energy — prune when it already meets the incumbent.
+/// * **Time bound.**  A completion starts no earlier than the committed
+///   devices' latest free instant and runs no faster than `thr_ub`,
+///   with the non-spec guard applied — prune when the optimistic end
+///   already meets the incumbent.
+///
+/// The spec mask seeds the incumbent exactly as in the exhaustive path
+/// (same margins, same deadline gate), so a search that settles on the
+/// spec mask stays bit-identical to `Fixed`.  Leaf evaluations are
+/// capped at [`MASK_SEARCH_LEAF_CAP`]; pools of ≤ 12 devices are
+/// explored exactly.
+fn select_wide_mask(
+    policy: MaskPolicy,
+    spec_mask: DeviceMask,
+    sc: &SelectCtx,
+    spec_pred: &StagePred,
+    horizon: f64,
+    spec_energy: f64,
+) -> MaskChoice {
+    struct Dfs<'a, 'b> {
+        sc: &'b SelectCtx<'a>,
+        policy: MaskPolicy,
+        ids: Vec<usize>,
+        /// Per-device solo-throughput upper bound (groups/s contribution).
+        unit_thr: Vec<f64>,
+        /// `suffix_thr[d]` = Σ `unit_thr[d..]` (undecided tail bound).
+        suffix_thr: Vec<f64>,
+        groups: f64,
+        iters: f64,
+        horizon: f64,
+        spec_mask: DeviceMask,
+        spec_hits: u32,
+        spec_global_ok: bool,
+        deadline_gated: bool,
+        best: MaskChoice,
+        best_end: f64,
+        best_energy: f64,
+        leaves: usize,
+    }
+
+    impl Dfs<'_, '_> {
+        /// `included`: pool ids committed so far; `inc_thr`/`inc_marg_w`/
+        /// `inc_free`: their throughput-bound sum, marginal watts, and
+        /// latest free instant.
+        fn walk(
+            &mut self,
+            depth: usize,
+            included: &mut Vec<usize>,
+            inc_thr: f64,
+            inc_marg_w: f64,
+            inc_free: f64,
+        ) {
+            if self.leaves >= MASK_SEARCH_LEAF_CAP {
+                return;
+            }
+            if depth == self.ids.len() {
+                if included.is_empty() {
+                    return;
+                }
+                let cand = DeviceMask::from_indices(included);
+                if cand == self.spec_mask {
+                    return; // incumbent-seeded, unguarded, outside the cap
+                }
+                self.leaves += 1;
+                let p = self.sc.predict(cand, true);
+                match self.policy {
+                    MaskPolicy::MinTime => {
+                        if p.end_s < self.best_end {
+                            self.best_end = p.end_s;
+                            self.best = MaskChoice {
+                                mask: cand,
+                                pred_iter_s: p.iter_s,
+                                pred_energy_j: self.sc.energy(&p, self.horizon),
+                            };
+                        }
+                    }
+                    _ => {
+                        if self.deadline_gated
+                            && (p.hits < self.spec_hits
+                                || (!p.global_ok && self.spec_global_ok))
+                        {
+                            return;
+                        }
+                        let e = self.sc.energy(&p, self.horizon);
+                        if e < self.best_energy {
+                            self.best_energy = e;
+                            self.best = MaskChoice {
+                                mask: cand,
+                                pred_iter_s: p.iter_s,
+                                pred_energy_j: e,
+                            };
+                        }
+                    }
+                }
+                return;
+            }
+            // Admissible bounds over every completion of this partial
+            // assignment (committed + any subset of the undecided tail).
+            let thr_ub = inc_thr + self.suffix_thr[depth];
+            if thr_ub > 0.0 {
+                let busy_lb = self.iters * self.groups / thr_ub;
+                match self.policy {
+                    MaskPolicy::MinTime => {
+                        let start_lb = self.sc.dep_ready.max(inc_free);
+                        if start_lb + MASK_TIME_GUARD * busy_lb >= self.best_end {
+                            return;
+                        }
+                    }
+                    _ => {
+                        if busy_lb * inc_marg_w >= self.best_energy {
+                            return;
+                        }
+                    }
+                }
+            }
+            let id = self.ids[depth];
+            included.push(id);
+            self.walk(
+                depth + 1,
+                included,
+                inc_thr + self.unit_thr[depth],
+                inc_marg_w + {
+                    let c = cldriver::class_idx(self.sc.classes[id]);
+                    self.sc.cfg.power.active_w[c] - self.sc.cfg.power.idle_w[c]
+                },
+                inc_free.max(self.sc.dev_free[id]),
+            );
+            included.pop();
+            self.walk(depth + 1, included, inc_thr, inc_marg_w, inc_free);
+        }
+    }
+
+    let ids = spec_mask.indices();
+    let unit_thr: Vec<f64> = ids
+        .iter()
+        .map(|&i| {
+            let est = coexec::scheduler_view_powers(
+                &[sc.pool_powers[i]],
+                &[sc.classes[i]],
+                &sc.cfg.driver,
+                sc.cfg.estimate,
+                1,
+            );
+            est[0] * sc.bench.gpu_units_per_sec / sc.bench.props.lws as f64
+        })
+        .collect();
+    let mut suffix_thr = vec![0.0; ids.len() + 1];
+    for d in (0..ids.len()).rev() {
+        suffix_thr[d] = suffix_thr[d + 1] + unit_thr[d];
+    }
+    let mut dfs = Dfs {
+        sc,
+        policy,
+        groups: sc.bench.groups(sc.gws) as f64,
+        iters: sc.iterations as f64,
+        horizon,
+        spec_mask,
+        spec_hits: spec_pred.hits,
+        spec_global_ok: spec_pred.global_ok,
+        deadline_gated: matches!(policy, MaskPolicy::EnergyUnderDeadline),
+        best: MaskChoice {
+            mask: spec_mask,
+            pred_iter_s: spec_pred.iter_s,
+            pred_energy_j: spec_energy,
+        },
+        best_end: spec_pred.end_s,
+        best_energy: MASK_ENERGY_MARGIN * spec_energy,
+        leaves: 0,
+        ids,
+        unit_thr,
+        suffix_thr,
+    };
+    let mut included = Vec::with_capacity(dfs.ids.len());
+    dfs.walk(0, &mut included, 0.0, 0.0, 0.0);
+    dfs.best
 }
 
 /// Cut one stage's device view and run template out of the pool for a
@@ -890,6 +1101,9 @@ pub(crate) struct ReqPrep {
     /// ROI-scope deadline relative to arrival (`None` when unbudgeted).
     pub(crate) roi_deadline: Option<f64>,
     has_dependents: Vec<bool>,
+    /// Per-global-iteration critical-path deadline fractions, in
+    /// topological launch order ([`BudgetPolicy::CriticalPath`] only).
+    crit_frac: Option<Vec<f64>>,
     /// Main RNG positioned after the fixed-cost draws (the
     /// topologically-first stage continues this stream).
     pub(crate) rng: XorShift64,
@@ -921,6 +1135,7 @@ impl ReqPrep {
             transfers,
             has_dependents: &self.has_dependents,
             arrival_s,
+            crit_frac: self.crit_frac.as_deref(),
         }
     }
 }
@@ -1014,6 +1229,44 @@ pub(crate) fn prepare_request(
         .map(|i| spec.stages.iter().any(|s| s.deps.contains(&i)))
         .collect();
 
+    // Critical-path budget split: iteration `j` of stage `s` sits at
+    // fraction `(cum_before(s) + j + 1) / (cum_before(s) + iters(s) +
+    // desc(s))` of the budget, where `cum_before` is the longest
+    // dependency chain (in iterations) ending at `s` and `desc` the
+    // longest chain hanging off it — so every iteration on the critical
+    // path gets an even slice of the *whole* budget while short side
+    // branches are allowed to lag until their own chain needs the time.
+    let crit_frac = (spec.policy == BudgetPolicy::CriticalPath).then(|| {
+        let n = spec.stages.len();
+        let mut cum_before = vec![0u32; n];
+        for &si in &order {
+            let mut c = 0u32;
+            for &d in &spec.stages[si].deps {
+                c = c.max(cum_before[d] + spec.stages[d].iterations);
+            }
+            cum_before[si] = c;
+        }
+        let mut desc = vec![0u32; n];
+        for &si in order.iter().rev() {
+            let mut dn = 0u32;
+            for (j, s) in spec.stages.iter().enumerate() {
+                if s.deps.contains(&si) {
+                    dn = dn.max(s.iterations + desc[j]);
+                }
+            }
+            desc[si] = dn;
+        }
+        let mut frac = Vec::with_capacity(total_iters as usize);
+        for &si in &order {
+            let iters = spec.stages[si].iterations;
+            let path_total = (cum_before[si] + iters + desc[si]) as f64;
+            for j in 0..iters {
+                frac.push((cum_before[si] + j + 1) as f64 / path_total);
+            }
+        }
+        frac
+    });
+
     ReqPrep {
         order,
         plans,
@@ -1024,6 +1277,7 @@ pub(crate) fn prepare_request(
         release_time,
         roi_deadline,
         has_dependents,
+        crit_frac,
         rng,
     }
 }
@@ -1041,273 +1295,47 @@ pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcom
     let rp = prepare_request(spec, cfg, &pool);
     let transfers = TransferModel::new(&cfg.driver, cfg.opts.buffer_flags);
 
-    // Pool-scoped contention runs the interleaved engine (serial
-    // schedules keep the view loop: one stage at a time means the active
-    // set *is* the stage view, so the two scopes coincide there).
-    if cfg.contention == ContentionModel::Pool && !spec.serial {
-        let rng = rp.rng.clone();
-        let prep = rp.as_prep(spec, cfg, &classes, &transfers, 0.0);
-        return pool_schedule(&pool, prep, rng);
-    }
-
-    let ReqPrep {
-        order,
-        plans,
-        plan_of,
-        budget,
-        total_iters,
-        init_time,
-        release_time,
-        roi_deadline,
-        has_dependents,
-        rng,
-    } = rp;
-    let n_pool = pool.len();
-    let mut traces = vec![DeviceTrace::default(); n_pool];
-    let mut dev_free = vec![0.0f64; n_pool];
-    let mut stage_end = vec![0.0f64; spec.stages.len()];
-    let mut stage_traces = Vec::with_capacity(spec.stages.len());
-    let mut packages = Vec::new();
-    let mut iter_times = Vec::with_capacity(total_iters as usize);
-    let mut iter_verdicts = Vec::new();
-    let mut seq = 0u64;
-    let mut serial_clock = 0.0f64;
-    let mut prev_sub = 0.0f64;
-    let mut global_iter = 0u32;
-    // Masks the stages actually ran on (by `order` position): producers'
-    // chosen masks price the downstream edges.
-    let mut chosen_masks: Vec<DeviceMask> = plans.iter().map(|p| p.mask).collect();
-    let mut mask_search_skipped: Vec<usize> = Vec::new();
-    for (pos, &si) in order.iter().enumerate() {
-        let stage = &spec.stages[si];
-        let plan = &plans[pos];
-        let mut deps = stage.deps.clone();
-        deps.sort_unstable();
-        deps.dedup();
-        let dep_ready = deps.iter().map(|&d| stage_end[d]).fold(0.0, f64::max);
-        // Dependency edges against the producers' *chosen* masks (the
-        // data lives where the producer actually ran).
-        let edges: Vec<(DeviceMask, f64)> = deps
-            .iter()
-            .map(|&d| {
-                let producer = &plans[plan_of[d]];
-                let bytes = producer.gws as f64 * spec.stages[d].bench.bytes_out_per_item;
-                (chosen_masks[plan_of[d]], bytes)
-            })
-            .collect();
-        // Mask resolution before launch: the policy searches the spec
-        // mask's subsets against the estimate path and the power model.
-        let choice = select_stage_mask(
-            spec.mask_policy,
-            plan.mask,
-            &SelectCtx {
-                cfg,
-                classes: &classes,
-                transfers: &transfers,
-                pool_powers: (0..n_pool)
-                    .map(|i| match &stage.powers {
-                        Some(p) => p[i],
-                        None => cfg.devices[i].power,
-                    })
-                    .collect(),
-                bench: &stage.bench,
-                gws: plan.gws,
-                iterations: stage.iterations,
-                edges: edges.clone(),
-                dep_ready,
-                dev_free: &dev_free,
-                serial: spec.serial,
-                serial_clock,
-                leaf: !has_dependents[si],
-                roi_deadline,
-                policy: spec.policy,
-                total_iters,
-                global_iter,
-                prev_sub,
-                running: DeviceMask::empty(),
-                pool_contention: false,
-                running_until: 0.0,
-                arrival_s: 0.0,
-            },
-        );
-        if choice.search_skipped {
-            note_mask_search_skipped(si, plan.mask, &mut mask_search_skipped);
-        }
-        chosen_masks[pos] = choice.mask;
-        // A choice equal to the spec mask reuses the spec plan verbatim,
-        // so `Fixed` (and spec-settling searches) stay bit-identical to
-        // the pre-selection engine.
-        let alt = (choice.mask != plan.mask)
-            .then(|| stage_view_cfg(cfg, &pool, stage, choice.mask, spec.energy));
-        let (view, stage_cfg) = match &alt {
-            Some((v, c)) => (v, c),
-            None => (&plan.view, &plan.cfg),
-        };
-        // Inter-stage data flow: one gather+scatter per dependency edge
-        // whose producer ran on a different subset.
-        let transfer_in: f64 = edges
-            .iter()
-            .map(|&(prod, bytes)| {
-                edge_transfer_cost(&transfers, &classes, prod, choice.mask, bytes)
-            })
-            .sum();
-        let resource_ready = if spec.serial {
-            // Legacy schedule: one global clock, no overlap.
-            serial_clock
-        } else {
-            // Event-driven: wait only for this stage's chosen devices.
-            view.pool_ids.iter().map(|&i| dev_free[i]).fold(0.0, f64::max)
-        };
-        let start = dep_ready.max(resource_ready) + transfer_in;
-
-        // The topologically-first stage continues the main RNG stream
-        // (single-stage pipelines stay bit-identical to the pre-pool
-        // engine); later stages fork per-stage streams so concurrent
-        // branches are deterministic regardless of interleaving.
-        let mut stage_rng = if pos == 0 {
-            rng.clone()
-        } else {
-            XorShift64::new(stage_seed(cfg.seed, si))
-        };
-        let mut clock = start;
-        let mut refined: Option<Vec<f64>> = None;
-        let busy0: Vec<f64> = view.pool_ids.iter().map(|&i| traces[i].busy).collect();
-        let mut snap: Vec<(u64, f64)> = view
-            .pool_ids
-            .iter()
-            .map(|&i| (traces[i].groups, traces[i].busy))
-            .collect();
-        for i in 0..stage.iterations {
-            let phase = phase_of(i, stage.iterations);
-            let sub = roi_deadline.map(|d| {
-                spec.policy.sub_deadline(d, total_iters, global_iter, clock, prev_sub)
-            });
-            let (end, s) = {
-                let pass = RoiPass {
-                    bench: &stage.bench,
-                    cfg: stage_cfg,
-                    pool_ids: &view.pool_ids,
-                    gws: plan.gws,
-                    phase,
-                    seq0: seq,
-                    t0: clock,
-                    deadline_s: sub,
-                    powers_override: refined.as_deref(),
-                };
-                coexec::run_roi(&pass, &mut stage_rng, &mut traces, &mut packages)
-            };
-            seq = s;
-            iter_times.push(end - clock);
-            if let Some(sd) = sub {
-                iter_verdicts.push(IterVerdict {
-                    stage: si,
-                    iter: global_iter,
-                    sub_deadline_s: sd,
-                    end_s: end,
-                    met: end <= sd,
-                    slack_s: sd - end,
-                });
-                prev_sub = sd;
-            }
-            if cfg.opts.estimate_refine && i + 1 < stage.iterations {
-                refined = Some(refine_powers(
-                    stage_cfg,
-                    &stage.bench,
-                    view,
-                    &traces,
-                    &mut snap,
-                    refined,
-                ));
-            }
-            clock = end;
-            global_iter += 1;
-        }
-        stage_end[si] = clock;
-        for &i in &view.pool_ids {
-            dev_free[i] = clock;
-        }
-        serial_clock = serial_clock.max(clock);
-        // Measured counterpart of the selector's energy prediction: each
-        // chosen device's busy delta priced at its marginal draw.
-        let marginal_energy_j: f64 = view
-            .pool_ids
-            .iter()
-            .enumerate()
-            .map(|(slot, &i)| {
-                let c = cldriver::class_idx(classes[i]);
-                (traces[i].busy - busy0[slot]) * (cfg.power.active_w[c] - cfg.power.idle_w[c])
-            })
-            .sum();
-        stage_traces.push(StageTrace {
-            stage: si,
-            mask: choice.mask,
-            spec_mask: plan.mask,
-            start_s: start,
-            end_s: clock,
-            transfer_in_s: transfer_in,
-            pred_iter_s: choice.pred_iter_s,
-            pred_energy_j: choice.pred_energy_j,
-            marginal_energy_j,
-            active_at_launch: None,
-            retention_at_launch: None,
-        });
-    }
-
-    let roi_time = stage_end.iter().cloned().fold(0.0, f64::max);
-    let total_time = init_time + roi_time + release_time;
-    // Pool classes are constant across stages, so single-shot energy
-    // accounting applies to the whole ROI window (idle pool devices draw
-    // idle power for the full makespan).
-    let energy_j = coexec::energy(cfg, roi_time, &traces);
-    let timed = match cfg.mode {
-        ExecMode::Binary => total_time,
-        ExecMode::Roi => roi_time,
+    // One event core, two pricing scopes: pool-scoped contention
+    // interleaves branches, everything else — the legacy view scope and
+    // every serial schedule, whose active set *is* the stage view —
+    // drains stages sequentially through the same loop.
+    let scope = if cfg.contention == ContentionModel::Pool && !spec.serial {
+        PricingScope::Pool
+    } else {
+        PricingScope::View
     };
-    PipelineOutcome {
-        total_time,
-        init_time,
-        release_time,
-        roi_time,
-        iter_times,
-        energy_j,
-        devices: traces,
-        n_packages: seq,
-        packages,
-        stages: stage_traces,
-        deadline: budget.map(|b| b.verdict(timed)),
-        iter_verdicts,
-        active_windows: Vec::new(),
-        mask_search_skipped,
-    }
+    let rng = rp.rng.clone();
+    let prep = rp.as_prep(spec, cfg, &classes, &transfers, 0.0);
+    pool_schedule(&pool, prep, rng, scope)
 }
 
-/// Record (and surface on stderr) a mask-policy search skipped by the
-/// [`MASK_SEARCH_LIMIT`] breadth cap — previously a silent fallback to
-/// the spec mask.  The stderr note fires once per process (sweeps run
-/// thousands of simulations; the structured record in
-/// [`PipelineOutcome::mask_search_skipped`] carries the per-run detail).
-fn note_mask_search_skipped(si: usize, spec_mask: DeviceMask, skipped: &mut Vec<usize>) {
-    static ONCE: std::sync::Once = std::sync::Once::new();
-    let count = spec_mask.count();
-    ONCE.call_once(|| {
-        eprintln!(
-            "mask_search_skipped: stage {si} spec mask selects {count} devices \
-             (> MASK_SEARCH_LIMIT = {MASK_SEARCH_LIMIT}); keeping the spec mask \
-             unsearched — prune-based wide-pool search is a ROADMAP follow-up \
-             (further notes suppressed; see pipeline_json.mask_search_skipped)"
-        );
-    });
-    skipped.push(si);
+// ----------------------------------------------------------- event core
+
+/// The event core's pricing scope: how contention is priced and how the
+/// launch rule sequences stages.  Both scopes run the *same* loop, heap
+/// and grant machinery ([`fleet_schedule`]); the scope only gates
+/// pricing and eligibility.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum PricingScope {
+    /// Legacy per-branch pricing: stages drain strictly sequentially in
+    /// topological order, each priced against its own device view with
+    /// starts computed from dependency readiness and device free
+    /// instants (not the event clock), no cross-branch re-timing, and no
+    /// active-set windows — bit-identical to the historical view loop.
+    View,
+    /// Pool-wide pricing: branches interleave, retention derives from
+    /// the pool's concurrently active device count, and every stage
+    /// launch/finish re-prices the in-flight packages of every running
+    /// branch.  Fleets are this scope over many requests' branches.
+    Pool,
 }
 
-// ------------------------------------------------------------ pool engine
-
-/// Preamble shared with the view-scoped loop, handed to the pool engine:
-/// resolved plans, fixed costs (whose jitter was already drawn from the
-/// main RNG, keeping the stream identical across contention scopes) and
-/// the mode-scoped ROI deadline.  One `Prep` per request: the fleet
-/// engine runs over a slice of these, and a standalone pool run is the
-/// one-request special case (`arrival_s == 0.0`).
+/// Per-request preamble handed to the event core: resolved plans, fixed
+/// costs (whose jitter was already drawn from the main RNG, keeping the
+/// stream identical across pricing scopes) and the mode-scoped ROI
+/// deadline.  One `Prep` per request: the fleet engine runs over a
+/// slice of these, and a standalone run is the one-request special case
+/// (`arrival_s == 0.0`).
 pub(crate) struct Prep<'a> {
     spec: &'a PipelineSpec,
     cfg: &'a SimConfig,
@@ -1325,6 +1353,9 @@ pub(crate) struct Prep<'a> {
     has_dependents: &'a [bool],
     /// Absolute arrival instant of the owning request.
     arrival_s: f64,
+    /// Per-global-iteration critical-path deadline fractions
+    /// ([`BudgetPolicy::CriticalPath`] only).
+    crit_frac: Option<&'a [f64]>,
 }
 
 /// One in-flight package of the interleaved pool engine: enough state to
@@ -1341,6 +1372,10 @@ struct InFlight {
     d2h: f64,
     /// Retention the remaining compute is currently priced at.
     retention: f64,
+    /// Tie of this package's completion event: a re-timing replacement
+    /// keeps the original tie, so simultaneous completions keep the
+    /// grant order however often they were re-priced.
+    ev_tie: u64,
     groups: GroupRange,
 }
 
@@ -1396,6 +1431,10 @@ struct Branch {
     /// Branch-local sub-deadline carry chain arming the schedulers
     /// (verdicts replay the canonical topological chain post-hoc).
     prev_sub: f64,
+    /// Per-slot epoch of the *live* completion event: a re-timing bumps
+    /// the epoch and pushes a replacement, so any still-heaped event
+    /// carrying an older epoch is stale and skipped on pop.
+    ev_epoch: Vec<u32>,
     active_at_launch: usize,
     retention_at_launch: Vec<f64>,
 }
@@ -1421,27 +1460,36 @@ enum PoolEvKind {
 struct PoolEv {
     t: f64,
     tie: u64,
+    /// Staleness marker for `DevIdle` completion events: compared
+    /// against the branch slot's `ev_epoch` on pop (re-timing pushes a
+    /// bumped-epoch replacement instead of mutating the heap in place).
+    /// Zero for `StageStart` / `Arrival`, which are never re-timed.
+    epoch: u32,
     kind: PoolEvKind,
 }
 
-/// Earliest-first pop (same `(t, tie)` order as `run_roi`'s event list).
-fn pop_earliest(evs: &mut Vec<PoolEv>) -> Option<PoolEv> {
-    if evs.is_empty() {
-        return None;
+// Earliest-(t, tie)-first out of `BinaryHeap`'s max-heap: the comparison
+// is *reversed* so the "greatest" element is the earliest event — the
+// same order `run_roi`'s event list and the historical linear scan used.
+impl Ord for PoolEv {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.t.total_cmp(&self.t).then_with(|| other.tie.cmp(&self.tie))
     }
-    let mut best = 0;
-    for i in 1..evs.len() {
-        if evs[i]
-            .t
-            .total_cmp(&evs[best].t)
-            .then_with(|| evs[i].tie.cmp(&evs[best].tie))
-            == std::cmp::Ordering::Less
-        {
-            best = i;
-        }
-    }
-    Some(evs.swap_remove(best))
 }
+
+impl PartialOrd for PoolEv {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl PartialEq for PoolEv {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for PoolEv {}
 
 /// Where one request stands with admission control.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -1467,7 +1515,6 @@ struct ReqState {
     /// By topo position.
     launched: Vec<bool>,
     chosen_masks: Vec<DeviceMask>,
-    mask_search_skipped: Vec<usize>,
     /// Sub-deadlines armed so far, by request-local global iteration.
     subs_armed: Vec<Option<f64>>,
     /// First request-local global iteration index of each topo position.
@@ -1489,16 +1536,17 @@ impl ReqState {
     }
 }
 
-/// All mutable state of one fleet run: shared pool/device state plus one
-/// [`ReqState`] per request.  A standalone pool run is the one-request
-/// fleet under [`AdmissionPolicy::Accept`].
+/// All mutable state of one event-core run: shared pool/device state
+/// plus one [`ReqState`] per request.  A standalone run is the
+/// one-request fleet under [`AdmissionPolicy::Accept`].
 struct PoolState {
+    scope: PricingScope,
     admission: AdmissionPolicy,
     reqs: Vec<ReqState>,
     traces: Vec<DeviceTrace>,
     packages: Vec<PackageTrace>,
     dev_free: Vec<f64>,
-    evs: Vec<PoolEv>,
+    evs: std::collections::BinaryHeap<PoolEv>,
     tie: u64,
     seq: u64,
     /// Devices running or reserved by launched-but-unfinished stages.
@@ -1508,14 +1556,21 @@ struct PoolState {
     active_mask: DeviceMask,
     window_start: f64,
     active_windows: Vec<ActiveWindow>,
+    /// Latest stage end so far — the serial schedule's one global clock
+    /// (view scope only; pool pricing reads `dev_free` instead).
+    serial_clock: f64,
 }
 
 /// Close the current active-set window at `t` (windows with zero active
 /// devices — gaps — are implied, not recorded).  The boundary never moves
 /// backwards: a fault can date a stage end past the current event clock,
 /// and the timeline stays monotone by absorbing such corners into the
-/// later window.
+/// later window.  View-scoped runs record no windows (their stages run
+/// one at a time, and starts may legitimately predate the event clock).
 fn mark_active_change(st: &mut PoolState, t: f64, old_count: usize) {
+    if st.scope == PricingScope::View {
+        return;
+    }
     if t > st.window_start && old_count > 0 {
         st.active_windows.push(ActiveWindow {
             start_s: st.window_start,
@@ -1532,6 +1587,34 @@ fn mark_active_change(st: &mut PoolState, t: f64, old_count: usize) {
 /// true for chains), and with the nearest known value otherwise.
 fn latest_armed_sub(subs: &[Option<f64>], base: usize) -> f64 {
     subs[..base].iter().rev().find_map(|s| *s).unwrap_or(0.0)
+}
+
+/// Sub-deadline carry seed for a launching stage.  Under the view scope
+/// the sequential drain makes the latest armed sub-deadline the
+/// canonical topological carry (every topo-earlier iteration is already
+/// armed).  Under pool pricing the chain is **branch-aware**: the carry
+/// follows the stage's own dependency edges — the latest sub-deadline
+/// armed for any dependency's final pass — so a branch launching while
+/// a topo-earlier sibling still runs inherits slack from its *own*
+/// chain, not from an unrelated branch's.  Coincides with the view
+/// chain on chains and serial schedules (a dependency's final pass *is*
+/// the latest armed iteration there).
+fn carry_seed(st: &PoolState, prep: &Prep, r: usize, si: usize, gi_base: u32) -> f64 {
+    match st.scope {
+        PricingScope::View => latest_armed_sub(&st.reqs[r].subs_armed, gi_base as usize),
+        PricingScope::Pool => {
+            let rs = &st.reqs[r];
+            prep.spec.stages[si]
+                .deps
+                .iter()
+                .filter_map(|&d| {
+                    let last =
+                        rs.gi_base[prep.plan_of[d]] + prep.spec.stages[d].iterations - 1;
+                    rs.subs_armed[last as usize]
+                })
+                .fold(0.0, f64::max)
+        }
+    }
 }
 
 fn phase_of(iter: u32, iterations: u32) -> IterPhase {
@@ -1551,8 +1634,15 @@ fn phase_of(iter: u32, iterations: u32) -> IterPhase {
 /// retention to the retention under `new_active`, and the package's
 /// completion event moves accordingly — the piecewise-constant window
 /// semantics of the pool contention model.  Work is conserved exactly:
-/// only the *pace* of the remaining compute changes.
+/// only the *pace* of the remaining compute changes.  The heap cannot
+/// re-key in place, so the stale completion event is invalidated by
+/// bumping the slot's epoch and a replacement is pushed at the new time
+/// with the *original* tie (simultaneous completions keep grant order).
+/// View-scoped runs never re-time (their retention is per-view).
 fn retime_inflight(st: &mut PoolState, driver: &DriverProfile, t: f64, new_active: usize) {
+    if st.scope == PricingScope::View {
+        return;
+    }
     let PoolState { reqs, evs, .. } = st;
     for (r, rs) in reqs.iter_mut().enumerate() {
         for (b, slot_br) in rs.branches.iter_mut().enumerate() {
@@ -1571,14 +1661,13 @@ fn retime_inflight(st: &mut PoolState, driver: &DriverProfile, t: f64, new_activ
                 pkg.compute_end = pivot + (pkg.compute_end - pivot) * (pkg.retention / r_new);
                 pkg.retention = r_new;
                 let done = pkg.compute_end + pkg.d2h;
-                for ev in evs.iter_mut() {
-                    if let PoolEvKind::DevIdle { r: er, b: eb, slot: es } = ev.kind {
-                        if er == r && eb == b && es == slot {
-                            ev.t = done;
-                            break;
-                        }
-                    }
-                }
+                br.ev_epoch[slot] = br.ev_epoch[slot].wrapping_add(1);
+                evs.push(PoolEv {
+                    t: done,
+                    tie: pkg.ev_tie,
+                    epoch: br.ev_epoch[slot],
+                    kind: PoolEvKind::DevIdle { r, b, slot },
+                });
             }
         }
     }
@@ -1642,6 +1731,7 @@ fn begin_pass(st: &mut PoolState, prep: &Prep, r: usize, br: &mut Branch, b_pos:
             gi,
             t,
             br.prev_sub,
+            prep.crit_frac,
         )
     });
     if let Some(sd) = sub {
@@ -1667,6 +1757,7 @@ fn begin_pass(st: &mut PoolState, prep: &Prep, r: usize, br: &mut Branch, b_pos:
         st.evs.push(PoolEv {
             t,
             tie: st.tie,
+            epoch: br.ev_epoch[d],
             kind: PoolEvKind::DevIdle { r, b: b_pos, slot: d },
         });
         st.tie += 1;
@@ -1700,11 +1791,11 @@ fn launch_scan(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, now: f64) 
     }
 }
 
-/// Launch every stage of request `r` that became eligible: dependencies
-/// complete and no spec-mask device held by a launched-but-unfinished
-/// stage.  Scanned in topological order (deterministic device claiming,
-/// like the view loop's topological processing).  Mask selection happens
-/// here, priced against the pool's running/reserved set.
+/// Launch every stage of request `r` that became eligible.  Scanned in
+/// topological order (deterministic device claiming).  Mask selection
+/// happens here, priced against the pool's running/reserved set under
+/// pool pricing, and against the sequential drain's clock under the
+/// view scope.
 fn launch_scan_req(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usize, now: f64) {
     let prep = &preps[r];
     for pos in 0..prep.order.len() {
@@ -1720,22 +1811,38 @@ fn launch_scan_req(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usi
             continue;
         }
         let spec_mask = prep.plans[pos].mask;
-        if spec_mask.intersects(st.held) {
-            continue;
-        }
-        // The view loop processes stages strictly in topological order, so
-        // a later-topo stage never overtakes an earlier-topo stage on a
-        // shared device even while the earlier one still waits on its
-        // dependencies.  Mirror that claiming discipline *within the
-        // request*: an unlaunched earlier-topo stage with an intersecting
-        // spec mask blocks this one (otherwise the pool schedule could
-        // start work *earlier* than the view schedule, breaking the
-        // pool >= view makespan monotonicity).  Across requests only the
-        // `held` reservation serializes shared devices: the fleet is
-        // work-conserving, not globally FIFO.
-        if (0..pos).any(|p| !st.reqs[r].launched[p] && prep.plans[p].mask.intersects(spec_mask))
-        {
-            continue;
+        match st.scope {
+            // The view scope drains stages one at a time in strict
+            // topological order — a stage is eligible only once every
+            // topo-earlier stage has completed, exactly the historical
+            // sequential view loop.
+            PricingScope::View => {
+                if (0..pos).any(|p| !st.reqs[r].completed[prep.order[p]]) {
+                    continue;
+                }
+            }
+            PricingScope::Pool => {
+                if spec_mask.intersects(st.held) {
+                    continue;
+                }
+                // Sequential drains process stages strictly in topological
+                // order, so a later-topo stage never overtakes an
+                // earlier-topo stage on a shared device even while the
+                // earlier one still waits on its dependencies.  Mirror
+                // that claiming discipline *within the request*: an
+                // unlaunched earlier-topo stage with an intersecting spec
+                // mask blocks this one (otherwise the pool schedule could
+                // start work *earlier* than the view schedule, breaking
+                // the pool >= view makespan monotonicity).  Across
+                // requests only the `held` reservation serializes shared
+                // devices: the fleet is work-conserving, not globally
+                // FIFO.
+                if (0..pos)
+                    .any(|p| !st.reqs[r].launched[p] && prep.plans[p].mask.intersects(spec_mask))
+                {
+                    continue;
+                }
+            }
         }
         let dep_ready =
             deps.iter().map(|&d| st.reqs[r].stage_end[d]).fold(prep.arrival_s, f64::max);
@@ -1748,8 +1855,10 @@ fn launch_scan_req(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usi
             })
             .collect();
         let gi_base = st.reqs[r].gi_base[pos];
-        let prev_sub = latest_armed_sub(&st.reqs[r].subs_armed, gi_base as usize);
-        let running_until = fleet_running_until(st, preps);
+        let prev_sub = carry_seed(st, prep, r, si, gi_base);
+        let pool_scoped = st.scope == PricingScope::Pool;
+        let running_until =
+            if pool_scoped { fleet_running_until(st, preps) } else { 0.0 };
         let choice = select_stage_mask(
             prep.spec.mask_policy,
             spec_mask,
@@ -1769,23 +1878,21 @@ fn launch_scan_req(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usi
                 edges: edges.clone(),
                 dep_ready,
                 dev_free: &st.dev_free,
-                serial: false,
-                serial_clock: 0.0,
+                serial: !pool_scoped && prep.spec.serial,
+                serial_clock: if pool_scoped { 0.0 } else { st.serial_clock },
                 leaf: !prep.has_dependents[si],
                 roi_deadline: prep.roi_deadline,
                 policy: prep.spec.policy,
                 total_iters: prep.total_iters,
                 global_iter: gi_base,
                 prev_sub,
-                running: st.held,
-                pool_contention: true,
+                running: if pool_scoped { st.held } else { DeviceMask::empty() },
+                pool_contention: pool_scoped,
                 running_until,
                 arrival_s: prep.arrival_s,
+                crit_frac: prep.crit_frac,
             },
         );
-        if choice.search_skipped {
-            note_mask_search_skipped(si, spec_mask, &mut st.reqs[r].mask_search_skipped);
-        }
         st.reqs[r].chosen_masks[pos] = choice.mask;
         let (view, stage_cfg) = if choice.mask != spec_mask {
             stage_view_cfg(prep.cfg, pool, stage, choice.mask, prep.spec.energy)
@@ -1798,11 +1905,22 @@ fn launch_scan_req(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usi
                 edge_transfer_cost(prep.transfers, prep.classes, prod, choice.mask, bytes)
             })
             .sum();
-        let resource_ready = view.pool_ids.iter().map(|&i| st.dev_free[i]).fold(0.0, f64::max);
-        // A shed choice whose devices freed earlier than the blocking
-        // spec device must not launch into the pool clock's past: clamp
-        // to the scan instant.
-        let start = (dep_ready.max(resource_ready) + transfer_in).max(now);
+        let resource_ready = if !pool_scoped && prep.spec.serial {
+            st.serial_clock
+        } else {
+            view.pool_ids.iter().map(|&i| st.dev_free[i]).fold(0.0, f64::max)
+        };
+        // Under pool pricing, a shed choice whose devices freed earlier
+        // than the blocking spec device must not launch into the pool
+        // clock's past: clamp to the scan instant.  The view drain has no
+        // such clamp — its start may legitimately predate the scan
+        // instant (the heap pops the earliest event first, so chronology
+        // still holds).
+        let start = if pool_scoped {
+            (dep_ready.max(resource_ready) + transfer_in).max(now)
+        } else {
+            dep_ready.max(resource_ready) + transfer_in
+        };
         st.held = st.held.union(choice.mask);
         st.reqs[r].pred_end[pos] = start + choice.pred_iter_s * stage.iterations as f64;
         st.reqs[r].pending[pos] = Some(Pending {
@@ -1816,7 +1934,12 @@ fn launch_scan_req(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usi
             pred_iter_s: choice.pred_iter_s,
             pred_energy_j: choice.pred_energy_j,
         });
-        st.evs.push(PoolEv { t: start, tie: st.tie, kind: PoolEvKind::StageStart { r, pos } });
+        st.evs.push(PoolEv {
+            t: start,
+            tie: st.tie,
+            epoch: 0,
+            kind: PoolEvKind::StageStart { r, pos },
+        });
         st.tie += 1;
         st.reqs[r].launched[pos] = true;
     }
@@ -1877,12 +2000,13 @@ fn stage_start(st: &mut PoolState, prep: &Prep, r: usize, pos: usize, t: f64) {
         retry: Vec::new(),
         parked: Vec::new(),
         inflight: (0..n_view).map(|_| None).collect(),
+        ev_epoch: vec![0u32; n_view],
         live: 0,
         executed: 0,
         refined: None,
         snap,
         busy0,
-        prev_sub: latest_armed_sub(&st.reqs[r].subs_armed, gi_base as usize),
+        prev_sub: carry_seed(st, prep, r, si, gi_base),
         active_at_launch: new_active,
         retention_at_launch,
     };
@@ -1905,6 +2029,7 @@ fn complete_stage(
     let prep = &preps[r];
     st.reqs[r].stage_end[br.si] = end;
     st.reqs[r].completed[br.si] = true;
+    st.serial_clock = st.serial_clock.max(end);
     for &i in &br.view.pool_ids {
         st.dev_free[i] = end;
     }
@@ -1924,6 +2049,9 @@ fn complete_stage(
                 * (prep.cfg.power.active_w[c] - prep.cfg.power.idle_w[c])
         })
         .sum();
+    // Contention annotations only exist under pool pricing — the view
+    // drain has no cross-branch active set to report.
+    let pool_scoped = st.scope == PricingScope::Pool;
     st.reqs[r].stage_traces.push(StageTrace {
         stage: br.si,
         mask: br.mask,
@@ -1934,8 +2062,8 @@ fn complete_stage(
         pred_iter_s: br.pred_iter_s,
         pred_energy_j: br.pred_energy_j,
         marginal_energy_j,
-        active_at_launch: Some(br.active_at_launch),
-        retention_at_launch: Some(br.retention_at_launch),
+        active_at_launch: pool_scoped.then_some(br.active_at_launch),
+        retention_at_launch: pool_scoped.then_some(br.retention_at_launch),
     });
     reconsider_queued(st, preps, end);
     launch_scan(st, preps, pool, end);
@@ -1960,6 +2088,10 @@ fn reconsider_queued(st: &mut PoolState, preps: &[Prep], now: f64) {
 /// One device-idle event: complete the device's finished package, then
 /// request its next grant — the interleaved mirror of one `run_roi` loop
 /// step, with retention priced at the pool's current active count.
+/// Events whose epoch no longer matches the slot's are stale heap
+/// entries superseded by a re-timing replacement (or outlived their
+/// branch entirely) and are dropped unprocessed.
+#[allow(clippy::too_many_arguments)]
 fn dev_idle(
     st: &mut PoolState,
     preps: &[Prep],
@@ -1967,9 +2099,16 @@ fn dev_idle(
     r: usize,
     b_pos: usize,
     slot: usize,
+    epoch: u32,
     t: f64,
 ) {
     let prep = &preps[r];
+    {
+        let Some(br) = st.reqs[r].branches[b_pos].as_ref() else { return };
+        if epoch != br.ev_epoch[slot] {
+            return;
+        }
+    }
     let mut br =
         st.reqs[r].branches[b_pos].take().expect("running branch behind DevIdle event");
     br.live -= 1;
@@ -1991,6 +2130,7 @@ fn dev_idle(
                     st.evs.push(PoolEv {
                         t: t.max(tf),
                         tie: st.tie,
+                        epoch: br.ev_epoch[p],
                         kind: PoolEvKind::DevIdle { r, b: b_pos, slot: p },
                     });
                     st.tie += 1;
@@ -2033,6 +2173,7 @@ fn dev_idle(
                 st.evs.push(PoolEv {
                     t,
                     tie: st.tie,
+                    epoch: br.ev_epoch[p],
                     kind: PoolEvKind::DevIdle { r, b: b_pos, slot: p },
                 });
                 st.tie += 1;
@@ -2072,10 +2213,12 @@ fn dev_idle(
                     d2h: pricing.d2h,
                     retention,
                     groups,
+                    ev_tie: st.tie,
                 });
                 st.evs.push(PoolEv {
                     t: pricing.done,
                     tie: st.tie,
+                    epoch: br.ev_epoch[slot],
                     kind: PoolEvKind::DevIdle { r, b: b_pos, slot },
                 });
                 st.tie += 1;
@@ -2189,6 +2332,7 @@ fn predict_chain_end(st: &PoolState, preps: &[Prep], r: usize, now: f64, idle_po
             pool_contention: true,
             running_until: 0.0,
             arrival_s: prep.arrival_s,
+            crit_frac: prep.crit_frac,
         };
         let p = sc.predict(prep.plans[pos].mask, false);
         let start = p.start_s.max(now);
@@ -2311,7 +2455,6 @@ pub(crate) struct ReqSlice {
     pub(crate) iter_times: Vec<f64>,
     pub(crate) iter_verdicts: Vec<IterVerdict>,
     pub(crate) stage_traces: Vec<StageTrace>,
-    pub(crate) mask_search_skipped: Vec<usize>,
     /// Absolute (arrival-dated) ROI deadline.
     pub(crate) roi_deadline: Option<f64>,
 }
@@ -2328,25 +2471,30 @@ pub(crate) struct FleetRaw {
     pub(crate) makespan_s: f64,
 }
 
-/// The interleaved multi-request pool engine: every branch of every
-/// admitted request advances through one global event queue, so stage
-/// launch and finish events re-price every running stage's throughput
-/// against the pool-wide active-set count — cross-branch *and*
-/// cross-request contention through the same retention curve.  Grant
-/// serialization, package pricing, fault handling and the per-stage RNG
-/// forks mirror `coexec::run_roi` exactly; a one-request fleet arriving
-/// at time zero replays the single-request engine's event and tie stream
-/// bit-for-bit (arrivals at zero are admitted before the event loop, so
-/// no extra events are interleaved).
+/// The one event-driven engine core: every branch of every admitted
+/// request advances through one global binary event heap, popped in
+/// `(time, tie)` order.  Under [`PricingScope::Pool`], stage launch and
+/// finish events re-price every running stage's throughput against the
+/// pool-wide active-set count — cross-branch *and* cross-request
+/// contention through the same retention curve.  Under
+/// [`PricingScope::View`] the same loop drains stages sequentially with
+/// re-timing disabled, replaying the historical view engine
+/// bit-for-bit.  Grant serialization, package pricing, fault handling
+/// and the per-stage RNG forks mirror `coexec::run_roi` exactly; a
+/// one-request fleet arriving at time zero replays the single-request
+/// engine's event and tie stream bit-for-bit (arrivals at zero are
+/// admitted before the event loop, so no extra events are interleaved).
 pub(crate) fn fleet_schedule(
     pool: &DevicePool,
     preps: &[Prep],
     rngs: Vec<XorShift64>,
     admission: AdmissionPolicy,
+    scope: PricingScope,
 ) -> FleetRaw {
     assert_eq!(preps.len(), rngs.len(), "one RNG per request");
     let n_pool = pool.len();
     let mut st = PoolState {
+        scope,
         admission,
         reqs: preps
             .iter()
@@ -2366,7 +2514,6 @@ pub(crate) fn fleet_schedule(
                     completed: vec![false; n_stages],
                     launched: vec![false; n_stages],
                     chosen_masks: prep.plans.iter().map(|p| p.mask).collect(),
-                    mask_search_skipped: Vec::new(),
                     subs_armed: vec![None; prep.total_iters as usize],
                     gi_base,
                     iter_records: Vec::new(),
@@ -2380,13 +2527,14 @@ pub(crate) fn fleet_schedule(
         traces: vec![DeviceTrace::default(); n_pool],
         packages: Vec::new(),
         dev_free: vec![0.0; n_pool],
-        evs: Vec::new(),
+        evs: std::collections::BinaryHeap::new(),
         tie: 0,
         seq: 0,
         held: DeviceMask::empty(),
         active_mask: DeviceMask::empty(),
         window_start: 0.0,
         active_windows: Vec::new(),
+        serial_clock: 0.0,
     };
     // Later arrivals enter through events; time-zero arrivals face
     // admission before the event loop, exactly like the standalone
@@ -2396,6 +2544,7 @@ pub(crate) fn fleet_schedule(
             st.evs.push(PoolEv {
                 t: prep.arrival_s,
                 tie: st.tie,
+                epoch: 0,
                 kind: PoolEvKind::Arrival { r },
             });
             st.tie += 1;
@@ -2406,12 +2555,12 @@ pub(crate) fn fleet_schedule(
             arrive(&mut st, preps, pool, r, 0.0);
         }
     }
-    while let Some(ev) = pop_earliest(&mut st.evs) {
+    while let Some(ev) = st.evs.pop() {
         match ev.kind {
             PoolEvKind::Arrival { r } => arrive(&mut st, preps, pool, r, ev.t),
             PoolEvKind::StageStart { r, pos } => stage_start(&mut st, preps, r, pos, ev.t),
             PoolEvKind::DevIdle { r, b, slot } => {
-                dev_idle(&mut st, preps, pool, r, b, slot, ev.t)
+                dev_idle(&mut st, preps, pool, r, b, slot, ev.epoch, ev.t)
             }
         }
     }
@@ -2455,6 +2604,7 @@ pub(crate) fn fleet_schedule(
                     gi,
                     start,
                     prev_sub,
+                    prep.crit_frac,
                 );
                 iter_verdicts.push(IterVerdict {
                     stage: si,
@@ -2481,7 +2631,6 @@ pub(crate) fn fleet_schedule(
             iter_times,
             iter_verdicts,
             stage_traces: std::mem::take(&mut rs.stage_traces),
-            mask_search_skipped: std::mem::take(&mut rs.mask_search_skipped),
             roi_deadline: prep.roi_deadline,
         });
     }
@@ -2495,17 +2644,23 @@ pub(crate) fn fleet_schedule(
     }
 }
 
-/// The single-request pool-contention entry point: the one-request fleet
-/// under [`AdmissionPolicy::Accept`], reassembled into the classic
-/// [`PipelineOutcome`] (bit-identical to the pre-fleet engine — the
-/// golden snapshots hold it to that).
-fn pool_schedule(pool: &DevicePool, prep: Prep, rng: XorShift64) -> PipelineOutcome {
+/// The single-request entry point: the one-request fleet under
+/// [`AdmissionPolicy::Accept`] at the caller's pricing scope,
+/// reassembled into the classic [`PipelineOutcome`] (bit-identical to
+/// the pre-unification view and pool engines — the golden snapshots
+/// hold it to that).
+fn pool_schedule(
+    pool: &DevicePool,
+    prep: Prep,
+    rng: XorShift64,
+    scope: PricingScope,
+) -> PipelineOutcome {
     let cfg = prep.cfg;
     let budget = prep.budget;
     let init_time = prep.init_time;
     let release_time = prep.release_time;
     let preps = [prep];
-    let mut raw = fleet_schedule(pool, &preps, vec![rng], AdmissionPolicy::Accept);
+    let mut raw = fleet_schedule(pool, &preps, vec![rng], AdmissionPolicy::Accept, scope);
     let one = raw.reqs.remove(0);
     let roi_time = raw.makespan_s;
     let total_time = init_time + roi_time + release_time;
@@ -2528,7 +2683,6 @@ fn pool_schedule(pool: &DevicePool, prep: Prep, rng: XorShift64) -> PipelineOutc
         deadline: budget.map(|b| b.verdict(timed)),
         iter_verdicts: one.iter_verdicts,
         active_windows: raw.active_windows,
-        mask_search_skipped: one.mask_search_skipped,
     }
 }
 
@@ -2945,6 +3099,7 @@ mod tests {
             pool_contention: false,
             running_until: 0.0,
             arrival_s: 0.0,
+            crit_frac: None,
         };
         let spec_mask = DeviceMask::from_indices(&[0, 1]);
         let igpu = DeviceMask::single(1);
@@ -2996,6 +3151,7 @@ mod tests {
             pool_contention: false,
             running_until: 0.0,
             arrival_s: 0.0,
+            crit_frac: None,
         };
         let spec_mask = DeviceMask::from_indices(&[0, 1]);
         // Grid the sub-deadlines 3 % above the spec pace: the spec hits
@@ -3047,6 +3203,7 @@ mod tests {
             pool_contention: false,
             running_until: 0.0,
             arrival_s: 0.0,
+            crit_frac: None,
         };
         // Pre-fix view: no completed work, horizon at zero.
         assert_eq!(sc.committed_horizon(), 0.0);
@@ -3110,10 +3267,13 @@ mod tests {
     }
 
     #[test]
-    fn wide_pool_mask_search_skip_is_reported_not_silent() {
-        // Pools wider than MASK_SEARCH_LIMIT fall back to the spec mask;
-        // the fallback must be visible: the outcome (and its JSON) name
-        // the skipped stages.  Fixed never searches, so it never skips.
+    fn wide_pool_mask_search_actually_searches() {
+        // ROADMAP item 5c: pools wider than MASK_SEARCH_LIMIT used to
+        // fall back to the spec mask and report `mask_search_skipped`;
+        // the branch-and-bound search now covers them.  Four nearly-idle
+        // helper CPUs burn marginal watts without meaningful throughput,
+        // so the energy policies shed down to the iGPU+dGPU pair, while
+        // Fixed still never searches.
         use crate::types::DeviceSpec;
         let b = Bench::new(BenchId::Gaussian);
         // Uniform 7-arity HGuided parameters: the paper-tuned triple only
@@ -3121,7 +3281,7 @@ mod tests {
         let kind = SchedulerKind::HGuided { params: HGuidedParams::uniform(7, 1, 2.0) };
         let mut cfg = SimConfig::testbed(&b, kind);
         cfg.gws = Some(b.default_gws / 32);
-        // A 7-device commodity farm: the testbed trio plus four more CPUs.
+        // A 7-device commodity farm: the testbed trio plus four token CPUs.
         cfg.devices = (0..7)
             .map(|i| DeviceSpec {
                 class: match i {
@@ -3129,31 +3289,61 @@ mod tests {
                     2 => DeviceClass::DGpu,
                     _ => DeviceClass::Cpu,
                 },
-                power: if i == 2 { 1.0 } else { 0.15 },
+                power: match i {
+                    2 => 1.0,
+                    1 => 0.4,
+                    0 => 0.15,
+                    _ => 0.02,
+                },
             })
             .collect();
         cfg.budget = Some(TimeBudget::new(1e6));
-        let spec = PipelineSpec::repeat(b.clone(), 2)
-            .with_budget(cfg.budget)
-            .with_mask_policy(MaskPolicy::MinEnergy);
-        let out = simulate_pipeline(&spec, &cfg);
-        assert_eq!(out.mask_search_skipped, vec![0], "the wide stage is reported");
-        assert_eq!(out.stages[0].mask, out.stages[0].spec_mask, "spec mask kept");
-        assert_eq!(out.stages[0].mask.count(), 7);
-        let doc = crate::metrics::pipeline_json(&out).to_string();
-        let j = crate::jsonio::Json::parse(&doc).unwrap();
-        let skipped = j.get("mask_search_skipped").expect("field emitted").as_arr().unwrap();
-        assert_eq!(skipped.len(), 1);
-        assert_eq!(skipped[0].as_u64(), Some(0));
-        // Fixed never searches, so nothing is "skipped" and the field is
-        // absent — narrow-pool legacy documents stay byte-identical.
-        let fixed = simulate_pipeline(
-            &PipelineSpec::repeat(b, 2).with_budget(cfg.budget),
-            &cfg,
+        for policy in [MaskPolicy::MinEnergy, MaskPolicy::EnergyUnderDeadline] {
+            let spec = PipelineSpec::repeat(b.clone(), 2)
+                .with_budget(cfg.budget)
+                .with_mask_policy(policy);
+            let out = simulate_pipeline(&spec, &cfg);
+            assert_eq!(out.stages[0].spec_mask.count(), 7);
+            assert_eq!(
+                out.stages[0].mask,
+                DeviceMask::from_indices(&[1, 2]),
+                "{policy:?} sheds the token CPUs on the wide pool"
+            );
+            let doc = crate::metrics::pipeline_json(&out).to_string();
+            assert!(
+                !doc.contains("mask_search_skipped"),
+                "the silent-cap field is gone: wide pools search"
+            );
+        }
+        // Fixed never searches: the spec plan runs as-specified.
+        let fixed =
+            simulate_pipeline(&PipelineSpec::repeat(b, 2).with_budget(cfg.budget), &cfg);
+        assert_eq!(fixed.stages[0].mask, fixed.stages[0].spec_mask, "spec mask kept");
+        assert_eq!(fixed.stages[0].mask.count(), 7);
+    }
+
+    #[test]
+    fn event_heap_pops_in_time_then_tie_order() {
+        // The event core's heap must drain strictly by (time, tie) no
+        // matter the insertion order — ties broken by issue order, which
+        // encodes topo/request determinism.
+        let mk = |t: f64, tie: u64| PoolEv {
+            t,
+            tie,
+            epoch: 0,
+            kind: PoolEvKind::Arrival { r: tie as usize },
+        };
+        let mut evs = std::collections::BinaryHeap::new();
+        for ev in [mk(2.0, 4), mk(1.0, 3), mk(1.0, 1), mk(3.0, 0), mk(1.0, 2), mk(0.5, 5)] {
+            evs.push(ev);
+        }
+        let drained: Vec<(f64, u64)> = std::iter::from_fn(|| evs.pop())
+            .map(|ev| (ev.t, ev.tie))
+            .collect();
+        assert_eq!(
+            drained,
+            vec![(0.5, 5), (1.0, 1), (1.0, 2), (1.0, 3), (2.0, 4), (3.0, 0)]
         );
-        assert!(fixed.mask_search_skipped.is_empty());
-        let doc = crate::metrics::pipeline_json(&fixed).to_string();
-        assert!(!doc.contains("mask_search_skipped"), "no silent-cap field for Fixed");
     }
 
     #[test]

@@ -6,11 +6,12 @@
 //! *streams* of concurrent requests.  This module closes that gap: an
 //! open-loop [`ArrivalProcess`] (Poisson with a fixed seed, or
 //! trace-driven from a JSON arrival file) injects many copies of one
-//! [`PipelineSpec`] template onto the pool, the interleaved pool engine
-//! (`pipeline::fleet_schedule`) co-executes every branch of every
-//! admitted request through one global event queue — cross-request
-//! contention priced through the same retention curve as cross-branch
-//! contention — and an [`AdmissionPolicy`] gates each arrival on its
+//! [`PipelineSpec`] template onto the pool, the unified event core
+//! (`pipeline::fleet_schedule` at the `Pool` pricing scope) co-executes
+//! every branch of every admitted request through one global event heap
+//! — cross-request contention priced through the same retention curve as
+//! cross-branch contention — and an [`AdmissionPolicy`] gates each
+//! arrival on its
 //! *predicted* chain completion (the mask-predictor machinery, not an
 //! oracle).
 //!
@@ -36,7 +37,9 @@ use crate::stats::{percentile, XorShift64};
 use crate::types::{AdmissionPolicy, DevicePool};
 
 use super::coexec::{self, DeviceTrace, SimConfig};
-use super::pipeline::{fleet_schedule, prepare_request, PipelineSpec, ReqDisposition};
+use super::pipeline::{
+    fleet_schedule, prepare_request, PipelineSpec, PricingScope, ReqDisposition,
+};
 
 /// Odd 64-bit stride for per-request seed forks: request `r` simulates
 /// under `cfg.seed ^ r·STRIDE`, so request 0 replays the template seed
@@ -287,7 +290,7 @@ pub fn simulate_fleet_of(
         .collect();
     let rngs: Vec<XorShift64> = rps.iter().map(|rp| rp.rng.clone()).collect();
 
-    let raw = fleet_schedule(&pool, &preps, rngs, admission);
+    let raw = fleet_schedule(&pool, &preps, rngs, admission, PricingScope::Pool);
 
     let mut requests = Vec::with_capacity(n);
     let mut slacks = Vec::new();

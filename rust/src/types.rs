@@ -428,11 +428,23 @@ pub enum BudgetPolicy {
     /// Every iteration may spend the whole remaining global budget — the
     /// front of the pipeline is never throttled by a slice.
     GreedyFrontload,
+    /// Budget split proportional to each iteration's position on its
+    /// *critical path* through the stage DAG: iteration `j` of a stage
+    /// whose longest dependency chain holds `c` iterations before it and
+    /// `d` after gets the sub-deadline `(c + j + 1) / (c + N + d)` of the
+    /// deadline, so slack flows to the longest branch instead of the
+    /// topological launch order.  Off-DAG callers (no per-stage chain
+    /// information) fall back to [`BudgetPolicy::EvenSplit`]'s slices.
+    CriticalPath,
 }
 
 impl BudgetPolicy {
-    pub const ALL: [BudgetPolicy; 3] =
-        [BudgetPolicy::EvenSplit, BudgetPolicy::CarryOverSlack, BudgetPolicy::GreedyFrontload];
+    pub const ALL: [BudgetPolicy; 4] = [
+        BudgetPolicy::EvenSplit,
+        BudgetPolicy::CarryOverSlack,
+        BudgetPolicy::GreedyFrontload,
+        BudgetPolicy::CriticalPath,
+    ];
 
     /// Absolute sub-deadline (pipeline-ROI clock, seconds) for iteration
     /// `iter` of `total_iters`, starting at `clock_s`, where
@@ -452,6 +464,11 @@ impl BudgetPolicy {
             BudgetPolicy::EvenSplit => share * (iter + 1) as f64,
             BudgetPolicy::CarryOverSlack => prev_deadline_s.max(clock_s) + share,
             BudgetPolicy::GreedyFrontload => roi_deadline_s,
+            // Without DAG chain information the critical path degenerates
+            // to the iteration sequence itself — even slices.  The
+            // pipeline engine overrides this with the per-stage
+            // critical-path fractions it computes at prepare time.
+            BudgetPolicy::CriticalPath => share * (iter + 1) as f64,
         }
     }
 
@@ -460,6 +477,7 @@ impl BudgetPolicy {
             BudgetPolicy::EvenSplit => "even-split",
             BudgetPolicy::CarryOverSlack => "carry-over-slack",
             BudgetPolicy::GreedyFrontload => "greedy-frontload",
+            BudgetPolicy::CriticalPath => "critical-path",
         }
     }
 
@@ -471,6 +489,7 @@ impl BudgetPolicy {
             "greedy" | "greedy-frontload" | "greedyfrontload" => {
                 Some(BudgetPolicy::GreedyFrontload)
             }
+            "critical" | "critical-path" | "criticalpath" => Some(BudgetPolicy::CriticalPath),
             _ => None,
         }
     }

@@ -121,8 +121,60 @@ fn carry_over_slack_serves_sub_deadlines_at_least_as_well_as_even_split() {
 }
 
 #[test]
+fn critical_path_split_beats_even_split_on_a_wide_dag() {
+    // The acceptance scenario for `BudgetPolicy::CriticalPath`: three
+    // independent single-stage branches pinned to disjoint devices, four
+    // iterations each.  `EvenSplit` budgets by *global* (topological)
+    // iteration index, so the first branch's iterations are asked to
+    // finish within twelfths of the deadline while the branch itself
+    // needs the whole window — a structurally pessimistic split on wide
+    // DAGs.  `CriticalPath` budgets each iteration by its position on
+    // its own branch's critical path (quarters here), so a deadline just
+    // above the unbudgeted makespan is served.  HGuided ignores the
+    // armed sub-deadlines, so the schedule itself must stay bit-equal —
+    // only the verdicts move.
+    let b = Bench::new(BenchId::Gaussian);
+    let mk = |policy: BudgetPolicy, budget: Option<TimeBudget>| {
+        let stages = (0..3)
+            .map(|i| {
+                PipelineStage::new(b.clone(), 4)
+                    .with_gws(b.default_gws / 16)
+                    .on_devices(DeviceMask::single(i))
+            })
+            .collect();
+        PipelineSpec {
+            stages,
+            budget,
+            policy,
+            energy: EnergyPolicy::RaceToIdle,
+            mask_policy: MaskPolicy::Fixed,
+            serial: false,
+        }
+    };
+    let cfg = SimConfig::testbed(&b, hguided_opt());
+    let free = simulate_pipeline(&mk(BudgetPolicy::EvenSplit, None), &cfg);
+    let budget = Some(TimeBudget::new(free.roi_time * 1.02));
+    let es = simulate_pipeline(&mk(BudgetPolicy::EvenSplit, budget), &cfg);
+    let cp = simulate_pipeline(&mk(BudgetPolicy::CriticalPath, budget), &cfg);
+    assert_eq!(es.roi_time.to_bits(), cp.roi_time.to_bits(), "schedule must not move");
+    assert_eq!(es.iter_verdicts.len(), 12);
+    assert_eq!(cp.iter_verdicts.len(), 12);
+    let (es_rate, cp_rate) =
+        (es.iter_hit_rate().unwrap(), cp.iter_hit_rate().unwrap());
+    assert!(
+        es_rate < 1.0,
+        "scenario not pessimistic: even split served every sub-deadline ({es_rate})"
+    );
+    assert!(
+        cp_rate > es_rate,
+        "critical-path split ({cp_rate}) must beat even split ({es_rate})"
+    );
+    assert!(cp.deadline.unwrap().met, "the global deadline itself is servable");
+}
+
+#[test]
 fn adaptive_pipeline_sweep_emits_verdicts_and_j_per_hit() {
-    // The acceptance-criteria sweep shape: >= 2 benchmarks x 3 budget
+    // The acceptance-criteria sweep shape: >= 2 benchmarks x 4 budget
     // policies x {Exact, Pessimistic}, under the deadline-aware scheduler.
     let (rows, iters) = experiments::pipeline_sweep(
         4,
@@ -136,7 +188,7 @@ fn adaptive_pipeline_sweep_emits_verdicts_and_j_per_hit() {
         &[EstimateScenario::Exact, EstimateScenario::Pessimistic { err: 0.3 }],
         &[1.1],
     );
-    assert_eq!(rows.len(), 2 * 3 * 2, "benches x policies x estimates");
+    assert_eq!(rows.len(), 2 * 4 * 2, "benches x policies x estimates");
     assert_eq!(iters.len(), rows.len() * 5);
     for r in &rows {
         assert!((0.0..=1.0).contains(&r.hit_rate), "{}: hit {}", r.pipeline, r.hit_rate);
