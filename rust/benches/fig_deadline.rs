@@ -39,7 +39,12 @@ fn main() {
         EstimateScenario::Pessimistic { err: 0.3 },
     ];
     let rows = b.bench_val("regenerate/deadline_sweep(reps=6)", 1, || {
-        experiments::deadline_sweep(6, &estimates, &experiments::deadline_budget_mults())
+        experiments::deadline_sweep(
+            6,
+            &estimates,
+            &experiments::deadline_budget_mults(),
+            enginecl::engine::default_threads(),
+        )
     });
 
     for est in &estimates {

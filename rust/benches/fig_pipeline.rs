@@ -54,6 +54,7 @@ fn main() {
             &[EnergyPolicy::RaceToIdle, EnergyPolicy::StretchToDeadline],
             &[EstimateScenario::Exact, EstimateScenario::Pessimistic { err: 0.3 }],
             &[0.9, 1.05, 1.2],
+            enginecl::engine::default_threads(),
         )
     });
     println!("\n{} pipeline rows, {} iteration rows", rows.len(), iter_rows.len());
@@ -83,6 +84,7 @@ fn main() {
             Optimizations::ALL,
             ContentionModel::View,
             &[0.8, 1.1],
+            enginecl::engine::default_threads(),
         )
     });
     println!("\nbranch-parallel vs serial (cpu+igpu / gpu):");
@@ -117,6 +119,7 @@ fn main() {
             &sched,
             Optimizations::ALL,
             &[1.1],
+            enginecl::engine::default_threads(),
         )
     });
     println!("\nview-scoped vs pool-scoped contention (igpu / gpu):");

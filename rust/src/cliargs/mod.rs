@@ -216,6 +216,9 @@ pub struct SweepConfig {
     /// Trace-driven arrivals: JSON file of arrival offsets (seconds).
     pub trace: Option<PathBuf>,
     pub seed: u64,
+    /// Worker threads for the sweep grid (`--threads 1` = legacy serial
+    /// path; the default is the machine's available parallelism).
+    pub threads: usize,
 }
 
 impl SweepConfig {
@@ -244,6 +247,7 @@ impl SweepConfig {
             admission: AdmissionPolicy::ALL.to_vec(),
             trace: None,
             seed: 1,
+            threads: crate::engine::default_threads(),
         }
     }
 }
@@ -412,6 +416,18 @@ pub const SWEEP_FLAGS: &[(&str, &str, SweepApply)] = &[
             c.seed = v
                 .parse::<u64>()
                 .map_err(|_| anyhow!("--seed must be a non-negative integer, got '{v}'"))?;
+        }
+        Ok(())
+    }),
+    ("threads", "sweep worker threads (>= 1; default: available parallelism)", |a, c| {
+        if let Some(v) = a.flag("threads") {
+            let n = v
+                .parse::<usize>()
+                .map_err(|_| anyhow!("--threads must be a positive integer, got '{v}'"))?;
+            if n == 0 {
+                bail!("--threads must be >= 1 (use 1 for the serial path), got 0");
+            }
+            c.threads = n;
         }
         Ok(())
     }),
@@ -606,6 +622,7 @@ mod tests {
         assert!(c.scheduler.is_none());
         assert!(c.trace.is_none());
         assert_eq!(c.seed, 1);
+        assert!(c.threads >= 1, "default threads is available parallelism");
         assert_eq!(c.masks.len(), 2, "default pool split is two branches");
     }
 
@@ -616,7 +633,7 @@ mod tests {
              --benches gaussian --policies carry --energy stretch --sched adaptive \
              --refine --stage-devices cpu/gpu --mask-policy fixed --contention pool \
              --loads 0.25,4 --requests 8 --deadline-mult 2.5 --admission shed \
-             --trace arrivals.json --seed 7",
+             --trace arrivals.json --seed 7 --threads 3",
         )
         .unwrap();
         assert_eq!(c.reps, 4);
@@ -637,6 +654,7 @@ mod tests {
         assert_eq!(c.admission, vec![AdmissionPolicy::ShedLowestSlack]);
         assert_eq!(c.trace.as_deref().and_then(|p| p.to_str()), Some("arrivals.json"));
         assert_eq!(c.seed, 7);
+        assert_eq!(c.threads, 3);
     }
 
     #[test]
@@ -668,6 +686,8 @@ mod tests {
             ("x --admission fifo", "--admission"),
             ("x --seed -3", "--seed"),
             ("x --seed sixteen", "--seed"),
+            ("x --threads 0", "--threads"),
+            ("x --threads four", "--threads"),
         ] {
             let err = sweep(cli).expect_err(cli);
             let msg = format!("{err}");

@@ -16,7 +16,7 @@ use crate::types::{
     ExecMode, MaskPolicy, Optimizations, TimeBudget,
 };
 
-use super::Engine;
+use super::{par, Engine};
 
 /// CSV projection for result rows (no serde in this environment).
 pub trait CsvRow {
@@ -517,48 +517,58 @@ pub fn deadline_budget_mults() -> Vec<f64> {
 /// multiples of each benchmark's ideal co-execution time
 /// `1 / Σ(1/T_i)`, so a multiplier near the co-execution efficiency
 /// ceiling (~1.2 at the testbed's retention) is the interesting edge.
+///
+/// The grid fans out over `threads` scoped workers (every cell seeds
+/// its own RNG streams from the repetition index, so rows come back in
+/// serial nest order and bit-identical to `threads == 1`).
 pub fn deadline_sweep(
     reps: usize,
     estimates: &[EstimateScenario],
     budget_mults: &[f64],
+    threads: usize,
 ) -> Vec<DeadlineRow> {
-    let mut rows = Vec::new();
-    for id in BenchId::ALL {
-        let bench = Bench::new(id);
-        let base = Engine::builder(bench.clone());
-        let standalone = base.clone().build().standalone_times(reps.clamp(2, 8));
+    let preambles = par::parallel_map(threads, BenchId::ALL.to_vec(), |&id| {
+        let standalone =
+            Engine::builder(Bench::new(id)).build().standalone_times(reps.clamp(2, 8));
         let t_ideal = 1.0 / standalone.iter().map(|t| 1.0 / t).sum::<f64>();
+        (standalone, t_ideal)
+    });
+    let mut cells = Vec::new();
+    for (bi, id) in BenchId::ALL.into_iter().enumerate() {
         for &est in estimates {
             for &mult in budget_mults {
-                let budget = TimeBudget::new(mult * t_ideal);
                 for kind in SchedulerKind::all_configs() {
-                    let rep = base
-                        .clone()
-                        .scheduler(kind.clone())
-                        .estimate(est)
-                        .budget(budget)
-                        .build()
-                        .run_reps(reps);
-                    let dl = rep.deadline.expect("budget configured");
-                    let eff = metrics::coexec_efficiency(&standalone, rep.time.mean);
-                    rows.push(DeadlineRow {
-                        bench: id.label().into(),
-                        scheduler: kind.label(),
-                        estimate: est.label(),
-                        budget_mult: mult,
-                        deadline_s: budget.deadline_s,
-                        mean_roi_s: rep.time.mean,
-                        hit_rate: dl.hit_rate,
-                        mean_slack_s: dl.mean_slack_s,
-                        speedup: eff.speedup,
-                        max_speedup: eff.max_speedup,
-                        efficiency: eff.efficiency,
-                    });
+                    cells.push((bi, id, est, mult, kind));
                 }
             }
         }
     }
-    rows
+    par::parallel_map(threads, cells, |cell| {
+        let (bi, id, est, mult, kind) = cell;
+        let (standalone, t_ideal) = &preambles[*bi];
+        let budget = TimeBudget::new(mult * t_ideal);
+        let rep = Engine::builder(Bench::new(*id))
+            .scheduler(kind.clone())
+            .estimate(*est)
+            .budget(budget)
+            .build()
+            .run_reps(reps);
+        let dl = rep.deadline.expect("budget configured");
+        let eff = metrics::coexec_efficiency(standalone, rep.time.mean);
+        DeadlineRow {
+            bench: id.label().into(),
+            scheduler: kind.label(),
+            estimate: est.label(),
+            budget_mult: *mult,
+            deadline_s: budget.deadline_s,
+            mean_roi_s: rep.time.mean,
+            hit_rate: dl.hit_rate,
+            mean_slack_s: dl.mean_slack_s,
+            speedup: eff.speedup,
+            max_speedup: eff.max_speedup,
+            efficiency: eff.efficiency,
+        }
+    })
 }
 
 /// Per-scheduler aggregate over one estimate scenario's rows (the
@@ -768,13 +778,13 @@ pub fn pipeline_sweep(
     energies: &[EnergyPolicy],
     estimates: &[EstimateScenario],
     budget_mults: &[f64],
+    threads: usize,
 ) -> (Vec<PipelineRow>, Vec<PipelineIterRow>) {
     assert!(reps >= 2, "need at least warm-up + 1");
-    let mut rows = Vec::new();
-    let mut iter_rows = Vec::new();
-    for &id in benches {
+    // Unconstrained per-bench reference times for the budget ladder
+    // (each preamble is itself an independent work item).
+    let t_refs = par::parallel_map(threads, benches.to_vec(), |&id| {
         let bench = Bench::new(id);
-        // Unconstrained reference time for the budget ladder.
         let ref_reps = reps.clamp(2, 4);
         let mut t_ref = 0.0;
         for rep in 1..=ref_reps as u64 {
@@ -785,26 +795,36 @@ pub fn pipeline_sweep(
             t_ref += simulate_pipeline(&PipelineSpec::repeat(bench.clone(), iterations), &cfg)
                 .roi_time;
         }
-        t_ref /= ref_reps as f64;
-
+        t_ref / ref_reps as f64
+    });
+    // The grid, flattened in serial nest order; every cell seeds its own
+    // RNG streams, so the fan-out is bit-identical to `threads == 1`.
+    let mut cells = Vec::new();
+    for (bi, &id) in benches.iter().enumerate() {
         for &est in estimates {
             for &mult in budget_mults {
-                let budget = TimeBudget::new(mult * t_ref);
                 for &policy in policies {
                     for &energy in energies {
-                        let spec = PipelineSpec::repeat(bench.clone(), iterations)
-                            .with_budget(Some(budget))
-                            .with_policy(policy)
-                            .with_energy(energy);
-                        let cell = run_pipeline_cell(
-                            &spec, &bench, scheduler, opts, contention, est, reps, mult,
-                        );
-                        iter_rows.extend(cell.1);
-                        rows.push(cell.0);
+                        cells.push((bi, id, est, mult, policy, energy));
                     }
                 }
             }
         }
+    }
+    let results = par::parallel_map(threads, cells, |&(bi, id, est, mult, policy, energy)| {
+        let bench = Bench::new(id);
+        let budget = TimeBudget::new(mult * t_refs[bi]);
+        let spec = PipelineSpec::repeat(bench.clone(), iterations)
+            .with_budget(Some(budget))
+            .with_policy(policy)
+            .with_energy(energy);
+        run_pipeline_cell(&spec, &bench, scheduler, opts, contention, est, reps, mult)
+    });
+    let mut rows = Vec::new();
+    let mut iter_rows = Vec::new();
+    for (row, iters) in results {
+        rows.push(row);
+        iter_rows.extend(iters);
     }
     (rows, iter_rows)
 }
@@ -994,6 +1014,7 @@ pub fn branch_compare(
     opts: Optimizations,
     contention: ContentionModel,
     budget_mults: &[f64],
+    threads: usize,
 ) -> Vec<BranchRow> {
     assert!(reps >= 2, "need at least warm-up + 1");
     assert!(!benches.is_empty(), "need at least one benchmark");
@@ -1026,46 +1047,44 @@ pub fn branch_compare(
     }
     t_ref /= ref_reps as f64;
 
-    let mut rows = Vec::new();
-    for &mult in budget_mults {
-        for serial in [true, false] {
-            let spec = mk_spec(serial).with_deadline(mult * t_ref);
-            let mut roi = Vec::new();
-            let mut slack = Vec::new();
-            let mut util = Vec::new();
-            let mut energy = Vec::new();
-            let mut hits = 0usize;
-            for rep in 0..reps {
-                let mut cfg = SimConfig::testbed(&template, scheduler.clone());
-                cfg.opts = opts;
-                cfg.contention = contention;
-                cfg.seed = rep as u64 + 1;
-                let out = simulate_pipeline(&spec, &cfg);
-                if rep == 0 {
-                    continue; // warm-up
-                }
-                let v = out.deadline.expect("budgeted cell");
-                hits += v.met as usize;
-                slack.push(v.slack_s);
-                roi.push(out.roi_time);
-                util.push(metrics::pool_utilization(&out.devices, out.roi_time));
-                energy.push(out.energy_j);
+    let cells: Vec<(f64, bool)> =
+        budget_mults.iter().flat_map(|&mult| [(mult, true), (mult, false)]).collect();
+    par::parallel_map(threads, cells, |&(mult, serial)| {
+        let spec = mk_spec(serial).with_deadline(mult * t_ref);
+        let mut roi = Vec::new();
+        let mut slack = Vec::new();
+        let mut util = Vec::new();
+        let mut energy = Vec::new();
+        let mut hits = 0usize;
+        for rep in 0..reps {
+            let mut cfg = SimConfig::testbed(&template, scheduler.clone());
+            cfg.opts = opts;
+            cfg.contention = contention;
+            cfg.seed = rep as u64 + 1;
+            let out = simulate_pipeline(&spec, &cfg);
+            if rep == 0 {
+                continue; // warm-up
             }
-            rows.push(BranchRow {
-                pipeline: spec.label(),
-                masks: mask_label.clone(),
-                mode: if serial { "serial" } else { "branch-parallel" },
-                budget_mult: mult,
-                deadline_s: mult * t_ref,
-                mean_roi_s: crate::stats::mean(&roi),
-                hit_rate: hits as f64 / (reps - 1) as f64,
-                mean_slack_s: crate::stats::mean(&slack),
-                mean_pool_utilization: crate::stats::mean(&util),
-                mean_energy_j: crate::stats::mean(&energy),
-            });
+            let v = out.deadline.expect("budgeted cell");
+            hits += v.met as usize;
+            slack.push(v.slack_s);
+            roi.push(out.roi_time);
+            util.push(metrics::pool_utilization(&out.devices, out.roi_time));
+            energy.push(out.energy_j);
         }
-    }
-    rows
+        BranchRow {
+            pipeline: spec.label(),
+            masks: mask_label.clone(),
+            mode: if serial { "serial" } else { "branch-parallel" },
+            budget_mult: mult,
+            deadline_s: mult * t_ref,
+            mean_roi_s: crate::stats::mean(&roi),
+            hit_rate: hits as f64 / (reps - 1) as f64,
+            mean_slack_s: crate::stats::mean(&slack),
+            mean_pool_utilization: crate::stats::mean(&util),
+            mean_energy_j: crate::stats::mean(&energy),
+        }
+    })
 }
 
 // ------------------------------------------------- mask-policy comparison
@@ -1146,6 +1165,7 @@ pub fn mask_compare(
     contention: ContentionModel,
     budget_mults: &[f64],
     policy: MaskPolicy,
+    threads: usize,
 ) -> Vec<MaskRow> {
     assert!(reps >= 2, "need at least warm-up + 1");
     assert!(!benches.is_empty(), "need at least one benchmark");
@@ -1182,65 +1202,69 @@ pub fn mask_compare(
         vec![MaskPolicy::Fixed, policy]
     };
     let total_iters = iterations as usize * masks.len();
-    let mut rows = Vec::new();
+    // Cells in the serial nest order (mult -> policy); each is seeded
+    // internally, so fanning them across workers is bit-identical.
+    let mut cells: Vec<(f64, MaskPolicy)> = Vec::new();
     for &mult in budget_mults {
         for &pol in &policies {
-            let spec = mk_spec(pol).with_deadline(mult * t_ref);
-            let mut roi = Vec::new();
-            let mut slack = Vec::new();
-            let mut energy = Vec::new();
-            let mut hits = 0usize;
-            let mut iter_hits = 0usize;
-            let mut shed = Vec::new();
-            let mut chosen = String::new();
-            for rep in 0..reps {
-                let mut cfg = SimConfig::testbed(&template, scheduler.clone());
-                cfg.opts = opts;
-                cfg.contention = contention;
-                cfg.seed = rep as u64 + 1;
-                let out = simulate_pipeline(&spec, &cfg);
-                if rep == 0 {
-                    continue; // warm-up
-                }
-                let v = out.deadline.expect("budgeted cell");
-                hits += v.met as usize;
-                slack.push(v.slack_s);
-                roi.push(out.roi_time);
-                energy.push(out.energy_j);
-                iter_hits += out.iter_hits();
-                shed.push(out.stages.iter().filter(|s| s.shed()).count() as f64);
-                chosen = out
-                    .stages
-                    .iter()
-                    .map(|s| s.mask.label(&classes))
-                    .collect::<Vec<_>>()
-                    .join("/");
-            }
-            let n = (reps - 1) as f64;
-            let total_energy: f64 = energy.iter().sum();
-            let j_per_hit = if iter_hits > 0 {
-                total_energy / iter_hits as f64
-            } else {
-                f64::INFINITY
-            };
-            rows.push(MaskRow {
-                pipeline: spec.label(),
-                masks: mask_label.clone(),
-                policy: pol.label().into(),
-                budget_mult: mult,
-                deadline_s: mult * t_ref,
-                mean_roi_s: crate::stats::mean(&roi),
-                hit_rate: hits as f64 / n,
-                iter_hit_rate: iter_hits as f64 / (n * total_iters as f64),
-                mean_slack_s: crate::stats::mean(&slack),
-                mean_energy_j: crate::stats::mean(&energy),
-                j_per_hit,
-                shed_stages: crate::stats::mean(&shed),
-                chosen,
-            });
+            cells.push((mult, pol));
         }
     }
-    rows
+    par::parallel_map(threads, cells, |&(mult, pol)| {
+        let spec = mk_spec(pol).with_deadline(mult * t_ref);
+        let mut roi = Vec::new();
+        let mut slack = Vec::new();
+        let mut energy = Vec::new();
+        let mut hits = 0usize;
+        let mut iter_hits = 0usize;
+        let mut shed = Vec::new();
+        let mut chosen = String::new();
+        for rep in 0..reps {
+            let mut cfg = SimConfig::testbed(&template, scheduler.clone());
+            cfg.opts = opts;
+            cfg.contention = contention;
+            cfg.seed = rep as u64 + 1;
+            let out = simulate_pipeline(&spec, &cfg);
+            if rep == 0 {
+                continue; // warm-up
+            }
+            let v = out.deadline.expect("budgeted cell");
+            hits += v.met as usize;
+            slack.push(v.slack_s);
+            roi.push(out.roi_time);
+            energy.push(out.energy_j);
+            iter_hits += out.iter_hits();
+            shed.push(out.stages.iter().filter(|s| s.shed()).count() as f64);
+            chosen = out
+                .stages
+                .iter()
+                .map(|s| s.mask.label(&classes))
+                .collect::<Vec<_>>()
+                .join("/");
+        }
+        let n = (reps - 1) as f64;
+        let total_energy: f64 = energy.iter().sum();
+        let j_per_hit = if iter_hits > 0 {
+            total_energy / iter_hits as f64
+        } else {
+            f64::INFINITY
+        };
+        MaskRow {
+            pipeline: spec.label(),
+            masks: mask_label.clone(),
+            policy: pol.label().into(),
+            budget_mult: mult,
+            deadline_s: mult * t_ref,
+            mean_roi_s: crate::stats::mean(&roi),
+            hit_rate: hits as f64 / n,
+            iter_hit_rate: iter_hits as f64 / (n * total_iters as f64),
+            mean_slack_s: crate::stats::mean(&slack),
+            mean_energy_j: crate::stats::mean(&energy),
+            j_per_hit,
+            shed_stages: crate::stats::mean(&shed),
+            chosen,
+        }
+    })
 }
 
 // ------------------------------------------------- contention comparison
@@ -1307,6 +1331,7 @@ pub fn contention_compare(
     scheduler: &SchedulerKind,
     opts: Optimizations,
     budget_mults: &[f64],
+    threads: usize,
 ) -> Vec<ContentionRow> {
     assert!(reps >= 2, "need at least warm-up + 1");
     assert!(!benches.is_empty(), "need at least one benchmark");
@@ -1344,49 +1369,53 @@ pub fn contention_compare(
     }
     t_ref /= ref_reps as f64;
 
-    let mut rows = Vec::new();
+    // Cells in the serial nest order (mult -> scope); each is seeded
+    // internally, so fanning them across workers is bit-identical.
+    let mut cells: Vec<(f64, ContentionModel)> = Vec::new();
     for &mult in budget_mults {
         for contention in ContentionModel::ALL {
-            let spec = spec_for(Some(mult * t_ref));
-            let mut roi = Vec::new();
-            let mut slack = Vec::new();
-            let mut util = Vec::new();
-            let mut energy = Vec::new();
-            let mut windows = Vec::new();
-            let mut hits = 0usize;
-            for rep in 0..reps {
-                let mut cfg = SimConfig::testbed(&template, scheduler.clone());
-                cfg.opts = opts;
-                cfg.contention = contention;
-                cfg.seed = rep as u64 + 1;
-                let out = simulate_pipeline(&spec, &cfg);
-                if rep == 0 {
-                    continue; // warm-up
-                }
-                let v = out.deadline.expect("budgeted cell");
-                hits += v.met as usize;
-                slack.push(v.slack_s);
-                roi.push(out.roi_time);
-                util.push(metrics::pool_utilization(&out.devices, out.roi_time));
-                energy.push(out.energy_j);
-                windows.push(out.active_windows.len() as f64);
-            }
-            rows.push(ContentionRow {
-                pipeline: spec.label(),
-                masks: mask_label.clone(),
-                contention: contention.label().into(),
-                budget_mult: mult,
-                deadline_s: mult * t_ref,
-                mean_roi_s: crate::stats::mean(&roi),
-                hit_rate: hits as f64 / (reps - 1) as f64,
-                mean_slack_s: crate::stats::mean(&slack),
-                mean_pool_utilization: crate::stats::mean(&util),
-                mean_energy_j: crate::stats::mean(&energy),
-                mean_active_windows: crate::stats::mean(&windows),
-            });
+            cells.push((mult, contention));
         }
     }
-    rows
+    par::parallel_map(threads, cells, |&(mult, contention)| {
+        let spec = spec_for(Some(mult * t_ref));
+        let mut roi = Vec::new();
+        let mut slack = Vec::new();
+        let mut util = Vec::new();
+        let mut energy = Vec::new();
+        let mut windows = Vec::new();
+        let mut hits = 0usize;
+        for rep in 0..reps {
+            let mut cfg = SimConfig::testbed(&template, scheduler.clone());
+            cfg.opts = opts;
+            cfg.contention = contention;
+            cfg.seed = rep as u64 + 1;
+            let out = simulate_pipeline(&spec, &cfg);
+            if rep == 0 {
+                continue; // warm-up
+            }
+            let v = out.deadline.expect("budgeted cell");
+            hits += v.met as usize;
+            slack.push(v.slack_s);
+            roi.push(out.roi_time);
+            util.push(metrics::pool_utilization(&out.devices, out.roi_time));
+            energy.push(out.energy_j);
+            windows.push(out.active_windows.len() as f64);
+        }
+        ContentionRow {
+            pipeline: spec.label(),
+            masks: mask_label.clone(),
+            contention: contention.label().into(),
+            budget_mult: mult,
+            deadline_s: mult * t_ref,
+            mean_roi_s: crate::stats::mean(&roi),
+            hit_rate: hits as f64 / (reps - 1) as f64,
+            mean_slack_s: crate::stats::mean(&slack),
+            mean_pool_utilization: crate::stats::mean(&util),
+            mean_energy_j: crate::stats::mean(&energy),
+            mean_active_windows: crate::stats::mean(&windows),
+        }
+    })
 }
 
 // ------------------------------------------------- traffic sweep
@@ -1535,6 +1564,7 @@ pub fn traffic_sweep(
     n_requests: usize,
     policies: &[AdmissionPolicy],
     seed: u64,
+    threads: usize,
 ) -> Vec<TrafficRow> {
     assert!(!load_mults.is_empty(), "need at least one offered-load level");
     assert!(n_requests >= 1, "need at least one request");
@@ -1557,26 +1587,24 @@ pub fn traffic_sweep(
     // deadline and the load ladder.
     let t_ref = simulate_pipeline(&mk_spec(), &cfg).roi_time;
     let spec = mk_spec().with_deadline(deadline_mult * t_ref);
-    let mut rows = Vec::new();
+    // Cells in the serial nest order (load -> admission); every fleet is
+    // seeded from `cfg.seed`, so fanning them out is bit-identical.
+    let mut cells: Vec<(f64, AdmissionPolicy)> = Vec::new();
     for &mult in load_mults {
-        let rate_hz = mult / t_ref;
         for &admission in policies {
-            let fleet = FleetSpec {
-                template: spec.clone(),
-                arrivals: ArrivalProcess::Poisson { rate_hz, n: n_requests },
-                admission,
-            };
-            let out = crate::sim::simulate_fleet(&fleet, &cfg);
-            rows.push(TrafficRow::from_fleet(
-                &spec.label(),
-                mult,
-                rate_hz,
-                deadline_mult * t_ref,
-                &out,
-            ));
+            cells.push((mult, admission));
         }
     }
-    rows
+    par::parallel_map(threads, cells, |&(mult, admission)| {
+        let rate_hz = mult / t_ref;
+        let fleet = FleetSpec {
+            template: spec.clone(),
+            arrivals: ArrivalProcess::Poisson { rate_hz, n: n_requests },
+            admission,
+        };
+        let out = crate::sim::simulate_fleet(&fleet, &cfg);
+        TrafficRow::from_fleet(&spec.label(), mult, rate_hz, deadline_mult * t_ref, &out)
+    })
 }
 
 /// Run ONE fleet (arbitrary arrival process) on the [`traffic_sweep`]
@@ -1719,7 +1747,7 @@ mod tests {
     #[test]
     fn deadline_sweep_shape_and_json() {
         // One scenario, one budget: 6 benches x 8 schedulers.
-        let rows = deadline_sweep(3, &[EstimateScenario::Exact], &[1.2]);
+        let rows = deadline_sweep(3, &[EstimateScenario::Exact], &[1.2], 1);
         assert_eq!(rows.len(), 6 * 8);
         assert!(rows.iter().all(|r| r.deadline_s > 0.0 && r.efficiency > 0.0));
         assert!(rows.iter().any(|r| r.scheduler == "Adaptive"));
@@ -1732,7 +1760,7 @@ mod tests {
 
     #[test]
     fn deadline_means_cover_all_bars() {
-        let rows = deadline_sweep(3, &[EstimateScenario::Exact], &[1.5]);
+        let rows = deadline_sweep(3, &[EstimateScenario::Exact], &[1.5], 1);
         let means = deadline_scheduler_means(&rows, "exact");
         assert_eq!(means.len(), 8);
         assert_eq!(means[7].scheduler, "Adaptive");
@@ -1755,6 +1783,7 @@ mod tests {
             &[EnergyPolicy::RaceToIdle],
             &[EstimateScenario::Exact],
             &[1.2],
+            1,
         );
         assert_eq!(rows.len(), 2, "1 bench x 1 estimate x 1 budget x 2 policies");
         assert_eq!(iters.len(), 2 * 4, "4 iteration rows per cell");
@@ -1788,6 +1817,7 @@ mod tests {
             Optimizations::ALL,
             ContentionModel::View,
             &[1.1],
+            1,
         );
         assert_eq!(rows.len(), 2, "one serial + one branch-parallel row");
         let serial = rows.iter().find(|r| r.mode == "serial").unwrap();
@@ -1820,6 +1850,7 @@ mod tests {
             ContentionModel::View,
             &[0.9, 1.6],
             MaskPolicy::EnergyUnderDeadline,
+            1,
         );
         assert_eq!(rows.len(), 4, "2 budgets x {{fixed, energy-under-deadline}}");
         for r in &rows {
@@ -1873,6 +1904,7 @@ mod tests {
             &SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() },
             Optimizations::ALL,
             &[1.2],
+            1,
         );
         assert_eq!(rows.len(), 2, "one view + one pool row per budget");
         let view = rows.iter().find(|r| r.contention == "view").unwrap();
@@ -1889,6 +1921,49 @@ mod tests {
         assert_eq!(view.mean_active_windows, 0.0, "view runs record no windows");
         assert!(pool.mean_active_windows >= 2.0, "pool runs trace the active set");
         assert!(pool.csv_row().starts_with("Gaussian+Mandelbrot,igpu/gpu,pool,"));
+    }
+
+    #[test]
+    fn parallel_sweep_rows_match_serial_bit_for_bit() {
+        // Every cell seeds its own RNG, so the fan-out must reproduce the
+        // legacy single-thread path exactly — order and bits.
+        let serial = deadline_sweep(3, &[EstimateScenario::Exact], &[1.2], 1);
+        let par = deadline_sweep(3, &[EstimateScenario::Exact], &[1.2], 2);
+        assert_eq!(serial.len(), par.len());
+        for (s, p) in serial.iter().zip(&par) {
+            assert_eq!(s.bench, p.bench);
+            assert_eq!(s.scheduler, p.scheduler);
+            assert_eq!(s.mean_roi_s.to_bits(), p.mean_roi_s.to_bits());
+            assert_eq!(s.mean_slack_s.to_bits(), p.mean_slack_s.to_bits());
+            assert_eq!(s.efficiency.to_bits(), p.efficiency.to_bits());
+        }
+        let serial = contention_compare(
+            3,
+            &[BenchId::Gaussian, BenchId::Mandelbrot],
+            &[DeviceMask::single(1), DeviceMask::single(2)],
+            2,
+            &SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() },
+            Optimizations::ALL,
+            &[1.2],
+            1,
+        );
+        let par = contention_compare(
+            3,
+            &[BenchId::Gaussian, BenchId::Mandelbrot],
+            &[DeviceMask::single(1), DeviceMask::single(2)],
+            2,
+            &SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() },
+            Optimizations::ALL,
+            &[1.2],
+            4,
+        );
+        assert_eq!(serial.len(), par.len());
+        for (s, p) in serial.iter().zip(&par) {
+            assert_eq!(s.contention, p.contention);
+            assert_eq!(s.mean_roi_s.to_bits(), p.mean_roi_s.to_bits());
+            assert_eq!(s.mean_energy_j.to_bits(), p.mean_energy_j.to_bits());
+            assert_eq!(s.mean_active_windows.to_bits(), p.mean_active_windows.to_bits());
+        }
     }
 
     #[test]

@@ -34,8 +34,12 @@
 //! whole fleet via [`Engine::submit_fleet`].
 
 pub mod experiments;
+pub mod par;
+pub mod perf;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+
+pub use par::{default_threads, parallel_map};
 
 use crate::benchsuite::Bench;
 use crate::cldriver::DriverProfile;
@@ -95,6 +99,7 @@ pub struct Engine {
     estimate: EstimateScenario,
     mask_policy: MaskPolicy,
     contention: ContentionModel,
+    mask_leaf_cap: usize,
 }
 
 /// One run's report: timing + the paper's metrics inputs.
@@ -206,6 +211,16 @@ impl EngineBuilder {
         self
     }
 
+    /// Leaf-visit budget for the branch-and-bound mask search on pools
+    /// wider than the exhaustive-enumeration limit.  When the cap — not
+    /// the bounds — truncates the search, the stage trace carries a
+    /// `mask_search_truncated` note.
+    pub fn mask_leaf_cap(mut self, cap: usize) -> Self {
+        assert!(cap > 0, "mask_leaf_cap must be positive");
+        self.inner.mask_leaf_cap = cap;
+        self
+    }
+
     /// Validate and finish.
     pub fn build(self) -> Engine {
         assert!(!self.inner.devices.is_empty(), "engine needs at least one device");
@@ -234,6 +249,7 @@ impl Engine {
             estimate: EstimateScenario::Exact,
             mask_policy: MaskPolicy::Fixed,
             contention: ContentionModel::View,
+            mask_leaf_cap: crate::sim::DEFAULT_MASK_LEAF_CAP,
         }
     }
 
@@ -354,6 +370,7 @@ impl Engine {
             budget: self.budget,
             estimate: self.estimate,
             contention: self.contention,
+            mask_leaf_cap: self.mask_leaf_cap,
         }
     }
 

@@ -1,0 +1,96 @@
+//! Scoped-thread fan-out for sweep grids (ROADMAP item 2a).
+//!
+//! Every sweep cell is an independent simulation — per-cell RNG streams
+//! are seeded from the repetition index, never from a shared mutable
+//! generator — so a grid can be scattered across cores and gathered back
+//! in index order with bit-identical results.  The pattern is
+//! snapshot-scatter-gather: workers pull cell indices from one shared
+//! atomic counter (no pre-partitioning, so uneven cell costs still
+//! balance), accumulate `(index, value)` pairs locally, and the caller
+//! reassembles the output in the exact serial row order.  The crate
+//! stays `anyhow`-only: plain `std::thread::scope`, no rayon.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Default sweep worker count: the machine's available parallelism
+/// (what `--threads` falls back to when the flag is absent).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Map `f` over `items` on up to `threads` scoped workers, returning the
+/// results **in item order** — bit-identical to `items.iter().map(&f)`.
+/// `threads <= 1` (the `--threads 1` legacy path) runs the exact serial
+/// loop, no threads spawned.  Panics in `f` propagate to the caller.
+pub fn parallel_map<I, T, F>(threads: usize, items: Vec<I>, f: F) -> Vec<T>
+where
+    I: Send + Sync,
+    T: Send,
+    F: Fn(&I) -> T + Send + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let workers = threads.min(n);
+    let next = AtomicUsize::new(0);
+    let (items, f, next) = (&items, &f, &next);
+    let mut shards: Vec<Vec<(usize, T)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(&items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("sweep worker panicked")).collect()
+    });
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for shard in &mut shards {
+        for (i, v) in shard.drain(..) {
+            debug_assert!(out[i].is_none(), "cell {i} computed twice");
+            out[i] = Some(v);
+        }
+    }
+    out.into_iter().map(|v| v.expect("every cell computed")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_item_order_across_thread_counts() {
+        let items: Vec<usize> = (0..257).collect();
+        let serial = parallel_map(1, items.clone(), |&i| i * 3 + 1);
+        for threads in [2, 3, 8] {
+            let par = parallel_map(threads, items.clone(), |&i| i * 3 + 1);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn handles_empty_and_singleton_grids() {
+        assert_eq!(parallel_map(8, Vec::<u32>::new(), |&i| i), Vec::<u32>::new());
+        assert_eq!(parallel_map(8, vec![7u32], |&i| i + 1), vec![8]);
+    }
+
+    #[test]
+    fn more_workers_than_items_is_fine() {
+        let out = parallel_map(64, vec![1u64, 2, 3], |&i| i * i);
+        assert_eq!(out, vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn default_threads_is_at_least_one() {
+        assert!(default_threads() >= 1);
+    }
+}

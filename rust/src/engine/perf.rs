@@ -1,0 +1,294 @@
+//! Performance trajectory harness (`enginecl bench`).
+//!
+//! Times a pinned set of sweep workloads serial (`threads = 1`) versus
+//! fanned out (`threads = N`), across the regimes the parallel sweep and
+//! the frontier-incremental re-timer were built for: view-scoped and
+//! pool-scoped pipelines, and small versus saturated multi-tenant
+//! fleets.  Emits wall-clock, cells/sec throughput and per-simulation
+//! latency percentiles as one JSON document (`BENCH_8.json` at the repo
+//! root) so successive PRs can compare like against like.
+//!
+//! Every workload is seeded exactly like the sweep it mirrors, so the
+//! serial and parallel runs compute bit-identical rows — the timings
+//! compare *schedules*, never different work.
+
+use std::time::Instant;
+
+use crate::benchsuite::{Bench, BenchId};
+use crate::jsonio::Json;
+use crate::scheduler::{HGuidedParams, SchedulerKind};
+use crate::sim::{simulate_pipeline, PipelineSpec, PipelineStage, SimConfig};
+use crate::stats::percentile;
+use crate::types::{
+    AdmissionPolicy, BudgetPolicy, ContentionModel, DeviceMask, EnergyPolicy, EstimateScenario,
+    MaskPolicy, Optimizations,
+};
+
+use super::experiments;
+
+/// Harness configuration, straight from the `bench` CLI flags.
+#[derive(Debug, Clone, Copy)]
+pub struct PerfOpts {
+    /// Shrink every grid for CI smoke runs (seconds, not minutes).
+    pub quick: bool,
+    /// Worker threads for the parallel leg (the serial leg is pinned
+    /// to 1).
+    pub threads: usize,
+}
+
+/// One timed workload: the same pinned grid, serial then parallel.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    pub name: String,
+    /// Grid cells (result rows) the workload computes.
+    pub cells: usize,
+    pub serial_s: f64,
+    pub parallel_s: f64,
+    /// `serial_s / parallel_s` — >= 1.0 when the fan-out helps.
+    pub speedup: f64,
+    /// Cells completed per wall-second on the parallel leg.
+    pub cells_per_sec: f64,
+    /// Percentiles of individual end-to-end simulation latencies for
+    /// the workload's representative pipeline (seconds).
+    pub lat_p50_s: f64,
+    pub lat_p95_s: f64,
+    pub lat_p99_s: f64,
+}
+
+impl ScenarioResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("cells", Json::Num(self.cells as f64)),
+            ("serial_s", Json::Num(self.serial_s)),
+            ("parallel_s", Json::Num(self.parallel_s)),
+            ("speedup", Json::Num(self.speedup)),
+            ("cells_per_sec", Json::Num(self.cells_per_sec)),
+            ("lat_p50_s", Json::Num(self.lat_p50_s)),
+            ("lat_p95_s", Json::Num(self.lat_p95_s)),
+            ("lat_p99_s", Json::Num(self.lat_p99_s)),
+        ])
+    }
+}
+
+fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed().as_secs_f64())
+}
+
+/// The two-branch DAG every pipeline workload shares (the
+/// [`experiments::branch_compare`] shape): CPU+iGPU vs GPU.
+fn branch_masks() -> Vec<DeviceMask> {
+    vec![DeviceMask::from_indices(&[0, 1]), DeviceMask::single(2)]
+}
+
+fn hguided_opt() -> SchedulerKind {
+    SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() }
+}
+
+/// Per-simulation latency samples for one representative pipeline of
+/// the scenario under `contention`, timed one sim at a time.
+fn latency_samples(contention: ContentionModel, iters: u32, samples: usize) -> Vec<f64> {
+    let benches = [BenchId::Gaussian, BenchId::Mandelbrot];
+    let masks = branch_masks();
+    let template = Bench::new(benches[0]);
+    let stages: Vec<PipelineStage> = masks
+        .iter()
+        .enumerate()
+        .map(|(i, &m)| {
+            let b = Bench::new(benches[i % benches.len()]);
+            let gws = b.default_gws / 8;
+            PipelineStage::new(b, iters).with_gws(gws).on_devices(m)
+        })
+        .collect();
+    let spec = PipelineSpec {
+        stages,
+        budget: None,
+        policy: BudgetPolicy::CarryOverSlack,
+        energy: EnergyPolicy::RaceToIdle,
+        mask_policy: MaskPolicy::Fixed,
+        serial: false,
+    };
+    (0..samples)
+        .map(|rep| {
+            let mut cfg = SimConfig::testbed(&template, hguided_opt());
+            cfg.opts = Optimizations::ALL;
+            cfg.contention = contention;
+            cfg.seed = rep as u64 + 1;
+            let (_, secs) = time(|| simulate_pipeline(&spec, &cfg));
+            secs
+        })
+        .collect()
+}
+
+fn scenario(
+    name: &str,
+    threads: usize,
+    lat: &[f64],
+    run: impl Fn(usize) -> usize,
+) -> ScenarioResult {
+    let (cells_serial, serial_s) = time(|| run(1));
+    let (cells_par, parallel_s) = time(|| run(threads));
+    assert_eq!(cells_serial, cells_par, "both legs compute the same grid");
+    ScenarioResult {
+        name: name.into(),
+        cells: cells_par,
+        serial_s,
+        parallel_s,
+        speedup: serial_s / parallel_s,
+        cells_per_sec: cells_par as f64 / parallel_s,
+        lat_p50_s: percentile(lat, 50.0).expect("latency samples"),
+        lat_p95_s: percentile(lat, 95.0).expect("latency samples"),
+        lat_p99_s: percentile(lat, 99.0).expect("latency samples"),
+    }
+}
+
+/// Run the full trajectory: every scenario serial vs parallel.
+pub fn run(opts: PerfOpts) -> Vec<ScenarioResult> {
+    assert!(opts.threads >= 1, "threads must be >= 1");
+    let quick = opts.quick;
+    let threads = opts.threads;
+    let benches = [BenchId::Gaussian, BenchId::Mandelbrot];
+    let masks = branch_masks();
+    let sched = hguided_opt();
+    let opt = Optimizations::ALL;
+    let lat_n = if quick { 12 } else { 40 };
+    let mut out = Vec::new();
+
+    // 1. Deadline sweep: the densest grid (benches x schedulers), all
+    //    view-scoped single-kernel runs.
+    let d_reps = if quick { 2 } else { 4 };
+    let d_mults: &[f64] = if quick { &[1.2] } else { &[1.05, 1.2, 1.5] };
+    let lat_view = latency_samples(ContentionModel::View, 2, lat_n);
+    out.push(scenario("deadline_sweep", threads, &lat_view, |t| {
+        experiments::deadline_sweep(d_reps, &[EstimateScenario::Exact], d_mults, t).len()
+    }));
+
+    // 2. Pipeline sweep, view-scoped (the legacy contention model).
+    let p_reps = if quick { 3 } else { 5 };
+    let p_iters = if quick { 3 } else { 5 };
+    let p_mults: &[f64] = if quick { &[1.1] } else { &[0.9, 1.1, 1.3] };
+    out.push(scenario("pipeline_sweep_view", threads, &lat_view, |t| {
+        let (rows, _) = experiments::pipeline_sweep(
+            p_reps,
+            &benches,
+            p_iters,
+            &sched,
+            opt,
+            ContentionModel::View,
+            &BudgetPolicy::ALL,
+            &[EnergyPolicy::RaceToIdle],
+            &[EstimateScenario::Exact],
+            p_mults,
+            t,
+        );
+        rows.len()
+    }));
+
+    // 3. Pipeline sweep, pool-scoped: every run crosses the
+    //    frontier-incremental re-timer at each active-set boundary.
+    let lat_pool = latency_samples(ContentionModel::Pool, 2, lat_n);
+    out.push(scenario("pipeline_sweep_pool", threads, &lat_pool, |t| {
+        let (rows, _) = experiments::pipeline_sweep(
+            p_reps,
+            &benches,
+            p_iters,
+            &sched,
+            opt,
+            ContentionModel::Pool,
+            &BudgetPolicy::ALL,
+            &[EnergyPolicy::RaceToIdle],
+            &[EstimateScenario::Exact],
+            p_mults,
+            t,
+        );
+        rows.len()
+    }));
+
+    // 4. Small fleet: light offered load, slack everywhere.
+    let f_iters = if quick { 2 } else { 3 };
+    let f_small_n = if quick { 8 } else { 24 };
+    out.push(scenario("fleet_small", threads, &lat_pool, |t| {
+        experiments::traffic_sweep(
+            &benches,
+            &masks,
+            f_iters,
+            &sched,
+            opt,
+            1.5,
+            &[0.25, 0.5, 1.0],
+            f_small_n,
+            &[AdmissionPolicy::Accept, AdmissionPolicy::ShedLowestSlack],
+            7,
+            t,
+        )
+        .len()
+    }));
+
+    // 5. Saturated fleet: overload, the re-timer's worst case (deep
+    //    in-flight sets re-priced at every boundary).
+    let f_sat_n = if quick { 16 } else { 64 };
+    out.push(scenario("fleet_saturated", threads, &lat_pool, |t| {
+        experiments::traffic_sweep(
+            &benches,
+            &masks,
+            f_iters,
+            &sched,
+            opt,
+            1.5,
+            &[2.0, 4.0],
+            f_sat_n,
+            &[AdmissionPolicy::Accept, AdmissionPolicy::ShedLowestSlack],
+            7,
+            t,
+        )
+        .len()
+    }));
+    out
+}
+
+/// The committed trajectory document (`BENCH_8.json`).
+pub fn results_json(opts: PerfOpts, results: &[ScenarioResult]) -> Json {
+    Json::obj(vec![
+        ("version", Json::Num(1.0)),
+        ("generator", Json::Str("enginecl bench".into())),
+        ("mode", Json::Str(if opts.quick { "quick" } else { "full" }.into())),
+        ("threads", Json::Num(opts.threads as f64)),
+        (
+            "note",
+            Json::Str(
+                "wall-clock timings are machine-dependent; regenerate with \
+                 `cargo run --release -- bench`"
+                    .into(),
+            ),
+        ),
+        ("scenarios", Json::Arr(results.iter().map(ScenarioResult::to_json).collect())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_trajectory_covers_all_regimes_and_percentiles_are_monotone() {
+        let opts = PerfOpts { quick: true, threads: 2 };
+        let results = run(opts);
+        assert_eq!(results.len(), 5);
+        let names: Vec<&str> = results.iter().map(|r| r.name.as_str()).collect();
+        assert!(names.contains(&"pipeline_sweep_pool"));
+        assert!(names.contains(&"fleet_saturated"));
+        for r in &results {
+            assert!(r.cells > 0, "{}: empty grid", r.name);
+            assert!(r.serial_s > 0.0 && r.parallel_s > 0.0);
+            assert!(r.speedup > 0.0 && r.speedup.is_finite());
+            assert!(r.cells_per_sec > 0.0);
+            assert!(r.lat_p50_s <= r.lat_p95_s && r.lat_p95_s <= r.lat_p99_s);
+        }
+        let doc = results_json(opts, &results).to_string();
+        let j = crate::jsonio::Json::parse(&doc).expect("bench JSON parses");
+        assert_eq!(j.get("mode").and_then(|m| m.as_str()), Some("quick"));
+        assert_eq!(j.get("scenarios").unwrap().as_arr().unwrap().len(), 5);
+    }
+}

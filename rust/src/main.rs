@@ -44,14 +44,15 @@ USAGE:
   enginecl iterative [--bench B] [--iters K] [--reps N] [--refine]
   enginecl failure [--bench B] [--at SECONDS]
   enginecl deadline-sweep [--reps N] [--err F] [--budgets M1,M2,..]
-                  [--csv PATH] [--json PATH]   # time-constrained scenarios
+                  [--threads N] [--csv PATH] [--json PATH]
+                  # time-constrained scenarios
   enginecl pipeline-sweep [--benches B1,B2,..] [--iters K] [--reps N]
                   [--policies even,carry,greedy] [--energy race,stretch]
                   [--sched S] [--err F] [--budgets M1,M2,..] [--refine]
                   [--stage-devices M1/M2] [--branch-csv PATH]
                   [--mask-policy P] [--mask-csv PATH]
                   [--contention view|pool] [--contention-csv PATH]
-                  [--csv PATH] [--iter-csv PATH] [--json PATH]
+                  [--threads N] [--csv PATH] [--iter-csv PATH] [--json PATH]
                   # global-deadline pipelines: per-iteration sub-budgets,
                   # plus a branch-parallel vs serial DAG comparison, a
                   # fixed-vs-searching mask-policy comparison and a
@@ -61,11 +62,15 @@ USAGE:
                   [--stage-devices M1/M2] [--loads L1,L2,..] [--requests N]
                   [--deadline-mult F] [--admission P1,P2,..] [--seed N]
                   [--trace FILE.json] [--refine]
-                  [--csv PATH] [--json PATH]
+                  [--threads N] [--csv PATH] [--json PATH]
                   # multi-tenant fleet on ONE shared pool: Poisson (or
                   # trace-driven) arrivals of deadline-bound pipeline
                   # requests, swept over offered load x admission policy;
                   # reports hit rate, p50/p95/p99 slack and J/hit
+  enginecl bench  [--quick] [--threads N] [--out PATH]
+                  # performance trajectory: pinned sweep workloads timed
+                  # serial vs --threads N, view vs pool, small vs
+                  # saturated fleet; writes BENCH_8.json
 
 benches:  gaussian binomial nbody ray ray2 mandelbrot
 scheds:   static static-rev dynamic:N hguided hguided-opt adaptive
@@ -114,6 +119,7 @@ fn main() -> Result<()> {
         "deadline-sweep" => deadline_sweep(args),
         "pipeline-sweep" => pipeline_sweep(args),
         "traffic-sweep" => traffic_sweep_cmd(args),
+        "bench" => bench_cmd(args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -487,7 +493,7 @@ fn deadline_sweep(args: Args) -> Result<()> {
     println!(
         "DEADLINE SWEEP — budgets x{{exact, optimistic, pessimistic}} estimates ({reps} reps)"
     );
-    let rows = experiments::deadline_sweep(reps, &estimates, &mults);
+    let rows = experiments::deadline_sweep(reps, &estimates, &mults, cfg.threads);
     println!(
         "{:<12}{:>12}{:>20}{:>8}{:>11}{:>11}{:>7}{:>11}{:>8}",
         "bench", "sched", "estimate", "budget", "deadline", "roi(s)", "hit", "slack(s)", "eff"
@@ -588,6 +594,7 @@ fn pipeline_sweep(args: Args) -> Result<()> {
         &energies,
         &estimates,
         &mults,
+        cfg.threads,
     );
     println!(
         "{:<12}{:>18}{:>22}{:>20}{:>7}{:>10}{:>6}{:>9}{:>10}{:>11}",
@@ -620,7 +627,7 @@ fn pipeline_sweep(args: Args) -> Result<()> {
     // executed serially vs branch-parallel on the --stage-devices masks,
     // under the same absolute deadlines.
     let branch_rows = experiments::branch_compare(
-        reps, &benches, &masks, iters, &sched, opts, contention, &mults,
+        reps, &benches, &masks, iters, &sched, opts, contention, &mults, cfg.threads,
     );
     println!("-- branch-parallel vs serial ({} branches) --", masks.len());
     println!(
@@ -662,6 +669,7 @@ fn pipeline_sweep(args: Args) -> Result<()> {
             contention,
             &mults,
             mask_policy,
+            cfg.threads,
         );
         println!("-- mask policy: fixed vs {} --", mask_policy.label());
         println!(
@@ -693,8 +701,9 @@ fn pipeline_sweep(args: Args) -> Result<()> {
     // Cross-branch contention headline: the same branch-parallel DAG
     // under view-scoped vs pool-scoped retention, same absolute
     // deadlines — the delta is the interference the legacy model hides.
-    let contention_rows =
-        experiments::contention_compare(reps, &benches, &masks, iters, &sched, opts, &mults);
+    let contention_rows = experiments::contention_compare(
+        reps, &benches, &masks, iters, &sched, opts, &mults, cfg.threads,
+    );
     println!("-- contention: view-scoped vs pool-scoped retention --");
     println!(
         "{:<24}{:<18}{:>11}{:>7}{:>10}{:>6}{:>10}{:>8}{:>11}{:>9}",
@@ -803,6 +812,7 @@ fn traffic_sweep_cmd(args: Args) -> Result<()> {
                 cfg.n_requests as usize,
                 &cfg.admission,
                 cfg.seed,
+                cfg.threads,
             );
             // rate_hz of the lightest load is recomputed inside
             // traffic_fleet from the same t_ref, so reuse the multiplier.
@@ -865,6 +875,54 @@ fn traffic_sweep_cmd(args: Args) -> Result<()> {
         }
         None => println!("{json}"),
     }
+    Ok(())
+}
+
+/// Performance trajectory harness: time the pinned sweep workloads
+/// serial vs parallel and write the committed `BENCH_8.json` document.
+fn bench_cmd(args: Args) -> Result<()> {
+    let threads = match args.flag("threads") {
+        None => enginecl::engine::default_threads(),
+        Some(v) => {
+            let n = v
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--threads must be a positive integer, got '{v}'"))?;
+            if n == 0 {
+                bail!("--threads must be >= 1 (use 1 for the serial path), got 0");
+            }
+            n
+        }
+    };
+    let opts = enginecl::engine::perf::PerfOpts { quick: args.switch("quick"), threads };
+    println!(
+        "PERF TRAJECTORY — pinned sweep workloads, serial vs {} threads ({} mode)",
+        opts.threads,
+        if opts.quick { "quick" } else { "full" }
+    );
+    let results = enginecl::engine::perf::run(opts);
+    println!(
+        "{:<22}{:>7}{:>11}{:>11}{:>9}{:>11}{:>11}{:>11}{:>11}",
+        "scenario", "cells", "serial(s)", "par(s)", "speedup", "cells/s", "p50(ms)", "p95(ms)",
+        "p99(ms)"
+    );
+    for r in &results {
+        println!(
+            "{:<22}{:>7}{:>11.3}{:>11.3}{:>9.2}{:>11.1}{:>11.3}{:>11.3}{:>11.3}",
+            r.name,
+            r.cells,
+            r.serial_s,
+            r.parallel_s,
+            r.speedup,
+            r.cells_per_sec,
+            r.lat_p50_s * 1e3,
+            r.lat_p95_s * 1e3,
+            r.lat_p99_s * 1e3
+        );
+    }
+    let doc = enginecl::engine::perf::results_json(opts, &results);
+    let path = args.flag("out").map(PathBuf::from).unwrap_or_else(|| PathBuf::from("BENCH_8.json"));
+    std::fs::write(&path, format!("{doc}\n"))?;
+    println!("wrote {}", path.display());
     Ok(())
 }
 

@@ -165,6 +165,12 @@ pub fn stage_trace_json(s: &StageTrace) -> Json {
             Json::Arr(retention.iter().map(|&r| Json::Num(r)).collect()),
         ));
     }
+    // Emitted only when the branch-and-bound leaf budget — not the
+    // bounds — cut the mask search short, so every existing document
+    // (and all five goldens) stays byte-identical.
+    if s.mask_search_truncated {
+        pairs.push(("mask_search_truncated", Json::Bool(true)));
+    }
     Json::obj(pairs)
 }
 

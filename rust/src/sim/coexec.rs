@@ -54,6 +54,12 @@ pub struct SimConfig {
     /// device count (cross-branch contention).  Single-shot runs and
     /// serial pipelines are unaffected (their view *is* the active set).
     pub contention: ContentionModel,
+    /// Leaf-visit budget for the branch-and-bound mask search on pools
+    /// wider than the exhaustive-enumeration limit
+    /// ([`crate::sim::DEFAULT_MASK_LEAF_CAP`] by default).  Stages whose
+    /// search the cap — not the bounds — truncated carry a
+    /// `mask_search_truncated` trace note.
+    pub mask_leaf_cap: usize,
 }
 
 impl SimConfig {
@@ -73,6 +79,7 @@ impl SimConfig {
             budget: None,
             estimate: EstimateScenario::Exact,
             contention: ContentionModel::View,
+            mask_leaf_cap: crate::sim::pipeline::DEFAULT_MASK_LEAF_CAP,
         }
     }
 

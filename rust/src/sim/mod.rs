@@ -23,7 +23,7 @@ pub mod tenancy;
 pub use coexec::{simulate, simulate_iterative, DeviceTrace, PackageTrace, SimConfig, SimOutcome};
 pub use pipeline::{
     simulate_pipeline, ActiveWindow, IterOutcome, IterVerdict, PipelineOutcome, PipelineSpec,
-    PipelineStage, ReqDisposition, StageTrace,
+    PipelineStage, ReqDisposition, StageTrace, DEFAULT_MASK_LEAF_CAP,
 };
 pub use tenancy::{
     parse_trace, simulate_fleet, simulate_fleet_of, ArrivalProcess, FleetOutcome, FleetSpec,

@@ -349,6 +349,11 @@ pub struct StageTrace {
     /// Retention factor each chosen device started with (chosen-mask
     /// ascending pool-id order); `None` under view-scoped contention.
     pub retention_at_launch: Option<Vec<f64>>,
+    /// The wide-mask branch-and-bound search exhausted its leaf budget
+    /// ([`SimConfig::mask_leaf_cap`]) before the bounds pruned the rest
+    /// of the subset space — the choice may be sub-optimal.  Always
+    /// false on the exhaustive (narrow-mask) path.
+    pub mask_search_truncated: bool,
 }
 
 impl StageTrace {
@@ -518,11 +523,14 @@ fn edge_transfer_cost(
 /// pools still search instead of silently keeping the spec mask.
 const MASK_SEARCH_LIMIT: usize = 6;
 
-/// Branch-and-bound leaf-visit cap for spec masks wider than
+/// Default branch-and-bound leaf-visit budget for spec masks wider than
 /// [`MASK_SEARCH_LIMIT`]: the DFS stops evaluating new leaves after this
 /// many, bounding worst-case work on very wide pools (a 12-device pool
-/// has 4095 subsets; anything wider is genuinely truncated).
-const MASK_SEARCH_LEAF_CAP: usize = 4096;
+/// has 4095 subsets; anything wider is genuinely truncated).  The live
+/// value is [`SimConfig::mask_leaf_cap`] (ROADMAP item 5b); when the cap
+/// — not the bounds — stops the search, the stage trace records
+/// `mask_search_truncated`.
+pub const DEFAULT_MASK_LEAF_CAP: usize = 4096;
 
 /// Predicted durations of non-spec candidates are inflated by this guard
 /// before the deadline and extension checks: the predictor models
@@ -643,6 +651,9 @@ struct MaskChoice {
     mask: DeviceMask,
     pred_iter_s: f64,
     pred_energy_j: f64,
+    /// The wide-mask search ran out of leaf budget before the bounds
+    /// exhausted the subset space (never set on the exhaustive path).
+    truncated: bool,
 }
 
 impl SelectCtx<'_> {
@@ -776,6 +787,7 @@ fn select_stage_mask(policy: MaskPolicy, spec_mask: DeviceMask, sc: &SelectCtx) 
         mask: spec_mask,
         pred_iter_s: spec_pred.iter_s,
         pred_energy_j: spec_energy,
+        truncated: false,
     };
     if matches!(policy, MaskPolicy::Fixed) || spec_mask.count() == 1 {
         return spec_choice;
@@ -796,6 +808,7 @@ fn select_stage_mask(policy: MaskPolicy, spec_mask: DeviceMask, sc: &SelectCtx) 
                         mask: cand,
                         pred_iter_s: p.iter_s,
                         pred_energy_j: sc.energy(&p, horizon),
+                        truncated: false,
                     };
                 }
             }
@@ -819,6 +832,7 @@ fn select_stage_mask(policy: MaskPolicy, spec_mask: DeviceMask, sc: &SelectCtx) 
                         mask: cand,
                         pred_iter_s: p.iter_s,
                         pred_energy_j: e,
+                        truncated: false,
                     };
                 }
             }
@@ -850,8 +864,10 @@ fn select_stage_mask(policy: MaskPolicy, spec_mask: DeviceMask, sc: &SelectCtx) 
 /// The spec mask seeds the incumbent exactly as in the exhaustive path
 /// (same margins, same deadline gate), so a search that settles on the
 /// spec mask stays bit-identical to `Fixed`.  Leaf evaluations are
-/// capped at [`MASK_SEARCH_LEAF_CAP`]; pools of ≤ 12 devices are
-/// explored exactly.
+/// capped at [`SimConfig::mask_leaf_cap`] (default
+/// [`DEFAULT_MASK_LEAF_CAP`], under which pools of ≤ 12 devices are
+/// explored exactly); a cap-truncated search marks the returned choice so
+/// the stage trace can report it.
 fn select_wide_mask(
     policy: MaskPolicy,
     spec_mask: DeviceMask,
@@ -879,6 +895,9 @@ fn select_wide_mask(
         best_end: f64,
         best_energy: f64,
         leaves: usize,
+        cap: usize,
+        /// Set when the cap — not the bounds — stopped the walk.
+        truncated: bool,
     }
 
     impl Dfs<'_, '_> {
@@ -893,7 +912,10 @@ fn select_wide_mask(
             inc_marg_w: f64,
             inc_free: f64,
         ) {
-            if self.leaves >= MASK_SEARCH_LEAF_CAP {
+            if self.leaves >= self.cap {
+                // Still walking with no budget left: the cap, not the
+                // bounds, is what ends the search.
+                self.truncated = true;
                 return;
             }
             if depth == self.ids.len() {
@@ -914,6 +936,7 @@ fn select_wide_mask(
                                 mask: cand,
                                 pred_iter_s: p.iter_s,
                                 pred_energy_j: self.sc.energy(&p, self.horizon),
+                                truncated: false,
                             };
                         }
                     }
@@ -931,6 +954,7 @@ fn select_wide_mask(
                                 mask: cand,
                                 pred_iter_s: p.iter_s,
                                 pred_energy_j: e,
+                                truncated: false,
                             };
                         }
                     }
@@ -1005,17 +1029,23 @@ fn select_wide_mask(
             mask: spec_mask,
             pred_iter_s: spec_pred.iter_s,
             pred_energy_j: spec_energy,
+            truncated: false,
         },
         best_end: spec_pred.end_s,
         best_energy: MASK_ENERGY_MARGIN * spec_energy,
         leaves: 0,
+        cap: sc.cfg.mask_leaf_cap,
+        truncated: false,
         ids,
         unit_thr,
         suffix_thr,
     };
     let mut included = Vec::with_capacity(dfs.ids.len());
     dfs.walk(0, &mut included, 0.0, 0.0, 0.0);
-    dfs.best
+    let truncated = dfs.truncated;
+    let mut best = dfs.best;
+    best.truncated = truncated;
+    best
 }
 
 /// Cut one stage's device view and run template out of the pool for a
@@ -1391,6 +1421,7 @@ struct Pending {
     transfer_in: f64,
     pred_iter_s: f64,
     pred_energy_j: f64,
+    mask_search_truncated: bool,
 }
 
 /// One running stage of the interleaved pool engine — the per-branch
@@ -1437,6 +1468,7 @@ struct Branch {
     ev_epoch: Vec<u32>,
     active_at_launch: usize,
     retention_at_launch: Vec<f64>,
+    mask_search_truncated: bool,
 }
 
 impl Branch {
@@ -1559,6 +1591,21 @@ struct PoolState {
     /// Latest stage end so far — the serial schedule's one global clock
     /// (view scope only; pool pricing reads `dev_free` instead).
     serial_clock: f64,
+    /// Frontier index of in-flight packages grouped by device class
+    /// ([`cldriver::class_idx`] order): retention depends only on
+    /// class × active count, so an active-set boundary touches exactly
+    /// the classes whose retention actually changed instead of
+    /// rescanning every request × branch × slot.  Entries are
+    /// `(r, b, slot)` coordinates into `reqs`, inserted at package grant
+    /// and removed at package completion; empty under View scope (which
+    /// never re-times).
+    class_inflight: [Vec<(usize, usize, usize)>; 3],
+    /// Retention the compute-live members of each class are currently
+    /// priced at.  Uniform between boundaries: grants price at the
+    /// current active count and every boundary re-prices all live
+    /// members, so `retention_at(class, new_active) == class_retention`
+    /// means the whole class is a no-op and is skipped.
+    class_retention: [f64; 3],
 }
 
 /// Close the current active-set window at `t` (windows with zero active
@@ -1639,16 +1686,88 @@ fn phase_of(iter: u32, iterations: u32) -> IterPhase {
 /// bumping the slot's epoch and a replacement is pushed at the new time
 /// with the *original* tie (simultaneous completions keep grant order).
 /// View-scoped runs never re-time (their retention is per-view).
+///
+/// Frontier-incremental (ROADMAP item 2b): instead of rescanning every
+/// request × branch × slot, the walk covers `PoolState::class_inflight`
+/// — and a class whose `retention_at` is unchanged by the active-set
+/// delta is skipped outright (the common zero-decay / `active ≤ 2` case
+/// re-times nothing).  Per-package arithmetic is unchanged, and the
+/// package set touched is identical to the full rescan (asserted
+/// against [`rescan_retime_oracle`] under test / the `rescan-oracle`
+/// feature), so schedules stay bit-identical.
 fn retime_inflight(st: &mut PoolState, driver: &DriverProfile, t: f64, new_active: usize) {
     if st.scope == PricingScope::View {
         return;
     }
-    let PoolState { reqs, evs, .. } = st;
-    for (r, rs) in reqs.iter_mut().enumerate() {
-        for (b, slot_br) in rs.branches.iter_mut().enumerate() {
+    #[cfg(any(test, feature = "rescan-oracle"))]
+    let oracle = rescan_retime_oracle(st, driver, t, new_active);
+    #[cfg(any(test, feature = "rescan-oracle"))]
+    let mut touched: Vec<(usize, usize, usize, u64)> = Vec::new();
+    let PoolState { reqs, evs, class_inflight, class_retention, .. } = st;
+    for (class, members) in class_inflight.iter().enumerate() {
+        if members.is_empty() {
+            continue;
+        }
+        let r_new = driver.retention_at(class, new_active);
+        if r_new == class_retention[class] {
+            // Every compute-live member already carries `r_new`; the
+            // full rescan would no-op on each of them.
+            continue;
+        }
+        class_retention[class] = r_new;
+        for &(r, b, slot) in members {
+            let br = reqs[r].branches[b].as_mut().expect("indexed branch is live");
+            let pkg = br.inflight[slot].as_mut().expect("indexed package is in flight");
+            if r_new == pkg.retention {
+                continue;
+            }
+            let pivot = t.max(pkg.work_start);
+            if pkg.compute_end <= pivot {
+                continue; // compute finished; only the d2h tail remains
+            }
+            pkg.compute_end = pivot + (pkg.compute_end - pivot) * (pkg.retention / r_new);
+            pkg.retention = r_new;
+            let done = pkg.compute_end + pkg.d2h;
+            br.ev_epoch[slot] = br.ev_epoch[slot].wrapping_add(1);
+            evs.push(PoolEv {
+                t: done,
+                tie: pkg.ev_tie,
+                epoch: br.ev_epoch[slot],
+                kind: PoolEvKind::DevIdle { r, b, slot },
+            });
+            #[cfg(any(test, feature = "rescan-oracle"))]
+            touched.push((r, b, slot, pkg.compute_end.to_bits()));
+        }
+    }
+    #[cfg(any(test, feature = "rescan-oracle"))]
+    {
+        touched.sort_unstable();
+        assert_eq!(
+            touched, oracle,
+            "frontier-incremental re-timing diverged from the full rescan"
+        );
+    }
+}
+
+/// The historical full rescan, kept as a read-only oracle: walks every
+/// request × branch × slot with the exact per-package guards and
+/// arithmetic of the pre-incremental `retime_inflight` and returns the
+/// `(r, b, slot, new_compute_end_bits)` set it would have re-timed, in
+/// scan order.  [`retime_inflight`] asserts bit-identity against it on
+/// every boundary under test builds and the `rescan-oracle` feature.
+#[cfg(any(test, feature = "rescan-oracle"))]
+fn rescan_retime_oracle(
+    st: &PoolState,
+    driver: &DriverProfile,
+    t: f64,
+    new_active: usize,
+) -> Vec<(usize, usize, usize, u64)> {
+    let mut out = Vec::new();
+    for (r, rs) in st.reqs.iter().enumerate() {
+        for (b, slot_br) in rs.branches.iter().enumerate() {
             let Some(br) = slot_br else { continue };
-            for (slot, fl) in br.inflight.iter_mut().enumerate() {
-                let Some(pkg) = fl.as_mut() else { continue };
+            for (slot, fl) in br.inflight.iter().enumerate() {
+                let Some(pkg) = fl.as_ref() else { continue };
                 let class = br.cfg.devices[slot].class;
                 let r_new = driver.retention_at(cldriver::class_idx(class), new_active);
                 if r_new == pkg.retention {
@@ -1656,21 +1775,14 @@ fn retime_inflight(st: &mut PoolState, driver: &DriverProfile, t: f64, new_activ
                 }
                 let pivot = t.max(pkg.work_start);
                 if pkg.compute_end <= pivot {
-                    continue; // compute finished; only the d2h tail remains
+                    continue;
                 }
-                pkg.compute_end = pivot + (pkg.compute_end - pivot) * (pkg.retention / r_new);
-                pkg.retention = r_new;
-                let done = pkg.compute_end + pkg.d2h;
-                br.ev_epoch[slot] = br.ev_epoch[slot].wrapping_add(1);
-                evs.push(PoolEv {
-                    t: done,
-                    tie: pkg.ev_tie,
-                    epoch: br.ev_epoch[slot],
-                    kind: PoolEvKind::DevIdle { r, b, slot },
-                });
+                let end = pivot + (pkg.compute_end - pivot) * (pkg.retention / r_new);
+                out.push((r, b, slot, end.to_bits()));
             }
         }
     }
+    out
 }
 
 /// Build one pass's scheduler for a branch: `P_i` estimates priced at the
@@ -1933,6 +2045,7 @@ fn launch_scan_req(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usi
             transfer_in,
             pred_iter_s: choice.pred_iter_s,
             pred_energy_j: choice.pred_energy_j,
+            mask_search_truncated: choice.truncated,
         });
         st.evs.push(PoolEv {
             t: start,
@@ -2009,6 +2122,7 @@ fn stage_start(st: &mut PoolState, prep: &Prep, r: usize, pos: usize, t: f64) {
         prev_sub: carry_seed(st, prep, r, si, gi_base),
         active_at_launch: new_active,
         retention_at_launch,
+        mask_search_truncated: p.mask_search_truncated,
     };
     begin_pass(st, prep, r, &mut br, pos, t);
     st.reqs[r].branches[pos] = Some(br);
@@ -2064,6 +2178,7 @@ fn complete_stage(
         marginal_energy_j,
         active_at_launch: pool_scoped.then_some(br.active_at_launch),
         retention_at_launch: pool_scoped.then_some(br.retention_at_launch),
+        mask_search_truncated: br.mask_search_truncated,
     });
     reconsider_queued(st, preps, end);
     launch_scan(st, preps, pool, end);
@@ -2113,6 +2228,15 @@ fn dev_idle(
         st.reqs[r].branches[b_pos].take().expect("running branch behind DevIdle event");
     br.live -= 1;
     if let Some(pkg) = br.inflight[slot].take() {
+        if st.scope == PricingScope::Pool {
+            let ci = cldriver::class_idx(br.cfg.devices[slot].class);
+            let members = &mut st.class_inflight[ci];
+            let at = members
+                .iter()
+                .position(|&m| m == (r, b_pos, slot))
+                .expect("completed package is indexed");
+            members.swap_remove(at);
+        }
         let pid = br.view.pool_ids[slot];
         let done = pkg.compute_end + pkg.d2h;
         // Fault injection is judged against the *final* (re-timed)
@@ -2215,6 +2339,10 @@ fn dev_idle(
                     groups,
                     ev_tie: st.tie,
                 });
+                if st.scope == PricingScope::Pool {
+                    st.class_inflight[class].push((r, b_pos, slot));
+                    st.class_retention[class] = retention;
+                }
                 st.evs.push(PoolEv {
                     t: pricing.done,
                     tie: st.tie,
@@ -2535,6 +2663,8 @@ pub(crate) fn fleet_schedule(
         window_start: 0.0,
         active_windows: Vec::new(),
         serial_clock: 0.0,
+        class_inflight: [Vec::new(), Vec::new(), Vec::new()],
+        class_retention: [1.0; 3],
     };
     // Later arrivals enter through events; time-zero arrivals face
     // admission before the event loop, exactly like the standalone
@@ -3320,6 +3450,133 @@ mod tests {
             simulate_pipeline(&PipelineSpec::repeat(b, 2).with_budget(cfg.budget), &cfg);
         assert_eq!(fixed.stages[0].mask, fixed.stages[0].spec_mask, "spec mask kept");
         assert_eq!(fixed.stages[0].mask.count(), 7);
+    }
+
+    #[test]
+    fn tiny_leaf_cap_flags_truncated_wide_search() {
+        // ROADMAP item 5b: when the leaf budget (not the bounds) ends
+        // the wide-mask search, the stage trace says so — and the JSON
+        // document carries `mask_search_truncated` only then, so every
+        // default-cap run (and all the goldens) stays byte-identical.
+        use crate::types::DeviceSpec;
+        let b = Bench::new(BenchId::Gaussian);
+        let kind = SchedulerKind::HGuided { params: HGuidedParams::uniform(7, 1, 2.0) };
+        let mut cfg = SimConfig::testbed(&b, kind);
+        cfg.gws = Some(b.default_gws / 32);
+        cfg.devices = (0..7)
+            .map(|i| DeviceSpec {
+                class: match i {
+                    1 => DeviceClass::IGpu,
+                    2 => DeviceClass::DGpu,
+                    _ => DeviceClass::Cpu,
+                },
+                power: match i {
+                    2 => 1.0,
+                    1 => 0.4,
+                    0 => 0.15,
+                    _ => 0.02,
+                },
+            })
+            .collect();
+        cfg.budget = Some(TimeBudget::new(1e6));
+        let spec = PipelineSpec::repeat(b.clone(), 2)
+            .with_budget(cfg.budget)
+            .with_mask_policy(MaskPolicy::MinEnergy);
+        // One leaf, then the DFS still has subtrees left: truncated.
+        cfg.mask_leaf_cap = 1;
+        let capped = simulate_pipeline(&spec, &cfg);
+        assert!(
+            capped.stages.iter().all(|s| s.mask_search_truncated),
+            "a 1-leaf budget cannot finish a 7-device search"
+        );
+        let doc = crate::metrics::pipeline_json(&capped).to_string();
+        assert!(doc.contains("\"mask_search_truncated\":true"), "trace note emitted: {doc}");
+        // The default budget walks all 127 subsets of the 7-device pool
+        // to the end: no truncation, no JSON field.
+        cfg.mask_leaf_cap = DEFAULT_MASK_LEAF_CAP;
+        let full = simulate_pipeline(&spec, &cfg);
+        assert!(full.stages.iter().all(|s| !s.mask_search_truncated));
+        let doc = crate::metrics::pipeline_json(&full).to_string();
+        assert!(!doc.contains("mask_search_truncated"), "field absent on complete searches");
+        // Fixed never enters the search, so even a 1-leaf budget cannot
+        // mark it truncated.
+        cfg.mask_leaf_cap = 1;
+        let fixed =
+            simulate_pipeline(&PipelineSpec::repeat(b, 2).with_budget(cfg.budget), &cfg);
+        assert!(fixed.stages.iter().all(|s| !s.mask_search_truncated));
+    }
+
+    #[test]
+    fn prop_incremental_retime_matches_rescan_oracle_on_random_dags() {
+        // The frontier-incremental re-timer carries its own oracle under
+        // cfg(test): every active-set boundary asserts that the set of
+        // touched packages — and each one's new compute_end, bit for bit
+        // — equals what the historical full rescan would have produced.
+        // Drive that assertion across random masked DAGs with a non-zero
+        // contention curve (so the third active device really re-prices
+        // running branches) and mid-pipeline device faults; a divergence
+        // panics inside retime_inflight naming the boundary.
+        for case in 0..30u64 {
+            let mut rng = XorShift64::new(18_000 + case);
+            let n_stages = 2 + rng.below(3) as usize;
+            let fault = rng.below(3) == 0;
+            let mut stages = Vec::with_capacity(n_stages);
+            let mut expected_groups = 0u64;
+            let mut benches = Vec::with_capacity(n_stages);
+            for s in 0..n_stages {
+                let id = BenchId::ALL[rng.below(6) as usize];
+                let bench = Bench::new(id);
+                let gws = bench.default_gws >> (rng.below(3) + 4);
+                let iterations = 1 + rng.below(3) as u32;
+                let bits = 1 + rng.below(7);
+                let mut mask = DeviceMask::from_indices(
+                    &(0..3usize).filter(|&i| bits >> i & 1 == 1).collect::<Vec<_>>(),
+                );
+                if fault {
+                    // Keep survivors in every view so the re-queue has
+                    // a home after device 0 dies.
+                    mask = mask.union(DeviceMask::from_indices(&[1, 2]));
+                }
+                let mut stage = PipelineStage::new(bench.clone(), iterations)
+                    .with_gws(gws)
+                    .on_devices(mask);
+                for dep in 0..s {
+                    if rng.below(3) == 0 {
+                        stage = stage.after(&[dep]);
+                    }
+                }
+                expected_groups += iterations as u64 * bench.groups(gws);
+                benches.push(bench);
+                stages.push(stage);
+            }
+            let spec = PipelineSpec {
+                stages,
+                budget: if rng.below(2) == 0 {
+                    Some(TimeBudget::new(rng.uniform(1e-3, 30.0)))
+                } else {
+                    None
+                },
+                policy: BudgetPolicy::ALL[rng.below(3) as usize],
+                energy: EnergyPolicy::RaceToIdle,
+                mask_policy: MaskPolicy::Fixed,
+                serial: false,
+            };
+            let mut cfg = SimConfig::testbed(&benches[0], hguided_opt());
+            cfg.seed = case + 1;
+            cfg.contention = ContentionModel::Pool;
+            cfg.driver.contention_decay = [
+                rng.uniform(0.02, 0.3),
+                rng.uniform(0.02, 0.3),
+                rng.uniform(0.02, 0.3),
+            ];
+            if fault {
+                cfg.fail = Some((0, rng.uniform(0.0, 2.0)));
+            }
+            let out = simulate_pipeline(&spec, &cfg);
+            let groups: u64 = out.devices.iter().map(|d| d.groups).sum();
+            assert_eq!(groups, expected_groups, "case {case}: work lost across re-timings");
+            assert!(out.roi_time > 0.0 && out.roi_time.is_finite(), "case {case}");
+        }
     }
 
     #[test]

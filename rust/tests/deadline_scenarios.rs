@@ -67,8 +67,12 @@ fn adaptive_tops_mean_efficiency_under_pessimistic_sweep() {
     // scheduler's mean efficiency is at least that of the best Fig.-3
     // configuration (tiny epsilon absorbs jitter noise).
     let est = EstimateScenario::Pessimistic { err: 0.3 };
-    let rows =
-        experiments::deadline_sweep(8, &[est], &experiments::deadline_budget_mults());
+    let rows = experiments::deadline_sweep(
+        8,
+        &[est],
+        &experiments::deadline_budget_mults(),
+        enginecl::engine::default_threads(),
+    );
     let means = experiments::deadline_scheduler_means(&rows, &est.label());
     let adaptive = mean_of(&means, "Adaptive");
     let best_other = means
@@ -120,7 +124,12 @@ fn adaptive_tops_mean_efficiency_under_pessimistic_sweep() {
 #[test]
 fn sweep_hit_rates_track_budget_multipliers() {
     // Looser budgets can only improve a scheduler's hit rate.
-    let rows = experiments::deadline_sweep(6, &[EstimateScenario::Exact], &[1.05, 1.5]);
+    let rows = experiments::deadline_sweep(
+        6,
+        &[EstimateScenario::Exact],
+        &[1.05, 1.5],
+        enginecl::engine::default_threads(),
+    );
     for id in BenchId::ALL {
         let pick = |mult: f64| -> f64 {
             let grp: Vec<f64> = rows
@@ -143,7 +152,7 @@ fn sweep_hit_rates_track_budget_multipliers() {
 
 #[test]
 fn sweep_emits_per_run_efficiency_and_slack_json() {
-    let rows = experiments::deadline_sweep(3, &[EstimateScenario::Exact], &[1.2]);
+    let rows = experiments::deadline_sweep(3, &[EstimateScenario::Exact], &[1.2], 2);
     let doc = experiments::deadline_rows_json(&rows).to_string();
     let parsed = Json::parse(&doc).expect("sweep JSON parses");
     let arr = parsed.as_arr().unwrap();

@@ -82,6 +82,7 @@ fn carry_over_slack_serves_sub_deadlines_at_least_as_well_as_even_split() {
         &[EnergyPolicy::RaceToIdle],
         &[EstimateScenario::Pessimistic { err: 0.3 }],
         &[0.9, 1.05, 1.2],
+        enginecl::engine::default_threads(),
     );
     let est = EstimateScenario::Pessimistic { err: 0.3 }.label();
     let means = experiments::pipeline_policy_means(&rows, &est);
@@ -187,6 +188,7 @@ fn adaptive_pipeline_sweep_emits_verdicts_and_j_per_hit() {
         &[EnergyPolicy::RaceToIdle],
         &[EstimateScenario::Exact, EstimateScenario::Pessimistic { err: 0.3 }],
         &[1.1],
+        enginecl::engine::default_threads(),
     );
     assert_eq!(rows.len(), 2 * 4 * 2, "benches x policies x estimates");
     assert_eq!(iters.len(), rows.len() * 5);

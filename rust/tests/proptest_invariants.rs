@@ -6,6 +6,7 @@
 //! §Substitutions).
 
 use enginecl::benchsuite::{Bench, BenchId};
+use enginecl::engine::experiments;
 use enginecl::scheduler::{
     AdaptiveParams, HGuided, HGuidedParams, SchedCtx, Scheduler, SchedulerKind,
 };
@@ -16,7 +17,7 @@ use enginecl::sim::{
 use enginecl::stats::XorShift64;
 use enginecl::types::{
     AdmissionPolicy, BudgetPolicy, ContentionModel, DeviceMask, EnergyPolicy, EstimateScenario,
-    ExecMode, GroupRange, MaskPolicy, TimeBudget,
+    ExecMode, GroupRange, MaskPolicy, Optimizations, TimeBudget,
 };
 
 /// Random scheduler context: 1–6 devices, powers in (0.05, 1], any total.
@@ -891,6 +892,108 @@ fn prop_jsonio_roundtrips_random_documents() {
         let text = doc.to_string();
         let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
         assert_eq!(doc, back, "case {case}: {text}");
+    }
+}
+
+#[test]
+fn prop_parallel_sweep_rows_bit_identical_to_serial() {
+    // The fan-out must be invisible: on random grids (random scheduler,
+    // reps, budget ladder, contention scope) every row a multi-threaded
+    // sweep emits must match the `--threads 1` legacy path bit for bit
+    // and in the same order — per-cell RNG forks make cells independent
+    // of scheduling.
+    for case in 0..6u64 {
+        let mut rng = XorShift64::new(17_000 + case);
+        let reps = 2 + rng.below(2) as usize;
+        let n_mults = 1 + rng.below(2) as usize;
+        let mults: Vec<f64> = (0..n_mults).map(|_| rng.uniform(0.9, 1.6)).collect();
+        let threads = 2 + rng.below(3) as usize;
+        let kind = random_kind(&mut rng, 3);
+        let benches =
+            [BenchId::ALL[rng.below(6) as usize], BenchId::ALL[rng.below(6) as usize]];
+        let masks = [DeviceMask::from_indices(&[0, 1]), DeviceMask::single(2)];
+        let contention = if rng.below(2) == 0 {
+            ContentionModel::View
+        } else {
+            ContentionModel::Pool
+        };
+        let serial = experiments::branch_compare(
+            reps,
+            &benches,
+            &masks,
+            2,
+            &kind,
+            Optimizations::ALL,
+            contention,
+            &mults,
+            1,
+        );
+        let fanned = experiments::branch_compare(
+            reps,
+            &benches,
+            &masks,
+            2,
+            &kind,
+            Optimizations::ALL,
+            contention,
+            &mults,
+            threads,
+        );
+        assert_eq!(serial.len(), fanned.len(), "case {case}");
+        for (s, p) in serial.iter().zip(&fanned) {
+            assert_eq!(s.pipeline, p.pipeline, "case {case}");
+            assert_eq!(s.mode, p.mode, "case {case}");
+            assert_eq!(s.budget_mult.to_bits(), p.budget_mult.to_bits(), "case {case}");
+            assert_eq!(s.deadline_s.to_bits(), p.deadline_s.to_bits(), "case {case}");
+            assert_eq!(s.mean_roi_s.to_bits(), p.mean_roi_s.to_bits(), "case {case}");
+            assert_eq!(s.hit_rate.to_bits(), p.hit_rate.to_bits(), "case {case}");
+            assert_eq!(s.mean_slack_s.to_bits(), p.mean_slack_s.to_bits(), "case {case}");
+            assert_eq!(
+                s.mean_pool_utilization.to_bits(),
+                p.mean_pool_utilization.to_bits(),
+                "case {case}"
+            );
+            assert_eq!(s.mean_energy_j.to_bits(), p.mean_energy_j.to_bits(), "case {case}");
+        }
+        // The fleet sweep fans Poisson fleets the same way: same rows,
+        // same bits, tail percentiles included.
+        let n_loads = 1 + rng.below(2) as usize;
+        let loads: Vec<f64> = (0..n_loads).map(|_| rng.uniform(0.25, 3.0)).collect();
+        let n_requests = 4 + rng.below(6) as usize;
+        let policies = [AdmissionPolicy::Accept, AdmissionPolicy::ShedLowestSlack];
+        let run = |t: usize| {
+            experiments::traffic_sweep(
+                &benches,
+                &masks,
+                2,
+                &kind,
+                Optimizations::ALL,
+                1.4,
+                &loads,
+                n_requests,
+                &policies,
+                case + 1,
+                t,
+            )
+        };
+        let serial = run(1);
+        let fanned = run(threads);
+        assert_eq!(serial.len(), fanned.len(), "case {case}");
+        let opt_bits = |v: Option<f64>| v.map(f64::to_bits);
+        for (s, p) in serial.iter().zip(&fanned) {
+            assert_eq!(s.admission, p.admission, "case {case}");
+            assert_eq!(s.load_mult.to_bits(), p.load_mult.to_bits(), "case {case}");
+            assert_eq!(s.rate_hz.to_bits(), p.rate_hz.to_bits(), "case {case}");
+            assert_eq!(s.n_completed, p.n_completed, "case {case}");
+            assert_eq!(s.n_rejected, p.n_rejected, "case {case}");
+            assert_eq!(s.n_shed, p.n_shed, "case {case}");
+            assert_eq!(s.hit_rate.to_bits(), p.hit_rate.to_bits(), "case {case}");
+            assert_eq!(opt_bits(s.slack_p50_s), opt_bits(p.slack_p50_s), "case {case}");
+            assert_eq!(opt_bits(s.slack_p95_s), opt_bits(p.slack_p95_s), "case {case}");
+            assert_eq!(opt_bits(s.slack_p99_s), opt_bits(p.slack_p99_s), "case {case}");
+            assert_eq!(s.makespan_s.to_bits(), p.makespan_s.to_bits(), "case {case}");
+            assert_eq!(s.energy_j.to_bits(), p.energy_j.to_bits(), "case {case}");
+        }
     }
 }
 

@@ -99,6 +99,7 @@ fn saturation_knee_hit_rate_monotone_and_shed_dominates_at_peak() {
         12,
         &[AdmissionPolicy::Accept, AdmissionPolicy::ShedLowestSlack],
         7,
+        enginecl::engine::default_threads(),
     );
     assert_eq!(rows.len(), loads.len() * 2);
 
