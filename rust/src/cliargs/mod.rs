@@ -12,7 +12,7 @@
 use crate::scheduler::SchedulerKind;
 use crate::types::{
     AdmissionPolicy, BudgetPolicy, ContentionModel, DeviceClass, DeviceMask, EnergyPolicy,
-    MaskPolicy,
+    MaskPolicy, PreemptionPolicy,
 };
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -213,6 +213,12 @@ pub struct SweepConfig {
     /// Per-request deadline as a multiple of the solo service time.
     pub deadline_mult: f64,
     pub admission: Vec<AdmissionPolicy>,
+    /// Tenant priority weights (`--priorities`): one tenant per weight,
+    /// requests assigned round-robin.  `[1.0]` = the single neutral
+    /// tenant (legacy behavior, golden-pinned).
+    pub priorities: Vec<f64>,
+    /// Iteration-boundary preemption policy (`--preemption`).
+    pub preemption: PreemptionPolicy,
     /// Trace-driven arrivals: JSON file of arrival offsets (seconds).
     pub trace: Option<PathBuf>,
     pub seed: u64,
@@ -245,6 +251,8 @@ impl SweepConfig {
             n_requests: 16,
             deadline_mult: 1.5,
             admission: AdmissionPolicy::ALL.to_vec(),
+            priorities: vec![1.0],
+            preemption: PreemptionPolicy::Never,
             trace: None,
             seed: 1,
             threads: crate::engine::default_threads(),
@@ -404,6 +412,24 @@ pub const SWEEP_FLAGS: &[(&str, &str, SweepApply)] = &[
         }
         if c.admission.is_empty() {
             bail!("--admission must name at least one entry");
+        }
+        Ok(())
+    }),
+    ("priorities", "comma-separated tenant priority weights (> 0; one tenant each)", |a, c| {
+        let d = c.priorities.clone();
+        c.priorities = a.f64_list("priorities", &d)?;
+        if c.priorities.is_empty()
+            || c.priorities.iter().any(|&w| !(w > 0.0 && w.is_finite()))
+        {
+            bail!("--priorities must be positive finite weights");
+        }
+        Ok(())
+    }),
+    ("preemption", "iteration-boundary preemption: never|iteration-boundary", |a, c| {
+        if let Some(v) = a.flag("preemption") {
+            c.preemption = PreemptionPolicy::parse(v).ok_or_else(|| {
+                anyhow!("--preemption: unknown policy '{v}' (never|iteration-boundary)")
+            })?;
         }
         Ok(())
     }),
@@ -618,6 +644,8 @@ mod tests {
         assert_eq!(c.n_requests, 16);
         assert_eq!(c.deadline_mult, 1.5);
         assert_eq!(c.admission, AdmissionPolicy::ALL.to_vec());
+        assert_eq!(c.priorities, vec![1.0], "single neutral tenant by default");
+        assert_eq!(c.preemption, PreemptionPolicy::Never);
         assert_eq!(c.policies, BudgetPolicy::ALL.to_vec());
         assert!(c.scheduler.is_none());
         assert!(c.trace.is_none());
@@ -633,6 +661,7 @@ mod tests {
              --benches gaussian --policies carry --energy stretch --sched adaptive \
              --refine --stage-devices cpu/gpu --mask-policy fixed --contention pool \
              --loads 0.25,4 --requests 8 --deadline-mult 2.5 --admission shed \
+             --priorities 1,4 --preemption iteration-boundary \
              --trace arrivals.json --seed 7 --threads 3",
         )
         .unwrap();
@@ -652,6 +681,8 @@ mod tests {
         assert_eq!(c.n_requests, 8);
         assert_eq!(c.deadline_mult, 2.5);
         assert_eq!(c.admission, vec![AdmissionPolicy::ShedLowestSlack]);
+        assert_eq!(c.priorities, vec![1.0, 4.0]);
+        assert_eq!(c.preemption, PreemptionPolicy::IterationBoundary);
         assert_eq!(c.trace.as_deref().and_then(|p| p.to_str()), Some("arrivals.json"));
         assert_eq!(c.seed, 7);
         assert_eq!(c.threads, 3);
@@ -684,6 +715,10 @@ mod tests {
             ("x --deadline-mult -2", "--deadline-mult"),
             ("x --deadline-mult inf", "--deadline-mult"),
             ("x --admission fifo", "--admission"),
+            ("x --priorities 1,zap", "--priorities"),
+            ("x --priorities 0", "--priorities"),
+            ("x --priorities -2", "--priorities"),
+            ("x --preemption sometimes", "--preemption"),
             ("x --seed -3", "--seed"),
             ("x --seed sixteen", "--seed"),
             ("x --threads 0", "--threads"),

@@ -10,10 +10,10 @@ use crate::metrics;
 use crate::scheduler::{HGuidedParams, SchedulerKind};
 use crate::sim::{simulate_pipeline, PipelineSpec, PipelineStage, SimConfig};
 use crate::stats::geomean;
-use crate::sim::tenancy::{ArrivalProcess, FleetOutcome, FleetSpec};
+use crate::sim::tenancy::{simulate_fleet_of, ArrivalProcess, FleetOutcome};
 use crate::types::{
     AdmissionPolicy, BudgetPolicy, ContentionModel, DeviceMask, EnergyPolicy, EstimateScenario,
-    ExecMode, MaskPolicy, Optimizations, TimeBudget,
+    ExecMode, MaskPolicy, Optimizations, PreemptionPolicy, TimeBudget,
 };
 
 use super::{par, Engine};
@@ -1182,6 +1182,7 @@ pub fn mask_compare(
         energy: EnergyPolicy::RaceToIdle,
         mask_policy: mp,
         serial: false,
+        priority: 1.0,
     };
     // Unconstrained Fixed reference for the budget ladder (the acceptance
     // scenario's "full-mask makespan").
@@ -1352,6 +1353,7 @@ pub fn contention_compare(
             energy: EnergyPolicy::RaceToIdle,
             mask_policy: MaskPolicy::Fixed,
             serial: false,
+            priority: 1.0,
         };
         match budget {
             Some(d) => s.with_deadline(d),
@@ -1439,6 +1441,9 @@ pub struct TrafficRow {
     pub n_completed: usize,
     pub n_rejected: usize,
     pub n_shed: usize,
+    /// Total iteration-boundary preemptions across the fleet (0 under
+    /// `--preemption never`).
+    pub n_preempted: usize,
     /// Deadline hit rate over *offered* requests (rejected/shed = miss).
     pub hit_rate: f64,
     pub slack_p50_s: Option<f64>,
@@ -1457,12 +1462,12 @@ fn opt_cell(v: Option<f64>) -> String {
 impl CsvRow for TrafficRow {
     fn csv_header() -> &'static str {
         "pipeline,admission,load_mult,rate_hz,deadline_s,n_requests,n_completed,\
-         n_rejected,n_shed,hit_rate,slack_p50_s,slack_p95_s,slack_p99_s,\
+         n_rejected,n_shed,n_preempted,hit_rate,slack_p50_s,slack_p95_s,slack_p99_s,\
          makespan_s,energy_j,j_per_hit"
     }
     fn csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             self.pipeline,
             self.admission,
             self.load_mult,
@@ -1472,6 +1477,7 @@ impl CsvRow for TrafficRow {
             self.n_completed,
             self.n_rejected,
             self.n_shed,
+            self.n_preempted,
             self.hit_rate,
             opt_cell(self.slack_p50_s),
             opt_cell(self.slack_p95_s),
@@ -1502,6 +1508,7 @@ impl TrafficRow {
             n_completed: out.n_completed,
             n_rejected: out.n_rejected,
             n_shed: out.n_shed,
+            n_preempted: out.n_preempted,
             hit_rate: out.hit_rate,
             slack_p50_s: out.slack_p50_s,
             slack_p95_s: out.slack_p95_s,
@@ -1523,6 +1530,7 @@ impl TrafficRow {
             ("n_completed", Json::Num(self.n_completed as f64)),
             ("n_rejected", Json::Num(self.n_rejected as f64)),
             ("n_shed", Json::Num(self.n_shed as f64)),
+            ("n_preempted", Json::Num(self.n_preempted as f64)),
             ("hit_rate", Json::Num(self.hit_rate)),
             ("slack_p50_s", Json::opt_num(self.slack_p50_s)),
             ("slack_p95_s", Json::opt_num(self.slack_p95_s)),
@@ -1547,11 +1555,13 @@ pub fn traffic_load_mults() -> Vec<f64> {
 }
 
 /// Sweep offered load × admission policy over a Poisson fleet of
-/// identical branch-parallel pipelines (the [`branch_compare`] DAG) on
-/// the shared pool.  Each request carries the same relative deadline
+/// branch-parallel pipelines (the [`branch_compare`] DAG) on the shared
+/// pool.  Each request carries the same relative deadline
 /// (`deadline_mult` × the unconstrained single-request pool ROI time);
 /// offered loads are multiples of that service rate, so the saturation
 /// knee sits near `load_mult` ≈ number of independent branches.
+/// `priorities` spawns one tenant per weight (requests assigned
+/// round-robin); `[1.0]` is the legacy single-tenant fleet.
 #[allow(clippy::too_many_arguments)]
 pub fn traffic_sweep(
     benches: &[BenchId],
@@ -1563,12 +1573,15 @@ pub fn traffic_sweep(
     load_mults: &[f64],
     n_requests: usize,
     policies: &[AdmissionPolicy],
+    priorities: &[f64],
+    preemption: PreemptionPolicy,
     seed: u64,
     threads: usize,
 ) -> Vec<TrafficRow> {
     assert!(!load_mults.is_empty(), "need at least one offered-load level");
     assert!(n_requests >= 1, "need at least one request");
     assert!(!policies.is_empty(), "need at least one admission policy");
+    assert!(!priorities.is_empty(), "need at least one priority weight");
     let stages = branch_stages(benches, masks, iterations);
     let template = Bench::new(benches[0]);
     let mk_spec = || PipelineSpec {
@@ -1578,6 +1591,7 @@ pub fn traffic_sweep(
         energy: EnergyPolicy::RaceToIdle,
         mask_policy: MaskPolicy::Fixed,
         serial: false,
+        priority: 1.0,
     };
     let mut cfg = SimConfig::testbed(&template, scheduler.clone());
     cfg.opts = opts;
@@ -1587,6 +1601,10 @@ pub fn traffic_sweep(
     // deadline and the load ladder.
     let t_ref = simulate_pipeline(&mk_spec(), &cfg).roi_time;
     let spec = mk_spec().with_deadline(deadline_mult * t_ref);
+    // One tenant template per priority weight; `[1.0]` leaves the
+    // single-template fleet bit-identical to the pre-priority sweep.
+    let templates: Vec<PipelineSpec> =
+        priorities.iter().map(|&w| spec.clone().with_priority(w)).collect();
     // Cells in the serial nest order (load -> admission); every fleet is
     // seeded from `cfg.seed`, so fanning them out is bit-identical.
     let mut cells: Vec<(f64, AdmissionPolicy)> = Vec::new();
@@ -1597,12 +1615,13 @@ pub fn traffic_sweep(
     }
     par::parallel_map(threads, cells, |&(mult, admission)| {
         let rate_hz = mult / t_ref;
-        let fleet = FleetSpec {
-            template: spec.clone(),
-            arrivals: ArrivalProcess::Poisson { rate_hz, n: n_requests },
+        let out = simulate_fleet_of(
+            &templates,
+            &ArrivalProcess::Poisson { rate_hz, n: n_requests },
             admission,
-        };
-        let out = crate::sim::simulate_fleet(&fleet, &cfg);
+            preemption,
+            &cfg,
+        );
         TrafficRow::from_fleet(&spec.label(), mult, rate_hz, deadline_mult * t_ref, &out)
     })
 }
@@ -1623,8 +1642,11 @@ pub fn traffic_fleet(
     deadline_mult: f64,
     arrivals: ArrivalProcess,
     admission: AdmissionPolicy,
+    priorities: &[f64],
+    preemption: PreemptionPolicy,
     seed: u64,
 ) -> (FleetOutcome, f64, String) {
+    assert!(!priorities.is_empty(), "need at least one priority weight");
     let stages = branch_stages(benches, masks, iterations);
     let template = Bench::new(benches[0]);
     let mk_spec = || PipelineSpec {
@@ -1634,6 +1656,7 @@ pub fn traffic_fleet(
         energy: EnergyPolicy::RaceToIdle,
         mask_policy: MaskPolicy::Fixed,
         serial: false,
+        priority: 1.0,
     };
     let mut cfg = SimConfig::testbed(&template, scheduler.clone());
     cfg.opts = opts;
@@ -1642,8 +1665,9 @@ pub fn traffic_fleet(
     let t_ref = simulate_pipeline(&mk_spec(), &cfg).roi_time;
     let spec = mk_spec().with_deadline(deadline_mult * t_ref);
     let label = spec.label();
-    let fleet = FleetSpec { template: spec, arrivals, admission };
-    (crate::sim::simulate_fleet(&fleet, &cfg), t_ref, label)
+    let templates: Vec<PipelineSpec> =
+        priorities.iter().map(|&w| spec.clone().with_priority(w)).collect();
+    (simulate_fleet_of(&templates, &arrivals, admission, preemption, &cfg), t_ref, label)
 }
 
 /// Trace-driven companion to [`traffic_sweep`]: the same pipeline
@@ -1659,6 +1683,8 @@ pub fn traffic_trace(
     deadline_mult: f64,
     arrivals: &ArrivalProcess,
     policies: &[AdmissionPolicy],
+    priorities: &[f64],
+    preemption: PreemptionPolicy,
     seed: u64,
 ) -> Vec<TrafficRow> {
     assert!(!policies.is_empty(), "need at least one admission policy");
@@ -1674,6 +1700,8 @@ pub fn traffic_trace(
                 deadline_mult,
                 arrivals.clone(),
                 admission,
+                priorities,
+                preemption,
                 seed,
             );
             let rate_hz = out.offered_load;

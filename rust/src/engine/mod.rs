@@ -78,6 +78,14 @@ impl Request {
         self
     }
 
+    /// Tenant priority weight (> 0) honored by weighted admission and
+    /// preemption in fleet runs; delegates to
+    /// [`PipelineSpec::with_priority`].
+    pub fn priority(mut self, weight: f64) -> Self {
+        self.spec = self.spec.with_priority(weight);
+        self
+    }
+
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self

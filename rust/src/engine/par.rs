@@ -51,7 +51,20 @@ where
                 })
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("sweep worker panicked")).collect()
+        // Collect every join result before unwinding: a worker's panic
+        // payload (an assertion message, a proptest minimization report)
+        // must reach the caller verbatim, not be replaced by a generic
+        // "worker panicked" string — and the remaining handles must still
+        // be joined so the scope exits cleanly.
+        let joined: Vec<_> = handles.into_iter().map(|h| h.join()).collect();
+        let mut shards = Vec::with_capacity(joined.len());
+        for res in joined {
+            match res {
+                Ok(local) => shards.push(local),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        shards
     });
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     for shard in &mut shards {
@@ -92,5 +105,28 @@ mod tests {
     #[test]
     fn default_threads_is_at_least_one() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn worker_panic_payload_survives_verbatim() {
+        // The original assertion message must propagate through the
+        // scatter-gather, not be masked by a generic join() expect.
+        let items: Vec<usize> = (0..16).collect();
+        let caught = std::panic::catch_unwind(|| {
+            parallel_map(4, items, |&i| {
+                assert!(i != 11, "cell 11 violated the invariant: slack=-0.25");
+                i
+            })
+        })
+        .expect_err("the panicking cell must unwind to the caller");
+        let msg = caught
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| caught.downcast_ref::<&str>().map(|s| s.to_string()))
+            .expect("payload should be a string");
+        assert!(
+            msg.contains("cell 11 violated the invariant: slack=-0.25"),
+            "original panic message destroyed; got: {msg}"
+        );
     }
 }

@@ -109,6 +109,7 @@ fn latency_samples(contention: ContentionModel, iters: u32, samples: usize) -> V
         energy: EnergyPolicy::RaceToIdle,
         mask_policy: MaskPolicy::Fixed,
         serial: false,
+        priority: 1.0,
     };
     (0..samples)
         .map(|rep| {
@@ -220,6 +221,8 @@ pub fn run(opts: PerfOpts) -> Vec<ScenarioResult> {
             &[0.25, 0.5, 1.0],
             f_small_n,
             &[AdmissionPolicy::Accept, AdmissionPolicy::ShedLowestSlack],
+            &[1.0],
+            crate::types::PreemptionPolicy::Never,
             7,
             t,
         )
@@ -240,6 +243,8 @@ pub fn run(opts: PerfOpts) -> Vec<ScenarioResult> {
             &[2.0, 4.0],
             f_sat_n,
             &[AdmissionPolicy::Accept, AdmissionPolicy::ShedLowestSlack],
+            &[1.0],
+            crate::types::PreemptionPolicy::Never,
             7,
             t,
         )

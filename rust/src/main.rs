@@ -61,12 +61,15 @@ USAGE:
   enginecl traffic-sweep [--benches B1,B2,..] [--iters K] [--sched S]
                   [--stage-devices M1/M2] [--loads L1,L2,..] [--requests N]
                   [--deadline-mult F] [--admission P1,P2,..] [--seed N]
+                  [--priorities W1,W2,..] [--preemption P]
                   [--trace FILE.json] [--refine]
                   [--threads N] [--csv PATH] [--json PATH]
                   # multi-tenant fleet on ONE shared pool: Poisson (or
                   # trace-driven) arrivals of deadline-bound pipeline
                   # requests, swept over offered load x admission policy;
-                  # reports hit rate, p50/p95/p99 slack and J/hit
+                  # --priorities spawns one tenant per weight (requests
+                  # round-robin); reports hit rate, p50/p95/p99 slack,
+                  # J/hit and per-tenant energy attribution
   enginecl bench  [--quick] [--threads N] [--out PATH]
                   # performance trajectory: pinned sweep workloads timed
                   # serial vs --threads N, view vs pool, small vs
@@ -90,8 +93,15 @@ admission: accept | reject-infeasible | queue-until-feasible |
           (traffic-sweep fleet admission control: 'accept' admits all,
           'reject-infeasible' turns away predicted deadline misses,
           'queue-until-feasible' holds them until the pool drains,
-          'shed-lowest-slack' drops the tightest not-yet-started
-          request when a new arrival would overload the pool)
+          'shed-lowest-slack' drops the lowest *priority-weighted*
+          slack among not-yet-started requests — possibly the arrival
+          itself, recorded as shed — under a reserved-share guard so
+          no tenant is starved by a heavier one)
+preemption: never | iteration-boundary
+          (iteration-boundary pauses an admitted stage between
+          iterations when a strictly-higher-priority request is
+          waiting; the paused stage re-enters the launch queue and
+          pays an explicit re-scatter transfer on resume)
 masks:    per-stage device masks, '/'-separated; one mask is 'all', class
           names (cpu, igpu, gpu) or pool indices joined by '+' or ','
           (e.g. cpu+igpu/gpu runs branch 1 on CPU+iGPU, branch 2 on GPU)
@@ -790,6 +800,8 @@ fn traffic_sweep_cmd(args: Args) -> Result<()> {
                 cfg.deadline_mult,
                 &arrivals,
                 &cfg.admission,
+                &cfg.priorities,
+                cfg.preemption,
                 cfg.seed,
             );
             showcase_arrivals = arrivals;
@@ -811,6 +823,8 @@ fn traffic_sweep_cmd(args: Args) -> Result<()> {
                 &cfg.loads,
                 cfg.n_requests as usize,
                 &cfg.admission,
+                &cfg.priorities,
+                cfg.preemption,
                 cfg.seed,
                 cfg.threads,
             );
@@ -828,13 +842,13 @@ fn traffic_sweep_cmd(args: Args) -> Result<()> {
         }
     };
     println!(
-        "{:<24}{:>22}{:>7}{:>10}{:>6}{:>6}{:>6}{:>6}{:>10}{:>10}{:>10}{:>11}",
-        "pipeline", "admission", "load", "rate(/s)", "req", "done", "rej", "shed", "hit",
-        "p50(s)", "p99(s)", "J/hit"
+        "{:<24}{:>22}{:>7}{:>10}{:>6}{:>6}{:>6}{:>6}{:>6}{:>10}{:>10}{:>10}{:>11}",
+        "pipeline", "admission", "load", "rate(/s)", "req", "done", "rej", "shed", "pre",
+        "hit", "p50(s)", "p99(s)", "J/hit"
     );
     for r in &rows {
         println!(
-            "{:<24}{:>22}{:>7.2}{:>10.3}{:>6}{:>6}{:>6}{:>6}{:>10.2}{:>10.4}{:>10.4}{:>11.1}",
+            "{:<24}{:>22}{:>7.2}{:>10.3}{:>6}{:>6}{:>6}{:>6}{:>6}{:>10.2}{:>10.4}{:>10.4}{:>11.1}",
             r.pipeline,
             r.admission,
             r.load_mult,
@@ -843,6 +857,7 @@ fn traffic_sweep_cmd(args: Args) -> Result<()> {
             r.n_completed,
             r.n_rejected,
             r.n_shed,
+            r.n_preempted,
             r.hit_rate,
             r.slack_p50_s.unwrap_or(f64::NAN),
             r.slack_p99_s.unwrap_or(f64::NAN),
@@ -862,6 +877,8 @@ fn traffic_sweep_cmd(args: Args) -> Result<()> {
         cfg.deadline_mult,
         showcase_arrivals,
         cfg.admission[0],
+        &cfg.priorities,
+        cfg.preemption,
         cfg.seed,
     );
     let json = enginecl::jsonio::Json::obj(vec![

@@ -6,7 +6,7 @@
 use crate::jsonio::Json;
 use crate::sim::{
     ActiveWindow, DeviceTrace, FleetOutcome, IterVerdict, PipelineOutcome, RequestOutcome,
-    SimOutcome, StageTrace,
+    SimOutcome, StageTrace, TenantOutcome,
 };
 use crate::types::DeadlineVerdict;
 
@@ -217,9 +217,19 @@ pub fn pipeline_json(out: &PipelineOutcome) -> Json {
     Json::obj(pairs)
 }
 
-/// jsonio projection of one fleet request's outcome.
+/// jsonio projection of one fleet request's outcome (the neutral,
+/// golden-pinned field set — see [`fleet_json`] for the priority-aware
+/// extension).
 pub fn request_json(r: &RequestOutcome) -> Json {
-    Json::obj(vec![
+    request_json_with(r, false)
+}
+
+/// [`request_json`] plus the priority-aware fields (tenant, priority,
+/// attributed energy, preemption count) when `aware` is set.  The extra
+/// fields are gated so single-tenant weight-1.0 no-preemption documents
+/// — all committed goldens — stay byte-exact.
+fn request_json_with(r: &RequestOutcome, aware: bool) -> Json {
+    let mut pairs = vec![
         ("arrival_s", Json::Num(r.arrival_s)),
         ("disposition", Json::Str(r.disposition.label().into())),
         ("end_s", Json::Num(r.end_s)),
@@ -228,20 +238,52 @@ pub fn request_json(r: &RequestOutcome) -> Json {
         ("hit", Json::Bool(r.hit)),
         ("iters", Json::Num(r.iter_times.len() as f64)),
         ("iter_hits", Json::Num(r.iter_hits as f64)),
+    ];
+    if aware {
+        pairs.push(("tenant", Json::Num(r.tenant as f64)));
+        pairs.push(("priority", Json::Num(r.priority)));
+        pairs.push(("energy_j", Json::Num(r.energy_j)));
+        pairs.push(("preemptions", Json::Num(r.preemptions as f64)));
+    }
+    Json::obj(pairs)
+}
+
+/// jsonio projection of one tenant's aggregate (priority-aware runs).
+pub fn tenant_json(t: &TenantOutcome) -> Json {
+    Json::obj(vec![
+        ("tenant", Json::Num(t.tenant as f64)),
+        ("priority", Json::Num(t.priority)),
+        ("n_requests", Json::Num(t.n_requests as f64)),
+        ("n_completed", Json::Num(t.n_completed as f64)),
+        ("hits", Json::Num(t.hits as f64)),
+        ("hit_rate", Json::Num(t.hit_rate)),
+        ("energy_j", Json::Num(t.energy_j)),
+        ("j_per_hit", Json::opt_num(t.joules_per_hit)),
     ])
 }
 
 /// jsonio projection of a whole fleet run: admission accounting, the
 /// tail metrics (slack percentiles, hit rate, J/hit), pool utilization
-/// over the fleet makespan, and the per-request outcomes.
+/// over the fleet makespan, and the per-request outcomes.  Runs that
+/// exercise the priority machinery ([`FleetOutcome::priority_aware`])
+/// additionally emit the preemption policy/count, per-request
+/// tenant/priority/energy/preemption fields, and the per-tenant
+/// aggregates; neutral runs keep the legacy byte-exact document.
 pub fn fleet_json(out: &FleetOutcome) -> Json {
-    Json::obj(vec![
+    let aware = out.priority_aware();
+    let mut pairs = vec![
         ("admission", Json::Str(out.admission.label().into())),
         ("offered_load_hz", Json::Num(out.offered_load)),
         ("n_requests", Json::Num(out.n_requests as f64)),
         ("n_completed", Json::Num(out.n_completed as f64)),
         ("n_rejected", Json::Num(out.n_rejected as f64)),
         ("n_shed", Json::Num(out.n_shed as f64)),
+    ];
+    if aware {
+        pairs.push(("preemption", Json::Str(out.preemption.label().into())));
+        pairs.push(("n_preempted", Json::Num(out.n_preempted as f64)));
+    }
+    pairs.extend([
         ("hit_rate", Json::Num(out.hit_rate)),
         ("slack_p50_s", Json::opt_num(out.slack_p50_s)),
         ("slack_p95_s", Json::opt_num(out.slack_p95_s)),
@@ -253,8 +295,15 @@ pub fn fleet_json(out: &FleetOutcome) -> Json {
             "pool_utilization",
             Json::Num(pool_utilization(&out.traces, out.makespan_s)),
         ),
-        ("requests", Json::Arr(out.requests.iter().map(request_json).collect())),
-    ])
+        (
+            "requests",
+            Json::Arr(out.requests.iter().map(|r| request_json_with(r, aware)).collect()),
+        ),
+    ]);
+    if aware {
+        pairs.push(("tenants", Json::Arr(out.tenants.iter().map(tenant_json).collect())));
+    }
+    Json::obj(pairs)
 }
 
 #[cfg(test)]
@@ -420,6 +469,7 @@ mod tests {
             template: PipelineSpec::repeat(b, 2).with_deadline(1e6),
             arrivals: ArrivalProcess::Poisson { rate_hz: 10.0, n: 3 },
             admission: AdmissionPolicy::Accept,
+            preemption: crate::types::PreemptionPolicy::Never,
         };
         let out = simulate_fleet(&fleet, &cfg);
         let j = Json::parse(&fleet_json(&out).to_string()).unwrap();
@@ -440,6 +490,48 @@ mod tests {
         assert!(p99 >= p50, "percentiles are monotone in p");
         let util = j.get("pool_utilization").unwrap().as_f64().unwrap();
         assert!(util > 0.0 && util <= 1.0);
+        // Neutral run (single tenant, weight 1.0, no preemption): the
+        // priority-aware fields must be absent — the committed goldens
+        // pin this document shape byte-for-byte.
+        assert!(j.get("tenants").is_none());
+        assert!(j.get("preemption").is_none());
+        assert!(j.get("n_preempted").is_none());
+        assert!(reqs[0].get("energy_j").is_none());
+        assert!(reqs[0].get("tenant").is_none());
+    }
+
+    #[test]
+    fn fleet_json_priority_aware_fields_appear_when_in_play() {
+        use crate::benchsuite::{Bench, BenchId};
+        use crate::scheduler::{HGuidedParams, SchedulerKind};
+        use crate::sim::{simulate_fleet, ArrivalProcess, FleetSpec, PipelineSpec, SimConfig};
+        use crate::types::AdmissionPolicy;
+        let b = Bench::new(BenchId::Gaussian);
+        let kind = SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() };
+        let mut cfg = SimConfig::testbed(&b, kind);
+        cfg.gws = Some(b.default_gws / 16);
+        let fleet = FleetSpec {
+            template: PipelineSpec::repeat(b, 2).with_deadline(1e6).with_priority(4.0),
+            arrivals: ArrivalProcess::Poisson { rate_hz: 10.0, n: 3 },
+            admission: AdmissionPolicy::Accept,
+            preemption: crate::types::PreemptionPolicy::Never,
+        };
+        let out = simulate_fleet(&fleet, &cfg);
+        assert!(out.priority_aware(), "non-neutral weight flips the gate");
+        let j = Json::parse(&fleet_json(&out).to_string()).unwrap();
+        assert_eq!(j.get("preemption").unwrap().as_str(), Some("never"));
+        assert_eq!(j.get("n_preempted").unwrap().as_f64(), Some(0.0));
+        let tenants = j.get("tenants").unwrap().as_arr().unwrap();
+        assert_eq!(tenants.len(), 1);
+        assert_eq!(tenants[0].get("priority").unwrap().as_f64(), Some(4.0));
+        let reqs = j.get("requests").unwrap().as_arr().unwrap();
+        let sum: f64 =
+            reqs.iter().map(|r| r.get("energy_j").unwrap().as_f64().unwrap()).sum();
+        let fleet_e = j.get("energy_j").unwrap().as_f64().unwrap();
+        assert!(
+            (sum - fleet_e).abs() <= 1e-9 * fleet_e.max(1.0),
+            "per-request energies {sum} must reassemble the fleet bill {fleet_e}"
+        );
     }
 
     #[test]

@@ -27,5 +27,5 @@ pub use pipeline::{
 };
 pub use tenancy::{
     parse_trace, simulate_fleet, simulate_fleet_of, ArrivalProcess, FleetOutcome, FleetSpec,
-    RequestOutcome,
+    RequestOutcome, TenantOutcome,
 };

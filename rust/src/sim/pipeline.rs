@@ -113,7 +113,8 @@ use crate::scheduler::{SchedCtx, Scheduler};
 use crate::stats::XorShift64;
 use crate::types::{
     AdmissionPolicy, BudgetPolicy, ContentionModel, DeadlineVerdict, DeviceClass, DeviceMask,
-    DevicePool, DeviceView, EnergyPolicy, ExecMode, GroupRange, MaskPolicy, TimeBudget,
+    DevicePool, DeviceView, EnergyPolicy, ExecMode, GroupRange, MaskPolicy, PreemptionPolicy,
+    TimeBudget,
 };
 
 use super::coexec::{self, DeviceTrace, IterPhase, PackageTrace, RoiPass, SimConfig};
@@ -192,6 +193,14 @@ pub struct PipelineSpec {
     /// in topological order) instead of the event-driven branch scheduler
     /// — the baseline of the branch-parallel comparison.
     pub serial: bool,
+    /// Tenant priority weight for multi-tenant fleets (must be finite
+    /// and `> 0`; `1.0` = the unweighted default).  `ShedLowestSlack`
+    /// sheds the lowest *weighted* slack — a positive slack is scaled
+    /// by `priority`, a negative one divided by it, so heavier tenants
+    /// are displaced last — and `PreemptionPolicy::IterationBoundary`
+    /// lets a strictly-heavier request displace a running stage at an
+    /// iteration boundary.  Ignored by the standalone pipeline engine.
+    pub priority: f64,
 }
 
 impl PipelineSpec {
@@ -205,6 +214,7 @@ impl PipelineSpec {
             energy: EnergyPolicy::RaceToIdle,
             mask_policy: MaskPolicy::Fixed,
             serial: false,
+            priority: 1.0,
         }
     }
 
@@ -230,6 +240,7 @@ impl PipelineSpec {
             energy: EnergyPolicy::RaceToIdle,
             mask_policy: MaskPolicy::Fixed,
             serial: false,
+            priority: 1.0,
         }
     }
 
@@ -267,6 +278,17 @@ impl PipelineSpec {
     /// Toggle the legacy serial schedule (branch co-execution disabled).
     pub fn with_serial(mut self, serial: bool) -> Self {
         self.serial = serial;
+        self
+    }
+
+    /// Set the tenant priority weight (finite, `> 0`) honored by the
+    /// fleet's weighted admission and preemption policies.
+    pub fn with_priority(mut self, priority: f64) -> Self {
+        assert!(
+            priority.is_finite() && priority > 0.0,
+            "priority weight must be finite and > 0, got {priority}"
+        );
+        self.priority = priority;
         self
     }
 
@@ -509,6 +531,35 @@ fn edge_transfer_cost(
         .map(|i| transfers.d2h(classes[i], bytes))
         .fold(0.0, f64::max);
     let scatter = consumer
+        .indices()
+        .into_iter()
+        .map(|i| transfers.h2d(classes[i], bytes))
+        .fold(0.0, f64::max);
+    gather + scatter
+}
+
+/// Explicit re-scatter price of resuming an iteration-boundary-preempted
+/// stage: its working set is gathered off the mask the preempted segment
+/// ran on and scattered onto the relaunch mask.  Unlike
+/// [`edge_transfer_cost`], equal masks are *not* free — the preemptor is
+/// assumed to have evicted the resident buffers, so the round trip is
+/// always paid (the "explicit re-scatter" of ROADMAP item 1b).
+fn preempt_rescatter_cost(
+    transfers: &TransferModel,
+    classes: &[DeviceClass],
+    old_mask: DeviceMask,
+    new_mask: DeviceMask,
+    bytes: f64,
+) -> f64 {
+    if bytes <= 0.0 {
+        return 0.0;
+    }
+    let gather = old_mask
+        .indices()
+        .into_iter()
+        .map(|i| transfers.d2h(classes[i], bytes))
+        .fold(0.0, f64::max);
+    let scatter = new_mask
         .indices()
         .into_iter()
         .map(|i| transfers.h2d(classes[i], bytes))
@@ -1141,7 +1192,8 @@ pub(crate) struct ReqPrep {
 
 impl ReqPrep {
     /// Borrow this preamble as the engine-facing [`Prep`], dating the ROI
-    /// deadline to the request's absolute `arrival_s`.
+    /// deadline to the request's absolute `arrival_s` and tagging the
+    /// owning tenant (fleet template index; `0` for standalone runs).
     pub(crate) fn as_prep<'a>(
         &'a self,
         spec: &'a PipelineSpec,
@@ -1149,6 +1201,7 @@ impl ReqPrep {
         classes: &'a [DeviceClass],
         transfers: &'a TransferModel<'a>,
         arrival_s: f64,
+        tenant: usize,
     ) -> Prep<'a> {
         Prep {
             spec,
@@ -1166,6 +1219,7 @@ impl ReqPrep {
             has_dependents: &self.has_dependents,
             arrival_s,
             crit_frac: self.crit_frac.as_deref(),
+            tenant,
         }
     }
 }
@@ -1177,6 +1231,11 @@ pub(crate) fn prepare_request(
     pool: &DevicePool,
 ) -> ReqPrep {
     assert!(!spec.stages.is_empty(), "pipeline needs at least one stage");
+    assert!(
+        spec.priority.is_finite() && spec.priority > 0.0,
+        "priority weight must be finite and > 0, got {}",
+        spec.priority
+    );
     let classes = pool.classes();
     let order = topo_order(&spec.stages);
     let budget = spec.budget.or(cfg.budget);
@@ -1335,7 +1394,7 @@ pub fn simulate_pipeline(spec: &PipelineSpec, cfg: &SimConfig) -> PipelineOutcom
         PricingScope::View
     };
     let rng = rp.rng.clone();
-    let prep = rp.as_prep(spec, cfg, &classes, &transfers, 0.0);
+    let prep = rp.as_prep(spec, cfg, &classes, &transfers, 0.0, 0);
     pool_schedule(&pool, prep, rng, scope)
 }
 
@@ -1386,6 +1445,9 @@ pub(crate) struct Prep<'a> {
     /// Per-global-iteration critical-path deadline fractions
     /// ([`BudgetPolicy::CriticalPath`] only).
     crit_frac: Option<&'a [f64]>,
+    /// Owning tenant (template index in the fleet; `0` standalone) —
+    /// the reserved-share guard's accounting key.
+    tenant: usize,
 }
 
 /// One in-flight package of the interleaved pool engine: enough state to
@@ -1422,6 +1484,31 @@ struct Pending {
     pred_iter_s: f64,
     pred_energy_j: f64,
     mask_search_truncated: bool,
+    /// Resume state when this launch continues a preempted stage.
+    resume: Option<Paused>,
+}
+
+/// Resume state of an iteration-boundary-preempted stage: everything a
+/// relaunch needs to continue the pass sequence exactly where it
+/// stopped (RNG position, refined estimates, sub-deadline carry chain)
+/// plus the banked transfer and energy totals of the finished segments,
+/// so the completed stage still emits one merged [`StageTrace`].
+struct Paused {
+    /// Next iteration to run (iterations `0..iter` are already done).
+    iter: u32,
+    rng: XorShift64,
+    refined: Option<Vec<f64>>,
+    prev_sub: f64,
+    /// First-launch StageStart instant (the merged trace's `start_s`).
+    stage_start: f64,
+    /// Transfer seconds already paid by earlier segments.
+    transfer_in_acc: f64,
+    /// Mask the preempted segment ran on (the re-scatter's producer).
+    mask: DeviceMask,
+    /// Marginal (active-minus-idle) joules banked by earlier segments.
+    marg_acc: f64,
+    /// Busy joules banked by earlier segments (per-request billing).
+    busy_acc: f64,
 }
 
 /// One running stage of the interleaved pool engine — the per-branch
@@ -1469,6 +1556,11 @@ struct Branch {
     active_at_launch: usize,
     retention_at_launch: Vec<f64>,
     mask_search_truncated: bool,
+    /// Marginal joules banked by preempted earlier segments of this
+    /// stage (zero unless the stage was resumed).
+    seg_marginal_acc: f64,
+    /// Busy joules banked by preempted earlier segments of this stage.
+    seg_busy_acc: f64,
 }
 
 impl Branch {
@@ -1532,7 +1624,9 @@ enum ReqStatus {
     /// Held by `QueueUntilFeasible`; re-evaluated at stage completions.
     Queued,
     Rejected,
-    /// Admitted, then shed by `ShedLowestSlack` before any stage started.
+    /// Chosen as `ShedLowestSlack`'s victim before any stage started:
+    /// an earlier-admitted request displaced by an arrival, or an
+    /// arrival that was its own shed choice.
     Shed,
 }
 
@@ -1560,12 +1654,18 @@ struct ReqState {
     /// recorded at launch from the mask choice — extends the committed
     /// horizon and backs the admission predictor while the stage runs.
     pred_end: Vec<f64>,
-}
-
-impl ReqState {
-    fn started(&self) -> bool {
-        self.launched.iter().any(|&l| l)
-    }
+    /// Any stage ever launched — preemption clears `launched` flags, so
+    /// the shed-victim scan ("never shed a started request") needs this
+    /// sticky marker instead of scanning `launched`.
+    ever_launched: bool,
+    /// Resume state per topo position for preempted stages.
+    paused: Vec<Option<Paused>>,
+    /// Iteration-boundary preemptions suffered so far.
+    preemptions: u32,
+    /// Busy joules attributed to this request across all its stages
+    /// (each device-busy second belongs to exactly one request — the
+    /// `held` reservation is exclusive).
+    busy_energy_j: f64,
 }
 
 /// All mutable state of one event-core run: shared pool/device state
@@ -1574,6 +1674,13 @@ impl ReqState {
 struct PoolState {
     scope: PricingScope,
     admission: AdmissionPolicy,
+    preemption: PreemptionPolicy,
+    /// Arrivals seen per tenant (template index) so far — the
+    /// reserved-share guard's denominator.
+    tenant_arrived: Vec<usize>,
+    /// Cross-tenant shed victims per tenant so far — the guard's
+    /// numerator (intra-tenant sheds are unrestricted and uncounted).
+    tenant_displaced: Vec<usize>,
     reqs: Vec<ReqState>,
     traces: Vec<DeviceTrace>,
     packages: Vec<PackageTrace>,
@@ -1956,6 +2063,14 @@ fn launch_scan_req(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usi
                 }
             }
         }
+        // A preempted stage yields its relaunch to the rival class it
+        // was displaced for: while any strictly-higher-priority request
+        // still has a dependency-ready stage wanting these devices, the
+        // paused stage stays queued (otherwise the same scan that
+        // released the devices would immediately hand them back).
+        if st.reqs[r].paused[pos].is_some() && preempt_wanted(st, preps, r, spec_mask) {
+            continue;
+        }
         let dep_ready =
             deps.iter().map(|&d| st.reqs[r].stage_end[d]).fold(prep.arrival_s, f64::max);
         let edges: Vec<(DeviceMask, f64)> = deps
@@ -2011,12 +2126,25 @@ fn launch_scan_req(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usi
         } else {
             (prep.plans[pos].view.clone(), prep.plans[pos].cfg.clone())
         };
-        let transfer_in: f64 = edges
+        let resume = st.reqs[r].paused[pos].take();
+        let mut transfer_in: f64 = edges
             .iter()
             .map(|&(prod, bytes)| {
                 edge_transfer_cost(prep.transfers, prep.classes, prod, choice.mask, bytes)
             })
             .sum();
+        if let Some(pz) = resume.as_ref() {
+            // Resuming a preempted stage pays the explicit re-scatter:
+            // its working set comes off the old mask and back onto the
+            // relaunch mask, even when the two coincide.
+            transfer_in += preempt_rescatter_cost(
+                prep.transfers,
+                prep.classes,
+                pz.mask,
+                choice.mask,
+                prep.plans[pos].gws as f64 * stage.bench.bytes_out_per_item,
+            );
+        }
         let resource_ready = if !pool_scoped && prep.spec.serial {
             st.serial_clock
         } else {
@@ -2034,7 +2162,8 @@ fn launch_scan_req(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usi
             dep_ready.max(resource_ready) + transfer_in
         };
         st.held = st.held.union(choice.mask);
-        st.reqs[r].pred_end[pos] = start + choice.pred_iter_s * stage.iterations as f64;
+        let rem_iters = stage.iterations - resume.as_ref().map_or(0, |pz| pz.iter);
+        st.reqs[r].pred_end[pos] = start + choice.pred_iter_s * rem_iters as f64;
         st.reqs[r].pending[pos] = Some(Pending {
             si,
             mask: choice.mask,
@@ -2046,6 +2175,7 @@ fn launch_scan_req(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usi
             pred_iter_s: choice.pred_iter_s,
             pred_energy_j: choice.pred_energy_j,
             mask_search_truncated: choice.truncated,
+            resume,
         });
         st.evs.push(PoolEv {
             t: start,
@@ -2055,6 +2185,7 @@ fn launch_scan_req(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usi
         });
         st.tie += 1;
         st.reqs[r].launched[pos] = true;
+        st.reqs[r].ever_launched = true;
     }
 }
 
@@ -2123,7 +2254,23 @@ fn stage_start(st: &mut PoolState, prep: &Prep, r: usize, pos: usize, t: f64) {
         active_at_launch: new_active,
         retention_at_launch,
         mask_search_truncated: p.mask_search_truncated,
+        seg_marginal_acc: 0.0,
+        seg_busy_acc: 0.0,
     };
+    if let Some(pz) = p.resume {
+        // Continue the preempted pass sequence exactly where it stopped:
+        // the RNG stream, refined estimates and sub-deadline carry chain
+        // resume mid-stage, the banked transfer/energy totals merge into
+        // this launch, and the trace keeps the original start.
+        br.iter = pz.iter;
+        br.rng = pz.rng;
+        br.refined = pz.refined;
+        br.prev_sub = pz.prev_sub;
+        br.stage_start = pz.stage_start;
+        br.transfer_in += pz.transfer_in_acc;
+        br.seg_marginal_acc = pz.marg_acc;
+        br.seg_busy_acc = pz.busy_acc;
+    }
     begin_pass(st, prep, r, &mut br, pos, t);
     st.reqs[r].branches[pos] = Some(br);
 }
@@ -2152,17 +2299,9 @@ fn complete_stage(
     st.active_mask = st.active_mask.difference(br.mask);
     mark_active_change(st, end, old_count);
     retime_inflight(st, &prep.cfg.driver, end, st.active_mask.count());
-    let marginal_energy_j: f64 = br
-        .view
-        .pool_ids
-        .iter()
-        .enumerate()
-        .map(|(slot, &i)| {
-            let c = cldriver::class_idx(prep.classes[i]);
-            (st.traces[i].busy - br.busy0[slot])
-                * (prep.cfg.power.active_w[c] - prep.cfg.power.idle_w[c])
-        })
-        .sum();
+    let (seg_marginal, seg_busy) = segment_energy(&st.traces, prep, &br);
+    let marginal_energy_j = seg_marginal + br.seg_marginal_acc;
+    st.reqs[r].busy_energy_j += seg_busy + br.seg_busy_acc;
     // Contention annotations only exist under pool pricing — the view
     // drain has no cross-branch active set to report.
     let pool_scoped = st.scope == PricingScope::Pool;
@@ -2184,16 +2323,157 @@ fn complete_stage(
     launch_scan(st, preps, pool, end);
 }
 
-/// Re-evaluate every `QueueUntilFeasible` hold in arrival order: admit
-/// the now-feasible, permanently reject any request even an idle pool
-/// could no longer serve (capacity only recedes from here).
+/// Energy of a branch segment since its `busy0` snapshot: the marginal
+/// (active-minus-idle) joules the stage added to the pool bill, and the
+/// busy joules attributable to the owning request (each device-busy
+/// second belongs to exactly one request — `held` is exclusive, so the
+/// per-request busy energies partition the fleet's busy bill).
+fn segment_energy(traces: &[DeviceTrace], prep: &Prep, br: &Branch) -> (f64, f64) {
+    let mut marginal = 0.0f64;
+    let mut busy = 0.0f64;
+    for (slot, &i) in br.view.pool_ids.iter().enumerate() {
+        let c = cldriver::class_idx(prep.classes[i]);
+        let d = traces[i].busy - br.busy0[slot];
+        marginal += d * (prep.cfg.power.active_w[c] - prep.cfg.power.idle_w[c]);
+        busy += d * prep.cfg.power.active_w[c];
+    }
+    (marginal, busy)
+}
+
+/// Priority-weighted effective slack: a positive slack is scaled by the
+/// weight, a negative one divided by it.  Monotone increasing in the
+/// weight for any fixed slack, continuous at zero, and the identity at
+/// weight `1.0` — so unweighted fleets shed exactly as before, while
+/// heavier tenants sort above lighter ones at equal raw slack and are
+/// displaced last.
+fn weighted_slack(slack_s: f64, weight: f64) -> f64 {
+    if slack_s >= 0.0 {
+        slack_s * weight
+    } else {
+        slack_s / weight
+    }
+}
+
+/// Reserved share of each tenant's arrivals protected from
+/// *cross-tenant* displacement (tentpole guard): a high-priority tenant
+/// can displace at most `1 - RESERVED_SHARE` of another tenant's
+/// arrivals, so weighted shedding cannot starve the pool.  Intra-tenant
+/// sheds are unrestricted — single-template fleets are unaffected.
+const RESERVED_SHARE: f64 = 0.25;
+
+/// May arrival `r` displace candidate victim `q`?  Always within one
+/// tenant; across tenants only while the victim tenant's displaced
+/// count stays under `(1 - RESERVED_SHARE)` of its arrivals so far.
+fn shed_share_ok(st: &PoolState, preps: &[Prep], r: usize, q: usize) -> bool {
+    let vt = preps[q].tenant;
+    if vt == preps[r].tenant {
+        return true;
+    }
+    (st.tenant_displaced[vt] + 1) as f64
+        <= (1.0 - RESERVED_SHARE) * st.tenant_arrived[vt] as f64
+}
+
+/// Does a strictly-higher-priority admitted request have a
+/// dependency-ready, launch-eligible stage that `mask`'s release would
+/// unblock?  Drives both sides of iteration-boundary preemption: a
+/// running branch asks it with its own mask to decide whether to yield,
+/// and a preempted stage asks it with its spec mask to decide whether
+/// relaunching would immediately steal the devices back.  The rival
+/// stage must pass the same intra-request claiming discipline as
+/// `launch_scan_req` and must not be blocked by devices *other* than
+/// `mask` — otherwise releasing `mask` frees nothing.
+fn preempt_wanted(st: &PoolState, preps: &[Prep], r: usize, mask: DeviceMask) -> bool {
+    let w = preps[r].spec.priority;
+    let held_others = st.held.difference(mask);
+    for q in 0..preps.len() {
+        if q == r || st.reqs[q].status != ReqStatus::Admitted {
+            continue;
+        }
+        if preps[q].spec.priority <= w {
+            continue;
+        }
+        let prep = &preps[q];
+        for pos in 0..prep.order.len() {
+            if st.reqs[q].launched[pos] {
+                continue;
+            }
+            let si = prep.order[pos];
+            if !prep.spec.stages[si].deps.iter().all(|&d| st.reqs[q].completed[d]) {
+                continue;
+            }
+            let spec_mask = prep.plans[pos].mask;
+            if (0..pos)
+                .any(|p| !st.reqs[q].launched[p] && prep.plans[p].mask.intersects(spec_mask))
+            {
+                continue;
+            }
+            if spec_mask.intersects(mask) && !spec_mask.intersects(held_others) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Iteration-boundary preemption: release the branch's devices and
+/// re-price the survivors, bank the finished segments' transfer and
+/// energy totals, stash the resume state, and hand the freed capacity
+/// to the launch scan so the higher-priority rival claims it first (the
+/// paused stage yields its relaunch via the `preempt_wanted` guard in
+/// `launch_scan_req`).  The stage re-enters the launch queue and pays
+/// an explicit re-scatter transfer at relaunch.
+fn preempt_stage(
+    st: &mut PoolState,
+    preps: &[Prep],
+    pool: &DevicePool,
+    r: usize,
+    b_pos: usize,
+    br: Branch,
+    t: f64,
+) {
+    let prep = &preps[r];
+    for &i in &br.view.pool_ids {
+        st.dev_free[i] = t;
+    }
+    st.held = st.held.difference(br.mask);
+    let old_count = st.active_mask.count();
+    st.active_mask = st.active_mask.difference(br.mask);
+    mark_active_change(st, t, old_count);
+    retime_inflight(st, &prep.cfg.driver, t, st.active_mask.count());
+    let (seg_marginal, seg_busy) = segment_energy(&st.traces, prep, &br);
+    st.reqs[r].paused[b_pos] = Some(Paused {
+        iter: br.iter,
+        rng: br.rng,
+        refined: br.refined,
+        prev_sub: br.prev_sub,
+        stage_start: br.stage_start,
+        transfer_in_acc: br.transfer_in,
+        mask: br.mask,
+        marg_acc: br.seg_marginal_acc + seg_marginal,
+        busy_acc: br.seg_busy_acc + seg_busy,
+    });
+    st.reqs[r].launched[b_pos] = false;
+    st.reqs[r].preemptions += 1;
+    launch_scan(st, preps, pool, t);
+}
+
+/// Re-evaluate every `QueueUntilFeasible` hold in arrival order, but
+/// admit at most **one** feasible hold per pass: an admission commits
+/// capacity that stays invisible to the predictor until the subsequent
+/// `launch_scan` records the launch, so judging later holds against the
+/// same committed schedule would over-admit several requests onto the
+/// same free capacity.  The remaining holds are re-judged at the next
+/// completion event — and any hold that even an idle pool could no
+/// longer serve is permanently rejected (capacity only recedes).
 fn reconsider_queued(st: &mut PoolState, preps: &[Prep], now: f64) {
+    let mut admitted_one = false;
     for r in 0..preps.len() {
         if st.reqs[r].status != ReqStatus::Queued {
             continue;
         }
-        if admission_feasible(st, preps, r, now, false) {
+        if !admitted_one && admission_feasible(st, preps, r, now, false) {
             st.reqs[r].status = ReqStatus::Admitted;
+            admitted_one = true;
         } else if !admission_feasible(st, preps, r, now, true) {
             st.reqs[r].status = ReqStatus::Rejected;
         }
@@ -2377,8 +2657,17 @@ fn dev_idle(
         }
         br.iter += 1;
         if br.iter < br.iterations {
-            begin_pass(st, prep, r, &mut br, b_pos, end);
-            st.reqs[r].branches[b_pos] = Some(br);
+            // Iteration boundaries are the only preemption points: a
+            // pass is the engine's atomic unit of work, so a yielding
+            // branch never tears an in-flight package.
+            if st.preemption == PreemptionPolicy::IterationBoundary
+                && preempt_wanted(st, preps, r, br.mask)
+            {
+                preempt_stage(st, preps, pool, r, b_pos, br, end);
+            } else {
+                begin_pass(st, prep, r, &mut br, b_pos, end);
+                st.reqs[r].branches[b_pos] = Some(br);
+            }
         } else {
             complete_stage(st, preps, pool, r, br, end);
         }
@@ -2502,6 +2791,7 @@ fn predicted_slack(st: &PoolState, preps: &[Prep], r: usize, now: f64) -> f64 {
 /// gating policies judge the *predicted* chain completion against the
 /// arrival's deadline.
 fn arrive(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usize, t: f64) {
+    st.tenant_arrived[preps[r].tenant] += 1;
     let feasible = matches!(st.admission, AdmissionPolicy::Accept)
         || admission_feasible(st, preps, r, t, false);
     let status = if feasible {
@@ -2518,18 +2808,26 @@ fn arrive(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usize, t: f6
                 }
             }
             AdmissionPolicy::ShedLowestSlack => {
-                // Shed the lowest-predicted-slack not-yet-started request
-                // (possibly this arrival) to protect the rest of the
-                // fleet; running stages are never preempted (priority /
-                // preemption is a recorded ROADMAP follow-up).
+                // Shed the lowest *weighted*-slack not-yet-started
+                // request (possibly this arrival) to protect the
+                // requests most likely to hit their deadlines; started
+                // requests are never shed (iteration-boundary
+                // preemption is the separate `PreemptionPolicy` axis).
+                // Cross-tenant victims are additionally subject to the
+                // reserved-share guard.
                 let mut victim = r;
-                let mut worst = predicted_slack(st, preps, r, t);
+                let mut worst =
+                    weighted_slack(predicted_slack(st, preps, r, t), preps[r].spec.priority);
                 for q in 0..preps.len() {
                     if q != r
                         && st.reqs[q].status == ReqStatus::Admitted
-                        && !st.reqs[q].started()
+                        && !st.reqs[q].ever_launched
+                        && shed_share_ok(st, preps, r, q)
                     {
-                        let s = predicted_slack(st, preps, q, t);
+                        let s = weighted_slack(
+                            predicted_slack(st, preps, q, t),
+                            preps[q].spec.priority,
+                        );
                         if s < worst {
                             worst = s;
                             victim = q;
@@ -2537,8 +2835,15 @@ fn arrive(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usize, t: f6
                     }
                 }
                 if victim == r {
-                    ReqStatus::Rejected
+                    // The arrival is its own victim: it *was* the
+                    // policy's shed choice, so it is recorded `Shed`,
+                    // not `Rejected` — the split feeds traffic-sweep's
+                    // `n_shed`/`n_rejected` columns.
+                    ReqStatus::Shed
                 } else {
+                    if preps[victim].tenant != preps[r].tenant {
+                        st.tenant_displaced[preps[victim].tenant] += 1;
+                    }
                     st.reqs[victim].status = ReqStatus::Shed;
                     ReqStatus::Admitted
                 }
@@ -2556,9 +2861,15 @@ fn arrive(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usize, t: f6
 pub enum ReqDisposition {
     /// Admitted and ran to completion.
     Completed,
-    /// Rejected at arrival, or starved in the feasibility queue.
+    /// Turned away without ever being the shed policy's victim:
+    /// `RejectInfeasible` at arrival, a `QueueUntilFeasible` arrival
+    /// that even an idle pool could not serve, or a queue hold starved
+    /// until the drain (no completion event left that could admit it).
     Rejected,
-    /// Admitted, then shed by `ShedLowestSlack` before any stage started.
+    /// Chosen as `ShedLowestSlack`'s victim before any of its stages
+    /// started: an earlier-admitted request displaced by an arrival, or
+    /// an arrival that was its own shed choice (also `Shed`, not
+    /// `Rejected` — it *was* the policy's victim).
     Shed,
 }
 
@@ -2585,6 +2896,11 @@ pub(crate) struct ReqSlice {
     pub(crate) stage_traces: Vec<StageTrace>,
     /// Absolute (arrival-dated) ROI deadline.
     pub(crate) roi_deadline: Option<f64>,
+    /// Busy joules attributed to this request (the per-request share of
+    /// the fleet's busy energy; zero when the request never ran).
+    pub(crate) busy_energy_j: f64,
+    /// Iteration-boundary preemptions suffered.
+    pub(crate) preemptions: u32,
 }
 
 /// Everything a fleet run produces, before the tail-metric aggregation
@@ -2617,13 +2933,18 @@ pub(crate) fn fleet_schedule(
     preps: &[Prep],
     rngs: Vec<XorShift64>,
     admission: AdmissionPolicy,
+    preemption: PreemptionPolicy,
     scope: PricingScope,
 ) -> FleetRaw {
     assert_eq!(preps.len(), rngs.len(), "one RNG per request");
     let n_pool = pool.len();
+    let n_tenants = preps.iter().map(|p| p.tenant).max().unwrap_or(0) + 1;
     let mut st = PoolState {
         scope,
         admission,
+        preemption,
+        tenant_arrived: vec![0; n_tenants],
+        tenant_displaced: vec![0; n_tenants],
         reqs: preps
             .iter()
             .zip(rngs)
@@ -2649,6 +2970,10 @@ pub(crate) fn fleet_schedule(
                     branches: (0..n_stages).map(|_| None).collect(),
                     pending: (0..n_stages).map(|_| None).collect(),
                     pred_end: vec![0.0; n_stages],
+                    ever_launched: false,
+                    paused: (0..n_stages).map(|_| None).collect(),
+                    preemptions: 0,
+                    busy_energy_j: 0.0,
                 }
             })
             .collect(),
@@ -2762,6 +3087,8 @@ pub(crate) fn fleet_schedule(
             iter_verdicts,
             stage_traces: std::mem::take(&mut rs.stage_traces),
             roi_deadline: prep.roi_deadline,
+            busy_energy_j: rs.busy_energy_j,
+            preemptions: rs.preemptions,
         });
     }
     FleetRaw {
@@ -2790,7 +3117,14 @@ fn pool_schedule(
     let init_time = prep.init_time;
     let release_time = prep.release_time;
     let preps = [prep];
-    let mut raw = fleet_schedule(pool, &preps, vec![rng], AdmissionPolicy::Accept, scope);
+    let mut raw = fleet_schedule(
+        pool,
+        &preps,
+        vec![rng],
+        AdmissionPolicy::Accept,
+        PreemptionPolicy::Never,
+        scope,
+    );
     let one = raw.reqs.remove(0);
     let roi_time = raw.makespan_s;
     let total_time = init_time + roi_time + release_time;
@@ -2969,6 +3303,7 @@ mod tests {
             energy: EnergyPolicy::RaceToIdle,
             mask_policy: MaskPolicy::Fixed,
             serial: false,
+            priority: 1.0,
         };
         let cfg = SimConfig::testbed(&ga, hguided_opt());
         let out = simulate_pipeline(&spec, &cfg);
@@ -3017,6 +3352,7 @@ mod tests {
             energy: EnergyPolicy::RaceToIdle,
             mask_policy: MaskPolicy::Fixed,
             serial: false,
+            priority: 1.0,
         };
         let cfg = SimConfig::testbed(&ga, hguided_opt());
         let disjoint = simulate_pipeline(
@@ -3115,6 +3451,7 @@ mod tests {
             energy: EnergyPolicy::RaceToIdle,
             mask_policy: MaskPolicy::Fixed,
             serial: false,
+            priority: 1.0,
         };
         let cfg = SimConfig::testbed(&ga, hguided_opt());
         let par = simulate_pipeline(&spec, &cfg);
@@ -3173,6 +3510,7 @@ mod tests {
             energy: EnergyPolicy::RaceToIdle,
             mask_policy: MaskPolicy::Fixed,
             serial: false,
+            priority: 1.0,
         };
         let small = ga.default_gws / 32;
         let big = ga.default_gws / 8;
@@ -3560,6 +3898,7 @@ mod tests {
                 energy: EnergyPolicy::RaceToIdle,
                 mask_policy: MaskPolicy::Fixed,
                 serial: false,
+                priority: 1.0,
             };
             let mut cfg = SimConfig::testbed(&benches[0], hguided_opt());
             cfg.seed = case + 1;

@@ -34,7 +34,7 @@
 use crate::cldriver::TransferModel;
 use crate::jsonio::Json;
 use crate::stats::{percentile, XorShift64};
-use crate::types::{AdmissionPolicy, DevicePool};
+use crate::types::{AdmissionPolicy, DevicePool, PreemptionPolicy};
 
 use super::coexec::{self, DeviceTrace, SimConfig};
 use super::pipeline::{
@@ -110,7 +110,14 @@ impl ArrivalProcess {
     }
 
     /// Offered load in requests/s: the nominal rate for Poisson, the
-    /// empirical mean rate for traces (0 for a single request).
+    /// empirical mean rate `(n - 1) / (last - first)` for traces.
+    ///
+    /// Edge cases (semantics pinned by tests): a single-arrival trace has
+    /// no inter-arrival span, and a trace whose arrivals all share one
+    /// instant has `hi == lo` — an instantaneous burst has no finite
+    /// empirical rate.  Both report `0.0` (never `inf`/`NaN`), so
+    /// `traffic-sweep` rows keyed on offered load render such traces as
+    /// load 0 rather than poisoning downstream arithmetic.
     pub fn offered_load(&self) -> f64 {
         match self {
             ArrivalProcess::Poisson { rate_hz, .. } => *rate_hz,
@@ -168,12 +175,20 @@ pub struct FleetSpec {
     pub template: PipelineSpec,
     pub arrivals: ArrivalProcess,
     pub admission: AdmissionPolicy,
+    /// Whether admitted work may be paused at iteration boundaries in
+    /// favor of strictly-higher-priority arrivals.
+    pub preemption: PreemptionPolicy,
 }
 
 /// One request's fate in the fleet run.
 #[derive(Debug, Clone)]
 pub struct RequestOutcome {
     pub arrival_s: f64,
+    /// Tenant index: which template this request instantiated
+    /// (`r % templates.len()` under round-robin assignment).
+    pub tenant: usize,
+    /// The template's priority weight (1.0 = neutral).
+    pub priority: f64,
     pub disposition: ReqDisposition,
     /// Absolute ROI-clock end of the last stage (the arrival instant for
     /// requests that never ran).
@@ -189,18 +204,50 @@ pub struct RequestOutcome {
     pub iter_times: Vec<f64>,
     /// Per-iteration sub-deadline hits (0 when unbudgeted).
     pub iter_hits: usize,
+    /// Attributed energy: the joules this request's kernels actively
+    /// burned plus an equal share of the pool's idle + host remainder
+    /// (completed requests only — rejected/shed requests bill 0, their
+    /// admission-time work is not simulated).  Per-request energies sum
+    /// to [`FleetOutcome::energy_j`] when anything completed.
+    pub energy_j: f64,
+    /// Times this request's stages were paused at an iteration boundary
+    /// in favor of a higher-priority rival ([`PreemptionPolicy`]).
+    pub preemptions: u32,
+}
+
+/// Per-tenant aggregate of one fleet run (tenant = template index under
+/// round-robin assignment; a single-template fleet has exactly one).
+#[derive(Debug, Clone)]
+pub struct TenantOutcome {
+    pub tenant: usize,
+    /// The template's priority weight (1.0 = neutral).
+    pub priority: f64,
+    pub n_requests: usize,
+    pub n_completed: usize,
+    pub hits: usize,
+    /// Deadline hits / this tenant's offered requests.
+    pub hit_rate: f64,
+    /// Sum of the tenant's per-request attributed energies
+    /// ([`RequestOutcome::energy_j`]): busy joules plus idle share.
+    pub energy_j: f64,
+    /// `energy_j` per tenant-level deadline hit (`None` without hits).
+    pub joules_per_hit: Option<f64>,
 }
 
 /// Tail metrics of one fleet run at one offered load.
 #[derive(Debug, Clone)]
 pub struct FleetOutcome {
     pub admission: AdmissionPolicy,
+    pub preemption: PreemptionPolicy,
     /// Offered load in requests/s ([`ArrivalProcess::offered_load`]).
     pub offered_load: f64,
     pub n_requests: usize,
     pub n_completed: usize,
     pub n_rejected: usize,
     pub n_shed: usize,
+    /// Total iteration-boundary preemptions across all requests (0 under
+    /// [`PreemptionPolicy::Never`]).
+    pub n_preempted: usize,
     /// Request-level deadline hits / offered requests — admission control
     /// is charged for everything it turns away.
     pub hit_rate: f64,
@@ -218,12 +265,24 @@ pub struct FleetOutcome {
     /// Pool-indexed device traces (shared across requests).
     pub traces: Vec<DeviceTrace>,
     pub requests: Vec<RequestOutcome>,
+    /// Per-tenant aggregates, one per template (index = tenant id).
+    pub tenants: Vec<TenantOutcome>,
 }
 
 impl FleetOutcome {
     /// Total scheduled work groups across the pool (conservation checks).
     pub fn total_groups(&self) -> u64 {
         self.traces.iter().map(|t| t.groups).sum()
+    }
+
+    /// Whether this run exercised the priority-aware machinery: multiple
+    /// tenants, a non-neutral priority weight, or preemption enabled.
+    /// Gates the optional fleet/request JSON fields so the committed
+    /// goldens (all single-tenant, weight 1.0, `Never`) stay byte-exact.
+    pub fn priority_aware(&self) -> bool {
+        self.preemption != PreemptionPolicy::Never
+            || self.tenants.len() > 1
+            || self.tenants.iter().any(|t| t.priority != 1.0)
     }
 }
 
@@ -236,6 +295,7 @@ pub fn simulate_fleet(fleet: &FleetSpec, cfg: &SimConfig) -> FleetOutcome {
         std::slice::from_ref(&fleet.template),
         &fleet.arrivals,
         fleet.admission,
+        fleet.preemption,
         cfg,
     )
 }
@@ -249,6 +309,7 @@ pub fn simulate_fleet_of(
     templates: &[PipelineSpec],
     arrival_proc: &ArrivalProcess,
     admission: AdmissionPolicy,
+    preemption: PreemptionPolicy,
     cfg: &SimConfig,
 ) -> FleetOutcome {
     assert!(!cfg.devices.is_empty(), "no devices");
@@ -285,17 +346,31 @@ pub fn simulate_fleet_of(
         .zip(&arrivals)
         .enumerate()
         .map(|(r, ((rp, c), &a))| {
-            rp.as_prep(&templates[r % templates.len()], c, &classes, &transfers, a)
+            let tenant = r % templates.len();
+            rp.as_prep(&templates[tenant], c, &classes, &transfers, a, tenant)
         })
         .collect();
     let rngs: Vec<XorShift64> = rps.iter().map(|rp| rp.rng.clone()).collect();
 
-    let raw = fleet_schedule(&pool, &preps, rngs, admission, PricingScope::Pool);
+    let raw = fleet_schedule(&pool, &preps, rngs, admission, preemption, PricingScope::Pool);
+
+    // Per-request energy attribution: each request keeps the joules its
+    // kernels actively burned (`busy_energy_j`, banked per branch segment
+    // by the event core) and completed requests split the pool's idle +
+    // host remainder equally.  Busy + shares reassemble the fleet bill
+    // exactly: Σ energy_j == energy_j whenever anything completed.
+    let energy_j = coexec::energy(cfg, raw.makespan_s, &raw.traces);
+    let completed_ct =
+        raw.reqs.iter().filter(|s| s.disposition == ReqDisposition::Completed).count();
+    let busy_total: f64 = raw.reqs.iter().map(|s| s.busy_energy_j).sum();
+    let idle_share =
+        if completed_ct > 0 { (energy_j - busy_total) / completed_ct as f64 } else { 0.0 };
 
     let mut requests = Vec::with_capacity(n);
     let mut slacks = Vec::new();
     let (mut n_completed, mut n_rejected, mut n_shed, mut hits) = (0, 0, 0, 0usize);
-    for (slice, &arrival_s) in raw.reqs.iter().zip(&arrivals) {
+    let mut n_preempted = 0usize;
+    for (r, (slice, &arrival_s)) in raw.reqs.iter().zip(&arrivals).enumerate() {
         match slice.disposition {
             ReqDisposition::Completed => n_completed += 1,
             ReqDisposition::Rejected => n_rejected += 1,
@@ -313,8 +388,12 @@ pub fn simulate_fleet_of(
         if hit {
             hits += 1;
         }
+        n_preempted += slice.preemptions as usize;
+        let tenant = r % templates.len();
         requests.push(RequestOutcome {
             arrival_s,
+            tenant,
+            priority: templates[tenant].priority,
             disposition: slice.disposition,
             end_s: slice.end_s,
             deadline_s: slice.roi_deadline,
@@ -322,16 +401,42 @@ pub fn simulate_fleet_of(
             hit,
             iter_times: slice.iter_times.clone(),
             iter_hits: slice.iter_verdicts.iter().filter(|v| v.met).count(),
+            energy_j: if completed { slice.busy_energy_j + idle_share } else { 0.0 },
+            preemptions: slice.preemptions,
         });
     }
-    let energy_j = coexec::energy(cfg, raw.makespan_s, &raw.traces);
+    let tenants: Vec<TenantOutcome> = templates
+        .iter()
+        .enumerate()
+        .map(|(ti, tpl)| {
+            let mine: Vec<&RequestOutcome> =
+                requests.iter().filter(|q| q.tenant == ti).collect();
+            let t_hits = mine.iter().filter(|q| q.hit).count();
+            let t_energy: f64 = mine.iter().map(|q| q.energy_j).sum();
+            TenantOutcome {
+                tenant: ti,
+                priority: tpl.priority,
+                n_requests: mine.len(),
+                n_completed: mine
+                    .iter()
+                    .filter(|q| q.disposition == ReqDisposition::Completed)
+                    .count(),
+                hits: t_hits,
+                hit_rate: if mine.is_empty() { 0.0 } else { t_hits as f64 / mine.len() as f64 },
+                energy_j: t_energy,
+                joules_per_hit: if t_hits > 0 { Some(t_energy / t_hits as f64) } else { None },
+            }
+        })
+        .collect();
     FleetOutcome {
         admission,
+        preemption,
         offered_load: arrival_proc.offered_load(),
         n_requests: n,
         n_completed,
         n_rejected,
         n_shed,
+        n_preempted,
         hit_rate: hits as f64 / n as f64,
         slack_p50_s: percentile(&slacks, 50.0),
         slack_p95_s: percentile(&slacks, 95.0),
@@ -341,6 +446,7 @@ pub fn simulate_fleet_of(
         joules_per_hit: if hits > 0 { Some(energy_j / hits as f64) } else { None },
         traces: raw.traces,
         requests,
+        tenants,
     }
 }
 
@@ -389,6 +495,21 @@ mod tests {
         assert!((t.offered_load() - 2.0 / 1.5).abs() < 1e-12);
         let one = ArrivalProcess::Trace { arrivals_s: vec![0.0] };
         assert_eq!(one.offered_load(), 0.0);
+    }
+
+    #[test]
+    fn offered_load_edge_cases_pin_zero() {
+        // Single arrival away from t=0: still no inter-arrival span.
+        let one = ArrivalProcess::Trace { arrivals_s: vec![2.0] };
+        assert_eq!(one.offered_load(), 0.0);
+        // All-duplicate instants: hi == lo — an instantaneous burst has
+        // no finite empirical rate, so the guard reports 0.0 (never
+        // inf/NaN from the (n-1)/(hi-lo) division).
+        let burst = ArrivalProcess::Trace { arrivals_s: vec![2.0, 2.0, 2.0] };
+        assert_eq!(burst.offered_load(), 0.0);
+        assert_eq!(burst.n(), 3);
+        // The burst is still a valid process: arrivals materialize as-is.
+        assert_eq!(burst.arrivals(9), vec![2.0, 2.0, 2.0]);
     }
 
     #[test]

@@ -665,9 +665,15 @@ pub enum AdmissionPolicy {
     /// could no longer meet its deadline.
     QueueUntilFeasible,
     /// Like `RejectInfeasible`, but an infeasible arrival may instead
-    /// shed the *lowest-slack* not-yet-started request (possibly
-    /// itself), protecting the requests most likely to hit their
-    /// deadlines.  Running stages are never preempted.
+    /// shed the not-yet-started request with the lowest *weighted*
+    /// slack (predicted slack scaled by the request's `priority`
+    /// weight), protecting the requests most likely to hit their
+    /// deadlines.  An arrival that is its own victim is recorded as
+    /// `Shed`, not `Rejected` — it *was* the policy's victim.  A
+    /// reserved-share guard caps how many of a tenant's requests other
+    /// tenants may displace, so a high-priority tenant cannot starve
+    /// the pool.  Running stages are never shed (but see
+    /// [`PreemptionPolicy`] for iteration-boundary preemption).
     ShedLowestSlack,
 }
 
@@ -700,6 +706,51 @@ impl AdmissionPolicy {
             }
             "shed-lowest-slack" | "shedlowestslack" | "shed" => {
                 Some(AdmissionPolicy::ShedLowestSlack)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Whether a running stage may be displaced by a higher-priority
+/// request in the multi-tenant fleet driver (`sim::tenancy`).
+///
+/// Preemption is only ever considered at *iteration boundaries*: a
+/// stage's iteration is the engine's atomic unit of work, so the event
+/// core never tears a package mid-flight.  A preempted stage releases
+/// its devices, re-enters the launch queue, and on relaunch pays an
+/// explicit re-scatter transfer (its working set is gathered off the
+/// old mask and scattered onto the relaunch mask — the preemptor is
+/// assumed to have evicted the resident buffers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PreemptionPolicy {
+    /// Never preempt: a launched stage runs to completion (the
+    /// bit-identical legacy behavior).
+    #[default]
+    Never,
+    /// At each iteration boundary, a running stage yields its devices
+    /// when a strictly-higher-priority admitted request has a
+    /// dependency-ready stage blocked only by them.
+    IterationBoundary,
+}
+
+impl PreemptionPolicy {
+    pub const ALL: [PreemptionPolicy; 2] =
+        [PreemptionPolicy::Never, PreemptionPolicy::IterationBoundary];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PreemptionPolicy::Never => "never",
+            PreemptionPolicy::IterationBoundary => "iteration-boundary",
+        }
+    }
+
+    /// Parse a CLI spelling (full label or short alias).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_lowercase().as_str() {
+            "never" | "none" | "off" => Some(PreemptionPolicy::Never),
+            "iteration-boundary" | "iterationboundary" | "iter-boundary" | "iter" => {
+                Some(PreemptionPolicy::IterationBoundary)
             }
             _ => None,
         }

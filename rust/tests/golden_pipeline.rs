@@ -23,7 +23,7 @@ use enginecl::sim::{
     simulate_fleet, simulate_pipeline, ArrivalProcess, FleetSpec, PipelineSpec, PipelineStage,
     SimConfig,
 };
-use enginecl::types::{AdmissionPolicy, ContentionModel, DeviceMask, MaskPolicy};
+use enginecl::types::{AdmissionPolicy, ContentionModel, DeviceMask, MaskPolicy, PreemptionPolicy};
 use std::path::PathBuf;
 
 fn golden_dir() -> PathBuf {
@@ -103,6 +103,7 @@ fn golden_two_branch_disjoint_pipeline() {
         energy: enginecl::types::EnergyPolicy::RaceToIdle,
         mask_policy: MaskPolicy::EnergyUnderDeadline,
         serial: false,
+        priority: 1.0,
     }
     .with_deadline(3.0);
     let cfg = SimConfig::testbed(&mb, hguided_opt());
@@ -135,6 +136,7 @@ fn golden_pool_contention_pipeline() {
         energy: enginecl::types::EnergyPolicy::RaceToIdle,
         mask_policy: MaskPolicy::Fixed,
         serial: false,
+        priority: 1.0,
     }
     .with_deadline(3.0);
     let mut cfg = SimConfig::testbed(&mb, hguided_opt());
@@ -168,6 +170,7 @@ fn golden_poisson_fleet() {
         energy: enginecl::types::EnergyPolicy::RaceToIdle,
         mask_policy: MaskPolicy::Fixed,
         serial: false,
+        priority: 1.0,
     }
     .with_deadline(3.0);
     let mut cfg = SimConfig::testbed(&mb, hguided_opt());
@@ -176,6 +179,7 @@ fn golden_poisson_fleet() {
         template: spec,
         arrivals: ArrivalProcess::Poisson { rate_hz: 2.0, n: 4 },
         admission: AdmissionPolicy::Accept,
+        preemption: PreemptionPolicy::Never,
     };
     let out = simulate_fleet(&fleet, &cfg);
     let doc = enginecl::metrics::fleet_json(&out).to_string();
@@ -211,6 +215,7 @@ fn golden_diamond_dag_pipeline() {
         energy: enginecl::types::EnergyPolicy::RaceToIdle,
         mask_policy: MaskPolicy::Fixed,
         serial: false,
+        priority: 1.0,
     }
     .with_deadline(6.0);
     let cfg = SimConfig::testbed(&ga, hguided_opt());

@@ -150,6 +150,7 @@ fn critical_path_split_beats_even_split_on_a_wide_dag() {
             energy: EnergyPolicy::RaceToIdle,
             mask_policy: MaskPolicy::Fixed,
             serial: false,
+            priority: 1.0,
         }
     };
     let cfg = SimConfig::testbed(&b, hguided_opt());
@@ -286,6 +287,7 @@ fn two_branch_dag_on_disjoint_masks_beats_serial_within_the_same_budget() {
         energy: EnergyPolicy::RaceToIdle,
         mask_policy: MaskPolicy::Fixed,
         serial: false,
+        priority: 1.0,
     };
     let cfg = SimConfig::testbed(&ga, hguided_opt());
     let free_serial = simulate_pipeline(&spec.clone().with_serial(true), &cfg);
@@ -408,6 +410,7 @@ fn energy_under_deadline_sheds_a_device_and_saves_joules_on_two_branches() {
         energy: EnergyPolicy::RaceToIdle,
         mask_policy,
         serial: false,
+        priority: 1.0,
     };
     let cfg = SimConfig::testbed(&mb, hguided_opt());
     let free = simulate_pipeline(&mk(MaskPolicy::Fixed), &cfg);
@@ -504,6 +507,7 @@ fn overlap_spec() -> PipelineSpec {
         energy: EnergyPolicy::RaceToIdle,
         mask_policy: MaskPolicy::Fixed,
         serial: false,
+        priority: 1.0,
     }
 }
 
@@ -641,6 +645,7 @@ fn energy_under_deadline_never_beats_fixed_on_joules_under_pool_contention() {
         energy: EnergyPolicy::RaceToIdle,
         mask_policy,
         serial: false,
+        priority: 1.0,
     };
     let mut cfg = SimConfig::testbed(&mb, hguided_opt());
     cfg.contention = ContentionModel::Pool;

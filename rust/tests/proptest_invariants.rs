@@ -17,7 +17,7 @@ use enginecl::sim::{
 use enginecl::stats::XorShift64;
 use enginecl::types::{
     AdmissionPolicy, BudgetPolicy, ContentionModel, DeviceMask, EnergyPolicy, EstimateScenario,
-    ExecMode, GroupRange, MaskPolicy, Optimizations, TimeBudget,
+    ExecMode, GroupRange, MaskPolicy, Optimizations, PreemptionPolicy, TimeBudget,
 };
 
 /// Random scheduler context: 1–6 devices, powers in (0.05, 1], any total.
@@ -361,6 +361,7 @@ fn prop_branch_parallel_conserves_work_and_never_trails_serial() {
             energy: EnergyPolicy::RaceToIdle,
             mask_policy: MaskPolicy::Fixed,
             serial: false,
+            priority: 1.0,
         };
         let mut cfg = SimConfig::testbed(&benches[0], kind);
         cfg.seed = case + 1;
@@ -436,6 +437,7 @@ fn prop_mask_policies_never_trail_fixed_on_their_own_metric() {
             energy: EnergyPolicy::RaceToIdle,
             mask_policy,
             serial: false,
+            priority: 1.0,
         };
         let kind = SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() };
         let mut cfg = SimConfig::testbed(&benches[0], kind);
@@ -507,6 +509,7 @@ fn prop_wide_pool_mask_policies_never_trail_fixed() {
             energy: EnergyPolicy::RaceToIdle,
             mask_policy,
             serial: false,
+            priority: 1.0,
         };
         // Uniform 7-arity HGuided parameters: the paper-tuned triple only
         // covers the 3-device testbed.
@@ -637,6 +640,7 @@ fn prop_pool_makespan_never_beats_view_on_random_masked_dags() {
             energy: EnergyPolicy::RaceToIdle,
             mask_policy: MaskPolicy::Fixed,
             serial: false,
+            priority: 1.0,
         };
         let mut cfg = SimConfig::testbed(&benches[0], kind);
         cfg.seed = case + 1;
@@ -700,6 +704,7 @@ fn prop_scopes_bit_identical_on_chains_serial_and_one_request_fleets() {
             energy: EnergyPolicy::RaceToIdle,
             mask_policy: MaskPolicy::ALL[rng.below(4) as usize],
             serial,
+            priority: 1.0,
         };
         let mut cfg = SimConfig::testbed(&benches[0], kind);
         cfg.seed = 9_000 + case;
@@ -729,6 +734,7 @@ fn prop_scopes_bit_identical_on_chains_serial_and_one_request_fleets() {
             template: spec,
             arrivals: ArrivalProcess::Poisson { rate_hz: 1.0, n: 1 },
             admission: AdmissionPolicy::Accept,
+            preemption: PreemptionPolicy::Never,
         };
         let out = simulate_fleet(&fleet, &cfg);
         assert_eq!(out.n_completed, 1, "case {case}");
@@ -797,6 +803,7 @@ fn prop_pool_work_conserved_across_active_set_recomputation_events() {
             energy: EnergyPolicy::RaceToIdle,
             mask_policy: MaskPolicy::Fixed,
             serial: false,
+            priority: 1.0,
         };
         let mut cfg = SimConfig::testbed(&benches[0], kind);
         cfg.seed = case + 1;
@@ -972,6 +979,8 @@ fn prop_parallel_sweep_rows_bit_identical_to_serial() {
                 &loads,
                 n_requests,
                 &policies,
+                &[1.0],
+                PreemptionPolicy::Never,
                 case + 1,
                 t,
             )
@@ -987,6 +996,7 @@ fn prop_parallel_sweep_rows_bit_identical_to_serial() {
             assert_eq!(s.n_completed, p.n_completed, "case {case}");
             assert_eq!(s.n_rejected, p.n_rejected, "case {case}");
             assert_eq!(s.n_shed, p.n_shed, "case {case}");
+            assert_eq!(s.n_preempted, p.n_preempted, "case {case}");
             assert_eq!(s.hit_rate.to_bits(), p.hit_rate.to_bits(), "case {case}");
             assert_eq!(opt_bits(s.slack_p50_s), opt_bits(p.slack_p50_s), "case {case}");
             assert_eq!(opt_bits(s.slack_p95_s), opt_bits(p.slack_p95_s), "case {case}");
