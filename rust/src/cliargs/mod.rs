@@ -4,10 +4,10 @@
 //! A flag is boolean iff the next token starts with `--` or is absent.
 //!
 //! The sweep subcommands (`pipeline-sweep`, `deadline-sweep`,
-//! `traffic-sweep`) share one flag-registration table, [`SWEEP_FLAGS`]:
-//! each row binds a `--flag` to the parser that fills its
-//! [`SweepConfig`] field, so a shared flag spells, validates, and errors
-//! identically across the three CLIs.
+//! `traffic-sweep`, `stream-sweep`) share one flag-registration table,
+//! [`SWEEP_FLAGS`]: each row binds a `--flag` to the parser that fills
+//! its [`SweepConfig`] field, so a shared flag spells, validates, and
+//! errors identically across all the sweep CLIs.
 
 use crate::scheduler::SchedulerKind;
 use crate::types::{
@@ -221,6 +221,13 @@ pub struct SweepConfig {
     pub preemption: PreemptionPolicy,
     /// Trace-driven arrivals: JSON file of arrival offsets (seconds).
     pub trace: Option<PathBuf>,
+    /// Streaming offered-rate multipliers relative to the calibrated
+    /// chain capacity (`stream-sweep --rates`).
+    pub rates: Vec<f64>,
+    /// Items the streaming source emits (`stream-sweep --items`).
+    pub n_items: u32,
+    /// Bound on every inter-operator queue (`stream-sweep --queue-cap`).
+    pub queue_cap: u32,
     pub seed: u64,
     /// Worker threads for the sweep grid (`--threads 1` = legacy serial
     /// path; the default is the machine's available parallelism).
@@ -254,6 +261,13 @@ impl SweepConfig {
             priorities: vec![1.0],
             preemption: PreemptionPolicy::Never,
             trace: None,
+            // Under / at / over the calibrated chain capacity — keep in
+            // sync with `experiments::stream_rate_mults`.  Non-empty here
+            // (unlike `loads`/`budgets`) so the shared table validates
+            // for subcommands that never touch streaming.
+            rates: vec![0.5, 1.0, 2.0],
+            n_items: 40,
+            queue_cap: 4,
             seed: 1,
             threads: crate::engine::default_threads(),
         }
@@ -272,9 +286,9 @@ impl Default for SweepConfig {
 pub type SweepApply = fn(&Args, &mut SweepConfig) -> Result<()>;
 
 /// The single flag-registration table shared by `pipeline-sweep`,
-/// `deadline-sweep` and `traffic-sweep`: `(flag, help, apply)`.
-/// Registering a flag here is what makes it spell, validate and error
-/// the same way across all three sweeps.
+/// `deadline-sweep`, `traffic-sweep` and `stream-sweep`:
+/// `(flag, help, apply)`.  Registering a flag here is what makes it
+/// spell, validate and error the same way across all the sweeps.
 pub const SWEEP_FLAGS: &[(&str, &str, SweepApply)] = &[
     ("reps", "repetitions per configuration (integer >= 2)", |a, c| {
         c.reps = a.reps(c.reps)?;
@@ -435,6 +449,28 @@ pub const SWEEP_FLAGS: &[(&str, &str, SweepApply)] = &[
     }),
     ("trace", "JSON file of arrival offsets (replaces Poisson arrivals)", |a, c| {
         c.trace = a.flag("trace").map(PathBuf::from);
+        Ok(())
+    }),
+    ("rates", "comma-separated streaming rate multipliers of chain capacity (> 0)", |a, c| {
+        let d = c.rates.clone();
+        c.rates = a.f64_list("rates", &d)?;
+        if c.rates.is_empty() || c.rates.iter().any(|&m| !(m > 0.0 && m.is_finite())) {
+            bail!("--rates must be positive finite multipliers");
+        }
+        Ok(())
+    }),
+    ("items", "streaming source emissions per run (>= 2)", |a, c| {
+        c.n_items = a.u32_flag("items", c.n_items)?;
+        if c.n_items < 2 {
+            bail!("--items must be >= 2 (a stream needs at least two items)");
+        }
+        Ok(())
+    }),
+    ("queue-cap", "bound on every inter-operator queue (>= 1)", |a, c| {
+        c.queue_cap = a.u32_flag("queue-cap", c.queue_cap)?;
+        if c.queue_cap == 0 {
+            bail!("--queue-cap must be >= 1");
+        }
         Ok(())
     }),
     ("seed", "fleet RNG seed (non-negative integer)", |a, c| {
@@ -662,7 +698,8 @@ mod tests {
              --refine --stage-devices cpu/gpu --mask-policy fixed --contention pool \
              --loads 0.25,4 --requests 8 --deadline-mult 2.5 --admission shed \
              --priorities 1,4 --preemption iteration-boundary \
-             --trace arrivals.json --seed 7 --threads 3",
+             --trace arrivals.json --rates 0.75,3 --items 24 --queue-cap 2 \
+             --seed 7 --threads 3",
         )
         .unwrap();
         assert_eq!(c.reps, 4);
@@ -684,6 +721,9 @@ mod tests {
         assert_eq!(c.priorities, vec![1.0, 4.0]);
         assert_eq!(c.preemption, PreemptionPolicy::IterationBoundary);
         assert_eq!(c.trace.as_deref().and_then(|p| p.to_str()), Some("arrivals.json"));
+        assert_eq!(c.rates, vec![0.75, 3.0]);
+        assert_eq!(c.n_items, 24);
+        assert_eq!(c.queue_cap, 2);
         assert_eq!(c.seed, 7);
         assert_eq!(c.threads, 3);
     }
@@ -719,6 +759,10 @@ mod tests {
             ("x --priorities 0", "--priorities"),
             ("x --priorities -2", "--priorities"),
             ("x --preemption sometimes", "--preemption"),
+            ("x --rates 0.5,zap", "--rates"),
+            ("x --rates 0", "--rates"),
+            ("x --items 1", "--items"),
+            ("x --queue-cap 0", "--queue-cap"),
             ("x --seed -3", "--seed"),
             ("x --seed sixteen", "--seed"),
             ("x --threads 0", "--threads"),

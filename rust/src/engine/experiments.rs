@@ -10,10 +10,13 @@ use crate::metrics;
 use crate::scheduler::{HGuidedParams, SchedulerKind};
 use crate::sim::{simulate_pipeline, PipelineSpec, PipelineStage, SimConfig};
 use crate::stats::geomean;
-use crate::sim::tenancy::{simulate_fleet_of, ArrivalProcess, FleetOutcome};
+use crate::sim::tenancy::{
+    simulate_fleet_of, simulate_stream, ArrivalProcess, FleetOutcome, StreamOutcome,
+};
 use crate::types::{
     AdmissionPolicy, BudgetPolicy, ContentionModel, DeviceMask, EnergyPolicy, EstimateScenario,
-    ExecMode, MaskPolicy, Optimizations, PreemptionPolicy, TimeBudget,
+    ExecMode, MaskPolicy, Optimizations, PreemptionPolicy, StreamSpec, ThroughputBudget,
+    TimeBudget,
 };
 
 use super::{par, Engine};
@@ -1033,6 +1036,7 @@ pub fn branch_compare(
             energy: EnergyPolicy::RaceToIdle,
             mask_policy: MaskPolicy::Fixed,
             serial,
+            priority: 1.0,
         }
     };
     // Unconstrained serial reference for the budget ladder.
@@ -1708,6 +1712,289 @@ pub fn traffic_trace(
             TrafficRow::from_fleet(&label, rate_hz * t_ref, rate_hz, deadline_mult * t_ref, &out)
         })
         .collect()
+}
+
+// ------------------------------------------------- stream sweep
+/// Sustained-rate requirement as a fraction of the offered rate: a finite
+/// run can never deliver the full offered rate end-to-end (the makespan
+/// carries the last item's chain latency on top of `(n-1)/offered`), so
+/// the budget demands this fraction of it.  Overloads beyond `1 /
+/// STREAM_RATE_MARGIN` of capacity still read as clear misses.
+pub const STREAM_RATE_MARGIN: f64 = 0.8;
+
+/// Items a throughput window should hold at the offered rate — windows
+/// are sized `STREAM_WINDOW_ITEMS / offered_hz` so the live estimate
+/// averages over a handful of completions instead of quantizing to 0/1.
+pub const STREAM_WINDOW_ITEMS: f64 = 8.0;
+
+/// One cell of the streaming sweep: `n_items` of a linear operator chain
+/// emitted at `offered_hz` into bounded inter-operator queues, judged by
+/// the sustained-rate budget (`STREAM_RATE_MARGIN × offered_hz`).
+#[derive(Debug, Clone)]
+pub struct StreamRow {
+    pub pipeline: String,
+    /// Offered rate as a multiple of the calibrated chain capacity
+    /// (`1 / bottleneck stage service time`, solo).
+    pub rate_mult: f64,
+    pub offered_hz: f64,
+    /// Calibrated solo capacity the mult ladder is anchored to.
+    pub capacity_hz: f64,
+    pub n_items: usize,
+    pub queue_cap: usize,
+    pub window_s: f64,
+    /// End-to-end delivered rate (`n_items / makespan_s`).
+    pub achieved_hz: f64,
+    /// Overall sustained-rate verdict.
+    pub met: bool,
+    pub margin_hz: f64,
+    pub n_windows: usize,
+    pub windows_met: usize,
+    pub mask_switches: u32,
+    /// Peak occupancy over the *bounded* queues (excludes the unbounded
+    /// source queue at index 0); never exceeds `queue_cap`.
+    pub peak_occ_max: usize,
+    pub makespan_s: f64,
+    pub energy_j: f64,
+    pub lat_p50_s: Option<f64>,
+    pub lat_p95_s: Option<f64>,
+    pub lat_p99_s: Option<f64>,
+}
+
+impl CsvRow for StreamRow {
+    fn csv_header() -> &'static str {
+        "pipeline,rate_mult,offered_hz,capacity_hz,n_items,queue_cap,window_s,\
+         achieved_hz,met,margin_hz,n_windows,windows_met,mask_switches,peak_occ_max,\
+         makespan_s,energy_j,lat_p50_s,lat_p95_s,lat_p99_s"
+    }
+    fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            self.pipeline,
+            self.rate_mult,
+            self.offered_hz,
+            self.capacity_hz,
+            self.n_items,
+            self.queue_cap,
+            self.window_s,
+            self.achieved_hz,
+            self.met,
+            self.margin_hz,
+            self.n_windows,
+            self.windows_met,
+            self.mask_switches,
+            self.peak_occ_max,
+            self.makespan_s,
+            self.energy_j,
+            opt_cell(self.lat_p50_s),
+            opt_cell(self.lat_p95_s),
+            opt_cell(self.lat_p99_s)
+        )
+    }
+}
+
+impl StreamRow {
+    /// Project one streaming outcome onto the sweep-table shape.
+    pub fn from_stream(
+        pipeline: &str,
+        rate_mult: f64,
+        capacity_hz: f64,
+        out: &StreamOutcome,
+    ) -> Self {
+        StreamRow {
+            pipeline: pipeline.into(),
+            rate_mult,
+            offered_hz: out.offered_hz,
+            capacity_hz,
+            n_items: out.n_items,
+            queue_cap: out.queue_cap,
+            window_s: out.budget.window_s,
+            achieved_hz: out.achieved_hz,
+            met: out.verdict.met,
+            margin_hz: out.verdict.margin_hz,
+            n_windows: out.windows.len(),
+            windows_met: out.windows_met,
+            mask_switches: out.mask_switches,
+            peak_occ_max: out.peak_occ.iter().skip(1).copied().max().unwrap_or(0),
+            makespan_s: out.makespan_s,
+            energy_j: out.energy_j,
+            lat_p50_s: out.lat_p50_s,
+            lat_p95_s: out.lat_p95_s,
+            lat_p99_s: out.lat_p99_s,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("pipeline", Json::Str(self.pipeline.clone())),
+            ("rate_mult", Json::Num(self.rate_mult)),
+            ("offered_hz", Json::Num(self.offered_hz)),
+            ("capacity_hz", Json::Num(self.capacity_hz)),
+            ("n_items", Json::Num(self.n_items as f64)),
+            ("queue_cap", Json::Num(self.queue_cap as f64)),
+            ("window_s", Json::Num(self.window_s)),
+            ("achieved_hz", Json::Num(self.achieved_hz)),
+            ("met", Json::Bool(self.met)),
+            ("margin_hz", Json::Num(self.margin_hz)),
+            ("n_windows", Json::Num(self.n_windows as f64)),
+            ("windows_met", Json::Num(self.windows_met as f64)),
+            ("mask_switches", Json::Num(self.mask_switches as f64)),
+            ("peak_occ_max", Json::Num(self.peak_occ_max as f64)),
+            ("makespan_s", Json::Num(self.makespan_s)),
+            ("energy_j", Json::Num(self.energy_j)),
+            ("lat_p50_s", Json::opt_num(self.lat_p50_s)),
+            ("lat_p95_s", Json::opt_num(self.lat_p95_s)),
+            ("lat_p99_s", Json::opt_num(self.lat_p99_s)),
+        ])
+    }
+}
+
+/// The whole streaming sweep as one JSON array.
+pub fn stream_rows_json(rows: &[StreamRow]) -> Json {
+    Json::Arr(rows.iter().map(StreamRow::to_json).collect())
+}
+
+/// The default offered-rate ladder, as multiples of the calibrated chain
+/// capacity: clearly under, at, and clearly over the bottleneck.
+pub fn stream_rate_mults() -> Vec<f64> {
+    vec![0.5, 1.0, 2.0]
+}
+
+/// Build the linear operator chain for the streaming sweep: `benches[i]`
+/// as stage `i` depending on stage `i - 1`, with stage `i` pinned to
+/// `masks[i % masks.len()]` (the whole pool when `masks` is empty).
+/// Disjoint per-stage masks give true pipeline parallelism — adjacent
+/// items on adjacent operators with no device contention.
+fn stream_chain(benches: &[BenchId], masks: &[DeviceMask], iterations: u32) -> PipelineSpec {
+    assert!(!benches.is_empty(), "a stream chain needs at least one kernel");
+    let stages: Vec<PipelineStage> = benches
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| {
+            let mut s = PipelineStage::new(Bench::new(b), iterations);
+            if !masks.is_empty() {
+                s = s.on_devices(masks[i % masks.len()]);
+            }
+            if i > 0 {
+                s = s.after(&[i - 1]);
+            }
+            s
+        })
+        .collect();
+    PipelineSpec {
+        stages,
+        budget: None,
+        policy: BudgetPolicy::CarryOverSlack,
+        energy: EnergyPolicy::RaceToIdle,
+        mask_policy: MaskPolicy::Fixed,
+        serial: false,
+        priority: 1.0,
+    }
+}
+
+/// Shared `stream-sweep` setup: build the operator chain, the pool
+/// config, and calibrate the chain capacity from one solo run.  The
+/// slowest stage is the chain's steady-state bottleneck (operators
+/// serialize items), so its solo service time sets the capacity.
+fn stream_setup(
+    benches: &[BenchId],
+    masks: &[DeviceMask],
+    iterations: u32,
+    scheduler: &SchedulerKind,
+    opts: Optimizations,
+    mask_policy: MaskPolicy,
+    seed: u64,
+) -> (PipelineSpec, SimConfig, f64) {
+    let template = Bench::new(benches[0]);
+    let mut spec = stream_chain(benches, masks, iterations);
+    spec.mask_policy = mask_policy;
+    let mut cfg = SimConfig::testbed(&template, scheduler.clone());
+    cfg.opts = opts;
+    cfg.contention = ContentionModel::Pool;
+    cfg.seed = seed;
+    let solo = simulate_pipeline(&spec, &cfg);
+    let bottleneck_s =
+        solo.stages.iter().map(|s| s.end_s - s.start_s).fold(0.0f64, f64::max);
+    assert!(bottleneck_s > 0.0, "calibration run produced no stage work");
+    (spec, cfg, 1.0 / bottleneck_s)
+}
+
+/// One streaming cell at `mult ×` the calibrated capacity: window sized
+/// to [`STREAM_WINDOW_ITEMS`], budget at [`STREAM_RATE_MARGIN`] of the
+/// offered rate.
+fn stream_cell(
+    spec: &PipelineSpec,
+    cfg: &SimConfig,
+    capacity_hz: f64,
+    mult: f64,
+    n_items: usize,
+    queue_cap: usize,
+) -> StreamOutcome {
+    let offered_hz = mult * capacity_hz;
+    let window_s = STREAM_WINDOW_ITEMS / offered_hz;
+    let stream = StreamSpec::new(
+        offered_hz,
+        n_items,
+        queue_cap,
+        ThroughputBudget::new(STREAM_RATE_MARGIN * offered_hz, window_s),
+    );
+    simulate_stream(spec, &stream, cfg)
+}
+
+/// Sweep offered rate over a streaming run of the `benches` chain as
+/// long-running operators on the shared pool.  The rate ladder is
+/// anchored to the *calibrated* chain capacity — the reciprocal of the
+/// bottleneck stage's solo service time — so `rate_mult < 1` offers
+/// sustainable load and `rate_mult > 1` forces backpressure saturation.
+/// `mask_policy` governs operator mask re-selection at missed window
+/// boundaries (re-scatter priced before committing); [`MaskPolicy::Fixed`]
+/// pins every operator to its spec mask for the whole run.
+#[allow(clippy::too_many_arguments)]
+pub fn stream_sweep(
+    benches: &[BenchId],
+    masks: &[DeviceMask],
+    iterations: u32,
+    scheduler: &SchedulerKind,
+    opts: Optimizations,
+    mask_policy: MaskPolicy,
+    rate_mults: &[f64],
+    n_items: usize,
+    queue_cap: usize,
+    seed: u64,
+    threads: usize,
+) -> Vec<StreamRow> {
+    assert!(!rate_mults.is_empty(), "need at least one offered-rate level");
+    assert!(n_items >= 2, "a stream needs at least two items");
+    let (spec, cfg, capacity_hz) =
+        stream_setup(benches, masks, iterations, scheduler, opts, mask_policy, seed);
+    let label = spec.label();
+    par::parallel_map(threads, rate_mults.to_vec(), |&mult| {
+        let out = stream_cell(&spec, &cfg, capacity_hz, mult, n_items, queue_cap);
+        StreamRow::from_stream(&label, mult, capacity_hz, &out)
+    })
+}
+
+/// Run ONE streaming cell on the [`stream_sweep`] chain and config —
+/// the full [`StreamOutcome`] backing the `stream` JSON document — plus
+/// the calibrated capacity and the chain label.
+#[allow(clippy::too_many_arguments)]
+pub fn stream_run(
+    benches: &[BenchId],
+    masks: &[DeviceMask],
+    iterations: u32,
+    scheduler: &SchedulerKind,
+    opts: Optimizations,
+    mask_policy: MaskPolicy,
+    rate_mult: f64,
+    n_items: usize,
+    queue_cap: usize,
+    seed: u64,
+) -> (StreamOutcome, f64, String) {
+    assert!(n_items >= 2, "a stream needs at least two items");
+    let (spec, cfg, capacity_hz) =
+        stream_setup(benches, masks, iterations, scheduler, opts, mask_policy, seed);
+    let label = spec.label();
+    let out = stream_cell(&spec, &cfg, capacity_hz, rate_mult, n_items, queue_cap);
+    (out, capacity_hz, label)
 }
 
 #[cfg(test)]

@@ -30,8 +30,9 @@
 //! [`crate::config::RunConfig::builder`]) is the one validated way to
 //! configure an engine; the historical `with_*` mutator chain survives
 //! as thin `#[deprecated]` forwarding shims.  Work is submitted as a
-//! [`Request`] (spec + budget + seed) via [`Engine::submit`], or as a
-//! whole fleet via [`Engine::submit_fleet`].
+//! [`Request`] (spec + budget + seed) via [`Engine::submit`], as a
+//! whole fleet via [`Engine::submit_fleet`], or as a continuous stream
+//! of chain instances via [`Engine::submit_stream`].
 
 pub mod experiments;
 pub mod par;
@@ -45,11 +46,13 @@ use crate::benchsuite::Bench;
 use crate::cldriver::DriverProfile;
 use crate::metrics;
 use crate::scheduler::SchedulerKind;
-use crate::sim::{simulate, FleetOutcome, FleetSpec, PipelineSpec, SimConfig, SimOutcome};
+use crate::sim::{
+    simulate, FleetOutcome, FleetSpec, PipelineSpec, SimConfig, SimOutcome, StreamOutcome,
+};
 use crate::stats::Summary;
 use crate::types::{
     ContentionModel, DeviceSpec, EstimateScenario, ExecMode, MaskPolicy, Optimizations,
-    TimeBudget,
+    StreamSpec, TimeBudget,
 };
 
 /// What [`Engine::submit`] returns (the full pipeline outcome).
@@ -413,6 +416,27 @@ impl Engine {
     /// to its own arrival.
     pub fn submit_fleet(&self, fleet: &FleetSpec, seed: u64) -> FleetOutcome {
         crate::sim::simulate_fleet(fleet, &self.sim_config(seed))
+    }
+
+    /// Serve a streaming run ([`crate::sim::simulate_stream`]) on this
+    /// engine's pool: the spec's linear chain as long-running operators
+    /// fed at `stream.offered_hz` through bounded inter-operator queues,
+    /// judged by the stream's sustained-rate budget instead of a makespan
+    /// deadline.  The engine-level mask policy applies exactly as in
+    /// [`Engine::submit`] (an explicit spec policy wins; engine and
+    /// request budgets never apply — streaming rejects per-request
+    /// `TimeBudget`s).
+    pub fn submit_stream(
+        &self,
+        spec: &PipelineSpec,
+        stream: &StreamSpec,
+        seed: u64,
+    ) -> StreamOutcome {
+        let mut spec = spec.clone();
+        if spec.mask_policy == MaskPolicy::Fixed && self.mask_policy != MaskPolicy::Fixed {
+            spec = spec.with_mask_policy(self.mask_policy);
+        }
+        crate::sim::simulate_stream(&spec, stream, &self.sim_config(seed))
     }
 
     /// One pipeline run with this engine's configuration as the run

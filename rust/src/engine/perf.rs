@@ -53,6 +53,11 @@ pub struct ScenarioResult {
     pub lat_p50_s: f64,
     pub lat_p95_s: f64,
     pub lat_p99_s: f64,
+    /// The raw latency samples behind the percentiles (seconds,
+    /// unsorted).  Dumped by [`latency_cdf_json`] for the CI artifact;
+    /// deliberately absent from [`ScenarioResult::to_json`] so the
+    /// committed `BENCH_8.json` stays small.
+    pub lat_samples: Vec<f64>,
 }
 
 impl ScenarioResult {
@@ -142,6 +147,7 @@ fn scenario(
         lat_p50_s: percentile(lat, 50.0).expect("latency samples"),
         lat_p95_s: percentile(lat, 95.0).expect("latency samples"),
         lat_p99_s: percentile(lat, 99.0).expect("latency samples"),
+        lat_samples: lat.to_vec(),
     }
 }
 
@@ -250,7 +256,62 @@ pub fn run(opts: PerfOpts) -> Vec<ScenarioResult> {
         )
         .len()
     }));
+
+    // 6. Streaming sweep: the operator chain under backpressure — every
+    //    item is a micro-request through the pool engine plus the
+    //    window-boundary machinery.
+    let s_items = if quick { 8 } else { 24 };
+    out.push(scenario("stream_sweep", threads, &lat_pool, |t| {
+        experiments::stream_sweep(
+            &benches,
+            &masks,
+            f_iters,
+            &sched,
+            opt,
+            MaskPolicy::Fixed,
+            &[0.5, 2.0],
+            s_items,
+            2,
+            7,
+            t,
+        )
+        .len()
+    }));
     out
+}
+
+/// The latency-CDF artifact (ROADMAP 2b): every scenario's raw
+/// per-simulation latency samples, sorted ascending so index `i` of `n`
+/// is the empirical CDF point `(i + 1) / n`.  Uploaded from CI as an
+/// artifact, not committed — absolute latencies are machine-dependent.
+pub fn latency_cdf_json(results: &[ScenarioResult]) -> Json {
+    Json::obj(vec![
+        ("version", Json::Num(1.0)),
+        ("generator", Json::Str("enginecl bench --cdf".into())),
+        (
+            "scenarios",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|r| {
+                        let mut sorted = r.lat_samples.clone();
+                        sorted.sort_by(|a, b| a.total_cmp(b));
+                        Json::obj(vec![
+                            ("name", Json::Str(r.name.clone())),
+                            ("n", Json::Num(sorted.len() as f64)),
+                            ("lat_p50_s", Json::Num(r.lat_p50_s)),
+                            ("lat_p95_s", Json::Num(r.lat_p95_s)),
+                            ("lat_p99_s", Json::Num(r.lat_p99_s)),
+                            (
+                                "samples_s",
+                                Json::Arr(sorted.into_iter().map(Json::Num).collect()),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
 }
 
 /// The committed trajectory document (`BENCH_8.json`).
@@ -280,20 +341,51 @@ mod tests {
     fn quick_trajectory_covers_all_regimes_and_percentiles_are_monotone() {
         let opts = PerfOpts { quick: true, threads: 2 };
         let results = run(opts);
-        assert_eq!(results.len(), 5);
+        assert_eq!(results.len(), 6);
         let names: Vec<&str> = results.iter().map(|r| r.name.as_str()).collect();
         assert!(names.contains(&"pipeline_sweep_pool"));
         assert!(names.contains(&"fleet_saturated"));
+        assert!(names.contains(&"stream_sweep"));
         for r in &results {
             assert!(r.cells > 0, "{}: empty grid", r.name);
             assert!(r.serial_s > 0.0 && r.parallel_s > 0.0);
             assert!(r.speedup > 0.0 && r.speedup.is_finite());
             assert!(r.cells_per_sec > 0.0);
             assert!(r.lat_p50_s <= r.lat_p95_s && r.lat_p95_s <= r.lat_p99_s);
+            assert!(!r.lat_samples.is_empty(), "{}: no raw latency samples", r.name);
         }
         let doc = results_json(opts, &results).to_string();
         let j = crate::jsonio::Json::parse(&doc).expect("bench JSON parses");
         assert_eq!(j.get("mode").and_then(|m| m.as_str()), Some("quick"));
-        assert_eq!(j.get("scenarios").unwrap().as_arr().unwrap().len(), 5);
+        assert_eq!(j.get("scenarios").unwrap().as_arr().unwrap().len(), 6);
+    }
+
+    #[test]
+    fn latency_cdf_document_is_sorted_and_parses() {
+        let results = vec![ScenarioResult {
+            name: "toy".into(),
+            cells: 1,
+            serial_s: 1.0,
+            parallel_s: 1.0,
+            speedup: 1.0,
+            cells_per_sec: 1.0,
+            lat_p50_s: 0.2,
+            lat_p95_s: 0.3,
+            lat_p99_s: 0.3,
+            lat_samples: vec![0.3, 0.1, 0.2],
+        }];
+        let doc = latency_cdf_json(&results).to_string();
+        let j = crate::jsonio::Json::parse(&doc).expect("CDF JSON parses");
+        let sc = &j.get("scenarios").unwrap().as_arr().unwrap()[0];
+        assert_eq!(sc.get("n").and_then(|n| n.as_u64()), Some(3));
+        let samples: Vec<f64> = sc
+            .get("samples_s")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|s| s.as_f64().unwrap())
+            .collect();
+        assert_eq!(samples, vec![0.1, 0.2, 0.3], "samples sorted ascending");
     }
 }

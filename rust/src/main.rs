@@ -70,10 +70,23 @@ USAGE:
                   # --priorities spawns one tenant per weight (requests
                   # round-robin); reports hit rate, p50/p95/p99 slack,
                   # J/hit and per-tenant energy attribution
-  enginecl bench  [--quick] [--threads N] [--out PATH]
+  enginecl stream-sweep [--benches B1,B2,..] [--iters K] [--sched S]
+                  [--stage-devices M1/M2] [--rates R1,R2,..] [--items N]
+                  [--queue-cap N] [--mask-policy P] [--refine] [--seed N]
+                  [--threads N] [--csv PATH] [--json PATH]
+                  # streaming co-execution: the benches chain as
+                  # long-running operators (stage i on mask i), fed at a
+                  # fixed rate through bounded inter-operator queues with
+                  # backpressure; sweeps offered rate over multiples of
+                  # the calibrated chain capacity and judges each run by
+                  # a sustained-throughput budget re-evaluated at window
+                  # boundaries, not a makespan deadline
+  enginecl bench  [--quick] [--threads N] [--out PATH] [--cdf PATH]
                   # performance trajectory: pinned sweep workloads timed
                   # serial vs --threads N, view vs pool, small vs
-                  # saturated fleet; writes BENCH_8.json
+                  # saturated fleet, plus the streaming sweep; writes
+                  # BENCH_8.json and (with --cdf) the raw per-simulation
+                  # latency-CDF samples
 
 benches:  gaussian binomial nbody ray ray2 mandelbrot
 scheds:   static static-rev dynamic:N hguided hguided-opt adaptive
@@ -129,6 +142,7 @@ fn main() -> Result<()> {
         "deadline-sweep" => deadline_sweep(args),
         "pipeline-sweep" => pipeline_sweep(args),
         "traffic-sweep" => traffic_sweep_cmd(args),
+        "stream-sweep" => stream_sweep_cmd(args),
         "bench" => bench_cmd(args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -895,6 +909,95 @@ fn traffic_sweep_cmd(args: Args) -> Result<()> {
     Ok(())
 }
 
+/// Streaming co-execution: run the benches chain as long-running
+/// operators fed at a fixed rate through bounded inter-operator queues,
+/// sweep the offered rate over multiples of the calibrated chain
+/// capacity, and report the sustained-throughput verdicts.
+fn stream_sweep_cmd(args: Args) -> Result<()> {
+    // Seed this sweep's defaults, then parse through the shared table.
+    // Operators pin their mask at first launch, so `fixed` is the
+    // natural default; the searching policies re-select at missed
+    // window boundaries (re-scatter priced before committing).
+    let mut cfg = SweepConfig::new();
+    cfg.mask_policy = MaskPolicy::Fixed;
+    apply_sweep_flags(&args, &mut cfg)?;
+    let benches: Vec<BenchId> =
+        cfg.benches.iter().map(|s| parse_bench(s)).collect::<Result<_>>()?;
+    let sched = cfg
+        .scheduler
+        .unwrap_or(SchedulerKind::Adaptive { params: AdaptiveParams::default_paper() });
+    let opts = Optimizations::ALL.with_estimate_refine(cfg.refine);
+    println!(
+        "STREAM SWEEP — {} items, rates x{:?} of chain capacity, queue cap {}, seed {}",
+        cfg.n_items, cfg.rates, cfg.queue_cap, cfg.seed
+    );
+    let rows = experiments::stream_sweep(
+        &benches,
+        &cfg.masks,
+        cfg.iters,
+        &sched,
+        opts,
+        cfg.mask_policy,
+        &cfg.rates,
+        cfg.n_items as usize,
+        cfg.queue_cap as usize,
+        cfg.seed,
+        cfg.threads,
+    );
+    println!(
+        "{:<24}{:>6}{:>11}{:>11}{:>6}{:>6}{:>9}{:>9}{:>10}{:>10}",
+        "pipeline", "rate", "offered/s", "achieved/s", "met", "win", "win-met", "peak-q",
+        "p50(s)", "p99(s)"
+    );
+    for r in &rows {
+        println!(
+            "{:<24}{:>6.2}{:>11.3}{:>11.3}{:>6}{:>6}{:>9}{:>9}{:>10.4}{:>10.4}",
+            r.pipeline,
+            r.rate_mult,
+            r.offered_hz,
+            r.achieved_hz,
+            r.met,
+            r.n_windows,
+            r.windows_met,
+            r.peak_occ_max,
+            r.lat_p50_s.unwrap_or(f64::NAN),
+            r.lat_p99_s.unwrap_or(f64::NAN)
+        );
+    }
+    if let Some(p) = args.csv()? {
+        write_csv(&p, &rows)?;
+        println!("wrote {}", p.display());
+    }
+    // The showcase stream backing the `stream` JSON document: the
+    // lightest configured rate — the regime where the budget holds and
+    // every window carries items.
+    let lightest = cfg.rates.iter().cloned().fold(f64::INFINITY, f64::min);
+    let (showcase, _, _) = experiments::stream_run(
+        &benches,
+        &cfg.masks,
+        cfg.iters,
+        &sched,
+        opts,
+        cfg.mask_policy,
+        lightest,
+        cfg.n_items as usize,
+        cfg.queue_cap as usize,
+        cfg.seed,
+    );
+    let json = enginecl::jsonio::Json::obj(vec![
+        ("rows", experiments::stream_rows_json(&rows)),
+        ("stream", metrics::stream_json(&showcase)),
+    ]);
+    match args.json() {
+        Some(p) => {
+            std::fs::write(&p, json.to_string())?;
+            println!("wrote {}", p.display());
+        }
+        None => println!("{json}"),
+    }
+    Ok(())
+}
+
 /// Performance trajectory harness: time the pinned sweep workloads
 /// serial vs parallel and write the committed `BENCH_8.json` document.
 fn bench_cmd(args: Args) -> Result<()> {
@@ -940,6 +1043,11 @@ fn bench_cmd(args: Args) -> Result<()> {
     let path = args.flag("out").map(PathBuf::from).unwrap_or_else(|| PathBuf::from("BENCH_8.json"));
     std::fs::write(&path, format!("{doc}\n"))?;
     println!("wrote {}", path.display());
+    if let Some(p) = args.flag("cdf").map(PathBuf::from) {
+        let cdf = enginecl::engine::perf::latency_cdf_json(&results);
+        std::fs::write(&p, format!("{cdf}\n"))?;
+        println!("wrote {}", p.display());
+    }
     Ok(())
 }
 

@@ -6,7 +6,7 @@
 use crate::jsonio::Json;
 use crate::sim::{
     ActiveWindow, DeviceTrace, FleetOutcome, IterVerdict, PipelineOutcome, RequestOutcome,
-    SimOutcome, StageTrace, TenantOutcome,
+    SimOutcome, StageTrace, StreamOutcome, StreamWindow, TenantOutcome,
 };
 use crate::types::DeadlineVerdict;
 
@@ -243,6 +243,7 @@ fn request_json_with(r: &RequestOutcome, aware: bool) -> Json {
         pairs.push(("tenant", Json::Num(r.tenant as f64)));
         pairs.push(("priority", Json::Num(r.priority)));
         pairs.push(("energy_j", Json::Num(r.energy_j)));
+        pairs.push(("busy_energy_j", Json::Num(r.busy_energy_j)));
         pairs.push(("preemptions", Json::Num(r.preemptions as f64)));
     }
     Json::obj(pairs)
@@ -304,6 +305,60 @@ pub fn fleet_json(out: &FleetOutcome) -> Json {
         pairs.push(("tenants", Json::Arr(out.tenants.iter().map(tenant_json).collect())));
     }
     Json::obj(pairs)
+}
+
+fn stream_window_json(w: &StreamWindow) -> Json {
+    Json::obj(vec![
+        ("index", Json::Num(w.index as f64)),
+        ("start_s", Json::Num(w.start_s)),
+        ("end_s", Json::Num(w.end_s)),
+        ("items", Json::Num(w.items as f64)),
+        ("throughput_hz", Json::Num(w.throughput_hz)),
+        ("met", Json::Bool(w.met)),
+        (
+            "queue_occ",
+            Json::Arr(w.queue_occ.iter().map(|&q| Json::Num(q as f64)).collect()),
+        ),
+    ])
+}
+
+/// JSON view of one streaming run: the sustained-rate verdict, the
+/// closed per-window live estimates, queue telemetry, and the end-to-end
+/// latency percentiles.  Streaming output is entirely new — no batch
+/// golden snapshot contains any of these fields.
+pub fn stream_json(out: &StreamOutcome) -> Json {
+    Json::obj(vec![
+        ("offered_hz", Json::Num(out.offered_hz)),
+        ("n_items", Json::Num(out.n_items as f64)),
+        ("queue_cap", Json::Num(out.queue_cap as f64)),
+        ("rate_hz", Json::Num(out.budget.rate_hz)),
+        ("window_s", Json::Num(out.budget.window_s)),
+        ("achieved_hz", Json::Num(out.achieved_hz)),
+        (
+            "verdict",
+            Json::obj(vec![
+                ("met", Json::Bool(out.verdict.met)),
+                ("margin_hz", Json::Num(out.verdict.margin_hz)),
+            ]),
+        ),
+        ("n_windows", Json::Num(out.windows.len() as f64)),
+        ("windows_met", Json::Num(out.windows_met as f64)),
+        ("mask_switches", Json::Num(out.mask_switches as f64)),
+        ("makespan_s", Json::Num(out.makespan_s)),
+        ("energy_j", Json::Num(out.energy_j)),
+        ("lat_p50_s", Json::opt_num(out.lat_p50_s)),
+        ("lat_p95_s", Json::opt_num(out.lat_p95_s)),
+        ("lat_p99_s", Json::opt_num(out.lat_p99_s)),
+        (
+            "peak_occ",
+            Json::Arr(out.peak_occ.iter().map(|&q| Json::Num(q as f64)).collect()),
+        ),
+        (
+            "pool_utilization",
+            Json::Num(pool_utilization(&out.traces, out.makespan_s)),
+        ),
+        ("windows", Json::Arr(out.windows.iter().map(stream_window_json).collect())),
+    ])
 }
 
 #[cfg(test)]

@@ -14,7 +14,10 @@
 //!
 //! [`tenancy`] serves a *fleet* of such pipelines on one shared pool: an
 //! open-loop arrival process plus deadline-aware admission control over
-//! the interleaved pool engine.
+//! the interleaved pool engine.  Its [`simulate_stream`] entry instead
+//! runs one linear chain as *long-running operators* fed by an unbounded
+//! source through bounded inter-operator queues, judged by a sustained
+//! [`crate::types::ThroughputBudget`] rather than a makespan deadline.
 
 pub mod coexec;
 pub mod pipeline;
@@ -23,9 +26,9 @@ pub mod tenancy;
 pub use coexec::{simulate, simulate_iterative, DeviceTrace, PackageTrace, SimConfig, SimOutcome};
 pub use pipeline::{
     simulate_pipeline, ActiveWindow, IterOutcome, IterVerdict, PipelineOutcome, PipelineSpec,
-    PipelineStage, ReqDisposition, StageTrace, DEFAULT_MASK_LEAF_CAP,
+    PipelineStage, ReqDisposition, StageTrace, StreamWindow, DEFAULT_MASK_LEAF_CAP,
 };
 pub use tenancy::{
-    parse_trace, simulate_fleet, simulate_fleet_of, ArrivalProcess, FleetOutcome, FleetSpec,
-    RequestOutcome, TenantOutcome,
+    parse_trace, simulate_fleet, simulate_fleet_of, simulate_stream, ArrivalProcess, FleetOutcome,
+    FleetSpec, RequestOutcome, StreamOutcome, TenantOutcome,
 };

@@ -91,6 +91,26 @@
 //! ([`super::tenancy`]) are the `Pool` scope over many requests'
 //! branches — the identical loop, heap, and pricing.
 //!
+//! **Streaming mode** ([`stream_schedule`], driven by
+//! [`crate::types::StreamSpec`]).  The same event core runs *continuous*
+//! workloads: the template chain's stages become long-running operators,
+//! each item emitted by the unbounded source ([`PoolEvKind::SourceTick`])
+//! is one request instance flowing through them, and bounded inter-stage
+//! queues with backpressure gate the launches — operator `p` starts item
+//! `r` only when it is idle, items are taken strictly in order, and the
+//! downstream queue has room (a full queue stalls the producer's next
+//! iteration; the unbounded source queue absorbs overload, which then
+//! shows up as a missed throughput verdict instead of drops).  Judgement
+//! is by sustained rate, not makespan: [`PoolEvKind::WindowBoundary`]
+//! events close [`ThroughputBudget`](crate::types::ThroughputBudget)
+//! windows, record the live per-window throughput and queue occupancy,
+//! and re-evaluate each idle operator's pinned mask on the live estimate
+//! — a mask switch prices its re-scatter
+//! ([`preempt_rescatter_cost`]) before committing and is taken only when
+//! the predicted per-window gain repays it.  Package pricing, retention
+//! re-timing, RNG forks and energy accounting are the unchanged fleet
+//! machinery.
+//!
 //! Simplifications (documented modelling scope): each branch serializes
 //! its grants on its own host queue.  Per-iteration **sub-budgets** are
 //! assigned along the topological launch order with a shared carry
@@ -114,7 +134,7 @@ use crate::stats::XorShift64;
 use crate::types::{
     AdmissionPolicy, BudgetPolicy, ContentionModel, DeadlineVerdict, DeviceClass, DeviceMask,
     DevicePool, DeviceView, EnergyPolicy, ExecMode, GroupRange, MaskPolicy, PreemptionPolicy,
-    TimeBudget,
+    StreamSpec, TimeBudget,
 };
 
 use super::coexec::{self, DeviceTrace, IterPhase, PackageTrace, RoiPass, SimConfig};
@@ -1579,6 +1599,12 @@ enum PoolEvKind {
     StageStart { r: usize, pos: usize },
     /// Request `r` arrives at the pool and faces admission control.
     Arrival { r: usize },
+    /// Streaming mode: the unbounded source emits item `r` into the
+    /// source queue.  Items face backpressure, not admission control.
+    SourceTick { r: usize },
+    /// Streaming mode: throughput window `w` closes — record the live
+    /// rate/occupancy and re-evaluate idle operators' pinned masks.
+    WindowBoundary { w: usize },
 }
 
 struct PoolEv {
@@ -1713,6 +1739,92 @@ struct PoolState {
     /// members, so `retention_at(class, new_active) == class_retention`
     /// means the whole class is a no-op and is skipped.
     class_retention: [f64; 3],
+    /// Streaming-mode operator/queue state; `None` for batch runs (which
+    /// keeps every batch code path and the committed goldens untouched).
+    stream: Option<StreamState>,
+}
+
+/// One closed throughput window of a streaming run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamWindow {
+    /// Window index (window `w` spans `[w·window_s, (w+1)·window_s)`).
+    pub index: usize,
+    pub start_s: f64,
+    pub end_s: f64,
+    /// Items whose final stage completed inside the window.
+    pub items: usize,
+    /// Live sustained-rate estimate: `items / window_s`.
+    pub throughput_hz: f64,
+    /// Whether the live estimate holds the [`ThroughputBudget`] rate.
+    pub met: bool,
+    /// Queue occupancy at the boundary instant, one entry per operator
+    /// input queue (`[0]` is the unbounded source queue).
+    pub queue_occ: Vec<usize>,
+}
+
+/// Streaming-mode results that ride alongside [`FleetRaw`].
+pub(crate) struct StreamRaw {
+    pub windows: Vec<StreamWindow>,
+    /// Peak occupancy seen per operator input queue (`[0]` = source).
+    pub peak_occ: Vec<usize>,
+    /// Window-boundary mask switches committed (re-scatter priced in).
+    pub mask_switches: u32,
+}
+
+/// Live operator/queue state of a streaming run: the chain's stages are
+/// long-running operators, items are request instances flowing through
+/// them, and the bounded inter-stage queues gate launches (backpressure).
+struct StreamState {
+    spec: StreamSpec,
+    /// The template's mask policy (`Fixed` disables window re-selection).
+    mask_policy: MaskPolicy,
+    /// Occupancy per operator input queue: `queue_occ[p]` counts items
+    /// that finished operator `p-1` (or, for `p = 0`, arrived) and have
+    /// not been taken by operator `p`.  `[0]` is unbounded; the rest are
+    /// capped at `spec.queue_cap` by the launch gate.
+    queue_occ: Vec<usize>,
+    peak_occ: Vec<usize>,
+    /// Item each operator is currently serving (launch → completion).
+    op_item: Vec<Option<usize>>,
+    /// Next item index each operator must take — operators process the
+    /// stream strictly in order.
+    op_next: Vec<usize>,
+    /// Mask pinned by buffer residency: chosen at the operator's first
+    /// launch, kept across items, re-evaluated only when a missed window
+    /// unpins it.
+    pinned: Vec<Option<DeviceMask>>,
+    /// Last committed mask per operator (survives unpinning, so a
+    /// re-selection can price the re-scatter from the resident buffers).
+    prev_mask: Vec<Option<DeviceMask>>,
+    /// Predicted per-item service under the committed mask, the baseline
+    /// a window-boundary switch must beat.
+    op_pred_s: Vec<f64>,
+    /// Items whose final stage completed so far.
+    completions: usize,
+    /// `completions` at the last closed window boundary.
+    window_done: usize,
+    windows: Vec<StreamWindow>,
+    mask_switches: u32,
+}
+
+impl StreamState {
+    fn new(spec: StreamSpec, mask_policy: MaskPolicy, n_ops: usize) -> Self {
+        Self {
+            spec,
+            mask_policy,
+            queue_occ: vec![0; n_ops],
+            peak_occ: vec![0; n_ops],
+            op_item: vec![None; n_ops],
+            op_next: vec![0; n_ops],
+            pinned: vec![None; n_ops],
+            prev_mask: vec![None; n_ops],
+            op_pred_s: vec![0.0; n_ops],
+            completions: 0,
+            window_done: 0,
+            windows: Vec::new(),
+            mask_switches: 0,
+        }
+    }
 }
 
 /// Close the current active-set window at `t` (windows with zero active
@@ -1802,6 +1914,14 @@ fn phase_of(iter: u32, iterations: u32) -> IterPhase {
 /// package set touched is identical to the full rescan (asserted
 /// against [`rescan_retime_oracle`] under test / the `rescan-oracle`
 /// feature), so schedules stay bit-identical.
+/// Below this completion-time delta a re-timing is dropped (ROADMAP 2c):
+/// invalidating and re-pushing a completion event that moves by less
+/// than one event-queue epsilon churns the heap without observably
+/// changing any ordering.  A skipped package keeps its *old* retention,
+/// so a later boundary re-prices its remaining compute from the true
+/// pace rather than compounding the dropped sub-epsilon error.
+const RETIME_EPS: f64 = 1e-9;
+
 fn retime_inflight(st: &mut PoolState, driver: &DriverProfile, t: f64, new_active: usize) {
     if st.scope == PricingScope::View {
         return;
@@ -1832,7 +1952,11 @@ fn retime_inflight(st: &mut PoolState, driver: &DriverProfile, t: f64, new_activ
             if pkg.compute_end <= pivot {
                 continue; // compute finished; only the d2h tail remains
             }
-            pkg.compute_end = pivot + (pkg.compute_end - pivot) * (pkg.retention / r_new);
+            let end = pivot + (pkg.compute_end - pivot) * (pkg.retention / r_new);
+            if (end - pkg.compute_end).abs() < RETIME_EPS {
+                continue; // sub-epsilon move: keep the event, keep the old pace
+            }
+            pkg.compute_end = end;
             pkg.retention = r_new;
             let done = pkg.compute_end + pkg.d2h;
             br.ev_epoch[slot] = br.ev_epoch[slot].wrapping_add(1);
@@ -1858,7 +1982,8 @@ fn retime_inflight(st: &mut PoolState, driver: &DriverProfile, t: f64, new_activ
 
 /// The historical full rescan, kept as a read-only oracle: walks every
 /// request × branch × slot with the exact per-package guards and
-/// arithmetic of the pre-incremental `retime_inflight` and returns the
+/// arithmetic of `retime_inflight` (including the [`RETIME_EPS`]
+/// sub-epsilon skip) and returns the
 /// `(r, b, slot, new_compute_end_bits)` set it would have re-timed, in
 /// scan order.  [`retime_inflight`] asserts bit-identity against it on
 /// every boundary under test builds and the `rescan-oracle` feature.
@@ -1885,6 +2010,9 @@ fn rescan_retime_oracle(
                     continue;
                 }
                 let end = pivot + (pkg.compute_end - pivot) * (pkg.retention / r_new);
+                if (end - pkg.compute_end).abs() < RETIME_EPS {
+                    continue;
+                }
                 out.push((r, b, slot, end.to_bits()));
             }
         }
@@ -2029,7 +2157,24 @@ fn launch_scan_req(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usi
         if !deps.iter().all(|&d| st.reqs[r].completed[d]) {
             continue;
         }
+        if let Some(ss) = &st.stream {
+            // Operator gate: streaming stages are long-running operators —
+            // one item at a time, strictly in item order, and the producer
+            // stalls its next iteration while the downstream queue is full
+            // (backpressure; the source queue in front of operator 0 is
+            // unbounded and absorbs overload instead).
+            if ss.op_item[pos].is_some() || ss.op_next[pos] != r {
+                continue;
+            }
+            if pos + 1 < prep.order.len() && ss.queue_occ[pos + 1] >= ss.spec.queue_cap {
+                continue;
+            }
+        }
         let spec_mask = prep.plans[pos].mask;
+        // Streaming pins each operator's mask by buffer residency after
+        // its first launch: later items reuse it verbatim (a `Fixed`
+        // selection) until a missed window unpins it for re-evaluation.
+        let pinned = st.stream.as_ref().and_then(|ss| ss.pinned[pos]);
         match st.scope {
             // The view scope drains stages one at a time in strict
             // topological order — a stage is eligible only once every
@@ -2041,7 +2186,7 @@ fn launch_scan_req(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usi
                 }
             }
             PricingScope::Pool => {
-                if spec_mask.intersects(st.held) {
+                if pinned.unwrap_or(spec_mask).intersects(st.held) {
                     continue;
                 }
                 // Sequential drains process stages strictly in topological
@@ -2086,40 +2231,81 @@ fn launch_scan_req(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usi
         let pool_scoped = st.scope == PricingScope::Pool;
         let running_until =
             if pool_scoped { fleet_running_until(st, preps) } else { 0.0 };
-        let choice = select_stage_mask(
-            prep.spec.mask_policy,
-            spec_mask,
-            &SelectCtx {
-                cfg: prep.cfg,
-                classes: prep.classes,
-                transfers: prep.transfers,
-                pool_powers: (0..prep.classes.len())
-                    .map(|i| match &stage.powers {
-                        Some(p) => p[i],
-                        None => prep.cfg.devices[i].power,
-                    })
-                    .collect(),
-                bench: &stage.bench,
-                gws: prep.plans[pos].gws,
-                iterations: stage.iterations,
-                edges: edges.clone(),
-                dep_ready,
-                dev_free: &st.dev_free,
-                serial: !pool_scoped && prep.spec.serial,
-                serial_clock: if pool_scoped { 0.0 } else { st.serial_clock },
-                leaf: !prep.has_dependents[si],
-                roi_deadline: prep.roi_deadline,
-                policy: prep.spec.policy,
-                total_iters: prep.total_iters,
-                global_iter: gi_base,
-                prev_sub,
-                running: if pool_scoped { st.held } else { DeviceMask::empty() },
-                pool_contention: pool_scoped,
-                running_until,
-                arrival_s: prep.arrival_s,
-                crit_frac: prep.crit_frac,
-            },
-        );
+        let (eff_policy, eff_mask) = match pinned {
+            Some(m) => (MaskPolicy::Fixed, m),
+            None => (prep.spec.mask_policy, spec_mask),
+        };
+        let ctx = SelectCtx {
+            cfg: prep.cfg,
+            classes: prep.classes,
+            transfers: prep.transfers,
+            pool_powers: (0..prep.classes.len())
+                .map(|i| match &stage.powers {
+                    Some(p) => p[i],
+                    None => prep.cfg.devices[i].power,
+                })
+                .collect(),
+            bench: &stage.bench,
+            gws: prep.plans[pos].gws,
+            iterations: stage.iterations,
+            edges: edges.clone(),
+            dep_ready,
+            dev_free: &st.dev_free,
+            serial: !pool_scoped && prep.spec.serial,
+            serial_clock: if pool_scoped { 0.0 } else { st.serial_clock },
+            leaf: !prep.has_dependents[si],
+            roi_deadline: prep.roi_deadline,
+            policy: prep.spec.policy,
+            total_iters: prep.total_iters,
+            global_iter: gi_base,
+            prev_sub,
+            running: if pool_scoped { st.held } else { DeviceMask::empty() },
+            pool_contention: pool_scoped,
+            running_until,
+            arrival_s: prep.arrival_s,
+            crit_frac: prep.crit_frac,
+        };
+        let mut choice = select_stage_mask(eff_policy, eff_mask, &ctx);
+        // Streaming re-selection after a missed window: the operator's
+        // working set is resident on its previous mask, so a switch
+        // prices its re-scatter *before* committing — it is taken only
+        // when the predicted per-item gain over one throughput window
+        // repays moving the buffers; otherwise the old mask stays.
+        let mut switch_transfer = 0.0;
+        if let Some(ss) = &st.stream {
+            if pinned.is_none() {
+                if let Some(old) = ss.prev_mask[pos] {
+                    if choice.mask != old {
+                        let bytes =
+                            prep.plans[pos].gws as f64 * stage.bench.bytes_out_per_item;
+                        let rc = preempt_rescatter_cost(
+                            prep.transfers,
+                            prep.classes,
+                            old,
+                            choice.mask,
+                            bytes,
+                        );
+                        let new_service = choice.pred_iter_s * stage.iterations as f64;
+                        let items_per_window =
+                            (ss.spec.budget.rate_hz * ss.spec.budget.window_s).max(1.0);
+                        let gain = (ss.op_pred_s[pos] - new_service) * items_per_window;
+                        if gain > rc {
+                            switch_transfer = rc;
+                        } else {
+                            choice = select_stage_mask(MaskPolicy::Fixed, old, &ctx);
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(ss) = st.stream.as_mut() {
+            if switch_transfer > 0.0 {
+                ss.mask_switches += 1;
+            }
+            ss.pinned[pos] = Some(choice.mask);
+            ss.prev_mask[pos] = Some(choice.mask);
+            ss.op_pred_s[pos] = choice.pred_iter_s * stage.iterations as f64;
+        }
         st.reqs[r].chosen_masks[pos] = choice.mask;
         let (view, stage_cfg) = if choice.mask != spec_mask {
             stage_view_cfg(prep.cfg, pool, stage, choice.mask, prep.spec.energy)
@@ -2133,6 +2319,7 @@ fn launch_scan_req(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usi
                 edge_transfer_cost(prep.transfers, prep.classes, prod, choice.mask, bytes)
             })
             .sum();
+        transfer_in += switch_transfer;
         if let Some(pz) = resume.as_ref() {
             // Resuming a preempted stage pays the explicit re-scatter:
             // its working set comes off the old mask and back onto the
@@ -2186,6 +2373,13 @@ fn launch_scan_req(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usi
         st.tie += 1;
         st.reqs[r].launched[pos] = true;
         st.reqs[r].ever_launched = true;
+        if let Some(ss) = st.stream.as_mut() {
+            // The operator takes the item: it leaves the input queue and
+            // the in-order cursor advances.
+            ss.queue_occ[pos] -= 1;
+            ss.op_item[pos] = Some(r);
+            ss.op_next[pos] = r + 1;
+        }
     }
 }
 
@@ -2290,6 +2484,18 @@ fn complete_stage(
     let prep = &preps[r];
     st.reqs[r].stage_end[br.si] = end;
     st.reqs[r].completed[br.si] = true;
+    if let Some(ss) = st.stream.as_mut() {
+        // The operator frees up and the item moves downstream: into the
+        // next bounded queue, or out of the chain entirely.
+        let pos = prep.plan_of[br.si];
+        ss.op_item[pos] = None;
+        if pos + 1 < prep.order.len() {
+            ss.queue_occ[pos + 1] += 1;
+            ss.peak_occ[pos + 1] = ss.peak_occ[pos + 1].max(ss.queue_occ[pos + 1]);
+        } else {
+            ss.completions += 1;
+        }
+    }
     st.serial_clock = st.serial_clock.max(end);
     for &i in &br.view.pool_ids {
         st.dev_free[i] = end;
@@ -2936,6 +3142,98 @@ pub(crate) fn fleet_schedule(
     preemption: PreemptionPolicy,
     scope: PricingScope,
 ) -> FleetRaw {
+    schedule_core(pool, preps, rngs, admission, preemption, scope, None).0
+}
+
+/// Streaming entry: the chain template's stages as long-running operators
+/// under `stream`'s source/queue/budget shape, one prep per item, always
+/// at the Pool pricing scope (operators co-execute on the shared pool).
+/// Admission control and preemption are off — backpressure through the
+/// bounded queues is the only regulator.
+pub(crate) fn stream_schedule(
+    pool: &DevicePool,
+    preps: &[Prep],
+    rngs: Vec<XorShift64>,
+    stream: &StreamSpec,
+) -> (FleetRaw, StreamRaw) {
+    let (raw, sraw) = schedule_core(
+        pool,
+        preps,
+        rngs,
+        AdmissionPolicy::Accept,
+        PreemptionPolicy::Never,
+        PricingScope::Pool,
+        Some(stream),
+    );
+    (raw, sraw.expect("stream run returns stream results"))
+}
+
+/// Streaming mode: item `r` arrives at the unbounded source queue.  No
+/// admission control — backpressure is the regulator — so the item is
+/// admitted outright and only operator 0's gate decides when it starts.
+fn source_tick(st: &mut PoolState, preps: &[Prep], pool: &DevicePool, r: usize, t: f64) {
+    debug_assert_eq!(st.reqs[r].status, ReqStatus::NotArrived);
+    st.reqs[r].status = ReqStatus::Admitted;
+    st.tenant_arrived[preps[r].tenant] += 1;
+    {
+        let ss = st.stream.as_mut().expect("SourceTick outside streaming mode");
+        ss.queue_occ[0] += 1;
+        ss.peak_occ[0] = ss.peak_occ[0].max(ss.queue_occ[0]);
+    }
+    launch_scan_req(st, preps, pool, r, t);
+}
+
+/// Streaming mode: close throughput window `w` at `t`, record the live
+/// rate and queue occupancy, and — when the window missed its rate —
+/// unpin idle operators' masks so their next launch re-runs selection on
+/// the live estimate (pricing the re-scatter before committing).  Pushes
+/// the next boundary while items remain in flight.
+fn window_boundary(st: &mut PoolState, w: usize, t: f64) {
+    let tie = st.tie;
+    st.tie += 1;
+    let ss = st.stream.as_mut().expect("WindowBoundary outside streaming mode");
+    let window_s = ss.spec.budget.window_s;
+    let items = ss.completions - ss.window_done;
+    let throughput_hz = items as f64 / window_s;
+    let met = ss.spec.budget.holds(throughput_hz);
+    ss.windows.push(StreamWindow {
+        index: w,
+        start_s: t - window_s,
+        end_s: t,
+        items,
+        throughput_hz,
+        met,
+        queue_occ: ss.queue_occ.clone(),
+    });
+    ss.window_done = ss.completions;
+    if !met && ss.mask_policy != MaskPolicy::Fixed {
+        // Busy operators keep their pin for now — they re-evaluate at the
+        // first missed boundary that catches them idle.
+        for pos in 0..ss.pinned.len() {
+            if ss.op_item[pos].is_none() {
+                ss.pinned[pos] = None;
+            }
+        }
+    }
+    if ss.completions < ss.spec.n_items {
+        st.evs.push(PoolEv {
+            t: t + window_s,
+            tie,
+            epoch: 0,
+            kind: PoolEvKind::WindowBoundary { w: w + 1 },
+        });
+    }
+}
+
+fn schedule_core(
+    pool: &DevicePool,
+    preps: &[Prep],
+    rngs: Vec<XorShift64>,
+    admission: AdmissionPolicy,
+    preemption: PreemptionPolicy,
+    scope: PricingScope,
+    stream: Option<&StreamSpec>,
+) -> (FleetRaw, Option<StreamRaw>) {
     assert_eq!(preps.len(), rngs.len(), "one RNG per request");
     let n_pool = pool.len();
     let n_tenants = preps.iter().map(|p| p.tenant).max().unwrap_or(0) + 1;
@@ -2990,24 +3288,52 @@ pub(crate) fn fleet_schedule(
         serial_clock: 0.0,
         class_inflight: [Vec::new(), Vec::new(), Vec::new()],
         class_retention: [1.0; 3],
+        stream: stream.map(|sp| {
+            assert_eq!(scope, PricingScope::Pool, "streaming runs price at pool scope");
+            let n_ops = preps.first().map(|p| p.order.len()).unwrap_or(0);
+            let mask_policy = preps
+                .first()
+                .map(|p| p.spec.mask_policy)
+                .unwrap_or(MaskPolicy::Fixed);
+            StreamState::new(*sp, mask_policy, n_ops)
+        }),
     };
+    let streaming = st.stream.is_some();
     // Later arrivals enter through events; time-zero arrivals face
     // admission before the event loop, exactly like the standalone
-    // engine's initial launch scan.
+    // engine's initial launch scan.  In streaming mode items instead
+    // flow through the unbounded source queue (no admission).
     for (r, prep) in preps.iter().enumerate() {
         if prep.arrival_s > 0.0 {
             st.evs.push(PoolEv {
                 t: prep.arrival_s,
                 tie: st.tie,
                 epoch: 0,
-                kind: PoolEvKind::Arrival { r },
+                kind: if streaming {
+                    PoolEvKind::SourceTick { r }
+                } else {
+                    PoolEvKind::Arrival { r }
+                },
             });
             st.tie += 1;
         }
     }
+    if let Some(sp) = stream {
+        st.evs.push(PoolEv {
+            t: sp.budget.window_s,
+            tie: st.tie,
+            epoch: 0,
+            kind: PoolEvKind::WindowBoundary { w: 0 },
+        });
+        st.tie += 1;
+    }
     for (r, prep) in preps.iter().enumerate() {
         if prep.arrival_s == 0.0 {
-            arrive(&mut st, preps, pool, r, 0.0);
+            if streaming {
+                source_tick(&mut st, preps, pool, r, 0.0);
+            } else {
+                arrive(&mut st, preps, pool, r, 0.0);
+            }
         }
     }
     while let Some(ev) = st.evs.pop() {
@@ -3017,6 +3343,8 @@ pub(crate) fn fleet_schedule(
             PoolEvKind::DevIdle { r, b, slot } => {
                 dev_idle(&mut st, preps, pool, r, b, slot, ev.epoch, ev.t)
             }
+            PoolEvKind::SourceTick { r } => source_tick(&mut st, preps, pool, r, ev.t),
+            PoolEvKind::WindowBoundary { w } => window_boundary(&mut st, w, ev.t),
         }
     }
     for rs in &st.reqs {
@@ -3091,14 +3419,22 @@ pub(crate) fn fleet_schedule(
             preemptions: rs.preemptions,
         });
     }
-    FleetRaw {
-        reqs,
-        traces: st.traces,
-        packages: st.packages,
-        n_packages: st.seq,
-        active_windows: st.active_windows,
-        makespan_s: makespan,
-    }
+    let sraw = st.stream.take().map(|ss| StreamRaw {
+        windows: ss.windows,
+        peak_occ: ss.peak_occ,
+        mask_switches: ss.mask_switches,
+    });
+    (
+        FleetRaw {
+            reqs,
+            traces: st.traces,
+            packages: st.packages,
+            n_packages: st.seq,
+            active_windows: st.active_windows,
+            makespan_s: makespan,
+        },
+        sraw,
+    )
 }
 
 /// The single-request entry point: the one-request fleet under

@@ -34,11 +34,14 @@
 use crate::cldriver::TransferModel;
 use crate::jsonio::Json;
 use crate::stats::{percentile, XorShift64};
-use crate::types::{AdmissionPolicy, DevicePool, PreemptionPolicy};
+use crate::types::{
+    AdmissionPolicy, DevicePool, PreemptionPolicy, StreamSpec, ThroughputBudget, ThroughputVerdict,
+};
 
 use super::coexec::{self, DeviceTrace, SimConfig};
 use super::pipeline::{
-    fleet_schedule, prepare_request, PipelineSpec, PricingScope, ReqDisposition,
+    fleet_schedule, prepare_request, stream_schedule, PipelineSpec, PricingScope, ReqDisposition,
+    StreamWindow,
 };
 
 /// Odd 64-bit stride for per-request seed forks: request `r` simulates
@@ -205,11 +208,19 @@ pub struct RequestOutcome {
     /// Per-iteration sub-deadline hits (0 when unbudgeted).
     pub iter_hits: usize,
     /// Attributed energy: the joules this request's kernels actively
-    /// burned plus an equal share of the pool's idle + host remainder
-    /// (completed requests only — rejected/shed requests bill 0, their
-    /// admission-time work is not simulated).  Per-request energies sum
-    /// to [`FleetOutcome::energy_j`] when anything completed.
+    /// burned plus a *residency-weighted* share of the pool's idle +
+    /// host remainder (completed requests only — rejected/shed requests
+    /// bill 0, their admission-time work is not simulated).  Weighting
+    /// by each request's resident span `end - arrival` scopes
+    /// [`EnergyPolicy::StretchToDeadline`] per request: a lone stretched
+    /// tenant idling towards its deadline absorbs the idle energy its
+    /// own tail created instead of billing co-tenants an equal cut of
+    /// it.  Per-request energies still sum to
+    /// [`FleetOutcome::energy_j`] when anything completed.
     pub energy_j: f64,
+    /// The busy-kernel portion of `energy_j` (0 unless completed):
+    /// `energy_j - busy_energy_j` is this request's idle + host share.
+    pub busy_energy_j: f64,
     /// Times this request's stages were paused at an iteration boundary
     /// in favor of a higher-priority rival ([`PreemptionPolicy`]).
     pub preemptions: u32,
@@ -357,14 +368,40 @@ pub fn simulate_fleet_of(
     // Per-request energy attribution: each request keeps the joules its
     // kernels actively burned (`busy_energy_j`, banked per branch segment
     // by the event core) and completed requests split the pool's idle +
-    // host remainder equally.  Busy + shares reassemble the fleet bill
-    // exactly: Σ energy_j == energy_j whenever anything completed.
+    // host remainder in proportion to their resident span `end - arrival`
+    // (ROADMAP 1a: an equal split let a lone `StretchToDeadline` request
+    // bill co-tenants for the idle tail its own stretch created).  Busy +
+    // shares reassemble the fleet bill exactly: Σ energy_j == energy_j
+    // whenever anything completed.
     let energy_j = coexec::energy(cfg, raw.makespan_s, &raw.traces);
     let completed_ct =
         raw.reqs.iter().filter(|s| s.disposition == ReqDisposition::Completed).count();
     let busy_total: f64 = raw.reqs.iter().map(|s| s.busy_energy_j).sum();
-    let idle_share =
-        if completed_ct > 0 { (energy_j - busy_total) / completed_ct as f64 } else { 0.0 };
+    let overhead = energy_j - busy_total;
+    let spans: Vec<f64> = raw
+        .reqs
+        .iter()
+        .zip(&arrivals)
+        .map(|(s, &a)| {
+            if s.disposition == ReqDisposition::Completed {
+                (s.end_s - a).max(0.0)
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let span_total: f64 = spans.iter().sum();
+    let idle_share_of = |r: usize| -> f64 {
+        if span_total > 0.0 {
+            overhead * spans[r] / span_total
+        } else if completed_ct > 0 {
+            // Degenerate zero-span completions: fall back to equal split
+            // so the bill still reassembles.
+            overhead / completed_ct as f64
+        } else {
+            0.0
+        }
+    };
 
     let mut requests = Vec::with_capacity(n);
     let mut slacks = Vec::new();
@@ -401,7 +438,8 @@ pub fn simulate_fleet_of(
             hit,
             iter_times: slice.iter_times.clone(),
             iter_hits: slice.iter_verdicts.iter().filter(|v| v.met).count(),
-            energy_j: if completed { slice.busy_energy_j + idle_share } else { 0.0 },
+            energy_j: if completed { slice.busy_energy_j + idle_share_of(r) } else { 0.0 },
+            busy_energy_j: if completed { slice.busy_energy_j } else { 0.0 },
             preemptions: slice.preemptions,
         });
     }
@@ -447,6 +485,151 @@ pub fn simulate_fleet_of(
         traces: raw.traces,
         requests,
         tenants,
+    }
+}
+
+/// Result of one streaming run ([`simulate_stream`]): the chain's stages
+/// as long-running operators judged by a sustained-rate
+/// [`ThroughputBudget`] instead of a per-request deadline, plus the
+/// batch-style pool telemetry.
+#[derive(Debug, Clone)]
+pub struct StreamOutcome {
+    /// Source emission rate (items/s).
+    pub offered_hz: f64,
+    pub n_items: usize,
+    /// Bound on every inter-operator queue (the source queue is
+    /// unbounded — the source never drops).
+    pub queue_cap: usize,
+    /// The sustained-rate requirement the run was judged against.
+    pub budget: ThroughputBudget,
+    /// End-to-end delivered rate: `n_items / makespan_s`.
+    pub achieved_hz: f64,
+    /// Overall verdict on the end-to-end delivered rate.
+    pub verdict: ThroughputVerdict,
+    /// Closed throughput windows in order (live in-run estimates; the
+    /// tail window past the last completion is never recorded).
+    pub windows: Vec<StreamWindow>,
+    /// Windows whose live rate held the budget.
+    pub windows_met: usize,
+    /// Peak occupancy per operator input queue (index 0 = source queue,
+    /// the only unbounded one).
+    pub peak_occ: Vec<usize>,
+    /// Committed operator mask switches (each re-scatter priced into the
+    /// switching stage's transfer-in before committing).
+    pub mask_switches: u32,
+    pub makespan_s: f64,
+    /// Pool energy over the run (busy + idle + host, whole pool).
+    pub energy_j: f64,
+    /// Per-item end-to-end latency percentiles (source tick → chain exit).
+    pub lat_p50_s: Option<f64>,
+    pub lat_p95_s: Option<f64>,
+    pub lat_p99_s: Option<f64>,
+    /// Pool-indexed device traces (shared across items).
+    pub traces: Vec<DeviceTrace>,
+    /// Per-item end-to-end latencies in item order (CDF dumps).
+    pub latencies_s: Vec<f64>,
+}
+
+impl StreamOutcome {
+    /// Total scheduled work groups across the pool (conservation checks).
+    pub fn total_groups(&self) -> u64 {
+        self.traces.iter().map(|t| t.groups).sum()
+    }
+}
+
+/// Stream `stream.n_items` instances of the linear-chain `template`
+/// through its stages-as-operators on the shared pool.  Items are
+/// emitted at the fixed `offered_hz` cadence (item `k` at `k /
+/// offered_hz`), never face admission control — the bounded
+/// inter-operator queues backpressure the chain instead — and each item
+/// forks its compute seed via [`request_seed`] exactly like a fleet
+/// request, so item 0 replays the template seed bit-for-bit.
+///
+/// The template must be a linear chain (stage `i` depends on exactly
+/// stage `i - 1`) with no per-request [`TimeBudget`]: the run is judged
+/// by `stream.budget`'s sustained rate, live at every window boundary
+/// and overall on the end-to-end delivered rate.
+///
+/// [`TimeBudget`]: crate::types::TimeBudget
+pub fn simulate_stream(
+    template: &PipelineSpec,
+    stream: &StreamSpec,
+    cfg: &SimConfig,
+) -> StreamOutcome {
+    assert!(!cfg.devices.is_empty(), "no devices");
+    assert!(
+        !template.serial,
+        "streaming operators co-execute; a serial chain is a queue, not a stream"
+    );
+    assert!(
+        template.budget.is_none(),
+        "streaming judges sustained rate (StreamSpec::budget); drop the per-request TimeBudget"
+    );
+    for (i, s) in template.stages.iter().enumerate() {
+        let mut deps = s.deps.clone();
+        deps.sort_unstable();
+        deps.dedup();
+        let want: Vec<usize> = if i == 0 { Vec::new() } else { vec![i - 1] };
+        assert_eq!(
+            deps, want,
+            "streaming operators form a linear chain: stage {i} must depend on its \
+             predecessor only"
+        );
+    }
+
+    let n = stream.n_items;
+    let arrivals: Vec<f64> = (0..n).map(|k| k as f64 / stream.offered_hz).collect();
+    let pool = DevicePool::new(cfg.devices.clone());
+    let classes = pool.classes();
+    let transfers = TransferModel::new(&cfg.driver, cfg.opts.buffer_flags);
+
+    let cfgs: Vec<SimConfig> = (0..n)
+        .map(|r| {
+            let mut c = cfg.clone();
+            c.seed = request_seed(cfg.seed, r);
+            c
+        })
+        .collect();
+    let rps: Vec<_> = cfgs.iter().map(|c| prepare_request(template, c, &pool)).collect();
+    let preps: Vec<_> = rps
+        .iter()
+        .zip(&cfgs)
+        .zip(&arrivals)
+        .map(|((rp, c), &a)| rp.as_prep(template, c, &classes, &transfers, a, 0))
+        .collect();
+    let rngs: Vec<XorShift64> = rps.iter().map(|rp| rp.rng.clone()).collect();
+
+    let (raw, sraw) = stream_schedule(&pool, &preps, rngs, stream);
+    debug_assert!(
+        raw.reqs.iter().all(|s| s.disposition == ReqDisposition::Completed),
+        "streaming has no admission control; every item must complete"
+    );
+
+    let energy_j = coexec::energy(cfg, raw.makespan_s, &raw.traces);
+    let latencies_s: Vec<f64> =
+        raw.reqs.iter().zip(&arrivals).map(|(s, &a)| s.end_s - a).collect();
+    let achieved_hz =
+        if raw.makespan_s > 0.0 { n as f64 / raw.makespan_s } else { f64::INFINITY };
+    let verdict = stream.budget.verdict(achieved_hz);
+    let windows_met = sraw.windows.iter().filter(|w| w.met).count();
+    StreamOutcome {
+        offered_hz: stream.offered_hz,
+        n_items: n,
+        queue_cap: stream.queue_cap,
+        budget: stream.budget,
+        achieved_hz,
+        verdict,
+        windows: sraw.windows,
+        windows_met,
+        peak_occ: sraw.peak_occ,
+        mask_switches: sraw.mask_switches,
+        makespan_s: raw.makespan_s,
+        energy_j,
+        lat_p50_s: percentile(&latencies_s, 50.0),
+        lat_p95_s: percentile(&latencies_s, 95.0),
+        lat_p99_s: percentile(&latencies_s, 99.0),
+        traces: raw.traces,
+        latencies_s,
     }
 }
 
@@ -534,5 +717,133 @@ mod tests {
             let err = parse_trace(doc).unwrap_err().to_string();
             assert!(err.contains(needle), "{doc:?}: {err}");
         }
+    }
+
+    use crate::benchsuite::{Bench, BenchId};
+    use crate::scheduler::{HGuidedParams, SchedulerKind};
+    use crate::types::DeviceMask;
+
+    /// Two-operator chain on disjoint masks (CPU+iGPU feeds the GPU) so
+    /// adjacent items genuinely co-execute, plus the template config.
+    fn stream_template() -> (PipelineSpec, SimConfig) {
+        let ga = Bench::new(BenchId::Gaussian);
+        let mb = Bench::new(BenchId::Mandelbrot);
+        let mut spec = PipelineSpec::chain(vec![ga.clone(), mb.clone()], 1);
+        spec.stages[0].gws = Some(ga.default_gws / 16);
+        spec.stages[0].mask = Some(DeviceMask::from_indices(&[0, 1]));
+        spec.stages[1].gws = Some(mb.default_gws / 16);
+        spec.stages[1].mask = Some(DeviceMask::single(2));
+        let mut cfg = SimConfig::testbed(
+            &ga,
+            SchedulerKind::HGuided { params: HGuidedParams::optimized_paper() },
+        );
+        cfg.seed = 11;
+        (spec, cfg)
+    }
+
+    /// Solo chain latency (one item, no neighbours) — the natural time
+    /// unit for picking under- and over-load source rates.
+    fn solo_chain_s(spec: &PipelineSpec, cfg: &SimConfig) -> f64 {
+        let solo = super::super::simulate_pipeline(spec, cfg);
+        assert!(solo.roi_time > 0.0 && solo.roi_time.is_finite());
+        solo.roi_time
+    }
+
+    #[test]
+    fn stream_underload_completes_everything_and_holds_budget() {
+        let (spec, cfg) = stream_template();
+        let roi = solo_chain_s(&spec, &cfg);
+        // One item per five chain latencies: far below capacity.
+        let offered = 0.2 / roi;
+        let stream =
+            StreamSpec::new(offered, 6, 2, ThroughputBudget::new(0.8 * offered, 2.0 / offered));
+        let out = simulate_stream(&spec, &stream, &cfg);
+        assert_eq!(out.n_items, 6);
+        assert_eq!(out.latencies_s.len(), 6);
+        assert!(out.latencies_s.iter().all(|&l| l > 0.0 && l.is_finite()));
+        assert!(out.achieved_hz > 0.0);
+        assert!(out.verdict.met, "under-load stream must hold its rate budget");
+        assert!(out.verdict.margin_hz >= 0.0);
+        // Work conservation: every item schedules the solo chain's groups.
+        let solo = super::super::simulate_pipeline(&spec, &cfg);
+        let per_item: u64 = solo.devices.iter().map(|d| d.groups).sum();
+        assert_eq!(out.total_groups(), 6 * per_item, "streamed work lost or duplicated");
+        // Queue discipline: bounded queues never exceed their cap, and
+        // every window snapshot covers both operators.
+        assert_eq!(out.peak_occ.len(), 2);
+        assert!(out.peak_occ[1] <= stream.queue_cap);
+        assert!(!out.windows.is_empty(), "window verdicts recorded");
+        for w in &out.windows {
+            assert_eq!(w.queue_occ.len(), 2);
+            assert!(w.end_s > w.start_s);
+        }
+        let window_items: usize = out.windows.iter().map(|w| w.items).sum();
+        assert!(window_items <= 6);
+        assert!(out.energy_j > 0.0);
+    }
+
+    #[test]
+    fn stream_overload_backpressures_and_misses_budget() {
+        let (spec, cfg) = stream_template();
+        let roi = solo_chain_s(&spec, &cfg);
+        // Fifty items per chain latency: the source floods the chain.
+        let offered = 50.0 / roi;
+        let stream =
+            StreamSpec::new(offered, 8, 1, ThroughputBudget::new(0.8 * offered, 2.0 / offered));
+        let out = simulate_stream(&spec, &stream, &cfg);
+        assert!(!out.verdict.met, "hopeless offered rate must miss");
+        assert!(out.verdict.margin_hz < 0.0);
+        assert!(out.achieved_hz < offered);
+        // Overload piles up in the unbounded source queue, never in the
+        // bounded inter-operator queue.
+        assert!(out.peak_occ[0] > 1, "source queue should absorb the flood");
+        assert!(out.peak_occ[1] <= 1);
+        // The run outlasts the arrival span: completions are paced by the
+        // operators, not the source.
+        assert!(out.makespan_s > (stream.n_items - 1) as f64 / offered);
+        assert_eq!(out.latencies_s.len(), 8);
+    }
+
+    #[test]
+    fn stream_is_deterministic() {
+        let (spec, cfg) = stream_template();
+        let roi = solo_chain_s(&spec, &cfg);
+        let offered = 0.5 / roi;
+        let stream =
+            StreamSpec::new(offered, 5, 2, ThroughputBudget::new(0.8 * offered, 2.0 / offered));
+        let a = simulate_stream(&spec, &stream, &cfg);
+        let b = simulate_stream(&spec, &stream, &cfg);
+        assert_eq!(a.latencies_s, b.latencies_s);
+        assert_eq!(a.windows, b.windows);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(a.peak_occ, b.peak_occ);
+    }
+
+    #[test]
+    #[should_panic(expected = "serial chain is a queue")]
+    fn stream_rejects_serial_template() {
+        let (mut spec, cfg) = stream_template();
+        spec.serial = true;
+        let budget = ThroughputBudget::new(1.0, 1.0);
+        simulate_stream(&spec, &StreamSpec::new(1.0, 2, 1, budget), &cfg);
+    }
+
+    #[test]
+    #[should_panic(expected = "drop the per-request TimeBudget")]
+    fn stream_rejects_per_request_deadline() {
+        let (spec, cfg) = stream_template();
+        let spec = spec.with_deadline(1.0);
+        let budget = ThroughputBudget::new(1.0, 1.0);
+        simulate_stream(&spec, &StreamSpec::new(1.0, 2, 1, budget), &cfg);
+    }
+
+    #[test]
+    #[should_panic(expected = "linear chain")]
+    fn stream_rejects_non_linear_dags() {
+        let (mut spec, cfg) = stream_template();
+        spec.stages[1].deps = Vec::new(); // two independent branches
+        let budget = ThroughputBudget::new(1.0, 1.0);
+        simulate_stream(&spec, &StreamSpec::new(1.0, 2, 1, budget), &cfg);
     }
 }

@@ -37,13 +37,16 @@ pub fn geomean(xs: &[f64]) -> f64 {
 /// Linear-interpolated percentile (`p` in 0..=100) over an unsorted
 /// sample; the tail metrics of the traffic simulator (p50/p95/p99
 /// slack) are computed with this.  Returns `None` for an empty sample.
+/// NaN entries are ignored (a streaming window with zero completions
+/// yields NaN rates); if nothing finite-or-infinite remains the result
+/// is `None`, never a panic.
 pub fn percentile(xs: &[f64], p: f64) -> Option<f64> {
-    if xs.is_empty() {
+    debug_assert!((0.0..=100.0).contains(&p), "percentile {p} out of range");
+    let mut sorted: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if sorted.is_empty() {
         return None;
     }
-    debug_assert!((0.0..=100.0).contains(&p), "percentile {p} out of range");
-    let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).expect("percentile over NaN"));
+    sorted.sort_by(|a, b| a.total_cmp(b));
     let rank = p.clamp(0.0, 100.0) / 100.0 * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -144,6 +147,16 @@ mod tests {
         );
         assert!(p50 <= p95 && p95 <= p99);
         assert_eq!(percentile(&[42.0], 99.0), Some(42.0));
+    }
+
+    #[test]
+    fn percentile_ignores_nan_instead_of_panicking() {
+        // A streaming window with zero completions contributes NaN
+        // (0.0/0.0) rates; the old partial_cmp().expect path panicked.
+        let xs = [f64::NAN, 2.0, f64::NAN, 4.0];
+        assert!((percentile(&xs, 50.0).unwrap() - 3.0).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), Some(2.0));
+        assert_eq!(percentile(&[f64::NAN, f64::NAN], 50.0), None);
     }
 
     #[test]

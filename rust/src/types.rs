@@ -408,6 +408,102 @@ pub struct DeadlineVerdict {
     pub slack_s: f64,
 }
 
+/// A sustained-rate budget for streaming mode — the throughput
+/// counterpart of [`TimeBudget`].  A stream of long-running operators
+/// has no makespan to judge; instead it must *hold* `rate_hz` items/s,
+/// measured over boundary-aligned windows of `window_s` seconds while
+/// it runs and over the whole active span at stream end.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ThroughputBudget {
+    /// Required sustained rate, in items/s.
+    pub rate_hz: f64,
+    /// Throughput-measurement window, in seconds: live verdicts and the
+    /// mask/budget re-evaluations happen at multiples of this.
+    pub window_s: f64,
+}
+
+impl ThroughputBudget {
+    pub fn new(rate_hz: f64, window_s: f64) -> Self {
+        assert!(
+            rate_hz > 0.0 && rate_hz.is_finite(),
+            "throughput rate must be positive and finite, got {rate_hz}"
+        );
+        assert!(
+            window_s > 0.0 && window_s.is_finite(),
+            "throughput window must be positive and finite, got {window_s}"
+        );
+        Self { rate_hz, window_s }
+    }
+
+    /// Whether an observed rate holds the budget (tolerating one part in
+    /// 1e12 of float noise from the `items / span` division).
+    #[inline]
+    pub fn holds(&self, achieved_hz: f64) -> bool {
+        achieved_hz >= self.rate_hz * (1.0 - 1e-12)
+    }
+
+    /// Verdict for an observed sustained rate.
+    pub fn verdict(&self, achieved_hz: f64) -> ThroughputVerdict {
+        ThroughputVerdict {
+            rate_hz: self.rate_hz,
+            window_s: self.window_s,
+            achieved_hz,
+            met: self.holds(achieved_hz),
+            margin_hz: achieved_hz - self.rate_hz,
+        }
+    }
+}
+
+/// Outcome of a stream (or one of its windows) against its
+/// [`ThroughputBudget`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ThroughputVerdict {
+    pub rate_hz: f64,
+    pub window_s: f64,
+    pub achieved_hz: f64,
+    pub met: bool,
+    /// Positive = sustained above the required rate; negative = deficit.
+    pub margin_hz: f64,
+}
+
+/// Shape of a streaming run: an unbounded source feeding the operator
+/// chain at `offered_hz`, bounded inter-stage queues of `queue_cap`
+/// items (a full downstream queue stalls the producer's next
+/// iteration), judged by a sustained-rate [`ThroughputBudget`] instead
+/// of a makespan deadline.  `n_items` bounds the simulation horizon —
+/// the source is conceptually unbounded, the simulation is not.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamSpec {
+    /// Source emission rate, in items/s (item `k` enters the source
+    /// queue at `k / offered_hz`).
+    pub offered_hz: f64,
+    /// Items the source emits over the simulated horizon.
+    pub n_items: usize,
+    /// Capacity of every bounded inter-stage queue (the source queue in
+    /// front of the first operator is unbounded — overload piles up
+    /// there and shows as a missed throughput verdict, not as drops).
+    pub queue_cap: usize,
+    /// The sustained-rate deadline the stream is judged by.
+    pub budget: ThroughputBudget,
+}
+
+impl StreamSpec {
+    pub fn new(
+        offered_hz: f64,
+        n_items: usize,
+        queue_cap: usize,
+        budget: ThroughputBudget,
+    ) -> Self {
+        assert!(
+            offered_hz > 0.0 && offered_hz.is_finite(),
+            "source rate must be positive and finite, got {offered_hz}"
+        );
+        assert!(n_items >= 1, "a stream needs at least one item");
+        assert!(queue_cap >= 1, "inter-stage queues need room for at least one item");
+        Self { offered_hz, n_items, queue_cap, budget }
+    }
+}
+
 /// How a pipeline's **global** [`TimeBudget`] is split into per-iteration
 /// sub-budgets (the ROADMAP's "per-iteration sub-budgets, carry-over
 /// slack" item).  Sub-deadlines are *absolute* instants on the cumulative
@@ -1006,6 +1102,55 @@ mod tests {
     #[should_panic(expected = "deadline must be positive")]
     fn time_budget_rejects_nonpositive() {
         TimeBudget::new(0.0);
+    }
+
+    #[test]
+    fn throughput_budget_verdict_signs_and_tolerance() {
+        let b = ThroughputBudget::new(10.0, 0.5);
+        let hit = b.verdict(12.0);
+        assert!(hit.met && (hit.margin_hz - 2.0).abs() < 1e-12);
+        assert_eq!(hit.rate_hz, 10.0);
+        assert_eq!(hit.window_s, 0.5);
+        let miss = b.verdict(9.0);
+        assert!(!miss.met && (miss.margin_hz + 1.0).abs() < 1e-12);
+        // Exactly-at-rate holds, including one part in 1e12 of float
+        // noise below it (the items/span division).
+        assert!(b.holds(10.0));
+        assert!(b.holds(10.0 * (1.0 - 1e-13)));
+        assert!(!b.holds(10.0 * (1.0 - 1e-9)));
+    }
+
+    #[test]
+    #[should_panic(expected = "throughput rate must be positive")]
+    fn throughput_budget_rejects_nonpositive_rate() {
+        ThroughputBudget::new(0.0, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "throughput window must be positive")]
+    fn throughput_budget_rejects_nonfinite_window() {
+        ThroughputBudget::new(1.0, f64::INFINITY);
+    }
+
+    #[test]
+    fn stream_spec_validates_its_shape() {
+        let b = ThroughputBudget::new(4.0, 1.0);
+        let s = StreamSpec::new(5.0, 32, 3, b);
+        assert_eq!(s.n_items, 32);
+        assert_eq!(s.queue_cap, 3);
+        assert_eq!(s.budget, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one item")]
+    fn stream_spec_rejects_empty_stream() {
+        StreamSpec::new(1.0, 0, 1, ThroughputBudget::new(1.0, 1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "room for at least one item")]
+    fn stream_spec_rejects_zero_queue_cap() {
+        StreamSpec::new(1.0, 4, 0, ThroughputBudget::new(1.0, 1.0));
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! Golden-snapshot harness for the pipeline engine: canonical scenarios
-//! (single-stage, two-branch disjoint, pool contention, diamond DAG,
-//! and a small Poisson fleet) run with fixed seeds, and their full
-//! `metrics::pipeline_json` / `metrics::fleet_json` documents are
+//! (single-stage, two-branch disjoint, pool contention, diamond DAG, a
+//! small Poisson fleet, and a streaming two-operator chain) run with
+//! fixed seeds, and their full `metrics::pipeline_json` /
+//! `metrics::fleet_json` / `metrics::stream_json` documents are
 //! compared byte-for-byte against checked-in snapshots under
 //! `tests/golden/`.  Future refactors cannot silently change schedules,
 //! verdicts or energy accounting: any drift fails here first.
@@ -20,10 +21,13 @@ use enginecl::benchsuite::{Bench, BenchId};
 use enginecl::metrics::pipeline_json;
 use enginecl::scheduler::{HGuidedParams, SchedulerKind};
 use enginecl::sim::{
-    simulate_fleet, simulate_pipeline, ArrivalProcess, FleetSpec, PipelineSpec, PipelineStage,
-    SimConfig,
+    simulate_fleet, simulate_pipeline, simulate_stream, ArrivalProcess, FleetSpec, PipelineSpec,
+    PipelineStage, SimConfig,
 };
-use enginecl::types::{AdmissionPolicy, ContentionModel, DeviceMask, MaskPolicy, PreemptionPolicy};
+use enginecl::types::{
+    AdmissionPolicy, ContentionModel, DeviceMask, MaskPolicy, PreemptionPolicy, StreamSpec,
+    ThroughputBudget,
+};
 use std::path::PathBuf;
 
 fn golden_dir() -> PathBuf {
@@ -185,6 +189,45 @@ fn golden_poisson_fleet() {
     let doc = enginecl::metrics::fleet_json(&out).to_string();
     enginecl::jsonio::Json::parse(&doc).expect("fleet snapshot JSON parses");
     check_golden("poisson_fleet", &doc);
+}
+
+#[test]
+fn golden_stream_two_operator_chain() {
+    // The streaming mode's snapshot: six items through a two-operator
+    // chain on disjoint masks (CPU+iGPU feeding the discrete GPU) at a
+    // fixed 2 items/s cadence with tight inter-operator queues.  The
+    // document pins the per-window live verdicts, queue-occupancy
+    // snapshots, peak occupancy, tail latencies and the shared energy
+    // accounting, so the operator/backpressure machinery cannot drift
+    // silently.
+    let ga = Bench::new(BenchId::Gaussian);
+    let mb = Bench::new(BenchId::Mandelbrot);
+    let spec = PipelineSpec {
+        stages: vec![
+            PipelineStage::new(ga.clone(), 1)
+                .with_gws(ga.default_gws / 16)
+                .on_devices(DeviceMask::from_indices(&[0, 1])),
+            PipelineStage::new(mb.clone(), 1)
+                .with_gws(mb.default_gws / 16)
+                .with_powers(mb.true_powers.to_vec())
+                .on_devices(DeviceMask::single(2))
+                .after(&[0]),
+        ],
+        budget: None,
+        policy: enginecl::types::BudgetPolicy::CarryOverSlack,
+        energy: enginecl::types::EnergyPolicy::RaceToIdle,
+        mask_policy: MaskPolicy::Fixed,
+        serial: false,
+        priority: 1.0,
+    };
+    let mut cfg = SimConfig::testbed(&ga, hguided_opt());
+    cfg.contention = ContentionModel::Pool;
+    cfg.seed = 13;
+    let stream = StreamSpec::new(2.0, 6, 2, ThroughputBudget::new(1.6, 3.0));
+    let out = simulate_stream(&spec, &stream, &cfg);
+    let doc = enginecl::metrics::stream_json(&out).to_string();
+    enginecl::jsonio::Json::parse(&doc).expect("stream snapshot JSON parses");
+    check_golden("stream", &doc);
 }
 
 #[test]

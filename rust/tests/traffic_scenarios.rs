@@ -15,7 +15,7 @@
 use enginecl::benchsuite::{Bench, BenchId};
 use enginecl::cldriver::DriverProfile;
 use enginecl::engine::experiments;
-use enginecl::scheduler::{HGuidedParams, SchedulerKind};
+use enginecl::scheduler::{AdaptiveParams, HGuidedParams, SchedulerKind};
 use enginecl::sim::tenancy::request_seed;
 use enginecl::sim::{
     simulate_fleet, simulate_fleet_of, simulate_pipeline, ArrivalProcess, FleetSpec, PipelineSpec,
@@ -617,9 +617,10 @@ fn priority_weights_shift_shedding_away_from_the_heavy_tenant() {
 }
 
 /// Per-request energy attribution must reassemble the fleet bill exactly
-/// (busy joules + equal idle shares), bill nothing to requests that never
-/// ran, and aggregate consistently per tenant — across admission
-/// policies, preemption, priority mixes and offered loads.
+/// (busy joules + residency-weighted idle shares), bill nothing to
+/// requests that never ran, and aggregate consistently per tenant —
+/// across admission policies, preemption, priority mixes and offered
+/// loads.
 #[test]
 fn per_request_energy_attribution_reassembles_the_fleet_bill() {
     let base = single_branch_spec(BenchId::Gaussian, 16, DeviceMask::from_indices(&[0, 1]));
@@ -697,6 +698,70 @@ fn per_request_energy_attribution_reassembles_the_fleet_bill() {
     assert_eq!(none.n_completed, 0);
     assert!(none.requests.iter().all(|r| r.energy_j == 0.0));
     assert!(none.energy_j.abs() <= 1e-12, "an idle fleet burns nothing over a zero makespan");
+}
+
+/// Regression (ROADMAP 1a): `EnergyPolicy::StretchToDeadline` must be
+/// scoped per-request in the fleet bill.  A lone stretched tenant
+/// lingering towards a generous deadline used to inflate its co-tenant's
+/// bill: the idle + host remainder was split *equally* across completed
+/// requests, so half of the idle created by the stretched tail landed on
+/// the short race-to-idle request that finished long before it.  The
+/// fixed attribution weights the remainder by resident span, so the
+/// short request's idle share is strictly below the old equal cut — this
+/// assertion fails on the pre-fix equal split.
+#[test]
+fn stretched_request_absorbs_its_own_idle_tail_not_the_co_tenants() {
+    let ga = Bench::new(BenchId::Gaussian);
+    // Tenant 0 (the co-tenant): a short race-to-idle request on CPU+iGPU.
+    let short = single_branch_spec(BenchId::Gaussian, 32, DeviceMask::from_indices(&[0, 1]));
+    // Tenant 1 (the stretched one): a long GPU-pinned request that
+    // stretches towards a generous deadline.
+    let long = PipelineSpec {
+        stages: vec![PipelineStage::new(ga.clone(), 6)
+            .with_gws(ga.default_gws / 8)
+            .with_powers(ga.true_powers.to_vec())
+            .on_devices(DeviceMask::single(2))],
+        budget: None,
+        policy: BudgetPolicy::CarryOverSlack,
+        energy: EnergyPolicy::StretchToDeadline,
+        mask_policy: MaskPolicy::Fixed,
+        serial: false,
+        priority: 1.0,
+    };
+    // Stretch only modulates the Adaptive completion cap; HGuided is
+    // deadline-blind.
+    let mut cfg = pool_cfg(BenchId::Gaussian);
+    cfg.scheduler = SchedulerKind::Adaptive { params: AdaptiveParams::default_paper() };
+    let t_long = simulate_pipeline(&long, &cfg).roi_time;
+    let long = long.with_deadline(3.0 * t_long);
+
+    let out = simulate_fleet_of(
+        &[short, long],
+        &ArrivalProcess::Trace { arrivals_s: vec![0.0, 0.0] },
+        AdmissionPolicy::Accept,
+        PreemptionPolicy::Never,
+        &cfg,
+    );
+    assert_eq!(out.n_completed, 2, "both tenants complete");
+    let (r0, r1) = (&out.requests[0], &out.requests[1]);
+    let (span0, span1) = (r0.end_s - r0.arrival_s, r1.end_s - r1.arrival_s);
+    assert!(
+        span1 > 1.5 * span0,
+        "precondition: the stretched request lingers well past the co-tenant \
+         (spans {span0} vs {span1})"
+    );
+    let busy_total = r0.busy_energy_j + r1.busy_energy_j;
+    let overhead = out.energy_j - busy_total;
+    assert!(overhead > 0.0, "the shared pool idles somewhere, so there is a remainder to split");
+    let share0 = r0.energy_j - r0.busy_energy_j;
+    assert!(
+        share0 < 0.45 * overhead,
+        "the short co-tenant's idle share {share0} must stay proportional to its \
+         residency, not the old equal half of {overhead}"
+    );
+    // The residency weighting still reassembles the fleet bill exactly.
+    let req_sum: f64 = out.requests.iter().map(|r| r.energy_j).sum();
+    assert!((req_sum - out.energy_j).abs() <= 1e-9 * out.energy_j.abs() + 1e-9);
 }
 
 /// Iteration-boundary preemption: a strictly-higher-priority arrival
